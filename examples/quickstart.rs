@@ -1,0 +1,59 @@
+//! Quickstart: the end-to-end validation run (DESIGN.md §7).
+//!
+//! Generates the citation-sim graph, partitions it with RandomTMA,
+//! trains a 2-layer GCN link predictor with M = 3 trainers for a
+//! configurable window (a few hundred steps each on this testbed),
+//! prints the loss curve + validation MRR trajectory, and reports the
+//! final test MRR. Recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `cargo run --release --example quickstart [-- --quick]`
+
+use random_tma::config::{Approach, RunConfig};
+use random_tma::coordinator::run_experiment;
+use random_tma::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&["quick"]);
+    let cfg = RunConfig {
+        dataset: args.str_or("dataset", "citation-sim"),
+        quick: args.flag("quick"),
+        variant: args.str_or("variant", "gcn_mlp"),
+        approach: Approach::RandomTma,
+        trainers: args.usize_or("m", 3),
+        train_secs: args.f64_or("train-secs", 30.0),
+        agg_secs: args.f64_or("agg-secs", 2.0),
+        seed: args.u64_or("seed", 17),
+        ..RunConfig::default()
+    };
+    println!("== quickstart: {} ==", cfg.label());
+    let r = run_experiment(&cfg)?;
+
+    println!("\nvalidation MRR over time:");
+    for p in &r.val_curve {
+        let bar = "#".repeat((p.val_mrr * 60.0) as usize);
+        println!("  t={:6.1}s  mrr={:.4}  {bar}", p.t, p.val_mrr);
+    }
+    println!("\nper-trainer loss (first -> last):");
+    for (i, tl) in r.trainer_losses.iter().enumerate() {
+        if let (Some(first), Some(last)) = (tl.first(), tl.last()) {
+            println!(
+                "  trainer {i}: {:.4} -> {:.4}  ({} steps)",
+                first.loss, last.loss, r.steps[i]
+            );
+        }
+    }
+    println!(
+        "\nbest val MRR {:.4} | TEST MRR {:.4} | convergence {:.1}s | r={:.2}",
+        r.best_val_mrr,
+        r.test_mrr,
+        r.convergence_secs(0.01),
+        r.ratio_r
+    );
+    anyhow::ensure!(
+        r.test_mrr > 0.2,
+        "quickstart failed to learn (test MRR {:.4})",
+        r.test_mrr
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,188 @@
+"""AOT compiler: lower every model variant to HLO text + manifest.
+
+This is the only place Python touches the pipeline: ``make artifacts``
+runs it once, after which the rust coordinator is self-contained.
+
+Interchange format is **HLO text**, never ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``--out-dir`` (default ``../artifacts``):
+  <entry>_<variant>.<impl>.hlo.txt   e.g. train_gcn_mlp.pallas.hlo.txt
+  manifest.json                      shapes / dtypes / param layout /
+                                     arg order — the cross-language
+                                     contract consumed by rust `runtime`.
+
+Every artifact is emitted in two kernel flavours:
+  pallas — L1 Pallas kernels (interpret=True) on the hot ops
+  jnp    — plain XLA dots (the ref.py oracle), used by the rust
+           integration tests to cross-check the pallas artifacts
+           numerically and by the perf benches as the baseline.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+
+from . import kernels as K
+from .model import ADAM, ModelConfig, make_entry_points
+
+# The variant list covers every (encoder, decoder) cell the paper's
+# tables need: Table 2/7 use {gcn,sage,mlp}+mlp; Table 8 adds the
+# heterogeneous cells {gcn,rgcn} x {mlp,distmult}.
+VARIANTS = [
+    ("gcn", "mlp"),
+    ("sage", "mlp"),
+    ("mlp", "mlp"),
+    ("gcn", "distmult"),
+    ("rgcn", "mlp"),
+    ("rgcn", "distmult"),
+]
+
+IMPLS = ("pallas", "jnp")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[str(dt)]
+
+
+def _spec_json(name, sds):
+    return {
+        "name": name,
+        "dtype": _dtype_name(sds.dtype),
+        "shape": list(sds.shape),
+    }
+
+
+def lower_variant(cfg: ModelConfig, out_dir: str, impls) -> dict:
+    """Lower all entry points of one variant in all kernel flavours."""
+    layout, entries = make_entry_points(cfg)
+    vjson = {
+        "encoder": cfg.encoder,
+        "decoder": cfg.decoder,
+        "hetero": cfg.hetero,
+        "params": layout.to_json(),
+        "entries": {},
+    }
+    for entry_name, (fn, arg_spec) in entries.items():
+        args = [s for (_, s) in arg_spec]
+        outs = jax.eval_shape(fn, *args)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        ejson = {
+            "args": [_spec_json(n, s) for (n, s) in arg_spec],
+            "outputs": [_spec_json(f"out{i}", s) for i, s in enumerate(outs)],
+            "artifacts": {},
+        }
+        for impl in impls:
+            # A fresh wrapper per impl: jax's trace cache keys on function
+            # identity and would otherwise serve the first impl's trace
+            # for both flavours (the kernel dispatch is a global flag read
+            # at trace time).
+            def fn_impl(*a, _fn=fn, _impl=impl):
+                K.use_impl(_impl)
+                return _fn(*a)
+
+            t0 = time.time()
+            # keep_unused: the MLP encoder ignores `adj` (and the rust
+            # packer supplies every manifest arg) — without this XLA
+            # prunes the parameter and the call arity drifts.
+            lowered = jax.jit(fn_impl, keep_unused=True).lower(*args)
+            text = to_hlo_text(lowered)
+            fname = f"{entry_name}_{cfg.variant}.{impl}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            ejson["artifacts"][impl] = fname
+            print(
+                f"  {fname:44s} {len(text) // 1024:6d} KiB "
+                f"({time.time() - t0:.1f}s)"
+            )
+        vjson["entries"][entry_name] = ejson
+    return vjson
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--feat-dim", type=int, default=64)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--block-nodes", type=int, default=256)
+    ap.add_argument("--block-edges", type=int, default=128)
+    ap.add_argument("--score-batch", type=int, default=2048)
+    ap.add_argument("--relations", type=int, default=4)
+    ap.add_argument(
+        "--variants",
+        default="all",
+        help="comma list of enc_dec variants, or 'all'",
+    )
+    ap.add_argument("--impls", default="pallas,jnp")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    impls = tuple(args.impls.split(","))
+    for i in impls:
+        assert i in IMPLS, i
+
+    want = None if args.variants == "all" else set(args.variants.split(","))
+
+    manifest = {
+        "version": 1,
+        "adam": ADAM,
+        "config": {
+            "feat_dim": args.feat_dim,
+            "hidden": args.hidden,
+            "block_nodes": args.block_nodes,
+            "block_edges": args.block_edges,
+            "score_batch": args.score_batch,
+            "relations": args.relations,
+        },
+        "variants": {},
+    }
+
+    t_start = time.time()
+    for enc, dec in VARIANTS:
+        variant = f"{enc}_{dec}"
+        if want is not None and variant not in want:
+            continue
+        cfg = ModelConfig(
+            encoder=enc,
+            decoder=dec,
+            feat_dim=args.feat_dim,
+            hidden=args.hidden,
+            block_nodes=args.block_nodes,
+            block_edges=args.block_edges,
+            score_batch=args.score_batch,
+            relations=args.relations,
+        )
+        print(f"[aot] variant {variant}")
+        manifest["variants"][variant] = lower_variant(cfg, args.out_dir, impls)
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    digest = hashlib.sha256(
+        json.dumps(manifest, sort_keys=True).encode()
+    ).hexdigest()[:12]
+    print(
+        f"[aot] wrote {mpath} (sha {digest}) in {time.time() - t_start:.1f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""L1 kernel package: Pallas kernels + jnp reference, behind a dispatch.
+
+``use_impl('pallas' | 'jnp')`` selects which implementation the L2 model
+traces against; ``aot.py`` emits every artifact in both flavours so the
+rust layer can cross-check them numerically and the perf benches can
+compare them.
+"""
+
+from . import matmul as _pallas_mm
+from . import gcn_agg as _pallas_gcn
+from . import decoder as _pallas_dec
+from . import ref as _ref
+
+_IMPL = "pallas"
+
+
+def use_impl(name: str) -> None:
+    """Select the kernel implementation for subsequent traces."""
+    global _IMPL
+    if name not in ("pallas", "jnp"):
+        raise ValueError(f"unknown kernel impl {name!r}")
+    _IMPL = name
+
+
+def current_impl() -> str:
+    return _IMPL
+
+
+def matmul(a, b):
+    """Differentiable a @ b via the selected implementation."""
+    if _IMPL == "pallas":
+        return _pallas_mm.matmul(a, b)
+    return _ref.mm(a, b)
+
+
+def gcn_agg(adj, x, w):
+    """Differentiable fused adj @ (x @ w)."""
+    if _IMPL == "pallas":
+        return _pallas_gcn.gcn_agg(adj, x, w)
+    return _ref.gcn_agg(adj, x, w)
+
+
+def had_mm(u, v, w):
+    """Differentiable fused (u ⊙ v) @ w."""
+    if _IMPL == "pallas":
+        return _pallas_dec.had_mm(u, v, w)
+    return _ref.had_mm(u, v, w)

@@ -1,0 +1,84 @@
+"""L1: fused link-decoder scoring kernel ``(u * v) @ W``.
+
+The MLP link decoder's first layer consumes the Hadamard product of the
+two endpoint embeddings (paper App. A: e0 = r_u ⊙ r_v). Fusing the
+elementwise product into the matmul prologue saves one HBM round-trip
+for the [S, H] intermediate — on TPU the product is a VPU pass over the
+VMEM-resident tile immediately before it is fed to the MXU.
+
+Backward (custom_vjp), with  P = (u ⊙ v) W :
+    dW = (u ⊙ v).T @ g        (TN matmul kernel)
+    dU = (g @ W.T) ⊙ v        (NT matmul kernel + VPU elementwise)
+    dV = (g @ W.T) ⊙ u
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as mmk
+
+
+def _had_mm_kernel(u_ref, v_ref, w_ref, o_ref, *, nk: int, bk: int,
+                   k_total: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    prod = u_ref[...] * v_ref[...]  # fused Hadamard prologue (VPU)
+    w = w_ref[...]
+    if k_total % bk != 0:
+        # Mask padded K lanes (undefined in interpret mode) on both sides.
+        valid = (k * bk + jax.lax.iota(jnp.int32, bk)) < k_total
+        prod = jnp.where(valid[None, :], prod, 0.0)
+        w = jnp.where(valid[:, None], w, 0.0)
+    o_ref[...] += jnp.dot(prod, w, preferred_element_type=jnp.float32)
+
+
+def had_mm_fwd_kernel(u, v, w, *, block: int = 128):
+    """Forward fused ``(u * v) @ w``: u, v [S, H], w [H, N] -> [S, N]."""
+    s, h = u.shape
+    h2, n = w.shape
+    assert v.shape == (s, h) and h2 == h
+    bs = min(s, block)
+    bk = min(h, block)
+    grid = (pl.cdiv(s, bs), pl.cdiv(h, bk))
+    row_spec = pl.BlockSpec((bs, bk), lambda i, k: (i, k))
+    return pl.pallas_call(
+        functools.partial(_had_mm_kernel, nk=grid[1], bk=bk, k_total=h),
+        grid=grid,
+        in_specs=[
+            row_spec,
+            row_spec,
+            pl.BlockSpec((bk, n), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, n), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, n), jnp.float32),
+        interpret=True,
+    )(u, v, w)
+
+
+@jax.custom_vjp
+def had_mm(u, v, w):
+    """Differentiable fused ``(u * v) @ w`` decoder product."""
+    return had_mm_fwd_kernel(u, v, w)
+
+
+def _had_mm_vjp_fwd(u, v, w):
+    return had_mm_fwd_kernel(u, v, w), (u, v, w)
+
+
+def _had_mm_vjp_bwd(res, g):
+    u, v, w = res
+    gw = mmk.mm_nt(g, w)  # g @ w.T   [S, H]
+    du = gw * v
+    dv = gw * u
+    dw = mmk.mm_tn(u * v, g)  # (u ⊙ v).T @ g   [H, N]
+    return du, dv, dw
+
+
+had_mm.defvjp(_had_mm_vjp_fwd, _had_mm_vjp_bwd)

@@ -1,0 +1,88 @@
+"""L1: fused GCN aggregation kernel ``A_hat @ (X @ W)``.
+
+The GCN layer's hot loop is the two-stage product of the row-normalized
+block adjacency with the transformed features. On TPU the win of fusing
+is keeping the intermediate ``XW`` resident in VMEM instead of a round
+trip through HBM between two kernel launches — the analogue of what the
+CUDA formulation does with shared-memory staging across the two GEMMs.
+
+At the training block sizes used here (Bn <= 256, F, H <= 256) the full
+``X``, ``W`` and an ``XW`` tile all fit in VMEM at once (see DESIGN.md
+§Perf for the footprint budget), so the kernel streams row-blocks of
+``A_hat`` over a VMEM-resident ``XW``:
+
+    grid = (Bn / bm,)       one program per adjacency row-block
+    x, w  : full-array BlockSpecs (VMEM resident)
+    adj   : (bm, Bn) row block
+    out   : (bm, H)
+
+``XW`` is recomputed per row-block; with Bn/bm = 2..4 row blocks and
+the transform being O(Bn·F·H) vs aggregation O(Bn²·H), the recompute
+cost is small at these shapes and vanishes as Bn grows (documented in
+EXPERIMENTS.md §Perf).
+
+A ``custom_vjp`` routes the backward pass through the tiled matmul
+kernels: with ``P = A_hat @ X W``,  ``dXW = A_hat.T @ g``, then
+``dX = dXW @ W.T`` and ``dW = X.T @ dXW``.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as mmk
+
+
+def _gcn_agg_kernel(adj_ref, x_ref, w_ref, o_ref):
+    # x, w are VMEM-resident full arrays; adj is one row-block.
+    xw = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(
+        adj_ref[...], xw, preferred_element_type=jnp.float32
+    )
+
+
+def gcn_agg_fwd_kernel(adj, x, w, *, block_rows: int = 128):
+    """Forward-only fused ``adj @ (x @ w)`` pallas kernel."""
+    bn_nodes, f = x.shape
+    f2, h = w.shape
+    assert f == f2 and adj.shape == (bn_nodes, bn_nodes)
+    bm = min(bn_nodes, block_rows)
+    grid = (pl.cdiv(bn_nodes, bm),)
+    return pl.pallas_call(
+        _gcn_agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn_nodes), lambda i: (i, 0)),
+            pl.BlockSpec((bn_nodes, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bn_nodes, h), jnp.float32),
+        interpret=True,
+    )(adj, x, w)
+
+
+@jax.custom_vjp
+def gcn_agg(adj, x, w):
+    """Differentiable fused GCN aggregation: ``adj @ (x @ w)``.
+
+    ``adj`` is treated as data (the sampled block adjacency): its
+    cotangent is returned as zeros and DCE'd by XLA since training only
+    differentiates with respect to the flat parameter vector.
+    """
+    return gcn_agg_fwd_kernel(adj, x, w)
+
+
+def _gcn_agg_vjp_fwd(adj, x, w):
+    return gcn_agg_fwd_kernel(adj, x, w), (adj, x, w)
+
+
+def _gcn_agg_vjp_bwd(res, g):
+    adj, x, w = res
+    dxw = mmk.mm_tn(adj, g)  # adj.T @ g          [Bn, H]
+    dx = mmk.mm_nt(dxw, w)  # dxw @ w.T           [Bn, F]
+    dw = mmk.mm_tn(x, dxw)  # x.T @ dxw           [F, H]
+    return jnp.zeros_like(adj), dx, dw
+
+
+gcn_agg.defvjp(_gcn_agg_vjp_fwd, _gcn_agg_vjp_bwd)

@@ -1,0 +1,156 @@
+"""L1: tiled Pallas matmul kernels — the MXU-shaped compute hot-spot.
+
+The GCN/SAGE/MLP link-prediction models (L2, ``model.py``) spend their
+FLOPs in dense matmuls over fixed-shape training blocks: ``X @ W``
+(feature transform), ``A_hat @ XW`` (neighbour aggregation) and the
+decoder scoring products. This module provides the three matmul layouts
+those need (NN, NT, TN) as Pallas kernels plus a ``custom_vjp`` wrapper
+so the *backward* pass also runs through the same kernels.
+
+TPU adaptation (see DESIGN.md §Hardware-Adaptation): the CUDA story of
+the original setting (threadblock tiling + shared-memory staging on
+V100) maps to ``BlockSpec`` tiling for VMEM with the K grid axis
+innermost and sequential, accumulating into the revisited output block.
+Block sizes default to 128 (the MXU systolic edge) clamped to the
+operand dims; ``f32`` accumulation via ``preferred_element_type``.
+
+Kernels are lowered with ``interpret=True`` — mandatory for CPU-PJRT
+execution (real TPU lowering emits Mosaic custom-calls the CPU plugin
+cannot run). Correctness is pinned against ``ref.py`` by
+``python/tests/test_kernels.py`` (hypothesis shape/dtype sweeps).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile edge: the MXU is a 128x128 systolic array; (8, 128) is the
+# f32 VPU lane layout. Tiles are clamped to operand dims for small shapes.
+DEFAULT_BLOCK = 128
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest tile <= preferred that keeps the grid small for tiny dims."""
+    return min(dim, preferred)
+
+
+def _mm_kernel(
+    a_ref,
+    b_ref,
+    o_ref,
+    *,
+    nk: int,
+    bk: int,
+    k_total: int,
+    trans_a: bool,
+    trans_b: bool,
+):
+    """Grid point (i, j, k): accumulate one (bm, bk) x (bk, bn) product.
+
+    The output BlockSpec maps every k to the same (i, j) block, and k is
+    the innermost (sequential) grid axis, so ``o_ref`` acts as the VMEM
+    accumulator that a scratch buffer would be on real hardware.
+
+    When ``bk`` does not divide ``k_total`` the final K tile reads padded
+    (undefined — NaN in interpret mode) lanes; they are masked to zero on
+    both operands before feeding the MXU, the same predication a real
+    Mosaic lowering applies at the tile edge.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if trans_a:
+        a = a.T
+    if trans_b:
+        b = b.T
+    if k_total % bk != 0:
+        valid = (k * bk + jax.lax.iota(jnp.int32, bk)) < k_total
+        a = jnp.where(valid[None, :], a, 0.0)
+        b = jnp.where(valid[:, None], b, 0.0)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def _mm_call(a, b, *, trans_a: bool, trans_b: bool, block: int):
+    """Shared pallas_call builder for the NN / NT / TN layouts."""
+    if trans_a:
+        k_dim, m = a.shape
+    else:
+        m, k_dim = a.shape
+    if trans_b:
+        n, kb = b.shape
+    else:
+        kb, n = b.shape
+    assert k_dim == kb, f"contraction mismatch: {a.shape} x {b.shape}"
+
+    bm = _pick_block(m, block)
+    bn = _pick_block(n, block)
+    bk = _pick_block(k_dim, block)
+    nm, nn, nk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k_dim, bk)
+
+    if trans_a:
+        a_spec = pl.BlockSpec((bk, bm), lambda i, j, k: (k, i))
+    else:
+        a_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
+    if trans_b:
+        b_spec = pl.BlockSpec((bn, bk), lambda i, j, k: (j, k))
+    else:
+        b_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+
+    kernel = functools.partial(
+        _mm_kernel,
+        nk=nk,
+        bk=bk,
+        k_total=k_dim,
+        trans_a=trans_a,
+        trans_b=trans_b,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(nm, nn, nk),
+        in_specs=[a_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU-PJRT target; see module docstring
+    )(a, b)
+
+
+def mm(a, b, *, block: int = DEFAULT_BLOCK):
+    """``a @ b`` with a [M, K], b [K, N] -> [M, N] (no custom_vjp)."""
+    return _mm_call(a, b, trans_a=False, trans_b=False, block=block)
+
+
+def mm_nt(a, b, *, block: int = DEFAULT_BLOCK):
+    """``a @ b.T`` with a [M, K], b [N, K] -> [M, N]."""
+    return _mm_call(a, b, trans_a=False, trans_b=True, block=block)
+
+
+def mm_tn(a, b, *, block: int = DEFAULT_BLOCK):
+    """``a.T @ b`` with a [K, M], b [K, N] -> [M, N]."""
+    return _mm_call(a, b, trans_a=True, trans_b=False, block=block)
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """Differentiable ``a @ b`` whose forward AND backward run the tiled
+    Pallas kernels (da = g @ b.T via NT, db = a.T @ g via TN)."""
+    return mm(a, b)
+
+
+def _matmul_fwd(a, b):
+    return mm(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    return mm_nt(g, b), mm_tn(a, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,36 @@
+"""Pure-jnp correctness oracles for every Pallas kernel (L1).
+
+These are the ground truth the kernel tests (``python/tests/``) pin
+against, and double as the ``impl='jnp'`` dispatch target so that every
+AOT artifact can be emitted in both a Pallas-kernel flavour and a plain
+XLA-dot flavour (the rust integration tests cross-check the two at the
+artifact level, and the perf benches compare them).
+"""
+
+import jax.numpy as jnp
+
+
+def mm(a, b):
+    """a @ b."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def mm_nt(a, b):
+    """a @ b.T with b stored [N, K]."""
+    return jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+
+
+def mm_tn(a, b):
+    """a.T @ b with a stored [K, M]."""
+    return jnp.dot(a.T, b, preferred_element_type=jnp.float32)
+
+
+def gcn_agg(adj, x, w):
+    """adj @ (x @ w)."""
+    return jnp.dot(adj, jnp.dot(x, w, preferred_element_type=jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def had_mm(u, v, w):
+    """(u * v) @ w."""
+    return jnp.dot(u * v, w, preferred_element_type=jnp.float32)

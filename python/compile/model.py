@@ -1,0 +1,413 @@
+"""L2: JAX link-prediction models (build-time only, never on the hot path).
+
+Implements the paper's model zoo over fixed-shape sampled blocks:
+
+* encoders — GCN [18], GraphSAGE [12], MLP (graph-agnostic baseline) for
+  homogeneous graphs; RGCN [28] with basis decomposition for the
+  heterogeneous E-comm-like graphs. All use LayerNorm before a PReLU
+  activation (paper §4.1, following Chen et al. / You et al.).
+* decoders — 2-layer MLP over the Hadamard product of endpoint
+  embeddings (paper App. A) and DistMult [35] for heterogeneous graphs.
+* entry points — ``train_step`` (one fused Adam step), ``grad_step``
+  (gradients only; used by GGS sync-SGD and the LLCG server
+  correction), ``encode`` (block embeddings for evaluation) and
+  ``score`` (decoder-only candidate scoring for MRR evaluation).
+
+Parameters live in a single flat f32 vector. The slice layout is
+recorded in the AOT manifest so the rust coordinator (L3) can
+initialize, average (model aggregation φ) and ship weights as one
+buffer; inside the model the vector is unflattened with static slices.
+
+All dense compute routes through ``kernels.*`` (Pallas tiled matmul /
+fused aggregation / fused decoder product — see ``kernels/``), so both
+the forward and the backward pass execute the L1 kernels.
+"""
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+ENCODERS = ("gcn", "sage", "mlp", "rgcn")
+DECODERS = ("mlp", "distmult")
+
+# Adam exactly as in the paper's setup (lr = 0.001, App. A).
+ADAM = dict(lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8)
+
+
+@dataclass
+class ModelConfig:
+    """Static shape/arch config baked into each AOT artifact."""
+
+    encoder: str = "gcn"
+    decoder: str = "mlp"
+    feat_dim: int = 64          # F  — input feature width
+    hidden: int = 64            # H  — embedding width
+    layers: int = 2             # encoder depth (paper: 2 everywhere)
+    dec_layers: int = 2         # decoder MLP depth (paper App. A)
+    block_nodes: int = 256      # Bn — padded nodes per sampled block
+    block_edges: int = 128      # Be — pos/neg edge pairs per batch
+    score_batch: int = 2048     # S  — pairs per eval scoring call
+    relations: int = 4          # R  — edge types (hetero only)
+    rgcn_bases: int = 4         # basis decomposition rank (paper App. A)
+
+    def __post_init__(self):
+        assert self.encoder in ENCODERS, self.encoder
+        assert self.decoder in DECODERS, self.decoder
+
+    @property
+    def variant(self) -> str:
+        return f"{self.encoder}_{self.decoder}"
+
+    @property
+    def hetero(self) -> bool:
+        """Whether batches carry per-relation adjacency / edge types."""
+        return self.encoder == "rgcn" or self.decoder == "distmult"
+
+
+# --------------------------------------------------------------------------
+# Flat-parameter layout
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class TensorSpec:
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # "glorot" | "zeros" | "ones" | "prelu" | "normal"
+    offset: int
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+@dataclass
+class Layout:
+    """Named-tensor views over one flat f32 parameter vector."""
+
+    tensors: List[TensorSpec] = field(default_factory=list)
+    total: int = 0
+
+    def add(self, name: str, shape: Tuple[int, ...], init: str) -> None:
+        self.tensors.append(TensorSpec(name, tuple(shape), init, self.total))
+        self.total += int(math.prod(shape))
+
+    def unflatten(self, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        out = {}
+        for t in self.tensors:
+            out[t.name] = jax.lax.dynamic_slice(
+                flat, (t.offset,), (t.size,)
+            ).reshape(t.shape)
+        return out
+
+    def to_json(self) -> dict:
+        return {
+            "total": self.total,
+            "tensors": [
+                {
+                    "name": t.name,
+                    "shape": list(t.shape),
+                    "init": t.init,
+                    "offset": t.offset,
+                }
+                for t in self.tensors
+            ],
+        }
+
+
+def build_layout(cfg: ModelConfig) -> Layout:
+    """Parameter layout for an (encoder, decoder) variant.
+
+    Kept deliberately deterministic and explicit: the rust side
+    re-implements glorot/zeros/ones/prelu init from this table, so
+    ordering and naming are a cross-language contract (tested on both
+    sides).
+    """
+    lo = Layout()
+    h, f = cfg.hidden, cfg.feat_dim
+
+    for layer in range(cfg.layers):
+        d_in = f if layer == 0 else h
+        p = f"enc{layer}"
+        if cfg.encoder == "gcn":
+            lo.add(f"{p}.w", (d_in, h), "glorot")
+        elif cfg.encoder == "sage":
+            lo.add(f"{p}.w_self", (d_in, h), "glorot")
+            lo.add(f"{p}.w_nbr", (d_in, h), "glorot")
+        elif cfg.encoder == "mlp":
+            lo.add(f"{p}.w", (d_in, h), "glorot")
+        elif cfg.encoder == "rgcn":
+            lo.add(f"{p}.w_self", (d_in, h), "glorot")
+            lo.add(f"{p}.basis", (cfg.rgcn_bases, d_in, h), "glorot")
+            lo.add(f"{p}.coeff", (cfg.relations, cfg.rgcn_bases), "glorot")
+        lo.add(f"{p}.b", (h,), "zeros")
+        lo.add(f"{p}.ln_scale", (h,), "ones")
+        lo.add(f"{p}.ln_bias", (h,), "zeros")
+        lo.add(f"{p}.prelu", (1,), "prelu")
+
+    if cfg.decoder == "mlp":
+        for layer in range(cfg.dec_layers):
+            d_out = 1 if layer == cfg.dec_layers - 1 else h
+            p = f"dec{layer}"
+            lo.add(f"{p}.w", (h, d_out), "glorot")
+            lo.add(f"{p}.b", (d_out,), "zeros")
+            if layer != cfg.dec_layers - 1:
+                lo.add(f"{p}.prelu", (1,), "prelu")
+    else:  # distmult: one embedding per relation
+        lo.add("dec.rel", (cfg.relations, h), "normal")
+
+    return lo
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+
+def prelu(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """PReLU with a scalar learned slope (paper §4.1)."""
+    return jnp.where(x >= 0.0, x, a[0] * x)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    """LayerNorm over the feature axis, applied before activation."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _enc_layer_post(p, pre, prefix):
+    return prelu(p[f"{prefix}.prelu"],
+                 layer_norm(pre, p[f"{prefix}.ln_scale"],
+                            p[f"{prefix}.ln_bias"]))
+
+
+# --------------------------------------------------------------------------
+# Encoders: block features (+ adjacency) -> node embeddings [Bn, H]
+# --------------------------------------------------------------------------
+
+
+def encode_homogeneous(cfg: ModelConfig, p, feats, adj):
+    """GCN / SAGE / MLP over one padded dense block.
+
+    ``adj`` is the row-normalized block adjacency prepared by the rust
+    sampler: for GCN it includes self-loops (A_hat = D^-1 (A + I)); for
+    SAGE it is neighbours-only (the self path is the separate W_self
+    term); the MLP encoder ignores it (graph-agnostic baseline).
+    """
+    x = feats
+    for layer in range(cfg.layers):
+        pr = f"enc{layer}"
+        if cfg.encoder == "gcn":
+            pre = K.gcn_agg(adj, x, p[f"{pr}.w"]) + p[f"{pr}.b"]
+        elif cfg.encoder == "sage":
+            pre = (
+                K.matmul(x, p[f"{pr}.w_self"])
+                + K.gcn_agg(adj, x, p[f"{pr}.w_nbr"])
+                + p[f"{pr}.b"]
+            )
+        else:  # mlp
+            pre = K.matmul(x, p[f"{pr}.w"]) + p[f"{pr}.b"]
+        x = _enc_layer_post(p, pre, pr)
+    return x
+
+
+def encode_rgcn(cfg: ModelConfig, p, feats, adjr):
+    """RGCN with basis decomposition over per-relation block adjacency.
+
+    ``adjr`` is [R, Bn, Bn], each relation row-normalized. Relation
+    weights W_r = Σ_b coeff[r, b] · basis[b] (paper App. A: 4 bases).
+    The relation loop is unrolled (R is a small static constant).
+    """
+    x = feats
+    for layer in range(cfg.layers):
+        pr = f"enc{layer}"
+        pre = K.matmul(x, p[f"{pr}.w_self"]) + p[f"{pr}.b"]
+        basis = p[f"{pr}.basis"]  # [B, d_in, H]
+        coeff = p[f"{pr}.coeff"]  # [R, B]
+        for r in range(cfg.relations):
+            w_r = jnp.einsum("b,bdh->dh", coeff[r], basis)
+            pre = pre + K.gcn_agg(adjr[r], x, w_r)
+        x = _enc_layer_post(p, pre, pr)
+    return x
+
+
+def encode(cfg: ModelConfig, p, feats, adj):
+    if cfg.encoder == "rgcn":
+        return encode_rgcn(cfg, p, feats, adj)
+    return encode_homogeneous(cfg, p, feats, adj)
+
+
+# --------------------------------------------------------------------------
+# Decoders: endpoint embeddings -> link logits
+# --------------------------------------------------------------------------
+
+
+def decode_mlp(cfg: ModelConfig, p, r_u, r_v):
+    """2-layer MLP over r_u ⊙ r_v (paper App. A), fused first layer."""
+    e = K.had_mm(r_u, r_v, p["dec0.w"]) + p["dec0.b"]
+    e = prelu(p["dec0.prelu"], e)
+    for layer in range(1, cfg.dec_layers):
+        pr = f"dec{layer}"
+        e = K.matmul(e, p[f"{pr}.w"]) + p[f"{pr}.b"]
+        if layer != cfg.dec_layers - 1:
+            e = prelu(p[f"{pr}.prelu"], e)
+    return e[:, 0]
+
+
+def decode_distmult(cfg: ModelConfig, p, r_u, r_v, rel):
+    """DistMult: sum(r_u ⊙ rel_emb[rel] ⊙ r_v)."""
+    rel_emb = jnp.take(p["dec.rel"], rel, axis=0)  # [S, H]
+    return jnp.sum(r_u * rel_emb * r_v, axis=-1)
+
+
+def decode(cfg: ModelConfig, p, r_u, r_v, rel=None):
+    if cfg.decoder == "mlp":
+        return decode_mlp(cfg, p, r_u, r_v)
+    return decode_distmult(cfg, p, r_u, r_v, rel)
+
+
+# --------------------------------------------------------------------------
+# Loss + entry points
+# --------------------------------------------------------------------------
+
+
+def link_loss(cfg: ModelConfig, layout: Layout, flat, batch):
+    """Masked BCE-with-logits over (pos, neg) edge pairs in one block.
+
+    ``batch`` is the tuple produced by the rust sampler:
+      homogeneous: (feats, adj, pos_u, pos_v, neg_v, mask)
+      hetero:      (feats, adj_or_adjr, pos_u, pos_v, rel, neg_v, mask)
+    One negative per positive, sharing the head u (paper §4.1).
+    """
+    p = layout.unflatten(flat)
+    if cfg.hetero:
+        feats, adj, pos_u, pos_v, rel, neg_v, mask = batch
+    else:
+        feats, adj, pos_u, pos_v, neg_v, mask = batch
+        rel = None
+    emb = encode(cfg, p, feats, adj)
+    r_u = jnp.take(emb, pos_u, axis=0)
+    r_v = jnp.take(emb, pos_v, axis=0)
+    r_n = jnp.take(emb, neg_v, axis=0)
+    pos_logit = decode(cfg, p, r_u, r_v, rel)
+    neg_logit = decode(cfg, p, r_u, r_n, rel)
+    # BCE with logits: -log σ(pos) - log(1 - σ(neg))
+    per_edge = jax.nn.softplus(-pos_logit) + jax.nn.softplus(neg_logit)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(per_edge * mask) / denom
+
+
+def make_entry_points(cfg: ModelConfig):
+    """Build the four jit-able entry points for one model variant.
+
+    Returns (layout, {name: (fn, example_args)}) where example_args are
+    ``jax.ShapeDtypeStruct``s — exactly what ``aot.py`` lowers with and
+    what the manifest records for the rust literal packer.
+    """
+    layout = build_layout(cfg)
+    f32, i32 = jnp.float32, jnp.int32
+    P = layout.total
+    Bn, Be, S = cfg.block_nodes, cfg.block_edges, cfg.score_batch
+    F, H, R = cfg.feat_dim, cfg.hidden, cfg.relations
+
+    sd = jax.ShapeDtypeStruct
+    if cfg.encoder == "rgcn":
+        adj_spec = sd((R, Bn, Bn), f32)
+    else:
+        adj_spec = sd((Bn, Bn), f32)
+
+    if cfg.hetero:
+        batch_spec = [
+            ("feats", sd((Bn, F), f32)),
+            ("adj", adj_spec),
+            ("pos_u", sd((Be,), i32)),
+            ("pos_v", sd((Be,), i32)),
+            ("rel", sd((Be,), i32)),
+            ("neg_v", sd((Be,), i32)),
+            ("mask", sd((Be,), f32)),
+        ]
+    else:
+        batch_spec = [
+            ("feats", sd((Bn, F), f32)),
+            ("adj", adj_spec),
+            ("pos_u", sd((Be,), i32)),
+            ("pos_v", sd((Be,), i32)),
+            ("neg_v", sd((Be,), i32)),
+            ("mask", sd((Be,), f32)),
+        ]
+
+    loss_fn = lambda flat, *batch: link_loss(cfg, layout, flat, batch)
+
+    def train_step(flat, m, v, t, *batch):
+        """One SGD step with fused Adam (lr/betas from the paper)."""
+        loss, g = jax.value_and_grad(loss_fn)(flat, *batch)
+        t1 = t + 1.0
+        m1 = ADAM["beta1"] * m + (1.0 - ADAM["beta1"]) * g
+        v1 = ADAM["beta2"] * v + (1.0 - ADAM["beta2"]) * g * g
+        m_hat = m1 / (1.0 - ADAM["beta1"] ** t1[0])
+        v_hat = v1 / (1.0 - ADAM["beta2"] ** t1[0])
+        flat1 = flat - ADAM["lr"] * m_hat / (jnp.sqrt(v_hat) + ADAM["eps"])
+        return flat1, m1, v1, t1, loss
+
+    def grad_step(flat, *batch):
+        """Loss + raw gradient (GGS allreduce / LLCG server correction)."""
+        loss, g = jax.value_and_grad(loss_fn)(flat, *batch)
+        return g, loss
+
+    def encode_block(flat, feats, adj):
+        """Embeddings for one evaluation block."""
+        p = layout.unflatten(flat)
+        return (encode(cfg, p, feats, adj),)
+
+    if cfg.decoder == "distmult":
+
+        def score(flat, emb_u, emb_v, rel):
+            p = layout.unflatten(flat)
+            return (decode(cfg, p, emb_u, emb_v, rel),)
+
+        score_spec = [
+            ("params", sd((P,), f32)),
+            ("emb_u", sd((S, H), f32)),
+            ("emb_v", sd((S, H), f32)),
+            ("rel", sd((S,), i32)),
+        ]
+    else:
+
+        def score(flat, emb_u, emb_v):
+            p = layout.unflatten(flat)
+            return (decode(cfg, p, emb_u, emb_v),)
+
+        score_spec = [
+            ("params", sd((P,), f32)),
+            ("emb_u", sd((S, H), f32)),
+            ("emb_v", sd((S, H), f32)),
+        ]
+
+    params_spec = ("params", sd((P,), f32))
+    opt_spec = [
+        params_spec,
+        ("adam_m", sd((P,), f32)),
+        ("adam_v", sd((P,), f32)),
+        ("adam_t", sd((1,), f32)),
+    ]
+
+    entries = {
+        "train": (train_step, opt_spec + batch_spec),
+        "grad": (grad_step, [params_spec] + batch_spec),
+        "encode": (
+            encode_block,
+            [params_spec, ("feats", sd((Bn, F), f32)), ("adj", adj_spec)],
+        ),
+        "score": (score, score_spec),
+    }
+    return layout, entries

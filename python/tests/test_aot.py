@@ -1,0 +1,134 @@
+"""AOT contract tests: the manifest + HLO text artifacts rust consumes.
+
+Beyond structural checks, the key test executes an emitted HLO module
+through xla_client's CPU backend and compares against direct jax
+execution — validating the full interchange path (stablehlo → HLO text
+→ parse → compile → run) without needing the rust binary.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import VARIANTS, to_hlo_text, _spec_json
+from compile.model import ModelConfig, make_entry_points
+import compile.kernels as K
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+# ------------------------------------------------------------ manifest
+
+
+def test_manifest_covers_all_variants():
+    m = manifest()
+    for enc, dec in VARIANTS:
+        assert f"{enc}_{dec}" in m["variants"]
+
+
+def test_manifest_files_exist_and_parse():
+    m = manifest()
+    for vname, v in m["variants"].items():
+        total = v["params"]["total"]
+        assert total > 0
+        # layout is packed
+        off = 0
+        for t in v["params"]["tensors"]:
+            assert t["offset"] == off, (vname, t["name"])
+            off += int(np.prod(t["shape"])) if t["shape"] else 1
+        assert off == total
+        for ename, e in v["entries"].items():
+            assert e["args"][0]["name"] == "params"
+            assert e["args"][0]["shape"] == [total]
+            for impl, fname in e["artifacts"].items():
+                path = os.path.join(ART, fname)
+                assert os.path.exists(path), fname
+                with open(path) as f:
+                    head = f.read(200)
+                assert "HloModule" in head, fname
+
+
+def test_manifest_entry_set_complete():
+    m = manifest()
+    for v in m["variants"].values():
+        assert set(v["entries"]) == {"train", "grad", "encode", "score"}
+
+
+def test_manifest_init_kinds_known():
+    m = manifest()
+    kinds = {"glorot", "zeros", "ones", "prelu", "normal"}
+    for v in m["variants"].values():
+        for t in v["params"]["tensors"]:
+            assert t["init"] in kinds, t
+
+
+def test_adam_hyperparams_recorded():
+    m = manifest()
+    assert m["adam"]["lr"] == pytest.approx(1e-3)
+    assert m["adam"]["beta1"] == pytest.approx(0.9)
+
+
+# ------------------------------------------- HLO round-trip execution
+
+
+def _exec_hlo_text(text, args):
+    """Compile HLO text with xla_client's CPU backend and run it."""
+    from jax._src.lib import xla_client as xc
+
+    backend = jax.devices("cpu")[0].client
+    comp = xc.XlaComputation(
+        xc._xla.hlo_module_proto_from_text(text).as_serialized_hlo_module_proto()
+    )
+    exe = backend.compile(comp.as_serialized_hlo_module_proto())
+    bufs = [backend.buffer_from_pyval(a) for a in args]
+    out = exe.execute(bufs)
+    return [np.asarray(b) for b in out]
+
+
+def test_hlo_text_roundtrip_matches_jax():
+    """encode artifact: HLO-text → compile → run == direct jax call."""
+    cfg = ModelConfig(feat_dim=8, hidden=8, block_nodes=16, block_edges=8,
+                      score_batch=16)
+    layout, entries = make_entry_points(cfg)
+    fn, spec = entries["encode"]
+    rng = np.random.default_rng(0)
+    flat = rng.normal(size=(layout.total,)).astype(np.float32) * 0.1
+    feats = rng.normal(size=(16, 8)).astype(np.float32)
+    adj = np.eye(16, dtype=np.float32)
+
+    K.use_impl("pallas")
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((layout.total,), jnp.float32),
+        jax.ShapeDtypeStruct((16, 8), jnp.float32),
+        jax.ShapeDtypeStruct((16, 16), jnp.float32),
+    )
+    text = to_hlo_text(lowered)
+
+    direct = np.asarray(jax.jit(fn)(flat, feats, adj)[0])
+    try:
+        via_hlo = _exec_hlo_text(text, [flat, feats, adj])
+    except Exception as e:  # pragma: no cover - api drift guard
+        pytest.skip(f"xla_client text execution unavailable: {e}")
+    np.testing.assert_allclose(via_hlo[0], direct, rtol=1e-4, atol=1e-5)
+
+
+def test_spec_json_dtypes():
+    s = jax.ShapeDtypeStruct((2, 3), jnp.float32)
+    assert _spec_json("x", s) == {"name": "x", "dtype": "f32",
+                                  "shape": [2, 3]}
+    s = jax.ShapeDtypeStruct((4,), jnp.int32)
+    assert _spec_json("i", s)["dtype"] == "i32"

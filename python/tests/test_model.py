@@ -1,0 +1,292 @@
+"""L2 model tests: layouts, shapes, loss semantics, optimizer step.
+
+These pin the *semantic* contract the rust coordinator depends on:
+parameter layout determinism, entry-point signatures, masked loss,
+Adam update behaviour, and pallas-vs-jnp agreement at the model level.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import compile.kernels as K
+from compile.model import (
+    ADAM,
+    Layout,
+    ModelConfig,
+    build_layout,
+    link_loss,
+    make_entry_points,
+)
+
+SMALL = dict(feat_dim=8, hidden=8, block_nodes=24, block_edges=12,
+             score_batch=16)
+
+
+def small_cfg(encoder="gcn", decoder="mlp"):
+    return ModelConfig(encoder=encoder, decoder=decoder, **SMALL)
+
+
+def _sparse_row_norm_adj(rng, n, deg=4):
+    """Random sparse row-stochastic adjacency with self-loops.
+
+    A uniform dense adjacency would collapse GCN embeddings to the global
+    mean (every row identical), which is unrepresentative of the sampled
+    blocks the rust sampler actually produces.
+    """
+    adj = np.zeros((n, n), np.float32)
+    for i in range(n):
+        nbrs = rng.choice(n, size=min(deg, n), replace=False)
+        adj[i, nbrs] = 1.0
+        adj[i, i] = 1.0
+    adj /= adj.sum(-1, keepdims=True)
+    return adj
+
+
+def make_batch(cfg, rng, seed_mask_ones=True):
+    Bn, Be, F, R = (cfg.block_nodes, cfg.block_edges, cfg.feat_dim,
+                    cfg.relations)
+    feats = rng.normal(size=(Bn, F)).astype(np.float32)
+    if cfg.encoder == "rgcn":
+        adj = np.stack(
+            [_sparse_row_norm_adj(rng, Bn) for _ in range(R)]
+        )
+    else:
+        adj = _sparse_row_norm_adj(rng, Bn)
+    ints = lambda: rng.integers(0, Bn, size=(Be,)).astype(np.int32)
+    mask = np.ones(Be, np.float32) if seed_mask_ones else None
+    if cfg.hetero:
+        rel = rng.integers(0, R, size=(Be,)).astype(np.int32)
+        return (feats, adj, ints(), ints(), rel, ints(), mask)
+    return (feats, adj, ints(), ints(), ints(), mask)
+
+
+def init_flat(layout, rng, scale=0.1):
+    return (rng.normal(size=(layout.total,)) * scale).astype(np.float32)
+
+
+# ------------------------------------------------------------ layouts
+
+
+@pytest.mark.parametrize("enc", ["gcn", "sage", "mlp", "rgcn"])
+@pytest.mark.parametrize("dec", ["mlp", "distmult"])
+def test_layout_deterministic_and_packed(enc, dec):
+    cfg = small_cfg(enc, dec)
+    a, b = build_layout(cfg), build_layout(cfg)
+    assert [t.name for t in a.tensors] == [t.name for t in b.tensors]
+    # offsets are contiguous and non-overlapping
+    off = 0
+    for t in a.tensors:
+        assert t.offset == off
+        off += t.size
+    assert off == a.total
+
+
+def test_layout_unflatten_roundtrip():
+    cfg = small_cfg()
+    lo = build_layout(cfg)
+    flat = jnp.arange(lo.total, dtype=jnp.float32)
+    parts = lo.unflatten(flat)
+    # every flat element appears exactly once across tensors
+    got = jnp.concatenate([parts[t.name].reshape(-1) for t in lo.tensors])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(flat))
+
+
+def test_layout_names_unique():
+    lo = build_layout(small_cfg("rgcn", "distmult"))
+    names = [t.name for t in lo.tensors]
+    assert len(names) == len(set(names))
+
+
+# ----------------------------------------------------------- entries
+
+
+@pytest.mark.parametrize(
+    "enc,dec",
+    [("gcn", "mlp"), ("sage", "mlp"), ("mlp", "mlp"),
+     ("gcn", "distmult"), ("rgcn", "mlp"), ("rgcn", "distmult")],
+)
+def test_entry_shapes(enc, dec):
+    cfg = small_cfg(enc, dec)
+    layout, entries = make_entry_points(cfg)
+    rng = np.random.default_rng(0)
+    batch = make_batch(cfg, rng)
+    flat = init_flat(layout, rng)
+    m = np.zeros_like(flat)
+    t = np.zeros(1, np.float32)
+
+    fn, _ = entries["train"]
+    out = jax.jit(fn)(flat, m, m, t, *batch)
+    assert out[0].shape == (layout.total,)
+    assert out[3].shape == (1,) and float(out[3][0]) == 1.0
+    assert out[4].shape == ()
+
+    fn, _ = entries["grad"]
+    g, loss = jax.jit(fn)(flat, *batch)
+    assert g.shape == (layout.total,) and loss.shape == ()
+
+    fn, _ = entries["encode"]
+    (emb,) = jax.jit(fn)(flat, batch[0], batch[1])
+    assert emb.shape == (cfg.block_nodes, cfg.hidden)
+
+    fn, spec = entries["score"]
+    S = cfg.score_batch
+    eu = rng.normal(size=(S, cfg.hidden)).astype(np.float32)
+    ev = rng.normal(size=(S, cfg.hidden)).astype(np.float32)
+    if dec == "distmult":
+        rel = rng.integers(0, cfg.relations, size=(S,)).astype(np.int32)
+        (s,) = jax.jit(fn)(flat, eu, ev, rel)
+    else:
+        (s,) = jax.jit(fn)(flat, eu, ev)
+    assert s.shape == (S,)
+
+
+def test_entry_arg_specs_match_callables():
+    """The manifest arg specs must exactly describe what the fn accepts —
+    this is the cross-language packing contract."""
+    cfg = small_cfg("gcn", "mlp")
+    _, entries = make_entry_points(cfg)
+    for name, (fn, spec) in entries.items():
+        args = [
+            jnp.zeros(s.shape, s.dtype) if str(s.dtype) == "float32"
+            else jnp.zeros(s.shape, jnp.int32)
+            for (_, s) in spec
+        ]
+        jax.eval_shape(fn, *args)  # raises on mismatch
+
+
+# ------------------------------------------------------------- loss
+
+
+def test_loss_mask_excludes_padding():
+    cfg = small_cfg()
+    layout, _ = make_entry_points(cfg)
+    rng = np.random.default_rng(1)
+    feats, adj, pu, pv, nv, _ = make_batch(cfg, rng)
+    flat = jnp.asarray(init_flat(layout, rng))
+
+    full = np.ones(cfg.block_edges, np.float32)
+    half = full.copy()
+    half[cfg.block_edges // 2:] = 0.0
+    # Perturb the masked-out tail: loss must not change.
+    pu2, pv2, nv2 = pu.copy(), pv.copy(), nv.copy()
+    pu2[cfg.block_edges // 2:] = 0
+    pv2[cfg.block_edges // 2:] = 1
+    nv2[cfg.block_edges // 2:] = 2
+    l1 = link_loss(cfg, layout, flat, (feats, adj, pu, pv, nv, half))
+    l2 = link_loss(cfg, layout, flat, (feats, adj, pu2, pv2, nv2, half))
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_loss_at_zero_params_is_2ln2():
+    """With all-zero weights every logit is 0 → BCE = 2·ln2 exactly."""
+    cfg = small_cfg()
+    layout, _ = make_entry_points(cfg)
+    rng = np.random.default_rng(2)
+    batch = make_batch(cfg, rng)
+    flat = jnp.zeros(layout.total, jnp.float32)
+    loss = link_loss(cfg, layout, flat, batch)
+    np.testing.assert_allclose(float(loss), 2 * np.log(2), rtol=1e-5)
+
+
+def test_mlp_encoder_ignores_graph():
+    cfg = small_cfg("mlp", "mlp")
+    layout, entries = make_entry_points(cfg)
+    rng = np.random.default_rng(3)
+    feats, adj, pu, pv, nv, mask = make_batch(cfg, rng)
+    flat = jnp.asarray(init_flat(layout, rng))
+    fn, _ = entries["grad"]
+    _, l1 = jax.jit(fn)(flat, feats, adj, pu, pv, nv, mask)
+    adj2 = np.zeros_like(adj)
+    _, l2 = jax.jit(fn)(flat, feats, adj2, pu, pv, nv, mask)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_gcn_encoder_uses_graph():
+    cfg = small_cfg("gcn", "mlp")
+    layout, entries = make_entry_points(cfg)
+    rng = np.random.default_rng(4)
+    feats, adj, pu, pv, nv, mask = make_batch(cfg, rng)
+    flat = jnp.asarray(init_flat(layout, rng, scale=0.5))
+    fn, _ = entries["encode"]
+    (e1,) = jax.jit(fn)(flat, feats, adj)
+    (e2,) = jax.jit(fn)(flat, feats, np.eye(cfg.block_nodes, dtype=np.float32))
+    assert not np.allclose(np.asarray(e1), np.asarray(e2), atol=1e-4)
+
+
+# ---------------------------------------------------------- training
+
+
+def test_train_step_is_adam():
+    """One train_step must equal grad_step + a hand-rolled Adam update."""
+    cfg = small_cfg()
+    layout, entries = make_entry_points(cfg)
+    rng = np.random.default_rng(5)
+    batch = make_batch(cfg, rng)
+    flat = init_flat(layout, rng)
+    m = np.zeros_like(flat)
+    v = np.zeros_like(flat)
+    t = np.zeros(1, np.float32)
+
+    train, _ = entries["train"]
+    grad, _ = entries["grad"]
+    f1, m1, v1, t1, loss1 = jax.jit(train)(flat, m, v, t, *batch)
+    g, loss2 = jax.jit(grad)(flat, *batch)
+    np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-6)
+
+    g = np.asarray(g)
+    em = ADAM["beta1"] * m + (1 - ADAM["beta1"]) * g
+    ev = ADAM["beta2"] * v + (1 - ADAM["beta2"]) * g * g
+    mh = em / (1 - ADAM["beta1"] ** 1)
+    vh = ev / (1 - ADAM["beta2"] ** 1)
+    ef = flat - ADAM["lr"] * mh / (np.sqrt(vh) + ADAM["eps"])
+    np.testing.assert_allclose(np.asarray(f1), ef, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m1), em, rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(v1), ev, rtol=1e-4, atol=1e-9)
+
+
+@pytest.mark.parametrize("enc", ["gcn", "sage"])
+def test_loss_decreases_under_training(enc):
+    """A few hundred steps on a fixed learnable batch must cut the loss —
+    end-to-end sanity of encoder + decoder + Adam."""
+    cfg = small_cfg(enc)
+    layout, entries = make_entry_points(cfg)
+    rng = np.random.default_rng(6)
+    batch = make_batch(cfg, rng)
+    flat = init_flat(layout, rng)
+    m = np.zeros_like(flat)
+    v = np.zeros_like(flat)
+    t = np.zeros(1, np.float32)
+    step = jax.jit(entries["train"][0])
+    first = None
+    for i in range(200):
+        flat, m, v, t, loss = step(flat, m, v, t, *batch)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.7, (first, float(loss))
+
+
+def test_model_level_pallas_vs_jnp():
+    """Whole-model agreement between kernel flavours (value and grad)."""
+    cfg = small_cfg()
+    layout, _ = make_entry_points(cfg)
+    rng = np.random.default_rng(7)
+    batch = make_batch(cfg, rng)
+    flat = jnp.asarray(init_flat(layout, rng))
+
+    def run(impl):
+        def f(fl):
+            K.use_impl(impl)
+            return link_loss(cfg, layout, fl, batch)
+
+        return jax.value_and_grad(f)(flat)
+
+    try:
+        lp, gp = run("pallas")
+        lj, gj = run("jnp")
+    finally:
+        K.use_impl("pallas")
+    np.testing.assert_allclose(float(lp), float(lj), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(gj),
+                               rtol=1e-3, atol=1e-5)

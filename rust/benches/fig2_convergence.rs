@@ -1,0 +1,39 @@
+//! Fig 2: validation MRR vs training time per approach on the
+//! citation benchmark (best encoder). Emits one CSV series per
+//! approach under `results/fig2_<approach>.csv` and prints the
+//! convergence summary.
+
+use random_tma::benchkit::{best_variant, run_cell, BenchOpts};
+use random_tma::config::Approach;
+use random_tma::metrics::write_series_csv;
+use random_tma::util::bench::Table;
+
+fn main() {
+    let (opts, args) = BenchOpts::parse();
+    let ds = args.str_or("dataset", "citation-sim");
+    let preset = opts.preset(&ds, opts.base_seed).expect("preset");
+    let variant = best_variant(&ds);
+
+    let mut t = Table::new(
+        &format!("Fig 2: val-MRR-vs-time on {ds} ({variant})"),
+        &["Approach", "best val MRR", "Conv(s)", "points"],
+    );
+    for a in Approach::all(0) {
+        let cell = run_cell(&opts, &preset, variant, a, |_| {}).expect("run");
+        let r = &cell.results[0];
+        let series: Vec<(f64, f64)> =
+            r.val_curve.iter().map(|p| (p.t, p.val_mrr)).collect();
+        let path = std::path::PathBuf::from(format!(
+            "results/fig2_{}.csv",
+            a.name().to_ascii_lowercase().replace('-', "_")
+        ));
+        write_series_csv(&path, "t_secs,val_mrr", &series).expect("csv");
+        t.row(vec![
+            a.name().to_string(),
+            format!("{:.4}", r.best_val_mrr),
+            format!("{:.1}", r.convergence_secs(0.01)),
+            series.len().to_string(),
+        ]);
+    }
+    t.emit("fig2_convergence");
+}

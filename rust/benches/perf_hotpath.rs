@@ -1,0 +1,53 @@
+//! Perf probe: per-component latency of the training hot path.
+use random_tma::gen::{dcsbm, DcsbmConfig};
+use random_tma::model::ModelState;
+use random_tma::runtime::{Engine, Manifest};
+use random_tma::sampler::{AdjMode, TrainSampler, TrainSamplerConfig};
+use random_tma::util::bench::{fmt_secs, time};
+use random_tma::util::rng::Rng;
+
+fn main() {
+    let manifest = Manifest::load(&Manifest::default_dir()).expect("artifacts");
+    let g = dcsbm(&DcsbmConfig {
+        nodes: 5000, communities: 10, avg_degree: 12.0, homophily: 0.8,
+        feat_dim: 64, feature_noise: 0.5, degree_exponent: 0.8, seed: 1,
+    });
+    let globals: Vec<u32> = (0..g.num_nodes() as u32).collect();
+    for (variant, encoder, impl_name) in [
+        ("gcn_mlp", "gcn", "pallas"), ("gcn_mlp", "gcn", "jnp"),
+        ("sage_mlp", "sage", "pallas"), ("sage_mlp", "sage", "jnp"),
+        ("mlp_mlp", "mlp", "jnp"),
+    ] {
+        let t0 = std::time::Instant::now();
+        let engine = Engine::load(&manifest, variant, impl_name).unwrap();
+        let compile_s = t0.elapsed().as_secs_f64();
+        let cfg = TrainSamplerConfig {
+            block_nodes: manifest.dims.block_nodes,
+            block_edges: manifest.dims.block_edges,
+            feat_dim: manifest.dims.feat_dim,
+            fanouts: vec![10, 5],
+            adj_mode: AdjMode::for_encoder(encoder),
+            relations: 1, boundary: 0,
+        };
+        let mut sampler = TrainSampler::new(g.clone(), globals.clone(), cfg);
+        let mut rng = Rng::new(2);
+        let mut state = ModelState::init(&engine.variant, &mut rng);
+        let t_sample = time("sample", 2, 10, || {
+            sampler.next_block(&mut rng);
+        });
+        let block = sampler.next_block(&mut rng).unwrap().clone();
+        let t_step = time("train_step", 1, 5, || {
+            engine.train_step(&mut state, &block).unwrap();
+        });
+        let t_enc = time("encode", 1, 5, || {
+            engine.encode(&state.params, &block).unwrap();
+        });
+        println!(
+            "{variant:10} {impl_name:6} compile {:6.1}s  sample {}  step {}  encode {}",
+            compile_s,
+            fmt_secs(t_sample.median_s()),
+            fmt_secs(t_step.median_s()),
+            fmt_secs(t_enc.median_s()),
+        );
+    }
+}

@@ -1,0 +1,36 @@
+//! Table 1: dataset statistics (synthetic substitutes — DESIGN.md §2).
+//!
+//! Regenerates the paper's dataset table for the four generated
+//! benchmarks, plus the homophily column the theory depends on.
+
+use random_tma::benchkit::BenchOpts;
+use random_tma::graph::stats::graph_stats;
+use random_tma::util::bench::{fmt_secs, time, Table};
+
+fn main() {
+    let (opts, _) = BenchOpts::parse();
+    let mut t = Table::new(
+        "Table 1: dataset statistics",
+        &["Dataset", "#Nodes |V|", "#Edges |E|", "#Feat F", "AvgDeg",
+          "homophily h", "#Val/Test", "GenTime"],
+    );
+    for name in random_tma::gen::preset_names() {
+        let mut preset = None;
+        let gen_t = time(name, 0, 1, || {
+            preset = Some(opts.preset(name, opts.base_seed).expect("preset"));
+        });
+        let p = preset.unwrap();
+        let s = graph_stats(&p.graph);
+        t.row(vec![
+            name.to_string(),
+            s.num_nodes.to_string(),
+            s.num_edges.to_string(),
+            s.feat_dim.to_string(),
+            format!("{:.1}", s.avg_degree),
+            format!("{:.2}", s.homophily),
+            format!("{}/{}", p.split.val.len(), p.split.test.len()),
+            fmt_secs(gen_t.median_s()),
+        ]);
+    }
+    t.emit("table1_datasets");
+}

@@ -1,0 +1,60 @@
+//! Table 4: ablation on the aggregation interval ρ.
+//!
+//! Paper: ρ ∈ {2, 8, 30} min of a 4 h budget; here {1/15, 1/30, 1/8}
+//! of ΔT_train preserve the ratios. Expected shape: RandomTMA and
+//! SuperTMA are insensitive to ρ; PSGD-PA/LLCG degrade markedly as ρ
+//! grows (their min-cut partitions drift apart between syncs).
+
+use random_tma::benchkit::{best_variant, run_cell, BenchOpts};
+use random_tma::config::Approach;
+use random_tma::util::bench::Table;
+
+fn main() {
+    let (opts, args) = BenchOpts::parse();
+    let datasets: Vec<String> = args
+        .str_or("datasets", "reddit-sim")
+        .split(',')
+        .map(String::from)
+        .collect();
+    // Paper ratio rho/T_train: 2/240, 8/240, 30/240.
+    let rhos: Vec<f64> = [2.0, 8.0, 30.0]
+        .iter()
+        .map(|m| (m / 240.0) * opts.train_secs)
+        .collect();
+
+    let mut t = Table::new(
+        "Table 4: varying aggregation interval ρ (test MRR % / conv s)",
+        &["Dataset", "Approach", "ρ=2' eq", "ρ=8' eq", "ρ=30' eq"],
+    );
+    for ds in &datasets {
+        let preset = opts.preset(ds, opts.base_seed).expect("preset");
+        let variant = best_variant(ds);
+        for a in [
+            Approach::RandomTma,
+            Approach::SuperTma { num_clusters: 0 },
+            Approach::PsgdPa,
+            Approach::Llcg { correction_steps: 4 },
+        ] {
+            let mut cells = Vec::new();
+            for &rho in &rhos {
+                let cell = run_cell(&opts, &preset, variant, a, |cfg| {
+                    cfg.agg_secs = rho;
+                })
+                .expect("run");
+                cells.push(format!(
+                    "{} / {}",
+                    cell.mrr_str(),
+                    cell.conv_str()
+                ));
+            }
+            t.row(vec![
+                ds.clone(),
+                a.name().to_string(),
+                cells[0].clone(),
+                cells[1].clone(),
+                cells[2].clone(),
+            ]);
+        }
+    }
+    t.emit("table4_interval");
+}

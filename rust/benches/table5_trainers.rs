@@ -1,0 +1,57 @@
+//! Table 5: ablation on the number of trainers M.
+//!
+//! Paper: M ∈ {3, 5, 23} (23 = all GPUs minus the evaluator). On one
+//! time-shared core we use {3, 5, 8} — threads beyond the core count
+//! only shrink each trainer's share, which is exactly the effect under
+//! study (less data per trainer). Expected shape: RandomTMA peaks at
+//! moderate M then drops (r = 1/M data loss); SuperTMA keeps improving
+//! or holds (clusters preserve local edges); PSGD-PA/LLCG stay behind.
+
+use random_tma::benchkit::{best_variant, run_cell, BenchOpts};
+use random_tma::config::Approach;
+use random_tma::util::bench::Table;
+
+fn main() {
+    let (opts, args) = BenchOpts::parse();
+    let datasets: Vec<String> = args
+        .str_or("datasets", "ecomm-sim")
+        .split(',')
+        .map(String::from)
+        .collect();
+    let ms: Vec<usize> = args
+        .str_or("ms", "3,5,8")
+        .split(',')
+        .map(|x| x.parse().unwrap())
+        .collect();
+
+    let mut header = vec!["Dataset".to_string(), "Approach".to_string()];
+    for m in &ms {
+        header.push(format!("r M={m}"));
+        header.push(format!("MRR M={m}"));
+    }
+    let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Table 5: varying number of trainers M", &href);
+
+    for ds in &datasets {
+        let preset = opts.preset(ds, opts.base_seed).expect("preset");
+        let variant = best_variant(ds);
+        for a in [
+            Approach::RandomTma,
+            Approach::SuperTma { num_clusters: 0 },
+            Approach::PsgdPa,
+            Approach::Llcg { correction_steps: 4 },
+        ] {
+            let mut row = vec![ds.clone(), a.name().to_string()];
+            for &m in &ms {
+                let cell = run_cell(&opts, &preset, variant, a, |cfg| {
+                    cfg.trainers = m;
+                })
+                .expect("run");
+                row.push(format!("{:.2}", cell.ratio_r));
+                row.push(cell.mrr_str());
+            }
+            t.row(row);
+        }
+    }
+    t.emit("table5_trainers");
+}

@@ -1,0 +1,61 @@
+//! Table 6: robustness to trainer failures — F=1 of M=3 trainers
+//! never starts and its subgraph is lost; training proceeds on the
+//! remaining two. As in the paper, we run M sub-runs per seed dropping
+//! a different partition each time and average.
+//!
+//! Expected shape: RandomTMA/SuperTMA lose <~0.5 MRR points (any
+//! random third of the data looks like the rest); PSGD-PA/LLCG lose
+//! much more with higher variance (an entire min-cut community
+//! disappears).
+
+use random_tma::benchkit::{best_variant, run_cell, BenchOpts};
+use random_tma::config::Approach;
+use random_tma::util::bench::Table;
+use random_tma::util::stats;
+
+fn main() {
+    let (opts, args) = BenchOpts::parse();
+    let ds = args.str_or("dataset", "mag-sim");
+    let m = args.usize_or("m", 3);
+    let preset = opts.preset(&ds, opts.base_seed).expect("preset");
+    let variant = best_variant(&ds);
+
+    let mut t = Table::new(
+        &format!("Table 6: failure robustness on {ds} (F=1 of M={m})"),
+        &["Approach", "MRR F=1", "MRR F=0", "ΔMRR", "Conv F=1", "Conv F=0"],
+    );
+    for a in [
+        Approach::RandomTma,
+        Approach::SuperTma { num_clusters: 0 },
+        Approach::PsgdPa,
+        Approach::Llcg { correction_steps: 4 },
+    ] {
+        // Baseline F=0.
+        let base = run_cell(&opts, &preset, variant, a, |cfg| {
+            cfg.trainers = m;
+        })
+        .expect("run");
+        // F=1: drop each partition in turn under the same assignment.
+        let mut mrr_f1 = Vec::new();
+        let mut conv_f1 = Vec::new();
+        for dropped in 0..m {
+            let cell = run_cell(&opts, &preset, variant, a, |cfg| {
+                cfg.trainers = m;
+                cfg.failures = 1;
+                cfg.failed_ids = vec![dropped];
+            })
+            .expect("run");
+            mrr_f1.push(cell.mean_mrr());
+            conv_f1.push(cell.mean_conv());
+        }
+        t.row(vec![
+            a.name().to_string(),
+            stats::fmt_mean_std(&mrr_f1, 2),
+            base.mrr_str(),
+            format!("{:+.2}", stats::mean(&mrr_f1) - base.mean_mrr()),
+            stats::fmt_mean_std(&conv_f1, 1),
+            base.conv_str(),
+        ]);
+    }
+    t.emit("table6_failure");
+}

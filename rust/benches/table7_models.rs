@@ -1,0 +1,60 @@
+//! Table 7: base-model ablation on the homogeneous datasets —
+//! GCN / GraphSAGE / MLP encoders × 5 approaches, plus the partition
+//! preprocessing time and retained-edge ratio r.
+//!
+//! Expected shape: the GNN encoders beat the graph-agnostic MLP by a
+//! wide margin everywhere; RandomTMA's prep time is ~0 while the
+//! min-cut schemes pay a clustering cost; MLP is skipped for LLCG (its
+//! global correction exists to recover graph structure the MLP never
+//! uses — paper App. A).
+
+use random_tma::benchkit::{run_cell, BenchOpts};
+use random_tma::config::Approach;
+use random_tma::util::bench::Table;
+use random_tma::util::stats;
+
+fn main() {
+    let (opts, args) = BenchOpts::parse();
+    let datasets: Vec<String> = args
+        .str_or("datasets", "reddit-sim,citation-sim")
+        .split(',')
+        .map(String::from)
+        .collect();
+    let encoders = ["gcn_mlp", "sage_mlp", "mlp_mlp"];
+
+    let mut t = Table::new(
+        "Table 7: base-model ablation (test MRR %)",
+        &["Dataset", "Approach", "r", "Prep(s)", "GCN", "SAGE", "MLP"],
+    );
+    for ds in &datasets {
+        let preset = opts.preset(ds, opts.base_seed).expect("preset");
+        for a in Approach::all(0) {
+            let mut cells = Vec::new();
+            let mut ratio = 0.0;
+            let mut prep = Vec::new();
+            for variant in encoders {
+                if variant == "mlp_mlp"
+                    && matches!(a, Approach::Llcg { .. })
+                {
+                    cells.push("-".to_string());
+                    continue;
+                }
+                let cell =
+                    run_cell(&opts, &preset, variant, a, |_| {}).expect("run");
+                ratio = cell.ratio_r;
+                prep.extend_from_slice(&cell.prep);
+                cells.push(cell.mrr_str());
+            }
+            t.row(vec![
+                ds.clone(),
+                a.name().to_string(),
+                format!("{ratio:.2}"),
+                format!("{:.2}", stats::mean(&prep)),
+                cells[0].clone(),
+                cells[1].clone(),
+                cells[2].clone(),
+            ]);
+        }
+    }
+    t.emit("table7_models");
+}

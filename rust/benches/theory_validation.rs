@@ -1,0 +1,189 @@
+//! Theory validation: Lemma 1, Theorem 2 and Corollary 3 measured on
+//! the exact 2-class compatibility model they are stated for.
+//!
+//! 1. **Lemma 1 / Eq. (2)** — expected edge-cut λ(β) of a balanced
+//!    2-partition whose class-purity is β:
+//!        λ(β) = (1 − 2(1−β)β − (2β−1)² h) · η²/C
+//!    normalised here to the cut *fraction* λ(β)/λ(0.5) =
+//!    1 − (2β−1)²(2h−1). Monte-Carlo cut fractions on sampled SBM
+//!    graphs must match, with the minimum at β = 1 (class-pure parts).
+//! 2. **Thm 2 (1)** — closed-form initial-gradient discrepancies
+//!    ‖E∇L_i^local − E∇L^global‖ must grow with ‖C₂−C₁‖ = √2|1−2β|,
+//!    and vanish at β = 0.5.
+//! 3. **Cor 3** — under random partition, measured ‖C₂−C₁‖ ≈ 0 and the
+//!    min-cut partitioner instead drives it toward √2.
+
+use random_tma::gen::{sbm2, Sbm2Config};
+use random_tma::graph::stats::{class_distribution, l2_distance};
+use random_tma::partition::{
+    metis_like, partition_stats, random_partition, MetisConfig,
+};
+use random_tma::util::bench::Table;
+use random_tma::util::cli::Args;
+use random_tma::util::rng::Rng;
+
+/// Closed-form expected cut *fraction* for purity β (Eq. 2 without the
+/// η²/C scale — the bracket is already the per-edge crossing
+/// probability: h·2β(1−β) + (1−h)(1−2β(1−β))).
+fn cut_fraction(beta: f64, h: f64) -> f64 {
+    let q = 2.0 * beta - 1.0;
+    1.0 - 2.0 * (1.0 - beta) * beta - q * q * h
+}
+
+/// Thm 2 closed forms for the initial-gradient discrepancies.
+fn grad_discrepancies(beta: f64, h: f64) -> (f64, f64, f64) {
+    let s2 = 2f64.sqrt();
+    let g_l1 = s2 / 8.0
+        * ((1.0 - 2.0 * beta) * (h - 1.0) * h
+            / (beta - 2.0 * beta * h + h))
+            .abs();
+    let g_l2 = s2 / 8.0
+        * ((2.0 * beta - 1.0) * (h - 1.0) * h
+            / (1.0 - beta + (2.0 * beta - 1.0) * h))
+            .abs();
+    let l1_l2 = ((1.0 / (4.0 * s2)) * (2.0 * beta - 1.0) * (h - 1.0) * h
+        / ((beta - 2.0 * beta * h + h - 1.0)
+            * (beta - 2.0 * beta * h + h)))
+        .abs();
+    (g_l1, g_l2, l1_l2)
+}
+
+fn main() {
+    let args = Args::parse(&["quick"]);
+    let h = args.f64_or("h", 0.8);
+    let class_size = args.usize_or("class-size", 2000);
+    let seed = args.u64_or("seed", 17);
+
+    let g = sbm2(&Sbm2Config {
+        class_size,
+        avg_degree: 16.0,
+        homophily: h,
+        seed,
+    });
+    let n = g.num_nodes();
+
+    // ---- Lemma 1: cut fraction vs beta -----------------------------------
+    let mut t1 = Table::new(
+        &format!("Lemma 1: edge-cut fraction vs partition purity β (h={h})"),
+        &["β", "closed form", "measured", "abs err"],
+    );
+    let mut rng = Rng::new(seed ^ 1);
+    for beta in [0.5, 0.6, 0.7, 0.8, 0.9, 1.0] {
+        // Build a balanced partition with class purity beta.
+        let per_class = class_size;
+        let take0 = (beta * per_class as f64) as usize;
+        let mut assign = vec![1u32; n];
+        // class 0 occupies [0, per_class); class 1 the rest.
+        let mut c0: Vec<usize> = (0..per_class).collect();
+        let mut c1: Vec<usize> = (per_class..n).collect();
+        rng.shuffle(&mut c0);
+        rng.shuffle(&mut c1);
+        for &v in c0.iter().take(take0) {
+            assign[v] = 0;
+        }
+        for &v in c1.iter().take(per_class - take0) {
+            assign[v] = 0;
+        }
+        let stats = partition_stats(&g, &assign, 2);
+        let measured = 1.0 - stats.ratio_r;
+        let expect = cut_fraction(beta, h);
+        t1.row(vec![
+            format!("{beta:.1}"),
+            format!("{expect:.4}"),
+            format!("{measured:.4}"),
+            format!("{:.4}", (measured - expect).abs()),
+        ]);
+    }
+    t1.emit("theory_lemma1");
+
+    // ---- Thm 2: gradient discrepancies vs ||C2 - C1|| --------------------
+    let mut t2 = Table::new(
+        &format!("Thm 2: initial-gradient discrepancies vs β (h={h})"),
+        &["β", "‖C2−C1‖", "‖∇g−∇l1‖", "‖∇g−∇l2‖", "‖∇l1−∇l2‖"],
+    );
+    for beta in [0.5, 0.6, 0.7, 0.8, 0.9, 1.0] {
+        let (a, b, c) = grad_discrepancies(beta, h);
+        t2.row(vec![
+            format!("{beta:.1}"),
+            format!("{:.4}", 2f64.sqrt() * (1.0 - 2.0 * beta).abs()),
+            format!("{a:.4}"),
+            format!("{b:.4}"),
+            format!("{c:.4}"),
+        ]);
+    }
+    t2.emit("theory_thm2");
+
+    // ---- Cor 3 vs Lemma 1 partitioners on the same graph ------------------
+    let mut t3 = Table::new(
+        "Cor 3: measured class disparity ‖C2−C1‖ by partitioner",
+        &["Partitioner", "‖C2−C1‖", "cut fraction"],
+    );
+    let mut rng = Rng::new(seed ^ 2);
+    let rand_assign = random_partition(n, 2, &mut rng);
+    let s_rand = partition_stats(&g, &rand_assign, 2);
+    let metis_assign = metis_like(&g, 2, &MetisConfig::default(), &mut rng);
+    let s_metis = partition_stats(&g, &metis_assign, 2);
+    for (name, s) in [("random (Cor 3)", &s_rand), ("min-cut (Lem 1)", &s_metis)]
+    {
+        t3.row(vec![
+            name.to_string(),
+            format!("{:.4}", s.class_disparity),
+            format!("{:.4}", 1.0 - s.ratio_r),
+        ]);
+    }
+    t3.emit("theory_cor3");
+
+    // ---- Lemma 1 mechanism on a community graph ---------------------------
+    // On the structureless 2-class SBM a *heuristic* min-cut can find
+    // balanced local optima that mix classes (Lemma 1 speaks about the
+    // optimal cut, verified by the λ(β) curve above: minimum at β = 1).
+    // The disparity mechanism the paper exploits appears on graphs with
+    // community structure, where min-cut aligns parts with communities:
+    let gc = random_tma::gen::dcsbm(&random_tma::gen::DcsbmConfig {
+        nodes: 3000,
+        communities: 12,
+        avg_degree: 14.0,
+        homophily: 0.9,
+        feat_dim: 4,
+        feature_noise: 0.3,
+        degree_exponent: 0.5,
+        seed: seed ^ 3,
+    });
+    let mut rng = Rng::new(seed ^ 4);
+    let rc = random_partition(gc.num_nodes(), 3, &mut rng);
+    let mc = metis_like(&gc, 3, &MetisConfig::default(), &mut rng);
+    let s_rc = partition_stats(&gc, &rc, 3);
+    let s_mc = partition_stats(&gc, &mc, 3);
+    let mut t4 = Table::new(
+        "Lemma 1 mechanism on a 12-community DC-SBM (M=3)",
+        &["Partitioner", "class disparity", "cut fraction"],
+    );
+    for (name, s) in [("random", &s_rc), ("min-cut", &s_mc)] {
+        t4.row(vec![
+            name.to_string(),
+            format!("{:.4}", s.class_disparity),
+            format!("{:.4}", 1.0 - s.ratio_r),
+        ]);
+    }
+    t4.emit("theory_mechanism");
+
+    // Assertions: this bench doubles as a checked experiment.
+    let parts = random_tma::partition::parts_of(&rand_assign, 2);
+    let d_rand = l2_distance(
+        &class_distribution(&g, &parts[0]),
+        &class_distribution(&g, &parts[1]),
+    );
+    assert!(d_rand < 0.1, "Cor 3 violated: random disparity {d_rand}");
+    assert!(
+        (1.0 - s_metis.ratio_r) < 0.45,
+        "min-cut worse than random: cut {}",
+        1.0 - s_metis.ratio_r
+    );
+    assert!(
+        s_mc.class_disparity > 3.0 * s_rc.class_disparity,
+        "Lemma 1 mechanism absent on community graph: {} vs {}",
+        s_mc.class_disparity,
+        s_rc.class_disparity
+    );
+    println!("theory checks passed ✓");
+}

@@ -1,0 +1,219 @@
+//! Shared harness for the paper-table benches (`rust/benches/*.rs`).
+//!
+//! Each bench binary reproduces one table/figure: it builds the
+//! relevant [`RunConfig`]s, runs them through the coordinator, and
+//! renders a paper-style table (stdout + `results/*.json`). Common
+//! flags:
+//!
+//! ```text
+//! --quick            1/8-size datasets, short training windows
+//! --seeds <n>        repeats per cell (mean ± std, like the paper)
+//! --train-secs <s>   override ΔT_train
+//! --agg-secs <s>     override ρ
+//! ```
+//!
+//! Scale note (DESIGN.md §2): the paper's 4-hour × 8-GPU budget maps
+//! to tens of seconds on this single-core testbed; ρ/ΔT_train ratios
+//! are preserved.
+
+use crate::config::{Approach, RunConfig};
+use crate::coordinator::driver::{default_clusters, run_on_preset};
+use crate::gen::{load_preset, Preset};
+use crate::metrics::RunResult;
+use crate::util::cli::Args;
+use crate::util::stats;
+
+/// Common bench parameters parsed from argv.
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    pub quick: bool,
+    pub seeds: u64,
+    pub train_secs: f64,
+    pub agg_secs: f64,
+    pub negatives: usize,
+    pub eval_edges: usize,
+    pub eval_sample: usize,
+    pub base_seed: u64,
+}
+
+impl BenchOpts {
+    pub fn parse() -> (BenchOpts, Args) {
+        // Budget default: quick mode unless --full is passed (the full
+        // datasets + windows need ~10x the wall clock).
+        let args = Args::parse(&["quick", "full"]);
+        let quick = !args.flag("full");
+        let opts = BenchOpts {
+            quick,
+            seeds: args.u64_or("seeds", 1),
+            train_secs: args
+                .f64_or("train-secs", if quick { 8.0 } else { 30.0 }),
+            agg_secs: args.f64_or("agg-secs", if quick { 1.0 } else { 2.0 }),
+            negatives: args.usize_or("negatives", if quick { 32 } else { 64 }),
+            eval_edges: args.usize_or("eval-edges", if quick { 64 } else { 128 }),
+            eval_sample: args.usize_or("eval-sample", if quick { 32 } else { 64 }),
+            base_seed: args.u64_or("seed", 17),
+        };
+        (opts, args)
+    }
+
+    /// Base RunConfig for a dataset/variant/approach cell.
+    pub fn config(
+        &self,
+        dataset: &str,
+        variant: &str,
+        approach: Approach,
+        seed: u64,
+    ) -> RunConfig {
+        RunConfig {
+            dataset: dataset.into(),
+            quick: self.quick,
+            variant: variant.into(),
+            approach,
+            train_secs: self.train_secs,
+            agg_secs: self.agg_secs,
+            eval_edges: self.eval_edges,
+            negatives: self.negatives,
+            eval_sample: self.eval_sample,
+            seed,
+            ..RunConfig::default()
+        }
+    }
+
+    /// Dataset preset shared by all approaches of one table row.
+    pub fn preset(&self, dataset: &str, seed: u64) -> anyhow::Result<Preset> {
+        load_preset(dataset, self.quick, self.eval_edges, self.negatives, seed)
+    }
+}
+
+/// The paper's best encoder per dataset (Table 2 selects per-approach
+/// bests from Table 7; SAGE wins MAG240M-P, GCN the rest).
+pub fn best_variant(dataset: &str) -> &'static str {
+    match dataset {
+        "mag-sim" => "sage_mlp",
+        _ => "gcn_mlp",
+    }
+}
+
+/// Resolve SuperTMA's N against a dataset (paper: N = 15,000).
+pub fn approach_for(preset: &Preset, approach: Approach) -> Approach {
+    match approach {
+        Approach::SuperTma { num_clusters: 0 } => Approach::SuperTma {
+            num_clusters: default_clusters(preset.split.train.num_nodes()),
+        },
+        other => other,
+    }
+}
+
+/// One table cell aggregated over seeds.
+#[derive(Debug, Clone, Default)]
+pub struct Cell {
+    pub mrr: Vec<f64>,
+    pub conv: Vec<f64>,
+    pub ratio_r: f64,
+    pub prep: Vec<f64>,
+    pub results: Vec<RunResult>,
+}
+
+impl Cell {
+    pub fn push(&mut self, r: RunResult) {
+        self.mrr.push(r.test_mrr * 100.0);
+        let c = r.convergence_secs(0.01);
+        self.conv.push(if c.is_finite() { c } else { r.wall_secs });
+        self.ratio_r = r.ratio_r;
+        self.prep.push(r.prep_secs);
+        self.results.push(r);
+    }
+
+    pub fn mrr_str(&self) -> String {
+        stats::fmt_mean_std(&self.mrr, 2)
+    }
+
+    pub fn conv_str(&self) -> String {
+        stats::fmt_mean_std(&self.conv, 1)
+    }
+
+    pub fn mean_mrr(&self) -> f64 {
+        stats::mean(&self.mrr)
+    }
+
+    pub fn mean_conv(&self) -> f64 {
+        stats::mean(&self.conv)
+    }
+}
+
+/// Run one (dataset, variant, approach) cell over `seeds` repeats.
+pub fn run_cell(
+    opts: &BenchOpts,
+    preset: &Preset,
+    variant: &str,
+    approach: Approach,
+    mutate: impl Fn(&mut RunConfig),
+) -> anyhow::Result<Cell> {
+    let mut cell = Cell::default();
+    for s in 0..opts.seeds {
+        let seed = opts.base_seed + s * 1000;
+        let mut cfg =
+            opts.config(&preset.name, variant, approach_for(preset, approach), seed);
+        mutate(&mut cfg);
+        eprintln!("[bench] {} seed {}", cfg.label(), seed);
+        cell.push(run_on_preset(&cfg, preset)?);
+    }
+    Ok(cell)
+}
+
+/// Average ranks across datasets (Table 2's final columns): for each
+/// dataset, rank approaches by MRR (higher better) and conv time
+/// (lower better), then average each approach's ranks.
+pub fn average_ranks(
+    mrr_by_dataset: &[Vec<f64>],
+    conv_by_dataset: &[Vec<f64>],
+) -> (Vec<f64>, Vec<f64>) {
+    let n = mrr_by_dataset[0].len();
+    let mut mrr_rank_sum = vec![0.0; n];
+    let mut conv_rank_sum = vec![0.0; n];
+    for (ms, cs) in mrr_by_dataset.iter().zip(conv_by_dataset) {
+        for (i, r) in stats::ranks(ms, true).into_iter().enumerate() {
+            mrr_rank_sum[i] += r;
+        }
+        for (i, r) in stats::ranks(cs, false).into_iter().enumerate() {
+            conv_rank_sum[i] += r;
+        }
+    }
+    let d = mrr_by_dataset.len() as f64;
+    (
+        mrr_rank_sum.iter().map(|x| x / d).collect(),
+        conv_rank_sum.iter().map(|x| x / d).collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_ranks_match_hand_example() {
+        // two datasets, three approaches
+        let mrr = vec![vec![10.0, 30.0, 20.0], vec![30.0, 20.0, 10.0]];
+        let conv = vec![vec![1.0, 2.0, 3.0], vec![3.0, 2.0, 1.0]];
+        let (mr, cr) = average_ranks(&mrr, &conv);
+        assert_eq!(mr, vec![2.0, 1.5, 2.5]);
+        assert_eq!(cr, vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn best_variant_mapping() {
+        assert_eq!(best_variant("mag-sim"), "sage_mlp");
+        assert_eq!(best_variant("reddit-sim"), "gcn_mlp");
+    }
+
+    #[test]
+    fn cell_aggregates() {
+        let mut c = Cell::default();
+        assert_eq!(c.mean_mrr(), 0.0);
+        c.mrr = vec![40.0, 50.0];
+        c.conv = vec![10.0, 20.0];
+        assert_eq!(c.mean_mrr(), 45.0);
+        assert_eq!(c.mean_conv(), 15.0);
+        assert!(c.mrr_str().starts_with("45.00"));
+    }
+}

@@ -1,0 +1,216 @@
+//! Wire protocol + TCP transport for multi-process mode.
+//!
+//! The default benches run trainers as threads in one process (the
+//! paper also co-locates trainers on machines). This module provides
+//! the genuinely distributed alternative: a leader (TMA server) and
+//! `rtma worker` processes exchanging the same aggregation protocol
+//! over TCP. `examples/distributed_tcp.rs` drives it end to end.
+//!
+//! Framing: 4-byte LE length prefix + 1 tag byte + fixed header +
+//! payload (f32 weights as raw LE bytes). No serde dependency.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Result};
+
+/// Protocol messages between leader and workers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Worker -> leader: join with a trainer id.
+    Hello { id: u32 },
+    /// Worker -> leader: local data loaded, ready to train.
+    Ready { id: u32 },
+    /// Worker -> leader: local weights at an aggregation round.
+    Weights { round: u64, loss: f32, steps: u64, data: Vec<f32> },
+    /// Leader -> worker: global weights (round 0 = initial broadcast).
+    Broadcast { round: u64, data: Vec<f32> },
+    /// Leader -> worker: aggregation round `round` is open — ship your
+    /// local weights now (the `KV[agg]` signal of Alg 1/2).
+    Collect { round: u64 },
+    /// Leader -> worker: stop training and report.
+    Stop,
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_READY: u8 = 2;
+const TAG_WEIGHTS: u8 = 3;
+const TAG_BROADCAST: u8 = 4;
+const TAG_STOP: u8 = 5;
+const TAG_COLLECT: u8 = 6;
+
+impl Message {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        match self {
+            Message::Hello { id } => {
+                b.push(TAG_HELLO);
+                b.extend_from_slice(&id.to_le_bytes());
+            }
+            Message::Ready { id } => {
+                b.push(TAG_READY);
+                b.extend_from_slice(&id.to_le_bytes());
+            }
+            Message::Weights { round, loss, steps, data } => {
+                b.push(TAG_WEIGHTS);
+                b.extend_from_slice(&round.to_le_bytes());
+                b.extend_from_slice(&loss.to_le_bytes());
+                b.extend_from_slice(&steps.to_le_bytes());
+                b.extend_from_slice(&(data.len() as u64).to_le_bytes());
+                for x in data {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Message::Broadcast { round, data } => {
+                b.push(TAG_BROADCAST);
+                b.extend_from_slice(&round.to_le_bytes());
+                b.extend_from_slice(&(data.len() as u64).to_le_bytes());
+                for x in data {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Message::Collect { round } => {
+                b.push(TAG_COLLECT);
+                b.extend_from_slice(&round.to_le_bytes());
+            }
+            Message::Stop => b.push(TAG_STOP),
+        }
+        b
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Message> {
+        let mut cur = Cursor { b, i: 0 };
+        let tag = cur.u8()?;
+        Ok(match tag {
+            TAG_HELLO => Message::Hello { id: cur.u32()? },
+            TAG_READY => Message::Ready { id: cur.u32()? },
+            TAG_WEIGHTS => {
+                let round = cur.u64()?;
+                let loss = cur.f32()?;
+                let steps = cur.u64()?;
+                let n = cur.u64()? as usize;
+                Message::Weights { round, loss, steps, data: cur.f32s(n)? }
+            }
+            TAG_BROADCAST => {
+                let round = cur.u64()?;
+                let n = cur.u64()? as usize;
+                Message::Broadcast { round, data: cur.f32s(n)? }
+            }
+            TAG_COLLECT => Message::Collect { round: cur.u64()? },
+            TAG_STOP => Message::Stop,
+            other => bail!("bad message tag {other}"),
+        })
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated message");
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Write one length-prefixed message.
+pub fn send(stream: &mut TcpStream, msg: &Message) -> Result<()> {
+    let body = msg.encode();
+    stream.write_all(&(body.len() as u32).to_le_bytes())?;
+    stream.write_all(&body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed message (blocking).
+pub fn recv(stream: &mut TcpStream) -> Result<Message> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > 1 << 30 {
+        bail!("message too large: {n}");
+    }
+    let mut body = vec![0u8; n];
+    stream.read_exact(&mut body)?;
+    Message::decode(&body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let msgs = vec![
+            Message::Hello { id: 7 },
+            Message::Ready { id: 3 },
+            Message::Weights {
+                round: 9,
+                loss: 1.25,
+                steps: 42,
+                data: vec![1.0, -2.5, 3.25],
+            },
+            Message::Broadcast { round: 2, data: vec![0.0; 100] },
+            Message::Collect { round: 5 },
+            Message::Stop,
+        ];
+        for m in msgs {
+            assert_eq!(Message::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Message::decode(&[]).is_err());
+        assert!(Message::decode(&[99]).is_err());
+        assert!(Message::decode(&[TAG_WEIGHTS, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip_localhost() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let m = recv(&mut s).unwrap();
+            send(&mut s, &m).unwrap(); // echo
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        let msg = Message::Weights {
+            round: 1,
+            loss: 0.5,
+            steps: 10,
+            data: (0..1000).map(|i| i as f32).collect(),
+        };
+        send(&mut client, &msg).unwrap();
+        let echo = recv(&mut client).unwrap();
+        assert_eq!(echo, msg);
+        h.join().unwrap();
+    }
+}

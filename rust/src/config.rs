@@ -1,0 +1,227 @@
+//! Typed experiment configuration.
+//!
+//! A [`RunConfig`] fully determines one distributed-training run:
+//! dataset preset, model variant, training approach, trainer count,
+//! time budget ΔT_train, aggregation interval ρ (ΔT_int), evaluation
+//! shape and the failure/heterogeneity drills. Configs round-trip
+//! through JSON (`util::json`) so benches can persist exactly what ran.
+
+use crate::model::AggregateOp;
+use crate::partition::Scheme;
+use crate::util::json::Json;
+
+/// The training approaches compared throughout the paper (§4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Approach {
+    /// RandomTMA: randomized node partition + TMA.
+    RandomTma,
+    /// SuperTMA: randomized super-node partition + TMA.
+    SuperTma { num_clusters: usize },
+    /// PSGD-PA: min-cut (N = M) partition + periodic averaging
+    /// (enhanced with time-based aggregation, as in the paper's §4.1).
+    PsgdPa,
+    /// LLCG: PSGD-PA + server-side global correction steps.
+    Llcg { correction_steps: usize },
+    /// Global Graph Sampling: full-graph access per trainer +
+    /// synchronous per-step gradient averaging (idealised DistDGL).
+    Ggs,
+}
+
+impl Approach {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Approach::RandomTma => "RandomTMA",
+            Approach::SuperTma { .. } => "SuperTMA",
+            Approach::PsgdPa => "PSGD-PA",
+            Approach::Llcg { .. } => "LLCG",
+            Approach::Ggs => "GGS",
+        }
+    }
+
+    /// The partition scheme this approach uses for trainer data
+    /// (GGS gives every trainer the full graph — no partition).
+    pub fn scheme(&self) -> Option<Scheme> {
+        match self {
+            Approach::RandomTma => Some(Scheme::Random),
+            Approach::SuperTma { num_clusters } => {
+                Some(Scheme::Super { num_clusters: *num_clusters })
+            }
+            Approach::PsgdPa | Approach::Llcg { .. } => Some(Scheme::MinCut),
+            Approach::Ggs => None,
+        }
+    }
+
+    /// Parse "RandomTMA" / "SuperTMA" / "PSGD-PA" / "LLCG" / "GGS".
+    pub fn parse(s: &str, num_clusters: usize) -> Option<Approach> {
+        match s.to_ascii_lowercase().as_str() {
+            "randomtma" | "random" => Some(Approach::RandomTma),
+            "supertma" | "super" => {
+                Some(Approach::SuperTma { num_clusters })
+            }
+            "psgd-pa" | "psgdpa" | "psgd" => Some(Approach::PsgdPa),
+            "llcg" => Some(Approach::Llcg { correction_steps: 4 }),
+            "ggs" => Some(Approach::Ggs),
+            _ => None,
+        }
+    }
+
+    /// All five approaches with the paper's default settings scaled to
+    /// this testbed (paper: N = 15000 on ~10^5..10^8-node graphs; the
+    /// driver scales N to the generated graph size).
+    pub fn all(num_clusters: usize) -> Vec<Approach> {
+        vec![
+            Approach::RandomTma,
+            Approach::SuperTma { num_clusters },
+            Approach::PsgdPa,
+            Approach::Llcg { correction_steps: 4 },
+            Approach::Ggs,
+        ]
+    }
+}
+
+/// Full specification of one run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: String,
+    pub quick: bool,
+    /// Model variant from the AOT manifest, e.g. "gcn_mlp".
+    pub variant: String,
+    /// Kernel implementation: "pallas" (default) or "jnp".
+    pub impl_name: String,
+    pub approach: Approach,
+    /// Number of trainers M.
+    pub trainers: usize,
+    /// Total training time ΔT_train (seconds).
+    pub train_secs: f64,
+    /// Aggregation interval ρ = ΔT_int (seconds).
+    pub agg_secs: f64,
+    pub aggregate_op: AggregateOp,
+    /// Held-out edges per split and fixed negatives per edge.
+    pub eval_edges: usize,
+    pub negatives: usize,
+    /// Validation edges scored at each periodic evaluation (the final
+    /// test evaluation uses the full split).
+    pub eval_sample: usize,
+    /// Trainers that fail to start (F of M; Table 6). The highest
+    /// trainer ids fail unless `failed_ids` overrides the choice.
+    pub failures: usize,
+    /// Explicit failed trainer ids (Table 6 drops each subgraph in
+    /// turn under the same assignment).
+    pub failed_ids: Vec<usize>,
+    /// Deterministic per-trainer slowdown factors (cycled; 1.0 = full
+    /// speed) emulating heterogeneous instances (§4.3.2).
+    pub slowdown: Vec<f64>,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "citation-sim".into(),
+            quick: false,
+            variant: "gcn_mlp".into(),
+            impl_name: "pallas".into(),
+            approach: Approach::RandomTma,
+            trainers: 3,
+            train_secs: 30.0,
+            agg_secs: 2.0,
+            aggregate_op: AggregateOp::Mean,
+            eval_edges: 128,
+            negatives: 64,
+            eval_sample: 64,
+            failures: 0,
+            failed_ids: Vec::new(),
+            slowdown: Vec::new(),
+            seed: 17,
+        }
+    }
+}
+
+impl RunConfig {
+    /// The set of trainer ids that fail to start.
+    pub fn failed_set(&self) -> Vec<usize> {
+        if !self.failed_ids.is_empty() {
+            return self.failed_ids.clone();
+        }
+        // default: the highest F ids
+        (self.trainers.saturating_sub(self.failures)..self.trainers).collect()
+    }
+}
+
+impl RunConfig {
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}/M{}",
+            self.dataset,
+            self.variant,
+            self.approach.name(),
+            self.trainers
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(self.dataset.clone())),
+            ("quick", Json::Bool(self.quick)),
+            ("variant", Json::str(self.variant.clone())),
+            ("impl", Json::str(self.impl_name.clone())),
+            ("approach", Json::str(self.approach.name())),
+            (
+                "num_clusters",
+                match self.approach {
+                    Approach::SuperTma { num_clusters } => {
+                        Json::num(num_clusters as f64)
+                    }
+                    _ => Json::Null,
+                },
+            ),
+            ("trainers", Json::num(self.trainers as f64)),
+            ("train_secs", Json::num(self.train_secs)),
+            ("agg_secs", Json::num(self.agg_secs)),
+            ("eval_edges", Json::num(self.eval_edges as f64)),
+            ("negatives", Json::num(self.negatives as f64)),
+            ("eval_sample", Json::num(self.eval_sample as f64)),
+            ("failures", Json::num(self.failures as f64)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approach_parse_roundtrip() {
+        for a in Approach::all(100) {
+            let p = Approach::parse(a.name(), 100).unwrap();
+            assert_eq!(p.name(), a.name());
+        }
+        assert!(Approach::parse("nope", 1).is_none());
+    }
+
+    #[test]
+    fn schemes_match_paper_mapping() {
+        assert_eq!(Approach::RandomTma.scheme(), Some(Scheme::Random));
+        assert_eq!(Approach::PsgdPa.scheme(), Some(Scheme::MinCut));
+        assert_eq!(
+            Approach::Llcg { correction_steps: 1 }.scheme(),
+            Some(Scheme::MinCut)
+        );
+        assert_eq!(Approach::Ggs.scheme(), None);
+        assert_eq!(
+            Approach::SuperTma { num_clusters: 7 }.scheme(),
+            Some(Scheme::Super { num_clusters: 7 })
+        );
+    }
+
+    #[test]
+    fn config_json_has_key_fields() {
+        let c = RunConfig::default();
+        let j = c.to_json();
+        assert_eq!(j.get("dataset").as_str(), Some("citation-sim"));
+        assert_eq!(j.get("trainers").as_usize(), Some(3));
+        let text = format!("{j}");
+        assert!(Json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,369 @@
+//! The driver: one [`RunConfig`] in, one [`RunResult`] out.
+//!
+//! Assembles a full distributed run: dataset → partition (timed, as
+//! Table 7's prep column) → per-trainer subgraphs and samplers →
+//! evaluator + trainer threads → server loop → final test evaluation
+//! of the best validation round.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{Approach, RunConfig};
+use crate::gen::{load_preset, Preset};
+use crate::graph::Subgraph;
+use crate::metrics::RunResult;
+use crate::model::ModelState;
+use crate::partition::{parts_of, partition_stats};
+use crate::runtime::Manifest;
+use crate::sampler::eval::EvalBlockConfig;
+use crate::sampler::{AdjMode, EvalPlan, TrainSampler, TrainSamplerConfig};
+use crate::util::rng::Rng;
+
+use super::evaluator::{evaluator_thread, EvalDone, EvalReq};
+use super::ggs::{ggs_server, ggs_trainer, GgsTrainerSpec};
+use super::kv::Control;
+use super::server::{llcg_steps, tma_server, LlcgCorrector};
+use super::trainer::{tma_trainer, TrainerSpec};
+
+/// SuperTMA cluster-count default: the paper uses N = 15,000 on graphs
+/// of 10^5..10^8 nodes; scale to ~|V|/40 with a floor well above M.
+pub fn default_clusters(num_nodes: usize) -> usize {
+    (num_nodes / 40).max(64)
+}
+
+/// Run one experiment end to end.
+pub fn run_experiment(cfg: &RunConfig) -> Result<RunResult> {
+    let preset = load_preset(
+        &cfg.dataset,
+        cfg.quick,
+        cfg.eval_edges,
+        cfg.negatives,
+        cfg.seed,
+    )?;
+    run_on_preset(cfg, &preset)
+}
+
+/// Run on an already-generated dataset (benches reuse one preset
+/// across approaches so every approach sees identical data).
+pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
+    let manifest = Manifest::load(&Manifest::default_dir())
+        .context("artifacts missing — run `make artifacts`")?;
+    let variant = manifest.variant(&cfg.variant)?.clone();
+    let dims = manifest.dims;
+    let train_graph = &preset.split.train;
+    let m = cfg.trainers;
+    let mut rng = Rng::new(cfg.seed ^ 0xC0FFEE);
+
+    // ---- Partition (R1) --------------------------------------------------
+    let t_prep = Instant::now();
+    let (assignment, ratio_r) = match cfg.approach.scheme() {
+        Some(scheme) => {
+            let a = scheme.assign(train_graph, m, &mut rng);
+            let stats = partition_stats(train_graph, &a, m);
+            (Some(a), stats.ratio_r)
+        }
+        None => (None, 1.0),
+    };
+    let prep_secs = t_prep.elapsed().as_secs_f64();
+
+    // ---- Per-trainer data -------------------------------------------------
+    let failed = cfg.failed_set();
+    let adj_mode = AdjMode::for_encoder(&variant.encoder);
+    let relations = if adj_mode == AdjMode::Relational {
+        dims.relations
+    } else {
+        1
+    };
+    let sampler_cfg = TrainSamplerConfig {
+        block_nodes: dims.block_nodes,
+        block_edges: dims.block_edges,
+        feat_dim: dims.feat_dim,
+        fanouts: vec![10, 5],
+        adj_mode,
+        relations,
+        boundary: preset.boundary,
+    };
+
+    let mut samplers: Vec<(usize, TrainSampler)> = Vec::new();
+    let mut local_bytes = 0usize;
+    match &assignment {
+        Some(assign) => {
+            let parts = parts_of(assign, m);
+            for (id, part) in parts.iter().enumerate() {
+                if failed.contains(&id) {
+                    continue; // this trainer (and its data) is lost
+                }
+                let sub = Subgraph::induce(train_graph, part);
+                local_bytes += graph_bytes(&sub.graph);
+                samplers.push((
+                    id,
+                    TrainSampler::new(
+                        sub.graph,
+                        sub.global_ids,
+                        sampler_cfg.clone(),
+                    ),
+                ));
+            }
+        }
+        None => {
+            // GGS: full training-graph access per trainer.
+            for id in 0..m {
+                if failed.contains(&id) {
+                    continue;
+                }
+                let globals: Vec<u32> =
+                    (0..train_graph.num_nodes() as u32).collect();
+                local_bytes += graph_bytes(train_graph);
+                samplers.push((
+                    id,
+                    TrainSampler::new(
+                        train_graph.clone(),
+                        globals,
+                        sampler_cfg.clone(),
+                    ),
+                ));
+            }
+        }
+    }
+    anyhow::ensure!(!samplers.is_empty(), "all trainers failed");
+    let active = samplers.len();
+
+    // ---- Evaluation plans --------------------------------------------------
+    let eval_cfg = EvalBlockConfig::new(
+        dims.block_nodes,
+        dims.feat_dim,
+        adj_mode,
+        relations,
+        preset.boundary,
+    );
+    let nval = cfg.eval_sample.min(preset.split.val.len());
+    let val_plan = EvalPlan::build(
+        train_graph,
+        &preset.split.val[..nval],
+        &preset.split.val_negatives[..nval],
+        &eval_cfg,
+    );
+    let test_plan = EvalPlan::build(
+        train_graph,
+        &preset.split.test,
+        &preset.split.test_negatives,
+        &eval_cfg,
+    );
+
+    // ---- Threads -----------------------------------------------------------
+    let control = Arc::new(Control::new());
+    let start = Instant::now();
+    let (msg_tx, msg_rx) = mpsc::channel();
+    let (eval_req_tx, eval_req_rx) = mpsc::channel::<EvalReq>();
+    let (eval_done_tx, eval_done_rx) = mpsc::channel::<EvalDone>();
+
+    let eval_handle = {
+        let manifest = manifest.clone();
+        let variant_name = cfg.variant.clone();
+        let impl_name = cfg.impl_name.clone();
+        std::thread::spawn(move || {
+            evaluator_thread(
+                manifest,
+                variant_name,
+                impl_name,
+                val_plan,
+                test_plan,
+                eval_req_rx,
+                eval_done_tx,
+            )
+        })
+    };
+
+    let is_ggs = matches!(cfg.approach, Approach::Ggs);
+    let mut global_txs = Vec::with_capacity(active);
+    let mut handles = Vec::with_capacity(active);
+    for (id, sampler) in samplers {
+        let (gtx, grx) = mpsc::channel::<Vec<f32>>();
+        global_txs.push(gtx);
+        let slowdown = if cfg.slowdown.is_empty() {
+            1.0
+        } else {
+            cfg.slowdown[id % cfg.slowdown.len()]
+        };
+        let manifest = manifest.clone();
+        let variant_name = cfg.variant.clone();
+        let impl_name = cfg.impl_name.clone();
+        let control = control.clone();
+        let tx = msg_tx.clone();
+        let seed = cfg.seed;
+        if is_ggs {
+            handles.push(std::thread::spawn(move || {
+                ggs_trainer(GgsTrainerSpec {
+                    id,
+                    manifest,
+                    variant: variant_name,
+                    impl_name,
+                    sampler,
+                    control,
+                    rx_params: grx,
+                    tx,
+                    slowdown,
+                    seed,
+                    start,
+                })
+            }));
+        } else {
+            handles.push(std::thread::spawn(move || {
+                tma_trainer(TrainerSpec {
+                    id,
+                    manifest,
+                    variant: variant_name,
+                    impl_name,
+                    sampler,
+                    control,
+                    rx_global: grx,
+                    tx,
+                    slowdown,
+                    seed,
+                    start,
+                })
+            }));
+        }
+    }
+    drop(msg_tx);
+
+    // Server-side init weights (Alg 1 l. 2): one seed for all trainers.
+    let init = ModelState::init(&variant, &mut Rng::new(cfg.seed ^ 0x1417))
+        .params;
+
+    // LLCG corrector (engine compiled on the server thread).
+    let llcg = match llcg_steps(&cfg.approach) {
+        Some(steps) => {
+            let engine =
+                crate::runtime::Engine::load(&manifest, &cfg.variant, &cfg.impl_name)?;
+            let globals: Vec<u32> =
+                (0..train_graph.num_nodes() as u32).collect();
+            let sampler = TrainSampler::new(
+                train_graph.clone(),
+                globals,
+                sampler_cfg.clone(),
+            );
+            let state = ModelState::init(
+                &variant,
+                &mut Rng::new(cfg.seed ^ 0x11C6),
+            );
+            Some(LlcgCorrector {
+                engine,
+                sampler,
+                state,
+                steps_per_round: steps,
+                rng: Rng::new(cfg.seed ^ 0x11C7),
+            })
+        }
+        None => None,
+    };
+
+    let outcome = if is_ggs {
+        ggs_server(
+            cfg,
+            &control,
+            init,
+            &global_txs,
+            &msg_rx,
+            &eval_req_tx,
+            &eval_done_rx,
+            &manifest,
+            start,
+        )?
+    } else {
+        tma_server(
+            cfg,
+            &control,
+            init,
+            &global_txs,
+            &msg_rx,
+            &eval_req_tx,
+            &eval_done_rx,
+            llcg,
+            start,
+        )?
+    };
+    drop(global_txs); // unblock any trainer waiting on a broadcast
+
+    let mut reports = Vec::new();
+    for h in handles {
+        match h.join() {
+            Ok(r) => reports.push(r),
+            Err(_) => anyhow::bail!("trainer thread panicked"),
+        }
+    }
+    reports.sort_by_key(|r| r.id);
+
+    // ---- Drain remaining evals, pick best, run the test eval ---------------
+    let mut val_curve = outcome.val_curve;
+    let mut eval_params = outcome.eval_params;
+    // Every periodic request eventually yields exactly one EvalDone;
+    // wait for the in-flight remainder (bounded timeout per eval).
+    while val_curve.len() < outcome.evals_sent {
+        match eval_done_rx.recv_timeout(std::time::Duration::from_secs(120)) {
+            Ok(done) if !done.is_final => {
+                val_curve.push(crate::metrics::EvalPoint {
+                    t: done.t,
+                    round: done.round,
+                    val_mrr: done.mrr,
+                });
+                eval_params.push(done.params);
+            }
+            Ok(_) => {}
+            Err(_) => break, // an eval errored server-side; proceed
+        }
+    }
+
+    let best_idx = val_curve
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.val_mrr.partial_cmp(&b.1.val_mrr).unwrap())
+        .map(|(i, _)| i)
+        .context("no evaluations completed — train_secs too short?")?;
+    let best_val_mrr = val_curve[best_idx].val_mrr;
+    eval_req_tx
+        .send(EvalReq::Final { params: eval_params[best_idx].clone() })
+        .ok();
+    drop(eval_req_tx);
+    let mut test_mrr = 0.0;
+    while let Ok(done) =
+        eval_done_rx.recv_timeout(std::time::Duration::from_secs(300))
+    {
+        if done.is_final {
+            test_mrr = done.mrr;
+            break;
+        } else {
+            val_curve.push(crate::metrics::EvalPoint {
+                t: done.t,
+                round: done.round,
+                val_mrr: done.mrr,
+            });
+            eval_params.push(done.params);
+        }
+    }
+    eval_handle.join().ok();
+
+    Ok(RunResult {
+        label: cfg.label(),
+        val_curve,
+        best_val_mrr,
+        test_mrr,
+        trainer_losses: reports.iter().map(|r| r.timeline.clone()).collect(),
+        steps: reports.iter().map(|r| r.steps).collect(),
+        ratio_r,
+        prep_secs,
+        local_bytes,
+        wall_secs: outcome.wall_secs,
+    })
+}
+
+fn graph_bytes(g: &crate::graph::Graph) -> usize {
+    g.offsets.len() * 8
+        + g.neighbors.len() * 4
+        + g.rel.as_ref().map(|r| r.len()).unwrap_or(0)
+        + g.features.len() * 4
+        + g.labels.len() * 2
+}

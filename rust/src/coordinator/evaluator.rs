@@ -1,0 +1,151 @@
+//! Evaluation: block encoding + candidate scoring → MRR, run on a
+//! dedicated thread with its own engine (the paper's separate
+//! evaluation process, Fig 1), so training never blocks on it.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use crate::runtime::Engine;
+use crate::sampler::{EvalPlan, Mrr};
+
+/// Full MRR evaluation of `params` under `plan`.
+///
+/// Encodes every plan block, gathers target embeddings, scores the
+/// (positive + negatives) candidate schedule in fixed `score_batch`
+/// chunks, and folds ranks into the MRR.
+pub fn evaluate_mrr(engine: &Engine, plan: &EvalPlan, params: &[f32]) -> Result<f64> {
+    let h = engine.dims.hidden;
+    // 1: target embeddings
+    let mut table: HashMap<u32, Vec<f32>> =
+        HashMap::with_capacity(plan.slot_of.len());
+    for (bi, block) in plan.blocks.iter().enumerate() {
+        let emb = engine.encode(params, block)?;
+        for s in 0..plan.targets[bi] {
+            let g = block.globals[s];
+            table.insert(g, emb[s * h..(s + 1) * h].to_vec());
+        }
+    }
+
+    // 2: score the pair schedule in S-sized chunks
+    let s_len = engine.dims.score_batch;
+    let mut emb_u = vec![0f32; s_len * h];
+    let mut emb_v = vec![0f32; s_len * h];
+    let mut rel = vec![0i32; s_len];
+    let mut all_scores: Vec<f32> = Vec::with_capacity(plan.num_pairs());
+    let mut fill = 0usize;
+    let flush = |emb_u: &[f32],
+                 emb_v: &[f32],
+                 rel: &[i32],
+                 fill: usize,
+                 out: &mut Vec<f32>|
+     -> Result<()> {
+        let scores = engine.score(params, emb_u, emb_v, rel)?;
+        out.extend_from_slice(&scores[..fill]);
+        Ok(())
+    };
+    for (u, cand, r) in plan.pairs() {
+        let eu = &table[&u];
+        let ev = &table[&cand];
+        emb_u[fill * h..(fill + 1) * h].copy_from_slice(eu);
+        emb_v[fill * h..(fill + 1) * h].copy_from_slice(ev);
+        rel[fill] = r;
+        fill += 1;
+        if fill == s_len {
+            flush(&emb_u, &emb_v, &rel, fill, &mut all_scores)?;
+            fill = 0;
+        }
+    }
+    if fill > 0 {
+        flush(&emb_u, &emb_v, &rel, fill, &mut all_scores)?;
+    }
+
+    // 3: fold into MRR — pairs are grouped (pos, neg_1..neg_K) per edge
+    let mut mrr = Mrr::default();
+    let mut cursor = 0usize;
+    for negs in &plan.negatives {
+        let k = negs.len();
+        let pos = all_scores[cursor];
+        let neg = &all_scores[cursor + 1..cursor + 1 + k];
+        mrr.add(pos, neg);
+        cursor += 1 + k;
+    }
+    Ok(mrr.value())
+}
+
+/// Request to the evaluator thread.
+pub enum EvalReq {
+    /// Periodic validation eval of round `round` at time `t`.
+    Periodic { round: u64, t: f64, params: Vec<f32> },
+    /// Final test eval of the best weights.
+    Final { params: Vec<f32> },
+}
+
+/// Response from the evaluator thread.
+#[derive(Debug, Clone)]
+pub struct EvalDone {
+    pub round: u64,
+    pub t: f64,
+    pub mrr: f64,
+    pub is_final: bool,
+    /// The evaluated weights (kept so the server can recover the best
+    /// round's parameters for the final test evaluation).
+    pub params: Vec<f32>,
+}
+
+/// Evaluator thread body: owns its engine, serves requests until the
+/// request channel closes.
+pub fn evaluator_thread(
+    manifest: crate::runtime::Manifest,
+    variant: String,
+    impl_name: String,
+    val_plan: EvalPlan,
+    test_plan: EvalPlan,
+    rx: mpsc::Receiver<EvalReq>,
+    tx: mpsc::Sender<EvalDone>,
+) {
+    let engine = match Engine::load(&manifest, &variant, &impl_name) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("[evaluator] engine load failed: {e}");
+            return;
+        }
+    };
+    if let Err(e) = engine.prepare(&["encode", "score"]) {
+        eprintln!("[evaluator] compile failed: {e}");
+        return;
+    }
+    while let Ok(req) = rx.recv() {
+        match req {
+            EvalReq::Periodic { round, t, params } => {
+                match evaluate_mrr(&engine, &val_plan, &params) {
+                    Ok(mrr) => {
+                        let _ = tx.send(EvalDone {
+                            round,
+                            t,
+                            mrr,
+                            is_final: false,
+                            params,
+                        });
+                    }
+                    Err(e) => eprintln!("[evaluator] round {round}: {e}"),
+                }
+            }
+            EvalReq::Final { params } => {
+                match evaluate_mrr(&engine, &test_plan, &params) {
+                    Ok(mrr) => {
+                        let _ = tx.send(EvalDone {
+                            round: u64::MAX,
+                            t: 0.0,
+                            mrr,
+                            is_final: true,
+                            params,
+                        });
+                    }
+                    Err(e) => eprintln!("[evaluator] final: {e}"),
+                }
+            }
+        }
+    }
+}

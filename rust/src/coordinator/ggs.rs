@@ -1,0 +1,222 @@
+//! GGS — the fully synchronous baseline (idealised DistDGL, §4.1).
+//!
+//! Every trainer has unrestricted access to the full training graph;
+//! each global step the server broadcasts the current weights, every
+//! trainer computes a gradient on its own mini-batch via the `grad`
+//! artifact, the server averages the gradients (allreduce-mean) and
+//! applies one shared rust-side Adam update. The slowest trainer gates
+//! every step — exactly the throughput penalty Table 3 quantifies.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::metrics::{EvalPoint, LossPoint};
+use crate::model::{mean_grads, Adam};
+use crate::runtime::{Engine, Manifest};
+use crate::sampler::TrainSampler;
+use crate::util::rng::Rng;
+
+use super::evaluator::{EvalDone, EvalReq};
+use super::kv::{Control, TrainerMsg, TrainerReport};
+use super::server::ServerOutcome;
+
+/// GGS trainer thread: gradient worker over the full graph.
+pub struct GgsTrainerSpec {
+    pub id: usize,
+    pub manifest: Manifest,
+    pub variant: String,
+    pub impl_name: String,
+    pub sampler: TrainSampler,
+    pub control: Arc<Control>,
+    pub rx_params: mpsc::Receiver<Vec<f32>>,
+    pub tx: mpsc::Sender<TrainerMsg>,
+    pub slowdown: f64,
+    pub seed: u64,
+    pub start: Instant,
+}
+
+pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
+    let GgsTrainerSpec {
+        id,
+        manifest,
+        variant,
+        impl_name,
+        mut sampler,
+        control,
+        rx_params,
+        tx,
+        slowdown,
+        seed,
+        start: _start,
+    } = spec;
+    let engine = match Engine::load(&manifest, &variant, &impl_name) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("[ggs trainer {id}] engine load failed: {e}");
+            return TrainerReport { id, steps: 0, timeline: Vec::new() };
+        }
+    };
+    let mut rng = Rng::new(seed).fork(id as u64 + 101);
+    if let Err(e) = engine.prepare(&["grad"]) {
+        eprintln!("[ggs trainer {id}] compile failed: {e}");
+        return TrainerReport { id, steps: 0, timeline: Vec::new() };
+    }
+    control.mark_ready();
+
+    let mut steps = 0u64;
+    let mut timeline = Vec::new();
+    let mut anchor: Option<Instant> = None;
+    // Lock-step: one params broadcast per global step.
+    while let Ok(params) = rx_params.recv() {
+        if control.stopped() {
+            break;
+        }
+        // Re-anchor the timeline at the first broadcast (post-compile).
+        let start = *anchor.get_or_insert_with(Instant::now);
+        let _ = start;
+        let t0 = Instant::now();
+        let block = match sampler.next_block(&mut rng) {
+            Some(b) => b,
+            None => break, // full graph always has edges; defensive
+        };
+        match engine.grad_step(&params, block) {
+            Ok((grad, loss)) => {
+                steps += 1;
+                timeline.push(LossPoint {
+                    t: start.elapsed().as_secs_f64(),
+                    loss,
+                    step: steps,
+                });
+                if slowdown > 1.0 {
+                    std::thread::sleep(t0.elapsed().mul_f64(slowdown - 1.0));
+                }
+                let msg = TrainerMsg {
+                    id,
+                    round: steps,
+                    weights: grad,
+                    loss,
+                    steps,
+                };
+                if tx.send(msg).is_err() {
+                    break;
+                }
+            }
+            Err(e) => {
+                eprintln!("[ggs trainer {id}] grad failed: {e}");
+                break;
+            }
+        }
+    }
+    TrainerReport { id, steps, timeline }
+}
+
+/// GGS server: broadcast → collect grads → allreduce-mean → Adam step.
+#[allow(clippy::too_many_arguments)]
+pub fn ggs_server(
+    cfg: &RunConfig,
+    control: &Arc<Control>,
+    init_weights: Vec<f32>,
+    txs: &[mpsc::Sender<Vec<f32>>],
+    rx: &mpsc::Receiver<TrainerMsg>,
+    eval_tx: &mpsc::Sender<EvalReq>,
+    eval_rx: &mpsc::Receiver<EvalDone>,
+    manifest: &Manifest,
+    start: Instant,
+) -> Result<ServerOutcome> {
+    let active = txs.len();
+    while control.ready_count() < active {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // Budget starts after the ready barrier (cf. tma_server).
+    let _ = start;
+    let start = Instant::now();
+    let mut w = init_weights;
+    let mut adam = Adam::new(manifest.adam, w.len());
+    let mut grad_mean: Vec<f32> = Vec::new();
+    let mut grads: Vec<Vec<f32>> = Vec::with_capacity(active);
+
+    let mut val_curve = Vec::new();
+    let mut eval_params = Vec::new();
+    let mut evals_sent = 0usize;
+    let mut t_eval = Instant::now();
+    if eval_tx
+        .send(EvalReq::Periodic { round: 0, t: 0.0, params: w.clone() })
+        .is_ok()
+    {
+        evals_sent += 1;
+    }
+
+    let mut rounds = 0u64;
+    loop {
+        while let Ok(done) = eval_rx.try_recv() {
+            if !done.is_final {
+                val_curve.push(EvalPoint {
+                    t: done.t,
+                    round: done.round,
+                    val_mrr: done.mrr,
+                });
+                eval_params.push(done.params);
+            }
+        }
+        if start.elapsed().as_secs_f64() >= cfg.train_secs {
+            control.request_stop();
+            break;
+        }
+        // One synchronous global step.
+        for tx in txs {
+            tx.send(w.clone()).ok();
+        }
+        grads.clear();
+        for _ in 0..active {
+            match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(msg) => grads.push(msg.weights),
+                Err(_) => anyhow::bail!("ggs: trainer unresponsive"),
+            }
+        }
+        mean_grads(&grads, &mut grad_mean);
+        adam.step(&mut w, &grad_mean);
+        rounds += 1;
+
+        // Periodic eval on the same ρ cadence as TMA for fairness.
+        // Skip if the evaluator is >2 evals behind (bounds post-run
+        // draining on the shared core).
+        if t_eval.elapsed().as_secs_f64() >= cfg.agg_secs
+            && evals_sent - val_curve.len() <= 2
+        {
+            if eval_tx
+                .send(EvalReq::Periodic {
+                    round: rounds,
+                    t: start.elapsed().as_secs_f64(),
+                    params: w.clone(),
+                })
+                .is_ok()
+            {
+                evals_sent += 1;
+            }
+            t_eval = Instant::now();
+        }
+    }
+    // Final eval of the last weights.
+    if eval_tx
+        .send(EvalReq::Periodic {
+            round: rounds,
+            t: start.elapsed().as_secs_f64(),
+            params: w.clone(),
+        })
+        .is_ok()
+    {
+        evals_sent += 1;
+    }
+
+    Ok(ServerOutcome {
+        val_curve,
+        eval_params,
+        rounds,
+        wall_secs: start.elapsed().as_secs_f64(),
+        evals_sent,
+    })
+}

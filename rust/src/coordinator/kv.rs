@@ -1,0 +1,113 @@
+//! Coordination control plane — the in-process equivalent of the
+//! paper's distributed key-value store (Alg 1/2's `KV[agg]`,
+//! `KV[stop]`, `KV[ready]`).
+//!
+//! Instead of a boolean `agg` flag (which races between "server
+//! collected" and "trainer re-checks"), aggregation is a monotone
+//! **round counter**: the server bumps it to open round `r`; each
+//! trainer that observes `round > last_seen` ships its weights exactly
+//! once and blocks for the round-`r` broadcast. This gives the same
+//! semantics as Alg 1/2 without a timing hole.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// Shared control block between server, trainers and evaluator.
+#[derive(Debug, Default)]
+pub struct Control {
+    /// Monotone aggregation round (0 = no aggregation yet).
+    agg_round: AtomicU64,
+    /// `KV[stop]`.
+    stop: AtomicBool,
+    /// `KV[ready]` count.
+    ready: AtomicUsize,
+}
+
+impl Control {
+    pub fn new() -> Self {
+        Control::default()
+    }
+
+    pub fn open_round(&self) -> u64 {
+        self.agg_round.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    pub fn current_round(&self) -> u64 {
+        self.agg_round.load(Ordering::SeqCst)
+    }
+
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    pub fn mark_ready(&self) {
+        self.ready.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn ready_count(&self) -> usize {
+        self.ready.load(Ordering::SeqCst)
+    }
+}
+
+/// Message a trainer ships to the server at an aggregation round (or
+/// every step, for GGS where `weights` carries the gradient).
+#[derive(Debug, Clone)]
+pub struct TrainerMsg {
+    pub id: usize,
+    pub round: u64,
+    pub weights: Vec<f32>,
+    pub loss: f32,
+    pub steps: u64,
+}
+
+/// Final report a trainer thread returns on join.
+#[derive(Debug, Clone)]
+pub struct TrainerReport {
+    pub id: usize,
+    pub steps: u64,
+    pub timeline: Vec<crate::metrics::LossPoint>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn rounds_are_monotone() {
+        let c = Control::new();
+        assert_eq!(c.current_round(), 0);
+        assert_eq!(c.open_round(), 1);
+        assert_eq!(c.open_round(), 2);
+        assert_eq!(c.current_round(), 2);
+    }
+
+    #[test]
+    fn stop_and_ready() {
+        let c = Control::new();
+        assert!(!c.stopped());
+        c.request_stop();
+        assert!(c.stopped());
+        c.mark_ready();
+        c.mark_ready();
+        assert_eq!(c.ready_count(), 2);
+    }
+
+    #[test]
+    fn round_visible_across_threads() {
+        let c = Arc::new(Control::new());
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            while c2.current_round() == 0 {
+                std::hint::spin_loop();
+            }
+            c2.current_round()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        c.open_round();
+        assert_eq!(h.join().unwrap(), 1);
+    }
+}

@@ -1,0 +1,30 @@
+//! The TMA coordinator — the paper's system contribution (Alg 1 + 2).
+//!
+//! Topology (in-process mode): one **server** (the calling thread), `M`
+//! **trainer** threads and one **evaluator** thread. Each trainer owns
+//! its own PJRT engine and its local partition subgraph — trainers
+//! never touch the global graph (the paper's restricted-access
+//! setting). Coordination state lives in [`kv::Control`], the stand-in
+//! for the paper's distributed key-value store; weights move over
+//! channels.
+//!
+//! - [`server`] — the time-based aggregation loop (Alg 1): every
+//!   ΔT_int collect local weights, apply φ, (LLCG only:) run global
+//!   correction steps, broadcast, enqueue an async validation eval.
+//! - [`trainer`] — the local loop (Alg 2): sample a local mini-batch,
+//!   run the fused AOT train step, honour aggregation rounds.
+//! - [`ggs`] — the synchronous baseline: per-step gradient allreduce.
+//! - [`evaluator`] — encode blocks + score candidates → MRR, off the
+//!   training path (the paper's separate evaluation processes).
+//! - [`driver`] — assembles a full run from a [`crate::config::RunConfig`]:
+//!   partition → samplers → threads → result.
+
+pub mod driver;
+pub mod evaluator;
+pub mod ggs;
+pub mod kv;
+pub mod server;
+pub mod trainer;
+
+pub use driver::run_experiment;
+pub use evaluator::evaluate_mrr;

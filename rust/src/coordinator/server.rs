@@ -1,0 +1,220 @@
+//! The TMA server loop — Algorithm 1.
+//!
+//! Every ΔT_int: open an aggregation round, collect the `M` local
+//! weight vectors, apply the aggregation operator φ (plain averaging
+//! by default — the paper's finding), optionally run LLCG's global
+//! correction on the server, broadcast the new global weights, and
+//! enqueue an asynchronous validation evaluation. Stops at ΔT_train,
+//! then the driver selects t* = argmax val-MRR and evaluates test MRR.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::{Approach, RunConfig};
+use crate::metrics::EvalPoint;
+use crate::model::{aggregate, ModelState};
+use crate::runtime::Engine;
+use crate::sampler::TrainSampler;
+use crate::util::rng::Rng;
+
+use super::evaluator::{EvalDone, EvalReq};
+use super::kv::{Control, TrainerMsg};
+
+/// LLCG's server-side global correction state: an engine + sampler
+/// over the *full* training graph and a persistent optimizer state.
+pub struct LlcgCorrector {
+    pub engine: Engine,
+    pub sampler: TrainSampler,
+    pub state: ModelState,
+    pub steps_per_round: usize,
+    pub rng: Rng,
+}
+
+impl LlcgCorrector {
+    /// Run the correction: overwrite server weights into the local
+    /// state, take a few global mini-batch steps, return the result.
+    pub fn correct(&mut self, weights: &[f32]) -> Result<Vec<f32>> {
+        self.state.set_params(weights);
+        for _ in 0..self.steps_per_round {
+            if let Some(block) = self.sampler.next_block(&mut self.rng) {
+                self.engine.train_step(&mut self.state, block)?;
+            }
+        }
+        Ok(self.state.params.clone())
+    }
+}
+
+/// Outcome of the server loop.
+pub struct ServerOutcome {
+    pub val_curve: Vec<EvalPoint>,
+    /// Weights per completed evaluation (aligned with `val_curve`).
+    pub eval_params: Vec<Vec<f32>>,
+    pub rounds: u64,
+    pub wall_secs: f64,
+    /// Periodic evaluation requests issued (for driver-side draining).
+    pub evals_sent: usize,
+}
+
+/// Run Algorithm 1 until ΔT_train elapses. `active` is the number of
+/// live trainers (M - F under failures).
+#[allow(clippy::too_many_arguments)]
+pub fn tma_server(
+    cfg: &RunConfig,
+    control: &Arc<Control>,
+    init_weights: Vec<f32>,
+    txs: &[mpsc::Sender<Vec<f32>>],
+    rx: &mpsc::Receiver<TrainerMsg>,
+    eval_tx: &mpsc::Sender<EvalReq>,
+    eval_rx: &mpsc::Receiver<EvalDone>,
+    mut llcg: Option<LlcgCorrector>,
+    start: Instant,
+) -> Result<ServerOutcome> {
+    let active = txs.len();
+    // Wait for trainers to come up, then broadcast W[0] (Alg 1 l. 3-5).
+    while control.ready_count() < active {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let mut w_global = init_weights;
+    for tx in txs {
+        tx.send(w_global.clone()).ok();
+    }
+    // T_start = now (Alg 1 l. 6): the budget starts after the ready
+    // barrier + initial broadcast, excluding engine-compile startup.
+    let _ = start;
+    let start = Instant::now();
+
+    let mut t_agg = Instant::now();
+    #[allow(unused_assignments)]
+    let mut rounds = 0u64;
+    let mut val_curve = Vec::new();
+    let mut eval_params = Vec::new();
+    let mut evals_sent = 0usize;
+    // Evaluate the initial weights too (round 0 baseline).
+    if eval_tx
+        .send(EvalReq::Periodic {
+            round: 0,
+            t: start.elapsed().as_secs_f64(),
+            params: w_global.clone(),
+        })
+        .is_ok()
+    {
+        evals_sent += 1;
+    }
+
+    loop {
+        std::thread::sleep(Duration::from_millis(10));
+
+        // Drain finished evaluations (asynchronous, Alg 1 l. 14).
+        while let Ok(done) = eval_rx.try_recv() {
+            if !done.is_final {
+                val_curve.push(EvalPoint {
+                    t: done.t,
+                    round: done.round,
+                    val_mrr: done.mrr,
+                });
+                eval_params.push(done.params);
+            }
+        }
+
+        if start.elapsed().as_secs_f64() >= cfg.train_secs {
+            control.request_stop();
+            break;
+        }
+
+        if t_agg.elapsed().as_secs_f64() >= cfg.agg_secs {
+            rounds = control.open_round();
+            // Collect W_i from every live trainer (Alg 1 l. 10).
+            let mut weights = Vec::with_capacity(active);
+            let mut losses = Vec::with_capacity(active);
+            for _ in 0..active {
+                match rx.recv_timeout(Duration::from_secs(60)) {
+                    Ok(msg) => {
+                        losses.push(if msg.loss.is_nan() {
+                            f32::MAX // trainer with no batch yet
+                        } else {
+                            msg.loss
+                        });
+                        weights.push(msg.weights);
+                    }
+                    Err(_) => {
+                        anyhow::bail!(
+                            "round {rounds}: trainer unresponsive"
+                        );
+                    }
+                }
+            }
+            // φ (Alg 1 l. 12).
+            w_global = aggregate(cfg.aggregate_op, &weights, &losses);
+            // LLCG: server-side global correction before broadcast.
+            if let Some(corr) = llcg.as_mut() {
+                w_global = corr.correct(&w_global)?;
+            }
+            for tx in txs {
+                tx.send(w_global.clone()).ok();
+            }
+            t_agg = Instant::now();
+            // Async validation eval of the new global weights. Skip if
+            // the evaluator is >2 evals behind (bounds the post-run
+            // drain on the shared core).
+            if evals_sent - val_curve.len() <= 2 {
+            if eval_tx
+                .send(EvalReq::Periodic {
+                    round: rounds,
+                    t: start.elapsed().as_secs_f64(),
+                    params: w_global.clone(),
+                })
+                .is_ok()
+            {
+                evals_sent += 1;
+            }
+            }
+        }
+    }
+
+    // Final aggregation so the last interval's work is not lost.
+    rounds = control.open_round();
+    let mut weights = Vec::with_capacity(active);
+    let mut losses = Vec::with_capacity(active);
+    for _ in 0..active {
+        if let Ok(msg) = rx.recv_timeout(Duration::from_secs(60)) {
+            losses.push(if msg.loss.is_nan() { f32::MAX } else { msg.loss });
+            weights.push(msg.weights);
+        }
+    }
+    if !weights.is_empty() {
+        w_global = aggregate(cfg.aggregate_op, &weights, &losses);
+        if eval_tx
+            .send(EvalReq::Periodic {
+                round: rounds,
+                t: start.elapsed().as_secs_f64(),
+                params: w_global.clone(),
+            })
+            .is_ok()
+        {
+            evals_sent += 1;
+        }
+    }
+    // Unblock trainers waiting on the final round's broadcast.
+    for tx in txs {
+        tx.send(w_global.clone()).ok();
+    }
+
+    Ok(ServerOutcome {
+        val_curve,
+        eval_params,
+        rounds,
+        wall_secs: start.elapsed().as_secs_f64(),
+        evals_sent,
+    })
+}
+
+/// Helper used by the driver to pick LLCG correction settings.
+pub fn llcg_steps(approach: &Approach) -> Option<usize> {
+    match approach {
+        Approach::Llcg { correction_steps } => Some(*correction_steps),
+        _ => None,
+    }
+}

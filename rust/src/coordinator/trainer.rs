@@ -1,0 +1,148 @@
+//! The TMA trainer loop — Algorithm 2.
+//!
+//! Each trainer thread: loads its own PJRT engine, waits for the
+//! server's initial broadcast, then loops {sample local mini-batch →
+//! fused Adam step}. When the server opens an aggregation round it
+//! ships its weights and blocks until the new global weights arrive
+//! (local Adam moments are kept — only weights are synchronised).
+//!
+//! Asynchrony is the point: between rounds trainers run entirely
+//! independently, so a slow trainer finishes fewer steps instead of
+//! gating the others (contrast with `ggs`). A deterministic
+//! `slowdown` factor emulates heterogeneous instances (§4.3.2).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::metrics::LossPoint;
+use crate::model::ModelState;
+use crate::runtime::{Engine, Manifest};
+use crate::sampler::TrainSampler;
+use crate::util::rng::Rng;
+
+use super::kv::{Control, TrainerMsg, TrainerReport};
+
+/// Everything a TMA trainer thread needs (moved into the thread).
+pub struct TrainerSpec {
+    pub id: usize,
+    pub manifest: Manifest,
+    pub variant: String,
+    pub impl_name: String,
+    pub sampler: TrainSampler,
+    pub control: Arc<Control>,
+    /// Server -> trainer weight broadcasts (first message = W[0]).
+    pub rx_global: mpsc::Receiver<Vec<f32>>,
+    /// Trainer -> server round messages.
+    pub tx: mpsc::Sender<TrainerMsg>,
+    /// Speed factor >= 1.0 (1.0 = full speed).
+    pub slowdown: f64,
+    pub seed: u64,
+    /// Shared run start for timeline stamps.
+    pub start: Instant,
+}
+
+/// Run Algorithm 2 to completion; returns the trainer's report.
+pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
+    let TrainerSpec {
+        id,
+        manifest,
+        variant,
+        impl_name,
+        mut sampler,
+        control,
+        rx_global,
+        tx,
+        slowdown,
+        seed,
+        start,
+    } = spec;
+
+    let engine = match Engine::load(&manifest, &variant, &impl_name) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("[trainer {id}] engine load failed: {e}");
+            return TrainerReport { id, steps: 0, timeline: Vec::new() };
+        }
+    };
+    let mut rng = Rng::new(seed).fork(id as u64 + 1);
+    let mut state = ModelState::init(&engine.variant, &mut rng); // placeholder
+    // Compile this role's entry point BEFORE signalling ready — the
+    // server's training window opens at the ready barrier.
+    if let Err(e) = engine.prepare(&["train"]) {
+        eprintln!("[trainer {id}] compile failed: {e}");
+        return TrainerReport { id, steps: 0, timeline: Vec::new() };
+    }
+    control.mark_ready();
+
+    // Initial broadcast (Alg 2 line 5). The server sends it only after
+    // every trainer is ready (engines compiled), so re-anchor the
+    // timeline clock here — ΔT_train excludes startup, as in Alg 1.
+    match rx_global.recv() {
+        Ok(w) => state.set_params(&w),
+        Err(_) => return TrainerReport { id, steps: 0, timeline: Vec::new() },
+    }
+    let _ = start;
+    let start = Instant::now();
+
+    let mut last_round = 0u64;
+    let mut last_loss = f32::NAN;
+    let mut steps = 0u64;
+    let mut timeline: Vec<LossPoint> = Vec::new();
+
+    loop {
+        if control.stopped() {
+            break;
+        }
+        // Aggregation round open? Ship weights, await global broadcast.
+        let round = control.current_round();
+        if round > last_round {
+            let msg = TrainerMsg {
+                id,
+                round,
+                weights: state.params.clone(),
+                loss: last_loss,
+                steps,
+            };
+            if tx.send(msg).is_err() {
+                break;
+            }
+            match rx_global.recv() {
+                Ok(w) => state.set_params(&w),
+                Err(_) => break, // server gone
+            }
+            last_round = round;
+            continue;
+        }
+
+        // One local step.
+        let t0 = Instant::now();
+        match sampler.next_block(&mut rng) {
+            None => {
+                // Empty partition (e.g. after failures): stay alive to
+                // participate in aggregation, but learn nothing.
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Some(block) => match engine.train_step(&mut state, block) {
+                Ok(loss) => {
+                    last_loss = loss;
+                    steps += 1;
+                    timeline.push(LossPoint {
+                        t: start.elapsed().as_secs_f64(),
+                        loss,
+                        step: steps,
+                    });
+                }
+                Err(e) => {
+                    eprintln!("[trainer {id}] step failed: {e}");
+                    break;
+                }
+            },
+        }
+        if slowdown > 1.0 {
+            let extra = t0.elapsed().mul_f64(slowdown - 1.0);
+            std::thread::sleep(extra);
+        }
+    }
+    TrainerReport { id, steps, timeline }
+}

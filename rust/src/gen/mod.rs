@@ -1,0 +1,28 @@
+//! Synthetic graph generators — the data substrate.
+//!
+//! The paper's datasets (Reddit, ogbl-citation2, MAG240M-P and the
+//! proprietary E-comm graph) are unavailable here (see DESIGN.md §2),
+//! so this module builds functional equivalents that exercise the same
+//! code paths and, crucially, the same *mechanism*: community structure
+//! correlated with features, so that min-cut partitioning induces
+//! cross-trainer feature disparity while randomized partitioning does
+//! not.
+//!
+//! - [`dcsbm`] — degree-corrected stochastic block model with a
+//!   homophily (class-compatibility) parameter and power-law degrees;
+//!   presets emulate the three homogeneous benchmarks.
+//! - [`sbm2`] — the exact 2-class compatibility model of Lemma 1 with
+//!   one-hot features; used by the theory-validation bench.
+//! - [`bipartite`] — query-item graph with typed edges for the
+//!   heterogeneous (E-comm) experiments.
+//! - [`presets`] — named dataset configurations + on-disk caching.
+
+mod bipartite;
+mod dcsbm;
+pub mod presets;
+mod sbm2;
+
+pub use bipartite::{bipartite, BipartiteConfig};
+pub use dcsbm::{dcsbm, DcsbmConfig};
+pub use presets::{load_preset, preset_names, Preset};
+pub use sbm2::{sbm2, Sbm2Config};

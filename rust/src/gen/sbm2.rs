@@ -1,0 +1,98 @@
+//! The exact 2-class compatibility model of Lemma 1.
+//!
+//! Two equally-sized classes y in {0,1}, edge probability
+//! p_ji ∝ H(y_i, y_j) with H = h on the diagonal and 1-h off it, and
+//! one-hot features x_v = onehot(y_v). The theory-validation bench
+//! measures expected edge-cut (Eq. 2) and the initial-gradient
+//! discrepancies (Thm 2) on graphs from this generator and compares
+//! them with the closed forms.
+
+use crate::graph::{Graph, GraphBuilder};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Sbm2Config {
+    /// Nodes per class (total = 2 * class_size).
+    pub class_size: usize,
+    pub avg_degree: f64,
+    /// Homophily h in [0, 1]: P(same-class partner).
+    pub homophily: f64,
+    pub seed: u64,
+}
+
+pub fn sbm2(cfg: &Sbm2Config) -> Graph {
+    let n = cfg.class_size * 2;
+    let mut rng = Rng::new(cfg.seed);
+    // labels: first half 0, second half 1 (node order is irrelevant to
+    // every consumer; partitioners are label-blind).
+    let labels: Vec<u16> =
+        (0..n).map(|v| (v >= cfg.class_size) as u16).collect();
+
+    let target = (n as f64 * cfg.avg_degree / 2.0) as usize;
+    let mut b = GraphBuilder::new(n);
+    let mut attempts = 0;
+    while b.num_pending() < target && attempts < target * 20 {
+        attempts += 1;
+        let u = rng.below(n);
+        let same = rng.chance(cfg.homophily);
+        let v = loop {
+            let cand = if same == (labels[u] == 0) {
+                rng.below(cfg.class_size) // class 0
+            } else {
+                cfg.class_size + rng.below(cfg.class_size) // class 1
+            };
+            if cand != u {
+                break cand;
+            }
+        };
+        b.add_edge(u as u32, v as u32);
+    }
+    let mut g = b.build();
+    // one-hot features
+    g.feat_dim = 2;
+    g.features = labels
+        .iter()
+        .flat_map(|&y| if y == 0 { [1.0, 0.0] } else { [0.0, 1.0] })
+        .collect();
+    g.labels = labels;
+    g.num_classes = 2;
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats::homophily_ratio;
+
+    #[test]
+    fn classes_balanced_and_onehot() {
+        let g = sbm2(&Sbm2Config {
+            class_size: 500,
+            avg_degree: 10.0,
+            homophily: 0.8,
+            seed: 1,
+        });
+        assert_eq!(g.num_nodes(), 1000);
+        let c1 = g.labels.iter().filter(|&&y| y == 1).count();
+        assert_eq!(c1, 500);
+        for v in 0..g.num_nodes() {
+            let f = g.feature(v);
+            assert_eq!(f[g.labels[v] as usize], 1.0);
+            assert_eq!(f[1 - g.labels[v] as usize], 0.0);
+        }
+    }
+
+    #[test]
+    fn empirical_homophily_matches_h() {
+        for &h in &[0.5, 0.7, 0.9] {
+            let g = sbm2(&Sbm2Config {
+                class_size: 2000,
+                avg_degree: 16.0,
+                homophily: h,
+                seed: 3,
+            });
+            let emp = homophily_ratio(&g);
+            assert!((emp - h).abs() < 0.03, "h={h} emp={emp}");
+        }
+    }
+}

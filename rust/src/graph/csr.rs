@@ -1,0 +1,240 @@
+//! CSR graph with node features, class labels and optional edge types.
+
+/// Compact undirected graph in CSR form. Both directions of every
+/// undirected edge are stored, so `deg(v)` is the true degree and the
+/// undirected edge count is `num_adj() / 2`.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    /// CSR row offsets, length `num_nodes + 1`.
+    pub offsets: Vec<u64>,
+    /// Flattened neighbour lists (sorted within each row).
+    pub neighbors: Vec<u32>,
+    /// Optional per-adjacency-entry relation type (heterogeneous graphs).
+    pub rel: Option<Vec<u8>>,
+    /// Row-major node features, `num_nodes x feat_dim`.
+    pub features: Vec<f32>,
+    pub feat_dim: usize,
+    /// Synthetic community / class label per node (ground truth used by
+    /// the theory benches and the feature generator; never by training).
+    pub labels: Vec<u16>,
+    pub num_classes: usize,
+    /// Number of distinct relation types (1 for homogeneous).
+    pub num_relations: usize,
+}
+
+impl Graph {
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Directed adjacency entries (2x undirected edges).
+    pub fn num_adj(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Undirected edge count.
+    pub fn num_edges(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        (self.offsets[v + 1] - self.offsets[v]) as usize
+    }
+
+    #[inline]
+    pub fn neighbors_of(&self, v: usize) -> &[u32] {
+        &self.neighbors[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    /// Relation types aligned with [`Self::neighbors_of`].
+    pub fn rels_of(&self, v: usize) -> Option<&[u8]> {
+        self.rel.as_ref().map(|r| {
+            &r[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+        })
+    }
+
+    #[inline]
+    pub fn feature(&self, v: usize) -> &[f32] {
+        &self.features[v * self.feat_dim..(v + 1) * self.feat_dim]
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.neighbors_of(u).binary_search(&(v as u32)).is_ok()
+    }
+
+    /// Iterate undirected edges as (u, v) with u <= v.
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.num_nodes()).flat_map(move |u| {
+            self.neighbors_of(u)
+                .iter()
+                .filter(move |&&v| u as u32 <= v)
+                .map(move |&v| (u as u32, v))
+        })
+    }
+}
+
+/// Edge-list accumulator producing a deduplicated, sorted CSR.
+#[derive(Default)]
+pub struct GraphBuilder {
+    num_nodes: usize,
+    edges: Vec<(u32, u32, u8)>,
+    hetero: bool,
+}
+
+impl GraphBuilder {
+    pub fn new(num_nodes: usize) -> Self {
+        GraphBuilder { num_nodes, edges: Vec::new(), hetero: false }
+    }
+
+    /// Add an undirected edge (self-loops are dropped: the samplers add
+    /// normalized self-connections themselves).
+    pub fn add_edge(&mut self, u: u32, v: u32) {
+        self.add_rel_edge(u, v, 0);
+    }
+
+    /// Add a typed undirected edge.
+    pub fn add_rel_edge(&mut self, u: u32, v: u32, rel: u8) {
+        debug_assert!((u as usize) < self.num_nodes);
+        debug_assert!((v as usize) < self.num_nodes);
+        if u == v {
+            return;
+        }
+        if rel > 0 {
+            self.hetero = true;
+        }
+        self.edges.push((u, v, rel));
+        self.edges.push((v, u, rel));
+    }
+
+    pub fn num_pending(&self) -> usize {
+        self.edges.len() / 2
+    }
+
+    /// Build the CSR (dedup on (src, dst): first relation wins).
+    pub fn build(mut self) -> Graph {
+        self.edges.sort_unstable();
+        self.edges.dedup_by_key(|e| (e.0, e.1));
+        let n = self.num_nodes;
+        let mut offsets = vec![0u64; n + 1];
+        for &(u, _, _) in &self.edges {
+            offsets[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let neighbors: Vec<u32> = self.edges.iter().map(|e| e.1).collect();
+        let rel = if self.hetero {
+            Some(self.edges.iter().map(|e| e.2).collect())
+        } else {
+            None
+        };
+        let num_relations = rel
+            .as_ref()
+            .map(|r: &Vec<u8>| r.iter().copied().max().unwrap_or(0) as usize + 1)
+            .unwrap_or(1);
+        Graph {
+            offsets,
+            neighbors,
+            rel,
+            features: Vec::new(),
+            feat_dim: 0,
+            labels: vec![0; n],
+            num_classes: 1,
+            num_relations,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Graph {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 0);
+        b.build()
+    }
+
+    #[test]
+    fn builds_symmetric_csr() {
+        let g = triangle();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.neighbors_of(0), &[1, 2]);
+        assert_eq!(g.neighbors_of(1), &[0, 2]);
+        assert_eq!(g.neighbors_of(3), &[] as &[u32]);
+        assert_eq!(g.degree(2), 2);
+    }
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1);
+        b.add_edge(1, 0); // duplicate
+        b.add_edge(2, 2); // self loop dropped
+        let g = b.build();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.degree(2), 0);
+    }
+
+    #[test]
+    fn has_edge_and_edges_iter() {
+        let g = triangle();
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(0, 3));
+        let es: Vec<_> = g.edges().collect();
+        assert_eq!(es, vec![(0, 1), (0, 2), (1, 2)]);
+    }
+
+    #[test]
+    fn hetero_relations_tracked() {
+        let mut b = GraphBuilder::new(3);
+        b.add_rel_edge(0, 1, 0);
+        b.add_rel_edge(1, 2, 3);
+        let g = b.build();
+        assert_eq!(g.num_relations, 4);
+        assert_eq!(g.rels_of(1).unwrap(), &[0, 3]);
+    }
+
+    #[test]
+    fn prop_csr_well_formed_on_random_graphs() {
+        use crate::util::rng::Rng;
+        crate::util::prop::check(30, 41, |rng: &mut Rng| {
+            let n = rng.range(1, 60);
+            let m = rng.range(0, 200);
+            let mut b = GraphBuilder::new(n);
+            for _ in 0..m {
+                b.add_edge(rng.below(n) as u32, rng.below(n) as u32);
+            }
+            let g = b.build();
+            crate::prop_assert!(g.offsets.len() == n + 1);
+            crate::prop_assert!(
+                *g.offsets.last().unwrap() as usize == g.neighbors.len()
+            );
+            // symmetry + sorted rows + no self loops
+            for u in 0..n {
+                let row = g.neighbors_of(u);
+                crop_sorted(row)?;
+                for &v in row {
+                    crate::prop_assert!(v as usize != u, "self loop at {u}");
+                    crate::prop_assert!(
+                        g.has_edge(v as usize, u),
+                        "asymmetric edge {u}->{v}"
+                    );
+                }
+            }
+            Ok(())
+        });
+
+        fn crop_sorted(row: &[u32]) -> Result<(), String> {
+            if row.windows(2).all(|w| w[0] < w[1]) {
+                Ok(())
+            } else {
+                Err(format!("row not strictly sorted: {row:?}"))
+            }
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Binary graph serialization (little-endian, versioned).
+//!
+//! Used to cache generated datasets between bench runs so the
+//! generators run once per configuration. Format:
+//!
+//! ```text
+//! magic "RTMAGRF1" | n: u64 | adj: u64 | feat_dim: u64 | classes: u64
+//! relations: u64 | has_rel: u8
+//! offsets [n+1] u64 | neighbors [adj] u32 | rel [adj] u8 (if has_rel)
+//! labels [n] u16 | features [n*feat_dim] f32
+//! ```
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Graph;
+
+const MAGIC: &[u8; 8] = b"RTMAGRF1";
+
+pub fn save(g: &Graph, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    for v in [
+        g.num_nodes() as u64,
+        g.num_adj() as u64,
+        g.feat_dim as u64,
+        g.num_classes as u64,
+        g.num_relations as u64,
+    ] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.write_all(&[g.rel.is_some() as u8])?;
+    for &o in &g.offsets {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    for &nb in &g.neighbors {
+        w.write_all(&nb.to_le_bytes())?;
+    }
+    if let Some(rel) = &g.rel {
+        w.write_all(rel)?;
+    }
+    for &l in &g.labels {
+        w.write_all(&l.to_le_bytes())?;
+    }
+    for &f in &g.features {
+        w.write_all(&f.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Graph> {
+    let mut r = BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad magic", path.display());
+    }
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |r: &mut BufReader<std::fs::File>| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let n = read_u64(&mut r)? as usize;
+    let adj = read_u64(&mut r)? as usize;
+    let feat_dim = read_u64(&mut r)? as usize;
+    let num_classes = read_u64(&mut r)? as usize;
+    let num_relations = read_u64(&mut r)? as usize;
+    let mut flag = [0u8; 1];
+    r.read_exact(&mut flag)?;
+
+    let mut offsets = vec![0u64; n + 1];
+    for o in &mut offsets {
+        let mut b = [0u8; 8];
+        r.read_exact(&mut b)?;
+        *o = u64::from_le_bytes(b);
+    }
+    let mut neighbors = vec![0u32; adj];
+    for nb in &mut neighbors {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        *nb = u32::from_le_bytes(b);
+    }
+    let rel = if flag[0] == 1 {
+        let mut rel = vec![0u8; adj];
+        r.read_exact(&mut rel)?;
+        Some(rel)
+    } else {
+        None
+    };
+    let mut labels = vec![0u16; n];
+    for l in &mut labels {
+        let mut b = [0u8; 2];
+        r.read_exact(&mut b)?;
+        *l = u16::from_le_bytes(b);
+    }
+    let mut features = vec![0f32; n * feat_dim];
+    for f in &mut features {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        *f = f32::from_le_bytes(b);
+    }
+    Ok(Graph {
+        offsets,
+        neighbors,
+        rel,
+        features,
+        feat_dim,
+        labels,
+        num_classes,
+        num_relations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn sample(hetero: bool) -> Graph {
+        let mut b = GraphBuilder::new(6);
+        b.add_rel_edge(0, 1, 0);
+        b.add_rel_edge(1, 2, if hetero { 2 } else { 0 });
+        b.add_rel_edge(4, 5, if hetero { 1 } else { 0 });
+        let mut g = b.build();
+        g.feat_dim = 3;
+        g.features = (0..18).map(|i| i as f32 * 0.5).collect();
+        g.labels = vec![0, 1, 2, 0, 1, 2];
+        g.num_classes = 3;
+        g
+    }
+
+    #[test]
+    fn roundtrip_homogeneous() {
+        let g = sample(false);
+        let path = std::env::temp_dir().join("rtma_io_homo.bin");
+        save(&g, &path).unwrap();
+        let h = load(&path).unwrap();
+        assert_eq!(g.offsets, h.offsets);
+        assert_eq!(g.neighbors, h.neighbors);
+        assert_eq!(g.rel, h.rel);
+        assert_eq!(g.features, h.features);
+        assert_eq!(g.labels, h.labels);
+        assert_eq!(g.num_classes, h.num_classes);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn roundtrip_heterogeneous() {
+        let g = sample(true);
+        let path = std::env::temp_dir().join("rtma_io_het.bin");
+        save(&g, &path).unwrap();
+        let h = load(&path).unwrap();
+        assert!(h.rel.is_some());
+        assert_eq!(g.rel, h.rel);
+        assert_eq!(g.num_relations, h.num_relations);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join("rtma_io_bad.bin");
+        std::fs::write(&path, b"NOTAGRAPH").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

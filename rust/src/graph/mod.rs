@@ -1,0 +1,18 @@
+//! Graph substrate: CSR storage, builders, statistics, subgraph
+//! induction, link-prediction splits and binary IO.
+//!
+//! All training-time graph access in the coordinator goes through
+//! [`Graph`] (a compact CSR with node features and synthetic class
+//! labels). Node-induced subgraphs ([`subgraph::Subgraph`]) are what
+//! each TMA trainer receives — local IDs plus the mapping back to
+//! global IDs, matching the paper's restricted-local-access setting.
+
+pub mod csr;
+pub mod io;
+pub mod split;
+pub mod stats;
+pub mod subgraph;
+
+pub use csr::{Graph, GraphBuilder};
+pub use split::{LinkSplit, split_links};
+pub use subgraph::Subgraph;

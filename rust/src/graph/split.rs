@@ -1,0 +1,183 @@
+//! Link-prediction train/val/test splits.
+//!
+//! Follows the paper's protocol for Reddit / MAG240M-P (§4.1): select
+//! a set of probe nodes, remove one incident edge per probe node for
+//! validation and one for test, and train on the remaining graph. Also
+//! samples the fixed negative-candidate sets used for MRR evaluation
+//! (the paper fixes 1000 negatives per positive across runs; the count
+//! is configurable here).
+
+use crate::util::rng::Rng;
+
+use super::{Graph, GraphBuilder};
+
+/// A link-prediction split over one graph.
+#[derive(Clone, Debug)]
+pub struct LinkSplit {
+    /// Training graph: the original with val/test edges removed.
+    pub train: Graph,
+    /// Held-out positive edges.
+    pub val: Vec<(u32, u32)>,
+    pub test: Vec<(u32, u32)>,
+    /// Fixed negative candidates per val/test edge, `[k]` tails each.
+    pub val_negatives: Vec<Vec<u32>>,
+    pub test_negatives: Vec<Vec<u32>>,
+}
+
+/// Remove `per_split` edges each for val and test. Only edges whose
+/// endpoints keep degree >= 2 are eligible, so the training graph never
+/// gains isolated nodes. Negatives are tails sampled uniformly from
+/// non-neighbours, fixed per edge (seeded) across runs.
+pub fn split_links(
+    g: &Graph,
+    per_split: usize,
+    negatives: usize,
+    seed: u64,
+) -> LinkSplit {
+    let mut rng = Rng::new(seed);
+    let n = g.num_nodes();
+
+    let mut degree: Vec<usize> = (0..n).map(|v| g.degree(v)).collect();
+    let mut removed: std::collections::HashSet<(u32, u32)> =
+        std::collections::HashSet::new();
+    let mut held = Vec::with_capacity(per_split * 2);
+
+    // Sample held-out edges by rejection from the edge set.
+    let all_edges: Vec<(u32, u32)> = g.edges().collect();
+    let mut order: Vec<usize> = (0..all_edges.len()).collect();
+    rng.shuffle(&mut order);
+    for &ei in &order {
+        if held.len() == per_split * 2 {
+            break;
+        }
+        let (u, v) = all_edges[ei];
+        if degree[u as usize] >= 2 && degree[v as usize] >= 2 {
+            degree[u as usize] -= 1;
+            degree[v as usize] -= 1;
+            removed.insert((u, v));
+            held.push((u, v));
+        }
+    }
+    let val: Vec<_> = held[..held.len() / 2].to_vec();
+    let test: Vec<_> = held[held.len() / 2..].to_vec();
+
+    // Rebuild training CSR without the held-out edges.
+    let mut b = GraphBuilder::new(n);
+    for u in 0..n {
+        let rels = g.rels_of(u);
+        for (k, &v) in g.neighbors_of(u).iter().enumerate() {
+            if (u as u32) < v {
+                let key = (u as u32, v);
+                if !removed.contains(&key) {
+                    b.add_rel_edge(u as u32, v, rels.map(|r| r[k]).unwrap_or(0));
+                }
+            }
+        }
+    }
+    let mut train = b.build();
+    train.features = g.features.clone();
+    train.feat_dim = g.feat_dim;
+    train.labels = g.labels.clone();
+    train.num_classes = g.num_classes;
+    train.num_relations = g.num_relations;
+
+    let negs_for = |edges: &[(u32, u32)], rng: &mut Rng| {
+        edges
+            .iter()
+            .map(|&(u, _)| {
+                let mut negs = Vec::with_capacity(negatives);
+                while negs.len() < negatives {
+                    let cand = rng.below(n) as u32;
+                    if cand != u && !g.has_edge(u as usize, cand as usize) {
+                        negs.push(cand);
+                    }
+                }
+                negs
+            })
+            .collect::<Vec<_>>()
+    };
+    let val_negatives = negs_for(&val, &mut rng);
+    let test_negatives = negs_for(&test, &mut rng);
+
+    LinkSplit { train, val, test, val_negatives, test_negatives }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::rng::Rng;
+
+    fn toy() -> Graph {
+        gen::dcsbm(&gen::DcsbmConfig {
+            nodes: 300,
+            communities: 4,
+            avg_degree: 12.0,
+            homophily: 0.8,
+            feat_dim: 4,
+            feature_noise: 0.5,
+            degree_exponent: 0.0,
+            seed: 3,
+        })
+    }
+
+    #[test]
+    fn split_sizes_and_disjoint() {
+        let g = toy();
+        let s = split_links(&g, 40, 16, 7);
+        assert_eq!(s.val.len(), 40);
+        assert_eq!(s.test.len(), 40);
+        assert_eq!(s.train.num_edges(), g.num_edges() - 80);
+        // held-out edges absent from train
+        for &(u, v) in s.val.iter().chain(&s.test) {
+            assert!(!s.train.has_edge(u as usize, v as usize));
+            assert!(g.has_edge(u as usize, v as usize));
+        }
+    }
+
+    #[test]
+    fn negatives_are_true_negatives() {
+        let g = toy();
+        let s = split_links(&g, 20, 8, 7);
+        for (i, &(u, _)) in s.val.iter().enumerate() {
+            assert_eq!(s.val_negatives[i].len(), 8);
+            for &c in &s.val_negatives[i] {
+                assert!(!g.has_edge(u as usize, c as usize));
+                assert_ne!(c, u);
+            }
+        }
+    }
+
+    #[test]
+    fn split_deterministic_per_seed() {
+        let g = toy();
+        let a = split_links(&g, 10, 4, 9);
+        let b = split_links(&g, 10, 4, 9);
+        assert_eq!(a.val, b.val);
+        assert_eq!(a.test_negatives, b.test_negatives);
+        let c = split_links(&g, 10, 4, 10);
+        assert_ne!(a.val, c.val);
+    }
+
+    #[test]
+    fn no_isolated_nodes_created() {
+        let g = toy();
+        let before: usize = (0..g.num_nodes()).filter(|&v| g.degree(v) == 0).count();
+        let s = split_links(&g, 60, 4, 11);
+        let after: usize = (0..s.train.num_nodes())
+            .filter(|&v| s.train.degree(v) == 0)
+            .count();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn prop_train_plus_held_equals_original() {
+        crate::util::prop::check(5, 13, |rng: &mut Rng| {
+            let g = toy();
+            let s = split_links(&g, rng.range(5, 30), 2, rng.next_u64());
+            let total = s.train.num_edges() + s.val.len() + s.test.len();
+            crate::prop_assert!(total == g.num_edges());
+            Ok(())
+        });
+    }
+}

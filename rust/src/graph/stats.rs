@@ -1,0 +1,168 @@
+//! Graph statistics: degrees, homophily ratio, feature distributions.
+//!
+//! The homophily ratio `h` (fraction of same-class edges, paper §3
+//! Preliminaries / Zhu et al. [45]) and per-partition feature/class
+//! distributions `C_i` are the quantities the paper's theory (Lem 1,
+//! Thm 2, Cor 3) speaks about; the partition-stats module builds its
+//! disparity measures on top of these.
+
+use super::Graph;
+
+/// Summary statistics printed by Table 1 and used in DESIGN.md checks.
+#[derive(Debug, Clone)]
+pub struct GraphStats {
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    pub num_relations: usize,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+    pub homophily: f64,
+    pub isolated: usize,
+}
+
+pub fn graph_stats(g: &Graph) -> GraphStats {
+    let n = g.num_nodes();
+    let mut max_degree = 0;
+    let mut isolated = 0;
+    for v in 0..n {
+        let d = g.degree(v);
+        max_degree = max_degree.max(d);
+        if d == 0 {
+            isolated += 1;
+        }
+    }
+    GraphStats {
+        num_nodes: n,
+        num_edges: g.num_edges(),
+        feat_dim: g.feat_dim,
+        num_classes: g.num_classes,
+        num_relations: g.num_relations,
+        avg_degree: if n == 0 { 0.0 } else { g.num_adj() as f64 / n as f64 },
+        max_degree,
+        homophily: homophily_ratio(g),
+        isolated,
+    }
+}
+
+/// Fraction of edges linking same-class nodes: h = |{(u,v): y_u = y_v}| / |E|.
+pub fn homophily_ratio(g: &Graph) -> f64 {
+    let mut same = 0usize;
+    let mut total = 0usize;
+    for (u, v) in g.edges() {
+        total += 1;
+        if g.labels[u as usize] == g.labels[v as usize] {
+            same += 1;
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        same as f64 / total as f64
+    }
+}
+
+/// Class histogram over an arbitrary node set, normalised to a
+/// distribution — the `C_i` of the paper's theory section.
+pub fn class_distribution(g: &Graph, nodes: &[u32]) -> Vec<f64> {
+    let mut hist = vec![0.0; g.num_classes.max(1)];
+    for &v in nodes {
+        hist[g.labels[v as usize] as usize] += 1.0;
+    }
+    let total: f64 = hist.iter().sum();
+    if total > 0.0 {
+        for h in &mut hist {
+            *h /= total;
+        }
+    }
+    hist
+}
+
+/// Mean feature vector over a node set (feature-space analogue of C_i).
+pub fn mean_feature(g: &Graph, nodes: &[u32]) -> Vec<f64> {
+    let mut mu = vec![0.0f64; g.feat_dim];
+    if nodes.is_empty() {
+        return mu;
+    }
+    for &v in nodes {
+        for (m, &x) in mu.iter_mut().zip(g.feature(v as usize)) {
+            *m += x as f64;
+        }
+    }
+    for m in &mut mu {
+        *m /= nodes.len() as f64;
+    }
+    mu
+}
+
+/// L2 distance between two distributions / mean vectors: the paper's
+/// disparity measure ||C_i - C_j||.
+pub fn l2_distance(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn labeled_path() -> Graph {
+        // 0-1-2-3 with labels [0,0,1,1]: edges (0,1) same, (1,2) diff,
+        // (2,3) same -> h = 2/3.
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 3);
+        let mut g = b.build();
+        g.labels = vec![0, 0, 1, 1];
+        g.num_classes = 2;
+        g
+    }
+
+    #[test]
+    fn homophily_counts_same_class_edges() {
+        let g = labeled_path();
+        assert!((homophily_ratio(&g) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_basics() {
+        let g = labeled_path();
+        let s = graph_stats(&g);
+        assert_eq!(s.num_nodes, 4);
+        assert_eq!(s.num_edges, 3);
+        assert_eq!(s.max_degree, 2);
+        assert_eq!(s.isolated, 0);
+        assert!((s.avg_degree - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn class_distribution_normalises() {
+        let g = labeled_path();
+        let c = class_distribution(&g, &[0, 1, 2]);
+        assert!((c[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c[1] - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(class_distribution(&g, &[]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn mean_feature_averages() {
+        let mut g = labeled_path();
+        g.feat_dim = 2;
+        g.features = vec![1.0, 0.0, 3.0, 0.0, 0.0, 2.0, 0.0, 0.0];
+        let mu = mean_feature(&g, &[0, 1]);
+        assert_eq!(mu, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn l2_distance_basics() {
+        assert_eq!(l2_distance(&[0.0, 0.0], &[3.0, 4.0]), 5.0);
+        assert_eq!(l2_distance(&[1.0], &[1.0]), 0.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Node-induced subgraphs with local<->global ID mapping.
+//!
+//! This is the paper's restricted-access unit: a TMA trainer `i`
+//! receives `Subgraph` induced by its partition `alpha^{-1}(i)` —
+//! edges crossing the partition boundary are *discarded*, exactly the
+//! data loss the randomized schemes are designed to tolerate.
+
+use std::collections::HashMap;
+
+use super::{Graph, GraphBuilder};
+
+/// A node-induced subgraph plus the mapping back to global IDs.
+#[derive(Clone, Debug)]
+pub struct Subgraph {
+    /// Local graph over `0..global_ids.len()`.
+    pub graph: Graph,
+    /// `global_ids[local] = global` (sorted ascending).
+    pub global_ids: Vec<u32>,
+    /// Undirected edges of the *parent* graph lost at the boundary.
+    pub cut_edges: usize,
+}
+
+impl Subgraph {
+    /// Induce the subgraph of `parent` on `nodes` (deduplicated and
+    /// sorted internally). Features/labels are copied for locality —
+    /// trainers never touch the parent graph afterwards.
+    pub fn induce(parent: &Graph, nodes: &[u32]) -> Subgraph {
+        let mut global_ids: Vec<u32> = nodes.to_vec();
+        global_ids.sort_unstable();
+        global_ids.dedup();
+        let mut local_of: HashMap<u32, u32> =
+            HashMap::with_capacity(global_ids.len());
+        for (l, &g) in global_ids.iter().enumerate() {
+            local_of.insert(g, l as u32);
+        }
+
+        let mut b = GraphBuilder::new(global_ids.len());
+        let mut cut = 0usize;
+        for (lu, &gu) in global_ids.iter().enumerate() {
+            let rels = parent.rels_of(gu as usize);
+            for (k, &gv) in parent.neighbors_of(gu as usize).iter().enumerate()
+            {
+                match local_of.get(&gv) {
+                    Some(&lv) => {
+                        // add once per undirected edge
+                        if (lu as u32) < lv {
+                            let r = rels.map(|rs| rs[k]).unwrap_or(0);
+                            b.add_rel_edge(lu as u32, lv, r);
+                        }
+                    }
+                    None => cut += 1,
+                }
+            }
+        }
+
+        let mut graph = b.build();
+        graph.feat_dim = parent.feat_dim;
+        graph.num_classes = parent.num_classes;
+        graph.num_relations = parent.num_relations;
+        graph.features = Vec::with_capacity(global_ids.len() * parent.feat_dim);
+        graph.labels = Vec::with_capacity(global_ids.len());
+        for &g in &global_ids {
+            graph.features.extend_from_slice(parent.feature(g as usize));
+            graph.labels.push(parent.labels[g as usize]);
+        }
+        // Homogeneous parents produce rel=None subgraphs even if built
+        // via add_rel_edge(0): GraphBuilder only records rel when >0.
+        Subgraph { graph, global_ids, cut_edges: cut }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.global_ids.len()
+    }
+
+    /// Local ID of a global node, if present.
+    pub fn local_of(&self, global: u32) -> Option<u32> {
+        self.global_ids
+            .binary_search(&global)
+            .ok()
+            .map(|i| i as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn parent() -> Graph {
+        // square 0-1-2-3-0 plus diagonal 0-2; features = id
+        let mut b = GraphBuilder::new(5);
+        for (u, v) in [(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)] {
+            b.add_edge(u, v);
+        }
+        let mut g = b.build();
+        g.feat_dim = 1;
+        g.features = (0..5).map(|i| i as f32).collect();
+        g.labels = vec![0, 1, 0, 1, 0];
+        g.num_classes = 2;
+        g
+    }
+
+    #[test]
+    fn induces_internal_edges_only() {
+        let g = parent();
+        let s = Subgraph::induce(&g, &[0, 1, 2]);
+        assert_eq!(s.num_nodes(), 3);
+        assert_eq!(s.graph.num_edges(), 3); // (0,1),(1,2),(0,2)
+        // cut: 0-3, 2-3 seen from inside = 2 directed views
+        assert_eq!(s.cut_edges, 2);
+    }
+
+    #[test]
+    fn copies_features_and_labels() {
+        let g = parent();
+        let s = Subgraph::induce(&g, &[3, 1]);
+        assert_eq!(s.global_ids, vec![1, 3]);
+        assert_eq!(s.graph.features, vec![1.0, 3.0]);
+        assert_eq!(s.graph.labels, vec![1, 1]);
+        assert_eq!(s.local_of(3), Some(1));
+        assert_eq!(s.local_of(0), None);
+    }
+
+    #[test]
+    fn dedups_input_nodes() {
+        let g = parent();
+        let s = Subgraph::induce(&g, &[2, 2, 0]);
+        assert_eq!(s.num_nodes(), 2);
+        assert_eq!(s.graph.num_edges(), 1);
+    }
+
+    #[test]
+    fn prop_partition_subgraphs_cover_internal_edges() {
+        use crate::util::rng::Rng;
+        crate::util::prop::check(25, 77, |rng: &mut Rng| {
+            let n = rng.range(2, 50);
+            let mut b = GraphBuilder::new(n);
+            for _ in 0..rng.range(0, 150) {
+                b.add_edge(rng.below(n) as u32, rng.below(n) as u32);
+            }
+            let mut g = b.build();
+            g.feat_dim = 0;
+            g.labels = vec![0; n];
+            // random 2-way partition
+            let assign: Vec<usize> = (0..n).map(|_| rng.below(2)).collect();
+            let parts: Vec<Vec<u32>> = (0..2)
+                .map(|p| {
+                    (0..n)
+                        .filter(|&v| assign[v] == p)
+                        .map(|v| v as u32)
+                        .collect()
+                })
+                .collect();
+            let subs: Vec<_> =
+                parts.iter().map(|p| Subgraph::induce(&g, p)).collect();
+            // internal + cut must account for every edge view
+            let internal: usize =
+                subs.iter().map(|s| s.graph.num_edges()).sum();
+            let cut_views: usize = subs.iter().map(|s| s.cut_edges).sum();
+            crate::prop_assert!(
+                internal + cut_views / 2 == g.num_edges(),
+                "internal={internal} cut_views={cut_views} total={}",
+                g.num_edges()
+            );
+            Ok(())
+        });
+    }
+}

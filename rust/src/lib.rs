@@ -1,0 +1,30 @@
+//! `random_tma` — reproduction of *"Simplifying Distributed Neural Network
+//! Training on Massive Graphs: Randomized Partitions Improve Model
+//! Aggregation"* (RandomTMA / SuperTMA, 2023).
+//!
+//! Three-layer architecture:
+//! - **L3 (this crate)**: the distributed coordinator — graph substrates,
+//!   partitioners, samplers, the Time-based Model Aggregation (TMA) server
+//!   and trainers, baselines (PSGD-PA, LLCG, GGS), evaluation and benches.
+//! - **L2 (python/compile/model.py)**: JAX link-prediction models
+//!   (GCN/SAGE/MLP/RGCN encoders, MLP/DistMult decoders) lowered AOT to
+//!   HLO text in `artifacts/`.
+//! - **L1 (python/compile/kernels/)**: Pallas kernels for the compute
+//!   hot-spots (tiled matmul, fused GCN aggregation, decoder scoring).
+//!
+//! Python never runs on the training path: the rust binary loads the AOT
+//! artifacts through PJRT (`runtime`) and drives everything else natively.
+
+pub mod util;
+
+pub mod config;
+pub mod graph;
+pub mod gen;
+pub mod partition;
+pub mod sampler;
+pub mod runtime;
+pub mod model;
+pub mod coordinator;
+pub mod comm;
+pub mod metrics;
+pub mod benchkit;

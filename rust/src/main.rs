@@ -1,0 +1,335 @@
+//! `rtma` — the RandomTMA/SuperTMA distributed GNN training CLI.
+//!
+//! Subcommands:
+//!   doctor                 verify artifacts + PJRT + one smoke step
+//!   datasets               generate/print dataset statistics (Table 1)
+//!   partition              compare partition schemes on one dataset
+//!   train                  run one full experiment (any approach)
+//!   worker                 TCP worker process for distributed mode
+//!
+//! Examples:
+//!   rtma train --dataset citation-sim --approach RandomTMA --m 3 \
+//!       --train-secs 30 --agg-secs 2
+//!   rtma partition --dataset reddit-sim --m 3
+//!
+//! Everything the paper's tables need beyond single runs lives in the
+//! benches (`cargo bench`) — see DESIGN.md §6.
+
+use anyhow::Result;
+use random_tma::config::{Approach, RunConfig};
+use random_tma::coordinator::driver::default_clusters;
+use random_tma::coordinator::run_experiment;
+use random_tma::gen::{load_preset, preset_names};
+use random_tma::graph::stats::graph_stats;
+use random_tma::model::AggregateOp;
+use random_tma::partition::{partition_stats, Scheme};
+use random_tma::util::bench::Table;
+use random_tma::util::cli::Args;
+use random_tma::util::rng::Rng;
+
+fn main() {
+    let args = Args::parse(&["quick", "jnp", "help"]);
+    let (cmd, rest) = args.subcommand();
+    let result = match cmd {
+        Some("doctor") => doctor(&rest),
+        Some("datasets") => datasets(&rest),
+        Some("partition") => partition(&rest),
+        Some("train") => train(&rest),
+        Some("worker") => worker(&rest),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "rtma — RandomTMA/SuperTMA distributed GNN training\n\
+         \n\
+         usage: rtma <doctor|datasets|partition|train|worker> [flags]\n\
+         \n\
+         common flags:\n\
+         \x20 --dataset <reddit-sim|citation-sim|mag-sim|ecomm-sim>\n\
+         \x20 --variant <gcn_mlp|sage_mlp|mlp_mlp|gcn_distmult|rgcn_mlp|rgcn_distmult>\n\
+         \x20 --approach <RandomTMA|SuperTMA|PSGD-PA|LLCG|GGS>\n\
+         \x20 --m <trainers>  --train-secs <s>  --agg-secs <ρ>\n\
+         \x20 --seed <u64>  --quick  --jnp (use XLA-dot artifacts)"
+    );
+}
+
+fn run_config(args: &Args) -> RunConfig {
+    let mut cfg = RunConfig {
+        dataset: args.str_or("dataset", "citation-sim"),
+        quick: args.flag("quick"),
+        variant: args.str_or("variant", "gcn_mlp"),
+        impl_name: if args.flag("jnp") {
+            "jnp".into()
+        } else {
+            args.str_or("impl", "pallas")
+        },
+        trainers: args.usize_or("m", 3),
+        train_secs: args.f64_or("train-secs", 30.0),
+        agg_secs: args.f64_or("agg-secs", 2.0),
+        eval_edges: args.usize_or("eval-edges", 128),
+        negatives: args.usize_or("negatives", 64),
+        eval_sample: args.usize_or("eval-sample", 64),
+        failures: args.usize_or("failures", 0),
+        seed: args.u64_or("seed", 17),
+        aggregate_op: if args.str_or("agg-op", "mean") == "inverse-loss" {
+            AggregateOp::InverseLoss
+        } else {
+            AggregateOp::Mean
+        },
+        ..RunConfig::default()
+    };
+    let clusters = args.usize_or("clusters", 0);
+    cfg.approach = Approach::parse(
+        &args.str_or("approach", "RandomTMA"),
+        clusters, // 0 = resolved against the dataset in train()
+    )
+    .unwrap_or(Approach::RandomTma);
+    cfg
+}
+
+fn doctor(args: &Args) -> Result<()> {
+    use random_tma::model::ModelState;
+    use random_tma::runtime::{Engine, Manifest};
+    println!("rtma doctor");
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    println!(
+        "  manifest: {} variants, Bn={}, Be={}, H={}",
+        manifest.variants.len(),
+        manifest.dims.block_nodes,
+        manifest.dims.block_edges,
+        manifest.dims.hidden
+    );
+    let variant = args.str_or("variant", "gcn_mlp");
+    let engine = Engine::load(&manifest, &variant, "pallas")?;
+    println!("  engine:   {} compiled (pallas)", engine.describe());
+    let preset = load_preset("citation-sim", true, 16, 8, 1)?;
+    let s = graph_stats(&preset.graph);
+    println!(
+        "  dataset:  citation-sim(quick) |V|={} |E|={} h={:.2}",
+        s.num_nodes, s.num_edges, s.homophily
+    );
+    let mut rng = Rng::new(1);
+    let globals: Vec<u32> =
+        (0..preset.split.train.num_nodes() as u32).collect();
+    let mut sampler = random_tma::sampler::TrainSampler::new(
+        preset.split.train.clone(),
+        globals,
+        random_tma::sampler::TrainSamplerConfig::homogeneous(
+            manifest.dims.block_nodes,
+            manifest.dims.block_edges,
+            manifest.dims.feat_dim,
+            random_tma::sampler::AdjMode::SelfLoop,
+        ),
+    );
+    let mut state = ModelState::init(&engine.variant, &mut rng);
+    let block = sampler.next_block(&mut rng).unwrap();
+    let loss = engine.train_step(&mut state, block)?;
+    println!("  smoke:    one train step OK, loss={loss:.4}");
+    println!("doctor OK");
+    Ok(())
+}
+
+fn datasets(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let seed = args.u64_or("seed", 17);
+    let mut t = Table::new(
+        "Table 1: dataset statistics (synthetic substitutes)",
+        &["Dataset", "#Nodes", "#Edges", "#Feat", "AvgDeg", "MaxDeg", "h",
+          "#Val/Test"],
+    );
+    for name in preset_names() {
+        let p = load_preset(name, quick, args.usize_or("eval-edges", 128),
+                            8, seed)?;
+        let s = graph_stats(&p.graph);
+        t.row(vec![
+            name.to_string(),
+            s.num_nodes.to_string(),
+            s.num_edges.to_string(),
+            s.feat_dim.to_string(),
+            format!("{:.1}", s.avg_degree),
+            s.max_degree.to_string(),
+            format!("{:.2}", s.homophily),
+            format!("{}/{}", p.split.val.len(), p.split.test.len()),
+        ]);
+    }
+    t.emit("table1_datasets");
+    Ok(())
+}
+
+fn partition(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "citation-sim");
+    let m = args.usize_or("m", 3);
+    let quick = args.flag("quick");
+    let preset = load_preset(&dataset, quick, 16, 8, args.u64_or("seed", 17))?;
+    let g = &preset.split.train;
+    let clusters = default_clusters(g.num_nodes());
+    let mut t = Table::new(
+        &format!("Partition schemes on {dataset} (M={m})"),
+        &["Scheme", "r", "EdgeCut", "Balance", "ClassDisp", "FeatDisp",
+          "PrepSecs"],
+    );
+    for scheme in [
+        Scheme::Random,
+        Scheme::Super { num_clusters: clusters },
+        Scheme::MinCut,
+    ] {
+        let mut rng = Rng::new(args.u64_or("seed", 17));
+        let t0 = std::time::Instant::now();
+        let assign = scheme.assign(g, m, &mut rng);
+        let secs = t0.elapsed().as_secs_f64();
+        let s = partition_stats(g, &assign, m);
+        t.row(vec![
+            scheme.name(),
+            format!("{:.3}", s.ratio_r),
+            s.edge_cut.to_string(),
+            format!("{:.2}", s.balance),
+            format!("{:.3}", s.class_disparity),
+            format!("{:.3}", s.feature_disparity),
+            format!("{secs:.2}"),
+        ]);
+    }
+    t.emit("partition_study");
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let mut cfg = run_config(args);
+    // Resolve SuperTMA cluster count against the actual graph size.
+    if let Approach::SuperTma { num_clusters } = cfg.approach {
+        if num_clusters == 0 {
+            let preset = load_preset(
+                &cfg.dataset,
+                cfg.quick,
+                cfg.eval_edges,
+                cfg.negatives,
+                cfg.seed,
+            )?;
+            cfg.approach = Approach::SuperTma {
+                num_clusters: default_clusters(
+                    preset.split.train.num_nodes(),
+                ),
+            };
+        }
+    }
+    println!("[rtma] {}", cfg.label());
+    let result = run_experiment(&cfg)?;
+    println!(
+        "[rtma] best val MRR {:.4} | test MRR {:.4} | conv {:.1}s | \
+         steps {:?} | r={:.2} | prep {:.2}s",
+        result.best_val_mrr,
+        result.test_mrr,
+        result.convergence_secs(0.01),
+        result.steps,
+        result.ratio_r,
+        result.prep_secs,
+    );
+    let out = std::path::Path::new("results").join("last_train.json");
+    result.to_json().write_file(&out)?;
+    println!("[rtma] wrote {}", out.display());
+    Ok(())
+}
+
+/// TCP worker process (distributed mode): connects to the leader,
+/// trains on its partition between broadcasts, ships weights back.
+/// Driven by examples/distributed_tcp.rs.
+fn worker(args: &Args) -> Result<()> {
+    use random_tma::comm::{recv, send, Message};
+    use random_tma::model::ModelState;
+    use random_tma::runtime::{Engine, Manifest};
+    use random_tma::sampler::{AdjMode, TrainSampler, TrainSamplerConfig};
+    use std::net::TcpStream;
+
+    let addr = args.str_or("leader", "127.0.0.1:7117");
+    let id = args.usize_or("id", 0);
+    let m = args.usize_or("m", 3);
+    let dataset = args.str_or("dataset", "citation-sim");
+    let seed = args.u64_or("seed", 17);
+    let variant = args.str_or("variant", "gcn_mlp");
+
+    // Load local data exactly as the in-process driver would: same
+    // seed -> same partition -> this worker takes part `id`.
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let preset = load_preset(&dataset, true, 16, 8, seed)?;
+    let g = &preset.split.train;
+    let mut rng = Rng::new(seed ^ 0xC0FFEE);
+    let assign = Scheme::Random.assign(g, m, &mut rng);
+    let part: Vec<u32> = (0..g.num_nodes())
+        .filter(|&v| assign[v] as usize == id)
+        .map(|v| v as u32)
+        .collect();
+    let sub = random_tma::graph::Subgraph::induce(g, &part);
+    let mut sampler = TrainSampler::new(
+        sub.graph,
+        sub.global_ids,
+        TrainSamplerConfig::homogeneous(
+            manifest.dims.block_nodes,
+            manifest.dims.block_edges,
+            manifest.dims.feat_dim,
+            AdjMode::SelfLoop,
+        ),
+    );
+    let engine = Engine::load(&manifest, &variant, "pallas")?;
+    let mut state = ModelState::init(&engine.variant, &mut rng);
+
+    let mut stream = TcpStream::connect(&addr)?;
+    send(&mut stream, &Message::Hello { id: id as u32 })?;
+    send(&mut stream, &Message::Ready { id: id as u32 })?;
+
+    let mut steps = 0u64;
+    let mut last_loss = f32::NAN;
+    let mut trng = Rng::new(seed).fork(id as u64 + 1);
+    loop {
+        match recv(&mut stream)? {
+            Message::Broadcast { round: _, data } => {
+                state.set_params(&data);
+                // Train until the leader opens the next round (poll for
+                // a pending Collect/Stop between steps; non-blocking
+                // peek, one train step per miss).
+                stream.set_nonblocking(true)?;
+                loop {
+                    let mut peek = [0u8; 1];
+                    match stream.peek(&mut peek) {
+                        Ok(n) if n > 0 => break, // Collect/Stop waiting
+                        Ok(_) => break,          // connection closed
+                        Err(ref e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock => {}
+                        Err(e) => return Err(e.into()),
+                    }
+                    if let Some(block) = sampler.next_block(&mut trng) {
+                        last_loss = engine.train_step(&mut state, block)?;
+                        steps += 1;
+                    }
+                }
+                stream.set_nonblocking(false)?;
+            }
+            Message::Collect { round } => {
+                send(
+                    &mut stream,
+                    &Message::Weights {
+                        round,
+                        loss: last_loss,
+                        steps,
+                        data: state.params.clone(),
+                    },
+                )?;
+            }
+            Message::Stop => {
+                eprintln!("[worker {id}] stopping after {steps} steps");
+                return Ok(());
+            }
+            other => {
+                eprintln!("[worker {id}] unexpected message {other:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Run metrics: timelines, convergence-time extraction, run results.
+//!
+//! Mirrors what the paper reports: validation-MRR-vs-time curves
+//! (Fig 2), per-trainer loss curves (Fig 3), convergence time ("time to
+//! reach within 1% of the maximum validation MRR", Table 2), step
+//! counts per trainer (Table 3) and memory proxies.
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// One point on a trainer's loss timeline.
+#[derive(Clone, Copy, Debug)]
+pub struct LossPoint {
+    /// Seconds since training start.
+    pub t: f64,
+    pub loss: f32,
+    pub step: u64,
+}
+
+/// One periodic validation evaluation.
+#[derive(Clone, Debug)]
+pub struct EvalPoint {
+    pub t: f64,
+    pub round: u64,
+    pub val_mrr: f64,
+}
+
+/// Everything one run produces (the unit Tables 2-8 aggregate over).
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub label: String,
+    /// Validation MRR curve over wall-clock time.
+    pub val_curve: Vec<EvalPoint>,
+    /// Best validation MRR and the test MRR of those weights.
+    pub best_val_mrr: f64,
+    pub test_mrr: f64,
+    /// Per-trainer loss timelines (Fig 3).
+    pub trainer_losses: Vec<Vec<LossPoint>>,
+    /// Training steps finished per trainer (Table 3).
+    pub steps: Vec<u64>,
+    /// Fraction of training edges available across trainers (Table 2 r).
+    pub ratio_r: f64,
+    /// Partition preprocessing time in seconds (Table 7 "Prep. Time").
+    pub prep_secs: f64,
+    /// Bytes of local graph data across trainers — the memory proxy
+    /// standing in for Table 3's GPU-memory column.
+    pub local_bytes: usize,
+    /// Wall-clock seconds the run actually trained.
+    pub wall_secs: f64,
+}
+
+impl RunResult {
+    /// Convergence time: first time the validation MRR reaches within
+    /// `frac` (paper: 1%) of the run's maximum validation MRR.
+    pub fn convergence_secs(&self, frac: f64) -> f64 {
+        convergence_secs(&self.val_curve, frac)
+    }
+
+    /// Min/max/diff of per-trainer finished steps (Table 3).
+    pub fn step_spread(&self) -> (u64, u64, f64) {
+        let min = self.steps.iter().copied().min().unwrap_or(0);
+        let max = self.steps.iter().copied().max().unwrap_or(0);
+        let diff = if max == 0 {
+            0.0
+        } else {
+            (max - min) as f64 / max as f64
+        };
+        (min, max, diff)
+    }
+
+    /// Discrepancy of converged losses across trainers (§4.3.1): std
+    /// of each trainer's mean loss over its final quarter.
+    pub fn loss_discrepancy(&self) -> f64 {
+        let finals: Vec<f64> = self
+            .trainer_losses
+            .iter()
+            .filter(|tl| !tl.is_empty())
+            .map(|tl| {
+                let tail = &tl[tl.len() - (tl.len() / 4).max(1)..];
+                stats::mean(
+                    &tail.iter().map(|p| p.loss as f64).collect::<Vec<_>>(),
+                )
+            })
+            .collect();
+        stats::std_dev(&finals)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            ("best_val_mrr", Json::num(self.best_val_mrr)),
+            ("test_mrr", Json::num(self.test_mrr)),
+            ("ratio_r", Json::num(self.ratio_r)),
+            ("prep_secs", Json::num(self.prep_secs)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("conv_secs", Json::num(self.convergence_secs(0.01))),
+            (
+                "steps",
+                Json::arr(self.steps.iter().map(|&s| Json::num(s as f64))),
+            ),
+            (
+                "val_curve",
+                Json::arr(self.val_curve.iter().map(|p| {
+                    Json::arr([Json::num(p.t), Json::num(p.val_mrr)])
+                })),
+            ),
+            (
+                "trainer_losses",
+                Json::arr(self.trainer_losses.iter().map(|tl| {
+                    Json::arr(tl.iter().map(|p| {
+                        Json::arr([Json::num(p.t), Json::num(p.loss as f64)])
+                    }))
+                })),
+            ),
+        ])
+    }
+}
+
+/// Paper rule: time to reach within `frac` of the max validation MRR.
+pub fn convergence_secs(curve: &[EvalPoint], frac: f64) -> f64 {
+    let best = curve.iter().map(|p| p.val_mrr).fold(0.0f64, f64::max);
+    if best <= 0.0 {
+        return f64::INFINITY;
+    }
+    let threshold = best * (1.0 - frac);
+    curve
+        .iter()
+        .find(|p| p.val_mrr >= threshold)
+        .map(|p| p.t)
+        .unwrap_or(f64::INFINITY)
+}
+
+/// Write a (time, value) series as CSV (for Figs 2-3 replotting).
+pub fn write_series_csv(
+    path: &std::path::Path,
+    header: &str,
+    rows: &[(f64, f64)],
+) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::from(header);
+    out.push('\n');
+    for (t, v) in rows {
+        out.push_str(&format!("{t:.3},{v:.6}\n"));
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(points: &[(f64, f64)]) -> Vec<EvalPoint> {
+        points
+            .iter()
+            .enumerate()
+            .map(|(i, &(t, v))| EvalPoint { t, round: i as u64, val_mrr: v })
+            .collect()
+    }
+
+    #[test]
+    fn convergence_uses_one_percent_rule() {
+        // max = 0.80; threshold = 0.792; first time reaching it = 20s
+        let c = curve(&[(10.0, 0.70), (20.0, 0.795), (30.0, 0.80)]);
+        assert_eq!(convergence_secs(&c, 0.01), 20.0);
+    }
+
+    #[test]
+    fn convergence_handles_monotone_and_flat() {
+        let c = curve(&[(5.0, 0.5)]);
+        assert_eq!(convergence_secs(&c, 0.01), 5.0);
+        assert!(convergence_secs(&[], 0.01).is_infinite());
+    }
+
+    fn result_with(steps: Vec<u64>, losses: Vec<Vec<(f64, f32)>>) -> RunResult {
+        RunResult {
+            label: "t".into(),
+            val_curve: vec![],
+            best_val_mrr: 0.0,
+            test_mrr: 0.0,
+            trainer_losses: losses
+                .into_iter()
+                .map(|tl| {
+                    tl.into_iter()
+                        .enumerate()
+                        .map(|(i, (t, loss))| LossPoint { t, loss, step: i as u64 })
+                        .collect()
+                })
+                .collect(),
+            steps,
+            ratio_r: 0.0,
+            prep_secs: 0.0,
+            local_bytes: 0,
+            wall_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn step_spread_matches_table3_definition() {
+        let r = result_with(vec![380, 533, 400], vec![]);
+        let (min, max, diff) = r.step_spread();
+        assert_eq!((min, max), (380, 533));
+        assert!((diff - (533.0 - 380.0) / 533.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loss_discrepancy_zero_for_identical_trainers() {
+        let tl = vec![(0.0, 1.0f32), (1.0, 0.5), (2.0, 0.4), (3.0, 0.4)];
+        let r = result_with(vec![], vec![tl.clone(), tl.clone(), tl]);
+        assert!(r.loss_discrepancy() < 1e-9);
+    }
+
+    #[test]
+    fn loss_discrepancy_positive_when_trainers_diverge() {
+        let a = vec![(0.0, 1.0f32), (1.0, 0.2), (2.0, 0.2), (3.0, 0.2)];
+        let b = vec![(0.0, 1.0f32), (1.0, 0.9), (2.0, 0.9), (3.0, 0.9)];
+        let r = result_with(vec![], vec![a, b]);
+        assert!(r.loss_discrepancy() > 0.3);
+    }
+
+    #[test]
+    fn csv_writer_emits_rows() {
+        let p = std::env::temp_dir().join("rtma_series.csv");
+        write_series_csv(&p, "t,v", &[(1.0, 2.0), (3.0, 4.0)]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("t,v\n1.000,2.000000\n"));
+        std::fs::remove_file(p).ok();
+    }
+}

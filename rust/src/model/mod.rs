@@ -1,0 +1,295 @@
+//! Model state: flat parameter vector + Adam state, initialisation
+//! from the manifest layout, aggregation operators φ, and a rust-side
+//! Adam for the synchronous (GGS) baseline.
+
+use crate::runtime::manifest::{AdamHp, InitKind, VariantSpec};
+use crate::util::rng::Rng;
+
+/// One trainer's learnable state: the flat parameter vector plus the
+/// Adam moments the fused train artifact threads through.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    pub params: Vec<f32>,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    /// Step counter as a 1-element f32 (matches the artifact signature).
+    pub adam_t: Vec<f32>,
+}
+
+impl ModelState {
+    /// Fresh state with paper-style initialisation (glorot for weight
+    /// matrices, zeros/ones for biases and LayerNorm, 0.25 for PReLU —
+    /// mirrored from `python/compile/model.py`'s init table).
+    pub fn init(variant: &VariantSpec, rng: &mut Rng) -> ModelState {
+        let mut params = vec![0f32; variant.param_total];
+        for t in &variant.tensors {
+            let dst = &mut params[t.offset..t.offset + t.size()];
+            match t.init {
+                InitKind::Zeros => {}
+                InitKind::Ones => dst.iter_mut().for_each(|x| *x = 1.0),
+                InitKind::Prelu => dst.iter_mut().for_each(|x| *x = 0.25),
+                InitKind::Normal => {
+                    dst.iter_mut()
+                        .for_each(|x| *x = 0.1 * rng.gaussian() as f32);
+                }
+                InitKind::Glorot => {
+                    // fan_in/fan_out from the trailing two dims (basis
+                    // tensors [B, d, h] use d, h).
+                    let dims = &t.shape;
+                    let (fi, fo) = match dims.len() {
+                        0 | 1 => (1usize, dims.first().copied().unwrap_or(1)),
+                        n => (dims[n - 2], dims[n - 1]),
+                    };
+                    let limit = (6.0 / (fi + fo) as f64).sqrt();
+                    dst.iter_mut().for_each(|x| {
+                        *x = ((rng.f64() * 2.0 - 1.0) * limit) as f32;
+                    });
+                }
+            }
+        }
+        let n = variant.param_total;
+        ModelState {
+            params,
+            adam_m: vec![0.0; n],
+            adam_v: vec![0.0; n],
+            adam_t: vec![0.0; 1],
+        }
+    }
+
+    /// Replace the weights (model aggregation broadcast). The paper's
+    /// TMA keeps each trainer's local optimizer moments — only weights
+    /// are averaged and broadcast.
+    pub fn set_params(&mut self, params: &[f32]) {
+        self.params.copy_from_slice(params);
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.adam_t[0] as u64
+    }
+}
+
+/// Model-aggregation operator φ (Alg 1 line 12).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggregateOp {
+    /// Plain parameter averaging — the paper found this beats
+    /// loss-aware operators (§3.1).
+    Mean,
+    /// Inverse-loss weighting (the "more complex" alternative the
+    /// paper compared against; kept for the ablation bench).
+    InverseLoss,
+}
+
+/// Aggregate trainer weight vectors into the global weights.
+/// `losses[i]` is trainer i's most recent training loss (used only by
+/// `InverseLoss`).
+pub fn aggregate(
+    op: AggregateOp,
+    weights: &[Vec<f32>],
+    losses: &[f32],
+) -> Vec<f32> {
+    assert!(!weights.is_empty());
+    let n = weights[0].len();
+    assert!(weights.iter().all(|w| w.len() == n));
+    let mut out = vec![0f32; n];
+    match op {
+        AggregateOp::Mean => {
+            let scale = 1.0 / weights.len() as f32;
+            for w in weights {
+                for (o, &x) in out.iter_mut().zip(w) {
+                    *o += x * scale;
+                }
+            }
+        }
+        AggregateOp::InverseLoss => {
+            assert_eq!(losses.len(), weights.len());
+            let inv: Vec<f32> =
+                losses.iter().map(|&l| 1.0 / (l.max(1e-6))).collect();
+            let total: f32 = inv.iter().sum();
+            for (w, &c) in weights.iter().zip(&inv) {
+                let scale = c / total;
+                for (o, &x) in out.iter_mut().zip(w) {
+                    *o += x * scale;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Rust-side Adam for the GGS baseline (gradients are averaged across
+/// trainers each step, then one shared update is applied — synchronous
+/// SGD semantics). Matches the artifact's fused Adam in update rule.
+pub struct Adam {
+    hp: AdamHp,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: f32,
+}
+
+impl Adam {
+    pub fn new(hp: AdamHp, n: usize) -> Adam {
+        Adam { hp, m: vec![0.0; n], v: vec![0.0; n], t: 0.0 }
+    }
+
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        self.t += 1.0;
+        let b1 = self.hp.beta1;
+        let b2 = self.hp.beta2;
+        let bc1 = 1.0 - b1.powf(self.t);
+        let bc2 = 1.0 - b2.powf(self.t);
+        for i in 0..params.len() {
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * grad[i];
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * grad[i] * grad[i];
+            let m_hat = self.m[i] / bc1;
+            let v_hat = self.v[i] / bc2;
+            params[i] -= self.hp.lr * m_hat / (v_hat.sqrt() + self.hp.eps);
+        }
+    }
+}
+
+/// Average gradients into `dst` (allreduce-mean for GGS).
+pub fn mean_grads(grads: &[Vec<f32>], dst: &mut Vec<f32>) {
+    assert!(!grads.is_empty());
+    let n = grads[0].len();
+    dst.clear();
+    dst.resize(n, 0.0);
+    let scale = 1.0 / grads.len() as f32;
+    for g in grads {
+        for (d, &x) in dst.iter_mut().zip(g) {
+            *d += x * scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{AdamHp, TensorSpec, VariantSpec};
+    use std::collections::BTreeMap;
+
+    fn variant() -> VariantSpec {
+        VariantSpec {
+            name: "test".into(),
+            encoder: "gcn".into(),
+            decoder: "mlp".into(),
+            hetero: false,
+            param_total: 16 + 4 + 4 + 1 + 8,
+            tensors: vec![
+                TensorSpec {
+                    name: "w".into(),
+                    shape: vec![4, 4],
+                    init: InitKind::Glorot,
+                    offset: 0,
+                },
+                TensorSpec {
+                    name: "b".into(),
+                    shape: vec![4],
+                    init: InitKind::Zeros,
+                    offset: 16,
+                },
+                TensorSpec {
+                    name: "ln".into(),
+                    shape: vec![4],
+                    init: InitKind::Ones,
+                    offset: 20,
+                },
+                TensorSpec {
+                    name: "a".into(),
+                    shape: vec![1],
+                    init: InitKind::Prelu,
+                    offset: 24,
+                },
+                TensorSpec {
+                    name: "rel".into(),
+                    shape: vec![2, 4],
+                    init: InitKind::Normal,
+                    offset: 25,
+                },
+            ],
+            entries: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn init_respects_kinds() {
+        let v = variant();
+        let s = ModelState::init(&v, &mut Rng::new(1));
+        let w = &s.params[0..16];
+        let limit = (6.0f64 / 8.0).sqrt() as f32;
+        assert!(w.iter().any(|&x| x != 0.0));
+        assert!(w.iter().all(|&x| x.abs() <= limit));
+        assert!(s.params[16..20].iter().all(|&x| x == 0.0));
+        assert!(s.params[20..24].iter().all(|&x| x == 1.0));
+        assert_eq!(s.params[24], 0.25);
+        assert!(s.params[25..33].iter().any(|&x| x != 0.0));
+        assert!(s.adam_m.iter().all(|&x| x == 0.0));
+        assert_eq!(s.adam_t, vec![0.0]);
+    }
+
+    #[test]
+    fn init_deterministic_per_seed() {
+        let v = variant();
+        let a = ModelState::init(&v, &mut Rng::new(5));
+        let b = ModelState::init(&v, &mut Rng::new(5));
+        assert_eq!(a.params, b.params);
+        let c = ModelState::init(&v, &mut Rng::new(6));
+        assert_ne!(a.params, c.params);
+    }
+
+    #[test]
+    fn mean_aggregation_averages() {
+        let w = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        assert_eq!(aggregate(AggregateOp::Mean, &w, &[]), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn inverse_loss_prefers_low_loss() {
+        let w = vec![vec![0.0], vec![10.0]];
+        // trainer 1 has much lower loss -> pulled toward 10
+        let out = aggregate(AggregateOp::InverseLoss, &w, &[10.0, 0.1]);
+        assert!(out[0] > 9.0, "{out:?}");
+    }
+
+    #[test]
+    fn prop_mean_aggregation_idempotent_on_equal_weights() {
+        crate::util::prop::check(30, 9, |rng: &mut Rng| {
+            let n = rng.range(1, 50);
+            let w: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+            let agg =
+                aggregate(AggregateOp::Mean, &vec![w.clone(); 4], &[0.0; 4]);
+            for (a, b) in agg.iter().zip(&w) {
+                crate::prop_assert!(
+                    (a - b).abs() < 1e-6,
+                    "mean of copies changed: {a} vs {b}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rust_adam_matches_reference_update() {
+        // One step against a hand-computed Adam update.
+        let hp = AdamHp { lr: 0.001, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        let mut adam = Adam::new(hp, 2);
+        let mut p = vec![1.0f32, -1.0];
+        let g = vec![0.5f32, -0.25];
+        adam.step(&mut p, &g);
+        for (i, &gi) in g.iter().enumerate() {
+            let m_hat = gi;
+            let v_hat = gi * gi;
+            let expect = (if i == 0 { 1.0 } else { -1.0 })
+                - 0.001 * m_hat / (v_hat.sqrt() + 1e-8);
+            assert!((p[i] - expect).abs() < 1e-6, "{} vs {}", p[i], expect);
+        }
+    }
+
+    #[test]
+    fn mean_grads_averages() {
+        let gs = vec![vec![1.0f32, 0.0], vec![3.0, 2.0]];
+        let mut dst = Vec::new();
+        mean_grads(&gs, &mut dst);
+        assert_eq!(dst, vec![2.0, 1.0]);
+    }
+}

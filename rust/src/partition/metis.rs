@@ -1,0 +1,436 @@
+//! Multilevel min-edge-cut k-way partitioner — the METIS substrate.
+//!
+//! METIS [17] is unavailable offline, so this implements the same
+//! multilevel scheme from scratch:
+//!
+//! 1. **Coarsening** — repeated heavy-edge matching: visit nodes in
+//!    random order, match each unmatched node with its unmatched
+//!    neighbour of maximum edge weight, contract matched pairs. Edge
+//!    and node weights accumulate so coarse cuts equal fine cuts.
+//! 2. **Initial partition** — greedy balanced assignment of coarse
+//!    nodes (heaviest first, to the lightest part with the best gain).
+//! 3. **Uncoarsening + FM refinement** — project the assignment back
+//!    level by level; at each level run boundary Fiduccia-Mattheyses
+//!    passes: move a node to the neighbouring part with the highest
+//!    positive cut gain subject to a balance constraint.
+//!
+//! What matters for the paper is not bit-compatibility with METIS but
+//! the *objective*: minimise edge-cut under balance. On homophilic
+//! community graphs that objective aligns parts with communities —
+//! precisely the disparity mechanism of Lemma 1 (validated by
+//! `benches/theory_validation.rs` and the partition_study example).
+//!
+//! The same coarsening machinery exposed as [`cluster_coarsen`]
+//! produces the `N >> M` mini-clusters ("super-nodes") for SuperTMA.
+
+use std::collections::HashMap;
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct MetisConfig {
+    /// Stop coarsening when this many coarse nodes remain (>= 8*k is
+    /// sensible; clamped internally).
+    pub coarsen_target: usize,
+    /// Allowed imbalance: max part weight <= (1 + eps) * ideal.
+    pub balance_eps: f64,
+    /// FM passes per uncoarsening level.
+    pub refine_passes: usize,
+}
+
+impl Default for MetisConfig {
+    fn default() -> Self {
+        MetisConfig { coarsen_target: 200, balance_eps: 0.10, refine_passes: 4 }
+    }
+}
+
+/// Weighted graph used through the multilevel hierarchy.
+struct WGraph {
+    /// Sorted adjacency (neighbour, weight) per node.
+    adj: Vec<Vec<(u32, f64)>>,
+    /// Node weights (number of original vertices inside).
+    vw: Vec<f64>,
+}
+
+impl WGraph {
+    fn from_graph(g: &Graph) -> WGraph {
+        let n = g.num_nodes();
+        let adj = (0..n)
+            .map(|v| {
+                g.neighbors_of(v)
+                    .iter()
+                    .map(|&u| (u, 1.0))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        WGraph { adj, vw: vec![1.0; n] }
+    }
+
+    fn len(&self) -> usize {
+        self.vw.len()
+    }
+}
+
+/// One coarsening step: heavy-edge matching + contraction.
+/// Returns (coarse graph, map fine node -> coarse node).
+fn coarsen_once(g: &WGraph, rng: &mut Rng) -> (WGraph, Vec<u32>) {
+    let n = g.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+
+    const UNMATCHED: u32 = u32::MAX;
+    let mut mate = vec![UNMATCHED; n];
+    for &v in &order {
+        if mate[v] != UNMATCHED {
+            continue;
+        }
+        // heaviest unmatched neighbour
+        let mut best: Option<(u32, f64)> = None;
+        for &(u, w) in &g.adj[v] {
+            if mate[u as usize] == UNMATCHED && u as usize != v {
+                if best.map(|(_, bw)| w > bw).unwrap_or(true) {
+                    best = Some((u, w));
+                }
+            }
+        }
+        match best {
+            Some((u, _)) => {
+                mate[v] = u;
+                mate[u as usize] = v as u32;
+            }
+            None => mate[v] = v as u32, // self-matched singleton
+        }
+    }
+
+    // Enumerate coarse ids.
+    let mut coarse_of = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for v in 0..n {
+        if coarse_of[v] == u32::MAX {
+            let m = mate[v] as usize;
+            coarse_of[v] = next;
+            coarse_of[m] = next;
+            next += 1;
+        }
+    }
+
+    // Contract.
+    let cn = next as usize;
+    let mut vw = vec![0.0; cn];
+    let mut maps: Vec<HashMap<u32, f64>> = vec![HashMap::new(); cn];
+    for v in 0..n {
+        let cv = coarse_of[v] as usize;
+        vw[cv] += g.vw[v];
+        for &(u, w) in &g.adj[v] {
+            let cu = coarse_of[u as usize];
+            if cu as usize != cv {
+                *maps[cv].entry(cu).or_insert(0.0) += w;
+            }
+        }
+    }
+    let adj = maps
+        .into_iter()
+        .map(|m| {
+            let mut v: Vec<(u32, f64)> = m.into_iter().collect();
+            v.sort_unstable_by_key(|e| e.0);
+            v
+        })
+        .collect();
+    (WGraph { adj, vw }, coarse_of)
+}
+
+/// Greedy balanced initial k-way assignment on the coarsest graph.
+fn initial_partition(g: &WGraph, k: usize, rng: &mut Rng) -> Vec<u32> {
+    let n = g.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    // heaviest first (stable tiebreak via shuffle-then-stable-sort)
+    rng.shuffle(&mut order);
+    order.sort_by(|&a, &b| g.vw[b].partial_cmp(&g.vw[a]).unwrap());
+
+    let mut assign = vec![u32::MAX; n];
+    let mut load = vec![0.0f64; k];
+    for &v in &order {
+        // gain of each part = connectivity to it; prefer connected &
+        // light parts.
+        let mut conn = vec![0.0f64; k];
+        for &(u, w) in &g.adj[v] {
+            let p = assign[u as usize];
+            if p != u32::MAX {
+                conn[p as usize] += w;
+            }
+        }
+        let min_load = load.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for p in 0..k {
+            // Hard-ish balance: avoid parts already > 1.3x the lightest
+            // + average node weight.
+            if load[p] > min_load + g.vw[v].max(1.0) * 4.0 && k > 1 {
+                continue;
+            }
+            let score = conn[p] - 0.01 * load[p];
+            if score > best_score {
+                best_score = score;
+                best = p;
+            }
+        }
+        assign[v] = best as u32;
+        load[best] += g.vw[v];
+    }
+    assign
+}
+
+/// Boundary FM refinement passes at one level.
+fn refine(g: &WGraph, assign: &mut [u32], k: usize, cfg: &MetisConfig) {
+    let total: f64 = g.vw.iter().sum();
+    let cap = (1.0 + cfg.balance_eps) * total / k as f64;
+    let mut load = vec![0.0f64; k];
+    for (v, &p) in assign.iter().enumerate() {
+        load[p as usize] += g.vw[v];
+    }
+    for _ in 0..cfg.refine_passes {
+        let mut moved = 0usize;
+        for v in 0..g.len() {
+            let cur = assign[v] as usize;
+            let mut conn = vec![0.0f64; k];
+            for &(u, w) in &g.adj[v] {
+                conn[assign[u as usize] as usize] += w;
+            }
+            let mut best = cur;
+            let mut best_gain = 0.0;
+            for p in 0..k {
+                if p == cur {
+                    continue;
+                }
+                if load[p] + g.vw[v] > cap {
+                    continue;
+                }
+                // don't empty the source part
+                if load[cur] - g.vw[v] <= 0.0 {
+                    continue;
+                }
+                let gain = conn[p] - conn[cur];
+                if gain > best_gain {
+                    best_gain = gain;
+                    best = p;
+                }
+            }
+            if best != cur {
+                load[cur] -= g.vw[v];
+                load[best] += g.vw[v];
+                assign[v] = best as u32;
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+/// Multilevel k-way min-cut partition of `g` (the PSGD-PA / LLCG and
+/// SuperTMA-cluster substrate). Returns a node -> part assignment.
+pub fn metis_like(
+    g: &Graph,
+    k: usize,
+    cfg: &MetisConfig,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    assert!(k >= 1);
+    if k == 1 {
+        return vec![0; g.num_nodes()];
+    }
+    let target = cfg.coarsen_target.max(8 * k);
+
+    // Build hierarchy.
+    let mut levels: Vec<WGraph> = vec![WGraph::from_graph(g)];
+    let mut maps: Vec<Vec<u32>> = Vec::new();
+    while levels.last().unwrap().len() > target {
+        let (coarse, map) = coarsen_once(levels.last().unwrap(), rng);
+        // stop if coarsening stalls (e.g. star graphs)
+        if coarse.len() as f64 > levels.last().unwrap().len() as f64 * 0.95 {
+            break;
+        }
+        maps.push(map);
+        levels.push(coarse);
+    }
+
+    // Initial partition on the coarsest level.
+    let mut assign = initial_partition(levels.last().unwrap(), k, rng);
+    refine(levels.last().unwrap(), &mut assign, k, cfg);
+
+    // Project back + refine at each level.
+    for li in (0..maps.len()).rev() {
+        let fine_n = levels[li].len();
+        let mut fine_assign = vec![0u32; fine_n];
+        for v in 0..fine_n {
+            fine_assign[v] = assign[maps[li][v] as usize];
+        }
+        assign = fine_assign;
+        refine(&levels[li], &mut assign, k, cfg);
+    }
+    assign
+}
+
+/// Coarsening-based clustering into ~`n_clusters` mini-clusters — the
+/// SuperTMA "super-node" generator (paper footnote 3: ClusterGCN-style
+/// mini-clusters used for *partitioning* rather than mini-batching).
+pub fn cluster_coarsen(g: &Graph, n_clusters: usize, rng: &mut Rng) -> Vec<u32> {
+    let n = g.num_nodes();
+    if n_clusters >= n {
+        return (0..n as u32).collect();
+    }
+    let mut wg = WGraph::from_graph(g);
+    // identity composition of per-level maps
+    let mut cluster_of: Vec<u32> = (0..n as u32).collect();
+    while wg.len() > n_clusters {
+        let (coarse, map) = coarsen_once(&wg, rng);
+        if coarse.len() as f64 > wg.len() as f64 * 0.98 {
+            break; // stalled
+        }
+        for c in cluster_of.iter_mut() {
+            *c = map[*c as usize];
+        }
+        wg = coarse;
+    }
+    cluster_of
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{dcsbm, sbm2, DcsbmConfig, Sbm2Config};
+    use crate::partition::{partition_stats, random_partition};
+
+    fn community_graph(seed: u64) -> Graph {
+        dcsbm(&DcsbmConfig {
+            nodes: 900,
+            communities: 6,
+            avg_degree: 14.0,
+            homophily: 0.92,
+            feat_dim: 4,
+            feature_noise: 0.2,
+            degree_exponent: 0.0,
+            seed,
+        })
+    }
+
+    #[test]
+    fn produces_balanced_parts() {
+        let g = community_graph(1);
+        let mut rng = Rng::new(2);
+        let assign = metis_like(&g, 3, &MetisConfig::default(), &mut rng);
+        let stats = partition_stats(&g, &assign, 3);
+        assert!(
+            stats.balance < 1.35,
+            "imbalanced: {:?}",
+            stats.part_sizes
+        );
+        assert!(stats.part_sizes.iter().all(|&s| s > 0));
+    }
+
+    #[test]
+    fn beats_random_on_edge_cut() {
+        let g = community_graph(3);
+        let mut rng = Rng::new(4);
+        let metis = metis_like(&g, 3, &MetisConfig::default(), &mut rng);
+        let rand = random_partition(g.num_nodes(), 3, &mut rng);
+        let cut_m = partition_stats(&g, &metis, 3).edge_cut;
+        let cut_r = partition_stats(&g, &rand, 3).edge_cut;
+        assert!(
+            (cut_m as f64) < cut_r as f64 * 0.5,
+            "metis cut {cut_m} vs random {cut_r}"
+        );
+    }
+
+    #[test]
+    fn two_class_sbm_separates_classes() {
+        // Lemma 1's setting: min-cut on a homophilic 2-class graph
+        // should align parts with classes (high label purity).
+        let g = sbm2(&Sbm2Config {
+            class_size: 400,
+            avg_degree: 16.0,
+            homophily: 0.9,
+            seed: 5,
+        });
+        let mut rng = Rng::new(6);
+        let assign = metis_like(&g, 2, &MetisConfig::default(), &mut rng);
+        let stats = partition_stats(&g, &assign, 2);
+        // class disparity should be near its maximum (sqrt 2 for onehot)
+        assert!(
+            stats.class_disparity > 0.8,
+            "disparity {}",
+            stats.class_disparity
+        );
+    }
+
+    #[test]
+    fn k1_trivial() {
+        let g = community_graph(7);
+        let mut rng = Rng::new(8);
+        let a = metis_like(&g, 1, &MetisConfig::default(), &mut rng);
+        assert!(a.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn cluster_coarsen_reaches_target() {
+        let g = community_graph(9);
+        let mut rng = Rng::new(10);
+        let clusters = cluster_coarsen(&g, 64, &mut rng);
+        let distinct: std::collections::HashSet<_> = clusters.iter().collect();
+        assert!(distinct.len() <= 96, "too many clusters: {}", distinct.len());
+        assert!(distinct.len() >= 16, "too few clusters: {}", distinct.len());
+        assert_eq!(clusters.len(), g.num_nodes());
+    }
+
+    #[test]
+    fn cluster_coarsen_groups_connected_nodes() {
+        // On a disconnected pair of cliques, clusters never span both.
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new(20);
+        for u in 0..10u32 {
+            for v in (u + 1)..10 {
+                b.add_edge(u, v);
+                b.add_edge(u + 10, v + 10);
+            }
+        }
+        let g = b.build();
+        let mut rng = Rng::new(11);
+        let clusters = cluster_coarsen(&g, 4, &mut rng);
+        for u in 0..10 {
+            for v in 10..20 {
+                assert_ne!(clusters[u], clusters[v], "cluster spans cliques");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_metis_valid_assignment() {
+        crate::util::prop::check(8, 12, |rng: &mut Rng| {
+            let g = dcsbm(&DcsbmConfig {
+                nodes: rng.range(50, 300),
+                communities: rng.range(2, 8),
+                avg_degree: 8.0,
+                homophily: 0.8,
+                feat_dim: 2,
+                feature_noise: 0.3,
+                degree_exponent: 0.0,
+                seed: rng.next_u64(),
+            });
+            let k = rng.range(2, 6);
+            let assign = metis_like(&g, k, &MetisConfig::default(), rng);
+            crate::prop_assert!(assign.len() == g.num_nodes());
+            crate::prop_assert!(assign.iter().all(|&p| (p as usize) < k));
+            let sizes = crate::partition::parts_of(&assign, k)
+                .iter()
+                .map(|p| p.len())
+                .collect::<Vec<_>>();
+            crate::prop_assert!(
+                sizes.iter().all(|&s| s > 0),
+                "empty part: {sizes:?}"
+            );
+            Ok(())
+        });
+    }
+}

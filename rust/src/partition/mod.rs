@@ -1,0 +1,155 @@
+//! Graph partitioning and assignment — requirement **R1** of the paper.
+//!
+//! Three schemes, matching §3.2:
+//!
+//! - [`random_partition`] — **RandomTMA**: every node independently and
+//!   uniformly assigned to one of `k` partitions. No clustering cost;
+//!   expected cross-partition edge fraction `1 - 1/k`; zero expected
+//!   disparity of per-partition data distributions (Cor 3).
+//! - [`metis_like`] — our METIS substrate: multilevel min-edge-cut
+//!   k-way partitioning (heavy-edge-matching coarsening → greedy
+//!   initial partition → boundary FM refinement). One-to-one mapping of
+//!   its `k = M` parts to trainers is exactly the **PSGD-PA / LLCG**
+//!   baseline scheme the paper critiques (Lem 1: min-cut on homophilic
+//!   graphs maximises disparity).
+//! - [`supernode_partition`] — **SuperTMA**: cluster into `N >> M`
+//!   mini-clusters (coarsening-based, [`cluster_coarsen`]), then assign
+//!   whole clusters to trainers uniformly at random. Interpolates
+//!   between the two (N=M → PSGD-PA, N=|V| → RandomTMA).
+//!
+//! [`PartitionStats`] quantifies what the theory talks about: edge-cut,
+//! retained-edge ratio `r` (Table 2), balance, and the disparity
+//! `||C_i - C_j||` of per-partition class/feature distributions.
+
+pub mod metis;
+pub mod random;
+pub mod stats;
+pub mod supernode;
+
+pub use metis::{cluster_coarsen, metis_like, MetisConfig};
+pub use random::random_partition;
+pub use stats::{partition_stats, PartitionStats};
+pub use supernode::supernode_partition;
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Which partition scheme to run — the experiment axis of Tables 2-8.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// RandomTMA: N = |V| (node-level randomized).
+    Random,
+    /// SuperTMA: N mini-clusters randomly assigned.
+    Super { num_clusters: usize },
+    /// PSGD-PA / LLCG: min-cut with N = M (one cluster per trainer).
+    MinCut,
+}
+
+impl Scheme {
+    pub fn name(&self) -> String {
+        match self {
+            Scheme::Random => "random".into(),
+            Scheme::Super { num_clusters } => format!("super{num_clusters}"),
+            Scheme::MinCut => "mincut".into(),
+        }
+    }
+
+    /// Produce the node -> partition assignment for `k` trainers.
+    pub fn assign(&self, g: &Graph, k: usize, rng: &mut Rng) -> Vec<u32> {
+        match self {
+            Scheme::Random => random_partition(g.num_nodes(), k, rng),
+            Scheme::Super { num_clusters } => {
+                supernode_partition(g, *num_clusters, k, rng)
+            }
+            Scheme::MinCut => {
+                metis_like(g, k, &MetisConfig::default(), rng)
+            }
+        }
+    }
+}
+
+/// Group an assignment vector into per-partition node lists.
+pub fn parts_of(assign: &[u32], k: usize) -> Vec<Vec<u32>> {
+    let mut parts = vec![Vec::new(); k];
+    for (v, &p) in assign.iter().enumerate() {
+        parts[p as usize].push(v as u32);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{dcsbm, DcsbmConfig};
+
+    #[test]
+    fn scheme_names() {
+        assert_eq!(Scheme::Random.name(), "random");
+        assert_eq!(Scheme::Super { num_clusters: 500 }.name(), "super500");
+        assert_eq!(Scheme::MinCut.name(), "mincut");
+    }
+
+    #[test]
+    fn all_schemes_produce_valid_assignments() {
+        let g = dcsbm(&DcsbmConfig {
+            nodes: 600,
+            communities: 6,
+            avg_degree: 10.0,
+            homophily: 0.85,
+            feat_dim: 4,
+            feature_noise: 0.3,
+            degree_exponent: 0.5,
+            seed: 1,
+        });
+        let mut rng = Rng::new(2);
+        for scheme in [
+            Scheme::Random,
+            Scheme::Super { num_clusters: 64 },
+            Scheme::MinCut,
+        ] {
+            let assign = scheme.assign(&g, 3, &mut rng);
+            assert_eq!(assign.len(), 600, "{}", scheme.name());
+            assert!(assign.iter().all(|&p| p < 3), "{}", scheme.name());
+            let parts = parts_of(&assign, 3);
+            assert!(
+                parts.iter().all(|p| !p.is_empty()),
+                "{}: empty part",
+                scheme.name()
+            );
+        }
+    }
+
+    #[test]
+    fn mincut_cuts_fewer_edges_than_random() {
+        // The core premise of the paper's analysis: min-cut retains far
+        // more edges (high r) than random partition (r ~= 1/M).
+        let g = dcsbm(&DcsbmConfig {
+            nodes: 1200,
+            communities: 12,
+            avg_degree: 14.0,
+            homophily: 0.9,
+            feat_dim: 4,
+            feature_noise: 0.3,
+            degree_exponent: 0.0,
+            seed: 5,
+        });
+        let mut rng = Rng::new(7);
+        let r_rand = partition_stats(
+            &g,
+            &Scheme::Random.assign(&g, 3, &mut rng),
+            3,
+        )
+        .ratio_r;
+        let r_cut = partition_stats(
+            &g,
+            &Scheme::MinCut.assign(&g, 3, &mut rng),
+            3,
+        )
+        .ratio_r;
+        assert!(
+            r_cut > r_rand + 0.2,
+            "mincut r={r_cut:.3} random r={r_rand:.3}"
+        );
+        assert!((r_rand - 1.0 / 3.0).abs() < 0.05, "random r={r_rand}");
+    }
+}

@@ -1,0 +1,69 @@
+//! RandomTMA's partition: i.i.d. uniform node assignment (§3.2.2).
+//!
+//! "each node is randomly and independently assigned to one of the
+//! graph partitions" — no clustering pass, no graph access at all, so
+//! the preprocessing cost is O(|V|) (vs minutes of METIS on the paper's
+//! graphs, Table 7 "Prep. Time" column).
+
+use crate::util::rng::Rng;
+
+/// Assign each of `n` nodes to one of `k` partitions uniformly.
+pub fn random_partition(n: usize, k: usize, rng: &mut Rng) -> Vec<u32> {
+    assert!(k >= 1);
+    (0..n).map(|_| rng.below(k) as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_and_balanced_in_expectation() {
+        let mut rng = Rng::new(1);
+        let assign = random_partition(30_000, 3, &mut rng);
+        let mut counts = [0usize; 3];
+        for &p in &assign {
+            counts[p as usize] += 1;
+        }
+        for c in counts {
+            let dev = (c as f64 - 10_000.0).abs() / 10_000.0;
+            assert!(dev < 0.05, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn prop_assignments_in_range() {
+        crate::util::prop::check(50, 3, |rng: &mut Rng| {
+            let n = rng.range(1, 500);
+            let k = rng.range(1, 24);
+            let a = random_partition(n, k, rng);
+            crate::prop_assert!(a.len() == n);
+            crate::prop_assert!(a.iter().all(|&p| (p as usize) < k));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn expected_cross_edge_fraction_is_1_minus_1_over_k() {
+        // Cor 3 setup: each edge survives with probability 1/M.
+        use crate::gen::{dcsbm, DcsbmConfig};
+        let g = dcsbm(&DcsbmConfig {
+            nodes: 4000,
+            communities: 8,
+            avg_degree: 12.0,
+            homophily: 0.9,
+            feat_dim: 2,
+            feature_noise: 0.1,
+            degree_exponent: 0.0,
+            seed: 4,
+        });
+        let mut rng = Rng::new(9);
+        let assign = random_partition(g.num_nodes(), 4, &mut rng);
+        let internal = g
+            .edges()
+            .filter(|&(u, v)| assign[u as usize] == assign[v as usize])
+            .count();
+        let frac = internal as f64 / g.num_edges() as f64;
+        assert!((frac - 0.25).abs() < 0.03, "frac={frac}");
+    }
+}

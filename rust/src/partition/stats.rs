@@ -1,0 +1,159 @@
+//! Partition quality measures: edge-cut, retained-edge ratio `r`,
+//! balance, and the data-disparity quantities of the paper's theory.
+
+use crate::graph::stats::{class_distribution, l2_distance, mean_feature};
+use crate::graph::Graph;
+
+use super::parts_of;
+
+/// Everything the paper reports about a partition (Tables 2, 5, 7).
+#[derive(Debug, Clone)]
+pub struct PartitionStats {
+    pub k: usize,
+    pub part_sizes: Vec<usize>,
+    /// Undirected edges crossing partition boundaries.
+    pub edge_cut: usize,
+    /// Fraction of training edges that remain available: Table 2's `r`.
+    pub ratio_r: f64,
+    /// max part size / ideal part size (1.0 = perfectly balanced).
+    pub balance: f64,
+    /// Max pairwise L2 distance between per-partition class
+    /// distributions — the ||C_i - C_j|| of Thm 2.
+    pub class_disparity: f64,
+    /// Max pairwise L2 distance between per-partition mean features.
+    pub feature_disparity: f64,
+}
+
+pub fn partition_stats(g: &Graph, assign: &[u32], k: usize) -> PartitionStats {
+    assert_eq!(assign.len(), g.num_nodes());
+    let parts = parts_of(assign, k);
+    let part_sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+
+    let mut cut = 0usize;
+    let mut total = 0usize;
+    for (u, v) in g.edges() {
+        total += 1;
+        if assign[u as usize] != assign[v as usize] {
+            cut += 1;
+        }
+    }
+    let ratio_r = if total == 0 {
+        0.0
+    } else {
+        (total - cut) as f64 / total as f64
+    };
+
+    let ideal = g.num_nodes() as f64 / k as f64;
+    let balance = part_sizes
+        .iter()
+        .map(|&s| s as f64 / ideal)
+        .fold(0.0f64, f64::max);
+
+    let class_dists: Vec<Vec<f64>> =
+        parts.iter().map(|p| class_distribution(g, p)).collect();
+    let feat_means: Vec<Vec<f64>> =
+        parts.iter().map(|p| mean_feature(g, p)).collect();
+
+    let mut class_disparity = 0.0f64;
+    let mut feature_disparity = 0.0f64;
+    for i in 0..k {
+        for j in (i + 1)..k {
+            class_disparity =
+                class_disparity.max(l2_distance(&class_dists[i], &class_dists[j]));
+            feature_disparity = feature_disparity
+                .max(l2_distance(&feat_means[i], &feat_means[j]));
+        }
+    }
+
+    PartitionStats {
+        k,
+        part_sizes,
+        edge_cut: cut,
+        ratio_r,
+        balance,
+        class_disparity,
+        feature_disparity,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn two_cliques() -> Graph {
+        // cliques {0..4} and {5..9} joined by one bridge, labels = clique
+        let mut b = GraphBuilder::new(10);
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                b.add_edge(u, v);
+                b.add_edge(u + 5, v + 5);
+            }
+        }
+        b.add_edge(0, 5);
+        let mut g = b.build();
+        g.labels = (0..10).map(|v| (v >= 5) as u16).collect();
+        g.num_classes = 2;
+        g.feat_dim = 1;
+        g.features = (0..10).map(|v| if v >= 5 { 1.0 } else { 0.0 }).collect();
+        g
+    }
+
+    #[test]
+    fn perfect_cut_stats() {
+        let g = two_cliques();
+        let assign: Vec<u32> = (0..10).map(|v| (v >= 5) as u32).collect();
+        let s = partition_stats(&g, &assign, 2);
+        assert_eq!(s.edge_cut, 1);
+        assert!((s.ratio_r - 20.0 / 21.0).abs() < 1e-9);
+        assert_eq!(s.part_sizes, vec![5, 5]);
+        assert!((s.balance - 1.0).abs() < 1e-9);
+        // perfectly separated classes: onehot dists distance = sqrt(2)
+        assert!((s.class_disparity - 2f64.sqrt()).abs() < 1e-9);
+        assert!((s.feature_disparity - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn near_uniform_mix_has_low_disparity() {
+        let g = two_cliques();
+        // part0 = {0,1,4,5,6}: classes {0,0,0,1,1} -> C = [3/5, 2/5]
+        // part1 = {2,3,7,8,9}: classes {0,0,1,1,1} -> C = [2/5, 3/5]
+        // (with 5 nodes per class, 1/5 residual imbalance is the best a
+        // 5/5 split can do) -> disparity = sqrt(2) * 0.2, far below the
+        // class-separating assignment's sqrt(2).
+        let assign: Vec<u32> = vec![0, 0, 1, 1, 0, 0, 0, 1, 1, 1];
+        let s = partition_stats(&g, &assign, 2);
+        assert!((s.class_disparity - 2f64.sqrt() * 0.2).abs() < 1e-9);
+        assert!(s.ratio_r < 0.6); // mixing cuts many clique edges
+    }
+
+    #[test]
+    fn exact_mix_has_zero_disparity() {
+        // 4-node cliques (even class sizes) admit a perfectly balanced
+        // split: each part gets 2 nodes of each class.
+        let mut b = GraphBuilder::new(8);
+        for u in 0..4u32 {
+            for v in (u + 1)..4 {
+                b.add_edge(u, v);
+                b.add_edge(u + 4, v + 4);
+            }
+        }
+        let mut g = b.build();
+        g.labels = (0..8).map(|v| (v >= 4) as u16).collect();
+        g.num_classes = 2;
+        g.feat_dim = 1;
+        g.features = (0..8).map(|v| (v >= 4) as i32 as f32).collect();
+        let assign: Vec<u32> = vec![0, 0, 1, 1, 0, 0, 1, 1];
+        let s = partition_stats(&g, &assign, 2);
+        assert!(s.class_disparity < 1e-12);
+        assert!(s.feature_disparity < 1e-12);
+    }
+
+    #[test]
+    fn singleton_partition_r_is_one() {
+        let g = two_cliques();
+        let s = partition_stats(&g, &vec![0; 10], 1);
+        assert_eq!(s.edge_cut, 0);
+        assert!((s.ratio_r - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,96 @@
+//! SuperTMA's partition: random assignment of super-nodes (§3.2.2).
+//!
+//! `N >> M` mini-clusters from [`cluster_coarsen`] are treated as
+//! super-nodes and assigned to the `M` trainers uniformly at random.
+//! This keeps RandomTMA's expected data uniformity (each trainer gets
+//! an i.i.d. sample of *clusters*) while retaining far more edges,
+//! because intra-cluster edges always survive. Setting N = M recovers
+//! the PSGD-PA scheme; N = |V| recovers RandomTMA.
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+use super::metis::cluster_coarsen;
+
+/// Node -> trainer assignment via randomized super-node placement.
+pub fn supernode_partition(
+    g: &Graph,
+    num_clusters: usize,
+    k: usize,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    let clusters = cluster_coarsen(g, num_clusters, rng);
+    let num_found = clusters.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0);
+    // Random cluster -> trainer map.
+    let map: Vec<u32> = (0..num_found).map(|_| rng.below(k) as u32).collect();
+    clusters.iter().map(|&c| map[c as usize]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{dcsbm, DcsbmConfig};
+    use crate::partition::{partition_stats, random_partition};
+
+    fn graph(seed: u64) -> Graph {
+        dcsbm(&DcsbmConfig {
+            nodes: 1500,
+            communities: 10,
+            avg_degree: 12.0,
+            homophily: 0.9,
+            feat_dim: 4,
+            feature_noise: 0.3,
+            degree_exponent: 0.5,
+            seed,
+        })
+    }
+
+    #[test]
+    fn retains_more_edges_than_random() {
+        // Table 2's central r ordering: r_random < r_super < r_mincut.
+        let g = graph(1);
+        let mut rng = Rng::new(2);
+        let sup = supernode_partition(&g, 128, 3, &mut rng);
+        let rand = random_partition(g.num_nodes(), 3, &mut rng);
+        let r_sup = partition_stats(&g, &sup, 3).ratio_r;
+        let r_rand = partition_stats(&g, &rand, 3).ratio_r;
+        assert!(r_sup > r_rand + 0.05, "r_sup={r_sup} r_rand={r_rand}");
+    }
+
+    #[test]
+    fn lower_disparity_than_mincut() {
+        use crate::partition::{metis_like, MetisConfig};
+        let g = graph(3);
+        let mut rng = Rng::new(4);
+        let sup = supernode_partition(&g, 256, 3, &mut rng);
+        let cut = metis_like(&g, 3, &MetisConfig::default(), &mut rng);
+        let d_sup = partition_stats(&g, &sup, 3).class_disparity;
+        let d_cut = partition_stats(&g, &cut, 3).class_disparity;
+        assert!(
+            d_sup < d_cut * 0.7,
+            "super disparity {d_sup} vs mincut {d_cut}"
+        );
+    }
+
+    #[test]
+    fn n_equals_v_degenerates_to_random_like() {
+        let g = graph(5);
+        let mut rng = Rng::new(6);
+        let assign = supernode_partition(&g, g.num_nodes(), 3, &mut rng);
+        let r = partition_stats(&g, &assign, 3).ratio_r;
+        assert!((r - 1.0 / 3.0).abs() < 0.05, "r={r}");
+    }
+
+    #[test]
+    fn prop_valid_assignment() {
+        crate::util::prop::check(10, 7, |rng: &mut Rng| {
+            let g = graph(rng.next_u64());
+            let k = rng.range(2, 8);
+            let n_clusters = rng.range(k, 512);
+            let a = supernode_partition(&g, n_clusters, k, rng);
+            crate::prop_assert!(a.len() == g.num_nodes());
+            crate::prop_assert!(a.iter().all(|&p| (p as usize) < k));
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,319 @@
+//! The execution engine: one PJRT client + the four compiled entry
+//! points of one model variant.
+//!
+//! Follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! HLO **text** is the interchange format (64-bit-id protos from
+//! jax >= 0.5 are rejected by xla_extension 0.5.1; the text parser
+//! reassigns ids).
+//!
+//! Literal packing is name-driven against the manifest arg specs so a
+//! schema drift between Python and rust fails with a clear error, and
+//! shape mismatches are caught before they reach XLA.
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ModelState;
+use crate::sampler::Block;
+use crate::util::stats;
+
+use super::manifest::{Dtype, EntrySpec, Manifest, ModelDims, VariantSpec};
+
+/// f32 slice as raw little-endian bytes (x86-64 target).
+fn f32_bytes(xs: &[f32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4)
+    }
+}
+
+fn i32_bytes(xs: &[i32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4)
+    }
+}
+
+/// Named argument sources for one call.
+pub struct ArgSources<'a> {
+    pub f32s: Vec<(&'a str, &'a [f32])>,
+    pub i32s: Vec<(&'a str, &'a [i32])>,
+}
+
+impl<'a> ArgSources<'a> {
+    fn lookup_f32(&self, name: &str) -> Option<&'a [f32]> {
+        self.f32s.iter().find(|(n, _)| *n == name).map(|(_, s)| *s)
+    }
+    fn lookup_i32(&self, name: &str) -> Option<&'a [i32]> {
+        self.i32s.iter().find(|(n, _)| *n == name).map(|(_, s)| *s)
+    }
+}
+
+/// One model variant ready to execute. Entry points are compiled
+/// **lazily on first use** — a TMA trainer only ever touches `train`,
+/// a GGS worker only `grad`, the evaluator only `encode`/`score` — so
+/// per-role startup compiles 1-2 HLO modules instead of 4 (a large
+/// win on this single-core testbed; see EXPERIMENTS.md §Perf).
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub variant: VariantSpec,
+    pub dims: ModelDims,
+    pub impl_name: String,
+    artifact_dir: std::path::PathBuf,
+    exes: std::cell::RefCell<
+        std::collections::BTreeMap<&'static str, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+    >,
+}
+
+impl Engine {
+    /// Create the engine (PJRT client only; compiles lazily).
+    pub fn load(manifest: &Manifest, variant: &str, impl_name: &str) -> Result<Engine> {
+        let v = manifest.variant(variant)?.clone();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Engine {
+            client,
+            variant: v,
+            dims: manifest.dims,
+            impl_name: impl_name.to_string(),
+            artifact_dir: manifest.dir.clone(),
+            exes: Default::default(),
+        })
+    }
+
+    /// Compiled executable for `entry`, compiling on first use.
+    fn exe(&self, entry: &'static str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(entry) {
+            return Ok(e.clone());
+        }
+        let path =
+            self.variant
+                .artifact_path(&self.artifact_dir, entry, &self.impl_name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))?;
+        let rc = std::rc::Rc::new(exe);
+        self.exes.borrow_mut().insert(entry, rc.clone());
+        Ok(rc)
+    }
+
+    /// Eagerly compile all four entry points (doctor / benches).
+    pub fn compile_all(&self) -> Result<()> {
+        self.prepare(&["train", "grad", "encode", "score"])
+    }
+
+    /// Eagerly compile a role's entry points. Trainers call this
+    /// BEFORE marking ready so the server's ΔT_train clock (which
+    /// starts at the ready barrier) never overlaps compilation.
+    pub fn prepare(&self, entries: &[&'static str]) -> Result<()> {
+        for entry in entries {
+            self.exe(entry)?;
+        }
+        Ok(())
+    }
+
+    pub fn hetero(&self) -> bool {
+        self.variant.hetero
+    }
+
+    pub fn param_total(&self) -> usize {
+        self.variant.param_total
+    }
+
+    /// Pack literals for `entry` from named sources, in manifest order.
+    fn pack(&self, entry: &EntrySpec, src: &ArgSources) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(entry.args.len());
+        for a in &entry.args {
+            let lit = match a.dtype {
+                Dtype::F32 => {
+                    let s = src
+                        .lookup_f32(&a.name)
+                        .with_context(|| format!("missing f32 arg {:?}", a.name))?;
+                    if s.len() != a.elements() {
+                        bail!(
+                            "arg {:?}: have {} elements, artifact wants {:?}",
+                            a.name,
+                            s.len(),
+                            a.shape
+                        );
+                    }
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::F32,
+                        &a.shape,
+                        f32_bytes(s),
+                    )
+                    .map_err(|e| anyhow::anyhow!("literal {}: {e}", a.name))?
+                }
+                Dtype::I32 => {
+                    let s = src
+                        .lookup_i32(&a.name)
+                        .with_context(|| format!("missing i32 arg {:?}", a.name))?;
+                    if s.len() != a.elements() {
+                        bail!(
+                            "arg {:?}: have {} elements, artifact wants {:?}",
+                            a.name,
+                            s.len(),
+                            a.shape
+                        );
+                    }
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::S32,
+                        &a.shape,
+                        i32_bytes(s),
+                    )
+                    .map_err(|e| anyhow::anyhow!("literal {}: {e}", a.name))?
+                }
+            };
+            out.push(lit);
+        }
+        Ok(out)
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        entry: &EntrySpec,
+        src: &ArgSources,
+    ) -> Result<Vec<xla::Literal>> {
+        let args = self.pack(entry, src)?;
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+        // Artifacts are lowered with return_tuple=True.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "output arity mismatch: got {}, manifest says {}",
+                parts.len(),
+                entry.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Block argument views shared by train/grad packing.
+    fn block_sources<'a>(
+        &self,
+        params: &'a [f32],
+        block: &'a Block,
+    ) -> ArgSources<'a> {
+        ArgSources {
+            f32s: vec![
+                ("params", params),
+                ("feats", &block.feats),
+                ("adj", &block.adj),
+                ("mask", &block.mask),
+            ],
+            i32s: vec![
+                ("pos_u", &block.pos_u),
+                ("pos_v", &block.pos_v),
+                ("rel", &block.rel),
+                ("neg_v", &block.neg_v),
+            ],
+        }
+    }
+
+    /// One fused Adam step on `state` from `block`. Returns the loss.
+    pub fn train_step(&self, state: &mut ModelState, block: &Block) -> Result<f32> {
+        let entry = self.variant.entry("train")?.clone();
+        let mut src = self.block_sources(&state.params, block);
+        src.f32s.push(("adam_m", &state.adam_m));
+        src.f32s.push(("adam_v", &state.adam_v));
+        src.f32s.push(("adam_t", &state.adam_t));
+        let out = self.run(&*self.exe("train")?, &entry, &src)?;
+        // outputs: params', m', v', t', loss
+        out[0]
+            .copy_raw_to::<f32>(&mut state.params)
+            .map_err(|e| anyhow::anyhow!("params out: {e}"))?;
+        out[1]
+            .copy_raw_to::<f32>(&mut state.adam_m)
+            .map_err(|e| anyhow::anyhow!("m out: {e}"))?;
+        out[2]
+            .copy_raw_to::<f32>(&mut state.adam_v)
+            .map_err(|e| anyhow::anyhow!("v out: {e}"))?;
+        out[3]
+            .copy_raw_to::<f32>(&mut state.adam_t)
+            .map_err(|e| anyhow::anyhow!("t out: {e}"))?;
+        let loss = out[4]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss out: {e}"))?;
+        Ok(loss)
+    }
+
+    /// Loss + gradient w.r.t. the flat params (GGS / LLCG correction).
+    pub fn grad_step(&self, params: &[f32], block: &Block) -> Result<(Vec<f32>, f32)> {
+        let entry = self.variant.entry("grad")?.clone();
+        let src = self.block_sources(params, block);
+        let out = self.run(&*self.exe("grad")?, &entry, &src)?;
+        let mut g = vec![0f32; self.variant.param_total];
+        out[0]
+            .copy_raw_to::<f32>(&mut g)
+            .map_err(|e| anyhow::anyhow!("grad out: {e}"))?;
+        let loss = out[1]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss out: {e}"))?;
+        Ok((g, loss))
+    }
+
+    /// Node embeddings `[Bn, H]` (row-major) for one eval block.
+    pub fn encode(&self, params: &[f32], block: &Block) -> Result<Vec<f32>> {
+        let entry = self.variant.entry("encode")?.clone();
+        let src = ArgSources {
+            f32s: vec![
+                ("params", params),
+                ("feats", &block.feats),
+                ("adj", &block.adj),
+            ],
+            i32s: vec![],
+        };
+        let out = self.run(&*self.exe("encode")?, &entry, &src)?;
+        let mut emb = vec![0f32; self.dims.block_nodes * self.dims.hidden];
+        out[0]
+            .copy_raw_to::<f32>(&mut emb)
+            .map_err(|e| anyhow::anyhow!("emb out: {e}"))?;
+        Ok(emb)
+    }
+
+    /// Decoder scores for `S` (emb_u, emb_v[, rel]) pairs.
+    pub fn score(
+        &self,
+        params: &[f32],
+        emb_u: &[f32],
+        emb_v: &[f32],
+        rel: &[i32],
+    ) -> Result<Vec<f32>> {
+        let entry = self.variant.entry("score")?.clone();
+        let src = ArgSources {
+            f32s: vec![("params", params), ("emb_u", emb_u), ("emb_v", emb_v)],
+            i32s: vec![("rel", rel)],
+        };
+        let out = self.run(&*self.exe("score")?, &entry, &src)?;
+        let mut scores = vec![0f32; self.dims.score_batch];
+        out[0]
+            .copy_raw_to::<f32>(&mut scores)
+            .map_err(|e| anyhow::anyhow!("score out: {e}"))?;
+        Ok(scores)
+    }
+
+    /// Quick smoke summary used by `rtma doctor`.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} ({}) P={} median |param| n/a",
+            self.variant.name, self.impl_name, self.variant.param_total
+        )
+    }
+}
+
+/// Convenience: mean absolute value (used in tests/diagnostics).
+pub fn mean_abs(xs: &[f32]) -> f64 {
+    stats::mean(&xs.iter().map(|x| x.abs() as f64).collect::<Vec<_>>())
+}

@@ -1,0 +1,353 @@
+//! The AOT manifest: the cross-language contract with `python/compile`.
+//!
+//! `artifacts/manifest.json` records, per model variant, the flat
+//! parameter layout (tensor names/shapes/offsets/init kinds) and, per
+//! entry point (train/grad/encode/score), the exact argument order,
+//! dtypes, shapes and the HLO file per kernel implementation. The rust
+//! side packs literals by *name* against this spec, so a drift between
+//! the two languages fails loudly here rather than as silent garbage.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Scalar dtype of an artifact argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// Parameter-tensor initialisation kind (mirrors model.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitKind {
+    Glorot,
+    Zeros,
+    Ones,
+    Prelu,
+    Normal,
+}
+
+/// One named tensor inside the flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitKind,
+    pub offset: usize,
+}
+
+impl TensorSpec {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One argument (or output) of an entry point.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One entry point (train / grad / encode / score) of a variant.
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+    /// impl name ("pallas" | "jnp") -> HLO text file name.
+    pub artifacts: BTreeMap<String, String>,
+}
+
+/// One (encoder, decoder) model variant.
+#[derive(Clone, Debug)]
+pub struct VariantSpec {
+    pub name: String,
+    pub encoder: String,
+    pub decoder: String,
+    pub hetero: bool,
+    pub param_total: usize,
+    pub tensors: Vec<TensorSpec>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+/// Global model dimensions shared by all variants.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelDims {
+    pub feat_dim: usize,
+    pub hidden: usize,
+    pub block_nodes: usize,
+    pub block_edges: usize,
+    pub score_batch: usize,
+    pub relations: usize,
+}
+
+/// Adam hyperparameters baked into the train artifacts (and used by the
+/// rust-side optimizer for GGS).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamHp {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+/// Parsed manifest plus the artifact directory it came from.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub adam: AdamHp,
+    pub dims: ModelDims,
+    pub variants: BTreeMap<String, VariantSpec>,
+}
+
+fn parse_dtype(s: &str) -> Result<Dtype> {
+    match s {
+        "f32" => Ok(Dtype::F32),
+        "i32" => Ok(Dtype::I32),
+        other => bail!("unknown dtype {other:?}"),
+    }
+}
+
+fn parse_init(s: &str) -> Result<InitKind> {
+    Ok(match s {
+        "glorot" => InitKind::Glorot,
+        "zeros" => InitKind::Zeros,
+        "ones" => InitKind::Ones,
+        "prelu" => InitKind::Prelu,
+        "normal" => InitKind::Normal,
+        other => bail!("unknown init kind {other:?}"),
+    })
+}
+
+fn parse_arg(j: &Json) -> Result<ArgSpec> {
+    Ok(ArgSpec {
+        name: j.get("name").as_str().context("arg name")?.to_string(),
+        dtype: parse_dtype(j.get("dtype").as_str().context("arg dtype")?)?,
+        shape: j
+            .get("shape")
+            .as_arr()
+            .context("arg shape")?
+            .iter()
+            .map(|x| x.as_usize().context("shape dim"))
+            .collect::<Result<_>>()?,
+    })
+}
+
+impl Manifest {
+    /// Default artifact directory (`artifacts/` beside the workspace).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from("artifacts")
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::read_file(&dir.join("manifest.json"))?;
+        let adam = AdamHp {
+            lr: j.at(&["adam", "lr"]).as_f64().context("adam.lr")? as f32,
+            beta1: j.at(&["adam", "beta1"]).as_f64().context("adam.beta1")? as f32,
+            beta2: j.at(&["adam", "beta2"]).as_f64().context("adam.beta2")? as f32,
+            eps: j.at(&["adam", "eps"]).as_f64().context("adam.eps")? as f32,
+        };
+        let c = j.get("config");
+        let dims = ModelDims {
+            feat_dim: c.get("feat_dim").as_usize().context("feat_dim")?,
+            hidden: c.get("hidden").as_usize().context("hidden")?,
+            block_nodes: c.get("block_nodes").as_usize().context("block_nodes")?,
+            block_edges: c.get("block_edges").as_usize().context("block_edges")?,
+            score_batch: c.get("score_batch").as_usize().context("score_batch")?,
+            relations: c.get("relations").as_usize().context("relations")?,
+        };
+
+        let mut variants = BTreeMap::new();
+        for (vname, vj) in j.get("variants").as_obj().context("variants")? {
+            let mut tensors = Vec::new();
+            for tj in vj.at(&["params", "tensors"]).as_arr().context("tensors")? {
+                tensors.push(TensorSpec {
+                    name: tj.get("name").as_str().context("t name")?.to_string(),
+                    shape: tj
+                        .get("shape")
+                        .as_arr()
+                        .context("t shape")?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap())
+                        .collect(),
+                    init: parse_init(tj.get("init").as_str().context("t init")?)?,
+                    offset: tj.get("offset").as_usize().context("t offset")?,
+                });
+            }
+            let mut entries = BTreeMap::new();
+            for (ename, ej) in vj.get("entries").as_obj().context("entries")? {
+                let args = ej
+                    .get("args")
+                    .as_arr()
+                    .context("args")?
+                    .iter()
+                    .map(parse_arg)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = ej
+                    .get("outputs")
+                    .as_arr()
+                    .context("outputs")?
+                    .iter()
+                    .map(parse_arg)
+                    .collect::<Result<Vec<_>>>()?;
+                let artifacts = ej
+                    .get("artifacts")
+                    .as_obj()
+                    .context("artifacts")?
+                    .iter()
+                    .map(|(k, v)| (k.clone(), v.as_str().unwrap().to_string()))
+                    .collect();
+                entries.insert(ename.clone(), EntrySpec { args, outputs, artifacts });
+            }
+            variants.insert(
+                vname.clone(),
+                VariantSpec {
+                    name: vname.clone(),
+                    encoder: vj.get("encoder").as_str().context("encoder")?.to_string(),
+                    decoder: vj.get("decoder").as_str().context("decoder")?.to_string(),
+                    hetero: vj.get("hetero").as_bool().context("hetero")?,
+                    param_total: vj.at(&["params", "total"]).as_usize().context("total")?,
+                    tensors,
+                    entries,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), adam, dims, variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.variants
+            .get(name)
+            .with_context(|| format!("variant {name:?} not in manifest"))
+    }
+}
+
+impl VariantSpec {
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("entry {name:?} of {}", self.name))
+    }
+
+    /// HLO file path for an entry in a given kernel implementation.
+    pub fn artifact_path(
+        &self,
+        dir: &Path,
+        entry: &str,
+        impl_name: &str,
+    ) -> Result<PathBuf> {
+        let e = self.entry(entry)?;
+        let f = e
+            .artifacts
+            .get(impl_name)
+            .with_context(|| format!("impl {impl_name:?} for {entry}"))?;
+        Ok(dir.join(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        // tests run from the workspace root
+        PathBuf::from("artifacts")
+    }
+
+    fn skip_if_missing() -> Option<Manifest> {
+        let dir = manifest_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Manifest::load(&dir).expect("manifest parses"))
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = skip_if_missing() else { return };
+        assert!((m.adam.lr - 1e-3).abs() < 1e-9);
+        assert_eq!(m.dims.block_nodes, 256);
+        for v in ["gcn_mlp", "sage_mlp", "mlp_mlp", "rgcn_distmult"] {
+            assert!(m.variants.contains_key(v), "{v} missing");
+        }
+    }
+
+    #[test]
+    fn layouts_are_packed() {
+        let Some(m) = skip_if_missing() else { return };
+        for v in m.variants.values() {
+            let mut off = 0;
+            for t in &v.tensors {
+                assert_eq!(t.offset, off, "{}.{}", v.name, t.name);
+                off += t.size();
+            }
+            assert_eq!(off, v.param_total, "{}", v.name);
+        }
+    }
+
+    #[test]
+    fn entry_args_start_with_params() {
+        let Some(m) = skip_if_missing() else { return };
+        for v in m.variants.values() {
+            for (ename, e) in &v.entries {
+                assert_eq!(e.args[0].name, "params", "{}/{}", v.name, ename);
+                assert_eq!(e.args[0].shape, vec![v.param_total]);
+                assert_eq!(e.args[0].dtype, Dtype::F32);
+                for impl_name in ["pallas", "jnp"] {
+                    let p = v
+                        .artifact_path(&m.dir, ename, impl_name)
+                        .unwrap();
+                    assert!(p.exists(), "{}", p.display());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn train_entry_has_adam_state() {
+        let Some(m) = skip_if_missing() else { return };
+        let v = m.variant("gcn_mlp").unwrap();
+        let names: Vec<_> = v
+            .entry("train")
+            .unwrap()
+            .args
+            .iter()
+            .map(|a| a.name.as_str())
+            .collect();
+        assert_eq!(
+            &names[..4],
+            &["params", "adam_m", "adam_v", "adam_t"]
+        );
+        assert!(names.contains(&"feats"));
+        assert!(names.contains(&"mask"));
+    }
+
+    #[test]
+    fn hetero_variants_have_rel_arg() {
+        let Some(m) = skip_if_missing() else { return };
+        for vname in ["gcn_distmult", "rgcn_mlp", "rgcn_distmult"] {
+            let v = m.variant(vname).unwrap();
+            assert!(v.hetero, "{vname}");
+            let names: Vec<_> = v
+                .entry("train")
+                .unwrap()
+                .args
+                .iter()
+                .map(|a| a.name.as_str())
+                .collect();
+            assert!(names.contains(&"rel"), "{vname}: {names:?}");
+        }
+    }
+}

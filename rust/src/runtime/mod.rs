@@ -1,0 +1,19 @@
+//! PJRT runtime: load AOT artifacts and execute them on the hot path.
+//!
+//! This is the only boundary to the Python-built world: it reads
+//! `artifacts/manifest.json` ([`manifest`]) and compiles the referenced
+//! HLO-text modules on a PJRT CPU client ([`engine`]). After `Engine`
+//! construction, training/evaluation is pure rust + XLA — Python never
+//! runs on the request path.
+//!
+//! Thread model: the `xla` crate's client/executable types wrap raw
+//! pointers and are not `Send`, so **each trainer thread owns its own
+//! [`engine::Engine`]** (its own client + compiled executables). That
+//! mirrors the paper's per-trainer process model and makes trainers
+//! fully independent between aggregations.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use manifest::{ArgSpec, EntrySpec, Manifest, ModelDims, TensorSpec, VariantSpec};

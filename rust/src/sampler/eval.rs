@@ -1,0 +1,375 @@
+//! Deterministic evaluation blocks + MRR.
+//!
+//! Evaluation scores each held-out edge (u, v) against its fixed
+//! negative candidates (u, v'_1..K) — Mean Reciprocal Rank over the
+//! rank of the positive (paper §4.1: fixed negatives, no sampling
+//! randomness in evaluation). The plan:
+//!
+//! 1. collect every node whose embedding is needed (heads, tails,
+//!    candidates);
+//! 2. pack them as the *target* (first) slots of fixed-shape blocks,
+//!    padding the remainder of each block with deterministic 2-hop
+//!    neighbourhood context (first-k neighbours by id — no RNG);
+//! 3. the evaluator runs the `encode` artifact per block and gathers
+//!    target embeddings;
+//! 4. score pairs with the `score` artifact in fixed-size chunks and
+//!    fold ranks into MRR.
+
+use std::collections::HashMap;
+
+use crate::graph::Graph;
+
+use super::{directional_rel, fill_adj, AdjMode, Block};
+
+#[derive(Clone, Debug)]
+pub struct EvalBlockConfig {
+    pub block_nodes: usize,
+    pub feat_dim: usize,
+    pub adj_mode: AdjMode,
+    pub relations: usize,
+    pub boundary: u32,
+    /// Per-hop deterministic neighbour caps for context packing.
+    pub context_fanouts: Vec<usize>,
+    /// Target slots per block (rest is context).
+    pub targets_per_block: usize,
+}
+
+impl EvalBlockConfig {
+    pub fn new(bn: usize, f: usize, mode: AdjMode, relations: usize,
+               boundary: u32) -> Self {
+        EvalBlockConfig {
+            block_nodes: bn,
+            feat_dim: f,
+            adj_mode: mode,
+            relations,
+            boundary,
+            context_fanouts: vec![6, 3],
+            targets_per_block: bn / 2,
+        }
+    }
+}
+
+/// Prebuilt evaluation schedule over one graph + edge set.
+pub struct EvalPlan {
+    pub blocks: Vec<Block>,
+    /// Targets occupy the first `targets[i]` slots of block i.
+    pub targets: Vec<usize>,
+    /// global node -> (block index, slot) where its embedding lives.
+    pub slot_of: HashMap<u32, (u32, u32)>,
+    /// (head, tail, relation) per held-out edge.
+    pub edges: Vec<(u32, u32, i32)>,
+    /// Fixed candidates per edge.
+    pub negatives: Vec<Vec<u32>>,
+}
+
+impl EvalPlan {
+    /// Build the plan for `edges` + `negatives` over `graph` (the
+    /// training graph — held-out edges are absent from it by
+    /// construction).
+    pub fn build(
+        graph: &Graph,
+        edges: &[(u32, u32)],
+        negatives: &[Vec<u32>],
+        cfg: &EvalBlockConfig,
+    ) -> EvalPlan {
+        assert_eq!(edges.len(), negatives.len());
+        // 1: required nodes, deduped, in first-use order (deterministic).
+        let mut required: Vec<u32> = Vec::new();
+        let mut seen: HashMap<u32, ()> = HashMap::new();
+        let need = |v: u32, req: &mut Vec<u32>, seen: &mut HashMap<u32, ()>| {
+            if seen.insert(v, ()).is_none() {
+                req.push(v);
+            }
+        };
+        for (i, &(u, v)) in edges.iter().enumerate() {
+            need(u, &mut required, &mut seen);
+            need(v, &mut required, &mut seen);
+            for &c in &negatives[i] {
+                need(c, &mut required, &mut seen);
+            }
+        }
+
+        // 2: chunk into blocks.
+        let mut blocks = Vec::new();
+        let mut targets = Vec::new();
+        let mut slot_of = HashMap::new();
+        for chunk in required.chunks(cfg.targets_per_block) {
+            let bi = blocks.len() as u32;
+            let block = build_block(graph, chunk, cfg);
+            for (s, &g) in chunk.iter().enumerate() {
+                slot_of.insert(g, (bi, s as u32));
+            }
+            targets.push(chunk.len());
+            blocks.push(block);
+        }
+
+        // Edge relations (hetero): canonical base rel from the original
+        // edge type; 0 for homogeneous graphs.
+        let typed_edges = edges
+            .iter()
+            .map(|&(u, v)| {
+                let rel = if cfg.boundary > 0 {
+                    let base = graph
+                        .neighbors_of(u as usize)
+                        .iter()
+                        .position(|&x| x == v)
+                        .and_then(|k| graph.rels_of(u as usize).map(|rs| rs[k]))
+                        // held-out edges are not in the train graph: infer
+                        // the type from endpoint populations instead.
+                        .unwrap_or(if u < cfg.boundary || v < cfg.boundary {
+                            0
+                        } else {
+                            1
+                        });
+                    directional_rel(u, v, base, cfg.boundary) as i32
+                } else {
+                    0
+                };
+                (u, v, rel)
+            })
+            .collect();
+
+        EvalPlan {
+            blocks,
+            targets,
+            slot_of,
+            edges: typed_edges,
+            negatives: negatives.to_vec(),
+        }
+    }
+
+    /// Scoring pairs in schedule order: for edge i the positive pair
+    /// then its K negatives — `(head, candidate, rel)` global ids.
+    pub fn pairs(&self) -> impl Iterator<Item = (u32, u32, i32)> + '_ {
+        self.edges.iter().enumerate().flat_map(move |(i, &(u, v, r))| {
+            std::iter::once((u, v, r))
+                .chain(self.negatives[i].iter().map(move |&c| (u, c, r)))
+        })
+    }
+
+    pub fn num_pairs(&self) -> usize {
+        self.edges.len() + self.negatives.iter().map(|n| n.len()).sum::<usize>()
+    }
+}
+
+/// Build one eval block: `targets` in the leading slots, deterministic
+/// neighbour context afterwards.
+fn build_block(graph: &Graph, targets: &[u32], cfg: &EvalBlockConfig) -> Block {
+    let bn = cfg.block_nodes;
+    let planes = if cfg.adj_mode == AdjMode::Relational {
+        cfg.relations
+    } else {
+        1
+    };
+    let mut slot_of: HashMap<u32, u32> = HashMap::new();
+    let mut globals: Vec<u32> = Vec::with_capacity(bn);
+    for &t in targets {
+        if !slot_of.contains_key(&t) && globals.len() < bn {
+            slot_of.insert(t, globals.len() as u32);
+            globals.push(t);
+        }
+    }
+    // deterministic context: first-k neighbours per hop
+    let mut frontier: Vec<u32> = globals.clone();
+    for &fanout in &cfg.context_fanouts {
+        let mut next = Vec::new();
+        'outer: for &v in &frontier {
+            for &u in graph.neighbors_of(v as usize).iter().take(fanout) {
+                if !slot_of.contains_key(&u) {
+                    if globals.len() >= bn {
+                        break 'outer;
+                    }
+                    slot_of.insert(u, globals.len() as u32);
+                    globals.push(u);
+                    next.push(u);
+                }
+            }
+        }
+        frontier = next;
+        if frontier.is_empty() {
+            break;
+        }
+    }
+
+    let n_used = globals.len();
+    // induced adjacency
+    let mut edges: Vec<(u32, u32, u8)> = Vec::new();
+    for (&v, &s) in slot_of.iter() {
+        let rels = graph.rels_of(v as usize);
+        for (k, &u) in graph.neighbors_of(v as usize).iter().enumerate() {
+            if let Some(&su) = slot_of.get(&u) {
+                let r = if cfg.adj_mode == AdjMode::Relational {
+                    directional_rel(
+                        v,
+                        u,
+                        rels.map(|rs| rs[k]).unwrap_or(0),
+                        cfg.boundary,
+                    )
+                } else {
+                    0
+                };
+                edges.push((s, su, r));
+            }
+        }
+    }
+    let mut adj = vec![0.0f32; planes * bn * bn];
+    fill_adj(&mut adj, bn, cfg.relations, n_used, &edges, cfg.adj_mode);
+
+    let mut feats = vec![0.0f32; bn * cfg.feat_dim];
+    for (s, &g) in globals.iter().enumerate() {
+        feats[s * cfg.feat_dim..(s + 1) * cfg.feat_dim]
+            .copy_from_slice(graph.feature(g as usize));
+    }
+
+    Block {
+        feats,
+        adj,
+        pos_u: Vec::new(),
+        pos_v: Vec::new(),
+        rel: Vec::new(),
+        neg_v: Vec::new(),
+        mask: Vec::new(),
+        n_used,
+        globals,
+    }
+}
+
+/// Mean Reciprocal Rank accumulator.
+#[derive(Debug, Default, Clone)]
+pub struct Mrr {
+    sum: f64,
+    count: usize,
+}
+
+impl Mrr {
+    /// Add one edge's scores: positive first, then the candidates.
+    /// Rank = 1 + #candidates with score >= positive (ties pessimistic,
+    /// matching OGB's evaluator).
+    pub fn add(&mut self, pos_score: f32, neg_scores: &[f32]) {
+        let rank =
+            1 + neg_scores.iter().filter(|&&s| s >= pos_score).count();
+        self.sum += 1.0 / rank as f64;
+        self.count += 1;
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{dcsbm, DcsbmConfig};
+    use crate::util::rng::Rng;
+
+    fn graph() -> Graph {
+        dcsbm(&DcsbmConfig {
+            nodes: 400,
+            communities: 4,
+            avg_degree: 10.0,
+            homophily: 0.8,
+            feat_dim: 8,
+            feature_noise: 0.3,
+            degree_exponent: 0.0,
+            seed: 8,
+        })
+    }
+
+    fn plan(k_negs: usize) -> (Graph, EvalPlan) {
+        let g = graph();
+        let mut rng = Rng::new(1);
+        let edges: Vec<(u32, u32)> = (0..10)
+            .map(|_| {
+                let u = rng.below(400) as u32;
+                let v = g.neighbors_of(u as usize)[0];
+                (u, v)
+            })
+            .collect();
+        let negs: Vec<Vec<u32>> = edges
+            .iter()
+            .map(|_| (0..k_negs).map(|_| rng.below(400) as u32).collect())
+            .collect();
+        let cfg = EvalBlockConfig::new(64, 8, AdjMode::SelfLoop, 1, 0);
+        let p = EvalPlan::build(&g, &edges, &negs, &cfg);
+        (g, p)
+    }
+
+    #[test]
+    fn covers_all_required_nodes() {
+        let (_, p) = plan(8);
+        for &(u, v, _) in &p.edges {
+            assert!(p.slot_of.contains_key(&u));
+            assert!(p.slot_of.contains_key(&v));
+        }
+        for negs in &p.negatives {
+            for c in negs {
+                assert!(p.slot_of.contains_key(c));
+            }
+        }
+    }
+
+    #[test]
+    fn targets_lead_each_block() {
+        let (_, p) = plan(8);
+        for (&g, &(bi, s)) in &p.slot_of {
+            let b = &p.blocks[bi as usize];
+            assert!((s as usize) < p.targets[bi as usize]);
+            assert_eq!(b.globals[s as usize], g);
+        }
+    }
+
+    #[test]
+    fn pair_schedule_interleaves_pos_then_negs() {
+        let (_, p) = plan(3);
+        let pairs: Vec<_> = p.pairs().collect();
+        assert_eq!(pairs.len(), p.num_pairs());
+        assert_eq!(pairs.len(), 10 * 4);
+        // first group: edge 0 pos then its 3 negatives, same head
+        let (u0, v0, _) = p.edges[0];
+        assert_eq!(pairs[0].0, u0);
+        assert_eq!(pairs[0].1, v0);
+        assert!(pairs[1..4].iter().all(|&(u, _, _)| u == u0));
+    }
+
+    #[test]
+    fn deterministic_plan() {
+        let (_, a) = plan(4);
+        let (_, b) = plan(4);
+        assert_eq!(a.blocks.len(), b.blocks.len());
+        for (x, y) in a.blocks.iter().zip(&b.blocks) {
+            assert_eq!(x.globals, y.globals);
+            assert_eq!(x.adj, y.adj);
+        }
+    }
+
+    #[test]
+    fn mrr_arithmetic() {
+        let mut m = Mrr::default();
+        m.add(1.0, &[0.5, 0.2]); // rank 1
+        m.add(0.1, &[0.5, 0.2]); // rank 3
+        assert!((m.value() - (1.0 + 1.0 / 3.0) / 2.0).abs() < 1e-12);
+        assert_eq!(m.count(), 2);
+        // tie counts against the positive
+        let mut t = Mrr::default();
+        t.add(0.5, &[0.5]);
+        assert!((t.value() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_model_mrr_is_one() {
+        let mut m = Mrr::default();
+        for _ in 0..5 {
+            m.add(10.0, &[1.0, 2.0, 3.0]);
+        }
+        assert_eq!(m.value(), 1.0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Mini-batch and evaluation block samplers.
+//!
+//! The AOT artifacts consume *fixed-shape padded blocks*: `Bn` nodes
+//! with a dense row-normalized adjacency, `Be` (positive, negative)
+//! edge-index pairs and a validity mask. This module turns CSR
+//! (sub)graphs into those blocks:
+//!
+//! - [`train::TrainSampler`] — GraphSAGE-style fan-out sampling around
+//!   a random batch of local training edges, with one corrupted-tail
+//!   negative per positive (paper §4.1).
+//! - [`eval::EvalPlan`] — deterministic blocks covering the nodes
+//!   needed for MRR evaluation (no sampling randomness in eval,
+//!   following the paper).
+//!
+//! Adjacency conventions (must match `python/compile/model.py`):
+//! GCN blocks get `D^-1 (A + I)` (self-loops inside the normalisation);
+//! SAGE/RGCN blocks get neighbour-only `D^-1 A` (the self path is the
+//! model's separate `W_self` term). Heterogeneous blocks carry one
+//! row-normalized adjacency per directional relation (R = 4: q→i, i→q,
+//! i-i forward, i-i inverse).
+
+pub mod eval;
+pub mod train;
+
+pub use eval::{EvalPlan, Mrr};
+pub use train::{TrainSampler, TrainSamplerConfig};
+
+/// How the dense block adjacency is normalised for the encoder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdjMode {
+    /// Row-normalized with self-loops (GCN; also fine for MLP which
+    /// ignores it).
+    SelfLoop,
+    /// Neighbour-only row normalisation (SAGE's aggregation term).
+    NeighborOnly,
+    /// Per-relation neighbour-only normalisation (RGCN), R block mats.
+    Relational,
+}
+
+impl AdjMode {
+    /// Mode for an encoder name from the AOT manifest.
+    pub fn for_encoder(encoder: &str) -> AdjMode {
+        match encoder {
+            "sage" => AdjMode::NeighborOnly,
+            "rgcn" => AdjMode::Relational,
+            _ => AdjMode::SelfLoop,
+        }
+    }
+}
+
+/// One padded training/eval block, laid out exactly as the artifact
+/// arguments expect (row-major f32 / i32 buffers).
+#[derive(Clone, Debug)]
+pub struct Block {
+    /// `Bn x F` node features (padding rows zero).
+    pub feats: Vec<f32>,
+    /// `Bn x Bn` (homogeneous) or `R x Bn x Bn` (relational) dense
+    /// row-normalized adjacency.
+    pub adj: Vec<f32>,
+    /// Local head/tail indices of positive edges, `Be`.
+    pub pos_u: Vec<i32>,
+    pub pos_v: Vec<i32>,
+    /// Relation id per edge (hetero decoders), `Be`.
+    pub rel: Vec<i32>,
+    /// Corrupted tails, `Be`.
+    pub neg_v: Vec<i32>,
+    /// 1.0 for valid edge slots, 0.0 for padding, `Be`.
+    pub mask: Vec<f32>,
+    /// Nodes actually used (<= Bn).
+    pub n_used: usize,
+    /// Global node id per local slot (len `n_used`).
+    pub globals: Vec<u32>,
+}
+
+/// Dense row-normalisation helper shared by train/eval block builders.
+///
+/// `edges` are local (u, v, rel) adjacency entries (directed views).
+pub(crate) fn fill_adj(
+    adj: &mut [f32],
+    bn: usize,
+    relations: usize,
+    n_used: usize,
+    edges: &[(u32, u32, u8)],
+    mode: AdjMode,
+) {
+    adj.iter_mut().for_each(|x| *x = 0.0);
+    match mode {
+        AdjMode::SelfLoop | AdjMode::NeighborOnly => {
+            for &(u, v, _) in edges {
+                adj[u as usize * bn + v as usize] = 1.0;
+            }
+            if mode == AdjMode::SelfLoop {
+                for i in 0..n_used {
+                    adj[i * bn + i] = 1.0;
+                }
+            }
+            for i in 0..n_used {
+                let row = &mut adj[i * bn..i * bn + n_used];
+                let deg: f32 = row.iter().sum();
+                if deg > 0.0 {
+                    row.iter_mut().for_each(|x| *x /= deg);
+                }
+            }
+        }
+        AdjMode::Relational => {
+            let plane = bn * bn;
+            for &(u, v, r) in edges {
+                debug_assert!((r as usize) < relations);
+                adj[r as usize * plane + u as usize * bn + v as usize] = 1.0;
+            }
+            for r in 0..relations {
+                for i in 0..n_used {
+                    let row = &mut adj
+                        [r * plane + i * bn..r * plane + i * bn + n_used];
+                    let deg: f32 = row.iter().sum();
+                    if deg > 0.0 {
+                        row.iter_mut().for_each(|x| *x /= deg);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Directional relation id for a heterogeneous adjacency entry
+/// (paper App. A: 4 = forward + inverse relations).
+///
+/// `boundary` splits queries (`global < boundary`) from items.
+pub(crate) fn directional_rel(
+    gu: u32,
+    gv: u32,
+    base_rel: u8,
+    boundary: u32,
+) -> u8 {
+    match base_rel {
+        0 => {
+            if gu < boundary {
+                0 // query -> item
+            } else {
+                1 // item -> query
+            }
+        }
+        _ => {
+            if gu < gv {
+                2 // item-item forward
+            } else {
+                3 // item-item inverse
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_adj_self_loop_rows_stochastic() {
+        let bn = 4;
+        let mut adj = vec![0.0; bn * bn];
+        fill_adj(&mut adj, bn, 1, 3, &[(0, 1, 0), (1, 0, 0)], AdjMode::SelfLoop);
+        // rows 0..3 sum to 1; padded row 3 all zero
+        for i in 0..3 {
+            let s: f32 = adj[i * bn..(i + 1) * bn].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "row {i} sums {s}");
+        }
+        assert!(adj[3 * bn..].iter().all(|&x| x == 0.0));
+        // node 2 has only its self loop
+        assert_eq!(adj[2 * bn + 2], 1.0);
+    }
+
+    #[test]
+    fn fill_adj_neighbor_only_zero_rows() {
+        let bn = 3;
+        let mut adj = vec![0.0; bn * bn];
+        fill_adj(&mut adj, bn, 1, 3, &[(0, 1, 0)], AdjMode::NeighborOnly);
+        assert_eq!(adj[0 * bn + 1], 1.0);
+        // isolated node rows stay zero (W_self carries them)
+        assert!(adj[1 * bn..2 * bn].iter().all(|&x| x == 0.0));
+        assert!(adj[2 * bn..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn fill_adj_relational_planes() {
+        let bn = 2;
+        let r = 4;
+        let mut adj = vec![0.0; r * bn * bn];
+        fill_adj(
+            &mut adj,
+            bn,
+            r,
+            2,
+            &[(0, 1, 0), (1, 0, 1)],
+            AdjMode::Relational,
+        );
+        assert_eq!(adj[0 * 4 + 0 * bn + 1], 1.0); // rel 0 plane
+        assert_eq!(adj[1 * 4 + 1 * bn + 0], 1.0); // rel 1 plane
+        assert!(adj[2 * 4..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn directional_rel_mapping() {
+        let b = 10;
+        assert_eq!(directional_rel(3, 12, 0, b), 0); // q->i
+        assert_eq!(directional_rel(12, 3, 0, b), 1); // i->q
+        assert_eq!(directional_rel(11, 14, 1, b), 2); // ii fwd
+        assert_eq!(directional_rel(14, 11, 1, b), 3); // ii inv
+    }
+
+    #[test]
+    fn adj_mode_per_encoder() {
+        assert_eq!(AdjMode::for_encoder("gcn"), AdjMode::SelfLoop);
+        assert_eq!(AdjMode::for_encoder("mlp"), AdjMode::SelfLoop);
+        assert_eq!(AdjMode::for_encoder("sage"), AdjMode::NeighborOnly);
+        assert_eq!(AdjMode::for_encoder("rgcn"), AdjMode::Relational);
+    }
+}

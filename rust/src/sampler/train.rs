@@ -1,0 +1,425 @@
+//! Training mini-batch sampler: random local edges + GraphSAGE fan-out.
+//!
+//! Per batch (Alg 2 line 8, "Construct mini-batch on local subgraph"):
+//! 1. sample `Be` training edges uniformly from the trainer's local
+//!    subgraph (directed adjacency entries — uniform over edges);
+//! 2. one negative per positive by corrupting the tail with a random
+//!    non-neighbour (restricted to items for query-item edges on
+//!    bipartite graphs);
+//! 3. expand endpoints with fan-out neighbour sampling (default
+//!    [10, 5], the usual 2-layer GraphSAGE setting) until the `Bn`
+//!    node budget is filled;
+//! 4. induce and row-normalise the dense block adjacency.
+//!
+//! The sampler reuses its block buffers across calls — the hot path
+//! allocates nothing after warmup (see EXPERIMENTS.md §Perf).
+
+use std::collections::HashMap;
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+use super::{directional_rel, fill_adj, AdjMode, Block};
+
+#[derive(Clone, Debug)]
+pub struct TrainSamplerConfig {
+    pub block_nodes: usize,
+    pub block_edges: usize,
+    pub feat_dim: usize,
+    pub fanouts: Vec<usize>,
+    pub adj_mode: AdjMode,
+    /// Relation planes in the block (1 for homogeneous).
+    pub relations: usize,
+    /// Bipartite boundary in *global* ids (0 = homogeneous).
+    pub boundary: u32,
+}
+
+impl TrainSamplerConfig {
+    pub fn homogeneous(bn: usize, be: usize, f: usize, mode: AdjMode) -> Self {
+        TrainSamplerConfig {
+            block_nodes: bn,
+            block_edges: be,
+            feat_dim: f,
+            fanouts: vec![10, 5],
+            adj_mode: mode,
+            relations: 1,
+            boundary: 0,
+        }
+    }
+}
+
+/// Samples blocks from one trainer's local graph.
+pub struct TrainSampler {
+    cfg: TrainSamplerConfig,
+    /// Local graph (a partition's induced subgraph, or the full train
+    /// graph for GGS).
+    graph: Graph,
+    /// Local -> global id map (identity when training on the full graph).
+    globals: Vec<u32>,
+    block: Block,
+    /// Scratch: local node -> block slot.
+    slot_of: HashMap<u32, u32>,
+}
+
+impl TrainSampler {
+    pub fn new(graph: Graph, globals: Vec<u32>, cfg: TrainSamplerConfig) -> Self {
+        assert_eq!(graph.num_nodes(), globals.len());
+        let bn = cfg.block_nodes;
+        let planes = if cfg.adj_mode == AdjMode::Relational {
+            cfg.relations
+        } else {
+            1
+        };
+        let block = Block {
+            feats: vec![0.0; bn * cfg.feat_dim],
+            adj: vec![0.0; planes * bn * bn],
+            pos_u: vec![0; cfg.block_edges],
+            pos_v: vec![0; cfg.block_edges],
+            rel: vec![0; cfg.block_edges],
+            neg_v: vec![0; cfg.block_edges],
+            mask: vec![0.0; cfg.block_edges],
+            n_used: 0,
+            globals: Vec::with_capacity(bn),
+        };
+        TrainSampler { cfg, graph, globals, block, slot_of: HashMap::new() }
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Whether this local graph can produce batches at all.
+    pub fn has_edges(&self) -> bool {
+        self.graph.num_edges() > 0
+    }
+
+    /// Uniform random directed adjacency entry -> undirected edge.
+    fn random_edge(&self, rng: &mut Rng) -> (u32, u32, u8) {
+        let e = rng.below(self.graph.num_adj());
+        // find row via binary search over offsets
+        let u = match self.graph.offsets.binary_search(&(e as u64)) {
+            Ok(mut i) => {
+                // offsets can repeat for degree-0 nodes; take the last
+                // row starting at e.
+                while i + 1 < self.graph.offsets.len()
+                    && self.graph.offsets[i + 1] == e as u64
+                {
+                    i += 1;
+                }
+                i
+            }
+            Err(i) => i - 1,
+        };
+        let v = self.graph.neighbors[e];
+        let r = self.graph.rel.as_ref().map(|rs| rs[e]).unwrap_or(0);
+        (u as u32, v, r)
+    }
+
+    /// Corrupted tail for `(u, v)`: random local non-neighbour of `u`,
+    /// kept within the item population for query-item edges.
+    fn negative_tail(&self, u: u32, rng: &mut Rng) -> u32 {
+        let n = self.graph.num_nodes();
+        for _ in 0..32 {
+            let cand = rng.below(n) as u32;
+            if cand == u {
+                continue;
+            }
+            if self.cfg.boundary > 0
+                && self.globals[cand as usize] < self.cfg.boundary
+            {
+                continue; // tails must be items on bipartite graphs
+            }
+            if !self.graph.has_edge(u as usize, cand as usize) {
+                return cand;
+            }
+        }
+        // Dense-neighbourhood fallback: accept a random distinct node.
+        ((u as usize + 1 + rng.below(n - 1)) % n) as u32
+    }
+
+    /// Block slot for local node `v`, inserting if the budget allows.
+    fn slot(&mut self, v: u32) -> Option<u32> {
+        if let Some(&s) = self.slot_of.get(&v) {
+            return Some(s);
+        }
+        if self.block.n_used >= self.cfg.block_nodes {
+            return None;
+        }
+        let s = self.block.n_used as u32;
+        self.block.n_used += 1;
+        self.slot_of.insert(v, s);
+        self.block.globals.push(self.globals[v as usize]);
+        Some(s)
+    }
+
+    /// Sample the next training block. Returns None if the local graph
+    /// has no edges (a failed/empty partition).
+    pub fn next_block(&mut self, rng: &mut Rng) -> Option<&Block> {
+        if !self.has_edges() {
+            return None;
+        }
+        let be = self.cfg.block_edges;
+        self.block.n_used = 0;
+        self.block.globals.clear();
+        self.slot_of.clear();
+
+        // 1+2: edges + negatives. Each accepted edge consumes up to 3
+        // node slots; stop accepting once the endpoint budget (3/4 of
+        // the block — the rest is reserved for fan-out context) is hit
+        // and mask the remaining edge slots instead.
+        let node_budget = (self.cfg.block_nodes * 3) / 4;
+        let mut raw: Vec<(u32, u32, u8, u32)> = Vec::with_capacity(be);
+        let mut frontier: Vec<u32> = Vec::new();
+        for _ in 0..be {
+            if self.block.n_used + 3 > node_budget {
+                break;
+            }
+            let (u, v, r) = self.random_edge(rng);
+            let nv = self.negative_tail(u, rng);
+            for &x in &[u, v, nv] {
+                if !self.slot_of.contains_key(&x) {
+                    self.slot(x).expect("within budget");
+                    frontier.push(x);
+                }
+            }
+            raw.push((u, v, r, nv));
+        }
+        let fanouts = self.cfg.fanouts.clone();
+        let mut picks: Vec<u32> = Vec::new();
+        for fanout in fanouts {
+            let mut next_frontier = Vec::new();
+            'outer: for &v in &frontier {
+                picks.clear();
+                {
+                    let nbrs = self.graph.neighbors_of(v as usize);
+                    let take = fanout.min(nbrs.len());
+                    for _ in 0..take {
+                        picks.push(nbrs[rng.below(nbrs.len())]);
+                    }
+                }
+                for &u in &picks {
+                    let fresh = !self.slot_of.contains_key(&u);
+                    match self.slot(u) {
+                        Some(_) => {
+                            if fresh {
+                                next_frontier.push(u);
+                            }
+                        }
+                        None => break 'outer, // block full
+                    }
+                }
+            }
+            frontier = next_frontier;
+            if frontier.is_empty() {
+                break;
+            }
+        }
+
+        // 4: induced dense adjacency among block nodes.
+        let mut edges: Vec<(u32, u32, u8)> = Vec::new();
+        let slots: Vec<(u32, u32)> =
+            self.slot_of.iter().map(|(&v, &s)| (v, s)).collect();
+        for &(v, s) in &slots {
+            let rels = self.graph.rels_of(v as usize);
+            for (k, &u) in self.graph.neighbors_of(v as usize).iter().enumerate()
+            {
+                if let Some(&su) = self.slot_of.get(&u) {
+                    let r = if self.cfg.adj_mode == AdjMode::Relational {
+                        directional_rel(
+                            self.globals[v as usize],
+                            self.globals[u as usize],
+                            rels.map(|rs| rs[k]).unwrap_or(0),
+                            self.cfg.boundary,
+                        )
+                    } else {
+                        0
+                    };
+                    edges.push((s, su, r));
+                }
+            }
+        }
+        fill_adj(
+            &mut self.block.adj,
+            self.cfg.block_nodes,
+            self.cfg.relations,
+            self.block.n_used,
+            &edges,
+            self.cfg.adj_mode,
+        );
+
+        // Features.
+        self.block.feats.iter_mut().for_each(|x| *x = 0.0);
+        for (&v, &s) in self.slot_of.iter() {
+            let dst = s as usize * self.cfg.feat_dim;
+            self.block.feats[dst..dst + self.cfg.feat_dim]
+                .copy_from_slice(self.graph.feature(v as usize));
+        }
+
+        // Edge index arrays; slots beyond `raw.len()` are masked out.
+        self.block.pos_u.iter_mut().for_each(|x| *x = 0);
+        self.block.pos_v.iter_mut().for_each(|x| *x = 0);
+        self.block.neg_v.iter_mut().for_each(|x| *x = 0);
+        self.block.rel.iter_mut().for_each(|x| *x = 0);
+        self.block.mask.iter_mut().for_each(|x| *x = 0.0);
+        for (i, &(u, v, r, nv)) in raw.iter().enumerate() {
+            let su = self.slot_of[&u] as i32;
+            let sv = self.slot_of[&v] as i32;
+            let sn = self.slot_of[&nv] as i32;
+            self.block.pos_u[i] = su;
+            self.block.pos_v[i] = sv;
+            self.block.neg_v[i] = sn;
+            self.block.mask[i] = 1.0;
+            self.block.rel[i] = if self.cfg.boundary > 0 {
+                directional_rel(
+                    self.globals[u as usize],
+                    self.globals[v as usize],
+                    r,
+                    self.cfg.boundary,
+                ) as i32
+            } else {
+                0
+            };
+        }
+        Some(&self.block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{dcsbm, DcsbmConfig};
+    use crate::graph::Subgraph;
+
+    fn graph() -> Graph {
+        dcsbm(&DcsbmConfig {
+            nodes: 500,
+            communities: 5,
+            avg_degree: 10.0,
+            homophily: 0.8,
+            feat_dim: 8,
+            feature_noise: 0.3,
+            degree_exponent: 0.5,
+            seed: 21,
+        })
+    }
+
+    fn sampler(mode: AdjMode) -> TrainSampler {
+        let g = graph();
+        let globals: Vec<u32> = (0..g.num_nodes() as u32).collect();
+        let cfg = TrainSamplerConfig {
+            block_nodes: 64,
+            block_edges: 16,
+            feat_dim: 8,
+            fanouts: vec![4, 3],
+            adj_mode: mode,
+            relations: 1,
+            boundary: 0,
+        };
+        TrainSampler::new(g, globals, cfg)
+    }
+
+    #[test]
+    fn block_indices_valid() {
+        let mut s = sampler(AdjMode::SelfLoop);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let b = s.next_block(&mut rng).unwrap();
+            assert!(b.n_used <= 64);
+            assert!(b.n_used >= 2);
+            let valid = b.mask.iter().filter(|&&m| m == 1.0).count();
+            assert!(valid >= 1, "no valid edges");
+            // valid slots form a prefix; all indices in range
+            for i in 0..16 {
+                assert!(b.mask[i] == 0.0 || b.mask[i] == 1.0);
+                if i > 0 {
+                    assert!(b.mask[i] <= b.mask[i - 1], "mask not a prefix");
+                }
+                if b.mask[i] == 1.0 {
+                    for &x in [&b.pos_u[i], &b.pos_v[i], &b.neg_v[i]] {
+                        assert!(
+                            (x as usize) < b.n_used,
+                            "index {x} >= {}",
+                            b.n_used
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn positive_edges_exist_negatives_mostly_dont() {
+        let mut s = sampler(AdjMode::SelfLoop);
+        let mut rng = Rng::new(2);
+        let b = s.next_block(&mut rng).unwrap().clone();
+        // recover local ids: block globals == local ids here
+        for i in 0..16 {
+            if b.mask[i] != 1.0 {
+                continue;
+            }
+            let u = b.globals[b.pos_u[i] as usize] as usize;
+            let v = b.globals[b.pos_v[i] as usize] as usize;
+            assert!(s.graph().has_edge(u, v), "pos edge missing {u}-{v}");
+        }
+    }
+
+    #[test]
+    fn rows_normalized() {
+        let mut s = sampler(AdjMode::SelfLoop);
+        let mut rng = Rng::new(3);
+        let b = s.next_block(&mut rng).unwrap();
+        for i in 0..b.n_used {
+            let sum: f32 = b.adj[i * 64..(i + 1) * 64].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {i}: {sum}");
+        }
+    }
+
+    #[test]
+    fn neighbor_only_mode_excludes_self() {
+        let mut s = sampler(AdjMode::NeighborOnly);
+        let mut rng = Rng::new(4);
+        let b = s.next_block(&mut rng).unwrap();
+        for i in 0..b.n_used {
+            assert_eq!(b.adj[i * 64 + i], 0.0, "self loop at {i}");
+        }
+    }
+
+    #[test]
+    fn empty_partition_yields_none() {
+        let g = graph();
+        // single node -> no edges
+        let sub = Subgraph::induce(&g, &[0]);
+        let cfg = TrainSamplerConfig::homogeneous(64, 16, 8, AdjMode::SelfLoop);
+        let mut s = TrainSampler::new(sub.graph, sub.global_ids, cfg);
+        assert!(s.next_block(&mut Rng::new(5)).is_none());
+    }
+
+    #[test]
+    fn deterministic_given_rng() {
+        let mut a = sampler(AdjMode::SelfLoop);
+        let mut b = sampler(AdjMode::SelfLoop);
+        let blk_a = a.next_block(&mut Rng::new(6)).unwrap().clone();
+        let blk_b = b.next_block(&mut Rng::new(6)).unwrap().clone();
+        assert_eq!(blk_a.pos_u, blk_b.pos_u);
+        assert_eq!(blk_a.adj, blk_b.adj);
+        assert_eq!(blk_a.feats, blk_b.feats);
+    }
+
+    #[test]
+    fn prop_block_invariants_across_seeds() {
+        crate::util::prop::check(15, 31, |rng: &mut Rng| {
+            let mut s = sampler(AdjMode::SelfLoop);
+            let b = s.next_block(rng).unwrap();
+            crate::prop_assert!(b.globals.len() == b.n_used);
+            // all slot features match source graph features
+            let set: std::collections::HashSet<_> = b.globals.iter().collect();
+            crate::prop_assert!(set.len() == b.n_used, "duplicate slots");
+            // padded adjacency region is zero
+            for i in b.n_used..64 {
+                let row = &b.adj[i * 64..(i + 1) * 64];
+                crate::prop_assert!(row.iter().all(|&x| x == 0.0));
+            }
+            Ok(())
+        });
+    }
+}

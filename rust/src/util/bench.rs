@@ -1,0 +1,187 @@
+//! Timing/bench harness (replaces `criterion`, unavailable offline).
+//!
+//! Every `[[bench]]` target is a `harness = false` binary built on this
+//! module: `time()` measures a closure with warmup + repeated samples
+//! and robust statistics; `Table` renders the paper-style result tables
+//! to stdout and `results/*.json` for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Timing summary over n samples.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub label: String,
+    pub samples: Vec<f64>, // seconds
+}
+
+impl Timing {
+    pub fn median_s(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+    pub fn p95_s(&self) -> f64 {
+        stats::percentile(&self.samples, 95.0)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} median {:>10} p95 {:>10} (n={})",
+            self.label,
+            fmt_secs(self.median_s()),
+            fmt_secs(self.p95_s()),
+            self.samples.len()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            ("median_s", Json::num(self.median_s())),
+            ("mean_s", Json::num(self.mean_s())),
+            ("p95_s", Json::num(self.p95_s())),
+            ("n", Json::num(self.samples.len() as f64)),
+        ])
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Time `f` with `warmup` discarded runs then `samples` measured runs.
+pub fn time<F: FnMut()>(label: &str, warmup: usize, samples: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    Timing { label: label.to_string(), samples: out }
+}
+
+/// Paper-style text table with aligned columns.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout and persist under `results/<name>.json`.
+    pub fn emit(&self, name: &str) {
+        println!("{}", self.render());
+        let json = Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "headers",
+                Json::arr(self.headers.iter().map(|h| Json::str(h.clone()))),
+            ),
+            (
+                "rows",
+                Json::arr(self.rows.iter().map(|r| {
+                    Json::arr(r.iter().map(|c| Json::str(c.clone())))
+                })),
+            ),
+        ]);
+        let path = std::path::Path::new("results").join(format!("{name}.json"));
+        if let Err(e) = json.write_file(&path) {
+            eprintln!("warn: could not write {}: {e}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_returns_requested_samples() {
+        let t = time("noop", 1, 5, || {});
+        assert_eq!(t.samples.len(), 5);
+        assert!(t.median_s() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert!(fmt_secs(2.5e-9).ends_with("ns"));
+        assert!(fmt_secs(2.5e-5).ends_with("µs"));
+        assert!(fmt_secs(2.5e-3).ends_with("ms"));
+        assert!(fmt_secs(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Tiny CLI parser (replaces `clap`, unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors, defaults and a generated usage
+//! string. Used by the `rtma` binary, the examples and every bench
+//! harness (which receive extra args from `cargo bench -- ...`).
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: `--key value|--key=value|--flag` plus positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — flags must be declared
+    /// so `--flag value` vs `--key value` is unambiguous.
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        args: I,
+        known_flags: &[&str],
+    ) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    out.opts.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    // Trailing --name with no value: treat as a flag.
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.pos.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]). Benches invoked
+    /// through `cargo bench` receive a trailing `--bench` argument —
+    /// it is accepted as a flag automatically.
+    pub fn parse(known_flags: &[&str]) -> Args {
+        let mut flags: Vec<&str> = known_flags.to_vec();
+        flags.push("bench");
+        Args::parse_from(std::env::args().skip(1), &flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: bad usize {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: bad u64 {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: bad f64 {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+
+    /// First positional = subcommand, remaining args re-wrapped.
+    pub fn subcommand(&self) -> (Option<&str>, Args) {
+        match self.pos.split_first() {
+            None => (None, self.clone()),
+            Some((head, rest)) => {
+                let mut sub = self.clone();
+                sub.pos = rest.to_vec();
+                (Some(head.as_str()), sub)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, flags: &[&str]) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from), flags)
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = parse("--m 3 --dataset=citation-sim", &[]);
+        assert_eq!(a.usize_or("m", 0), 3);
+        assert_eq!(a.str_or("dataset", ""), "citation-sim");
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse("--quick --seed 7 run", &["quick"]);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("seed"));
+        assert_eq!(a.u64_or("seed", 0), 7);
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn trailing_bare_flag() {
+        let a = parse("--verbose", &[]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("", &[]);
+        assert_eq!(a.usize_or("m", 3), 3);
+        assert_eq!(a.f64_or("rho", 2.0), 2.0);
+        assert_eq!(a.str_or("x", "d"), "d");
+    }
+
+    #[test]
+    fn subcommand_splits() {
+        let a = parse("train --m 5 extra", &[]);
+        let (cmd, rest) = a.subcommand();
+        assert_eq!(cmd, Some("train"));
+        assert_eq!(rest.positional(), &["extra".to_string()]);
+        assert_eq!(rest.usize_or("m", 0), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad usize")]
+    fn bad_number_panics() {
+        parse("--m nope", &[]).usize_or("m", 0);
+    }
+}

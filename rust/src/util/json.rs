@@ -1,0 +1,501 @@
+//! Minimal JSON: value model, recursive-descent parser, writer.
+//!
+//! Replaces `serde_json` (unavailable offline). Handles everything the
+//! crate exchanges as JSON: the AOT `artifacts/manifest.json` contract,
+//! experiment configs and bench result files. Numbers are kept as `f64`
+//! (adequate: the manifest's largest integers are array shapes).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value. Objects use `BTreeMap` for deterministic output.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ---- typed accessors -------------------------------------------------
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup; `Json::Null` for missing keys.
+    pub fn get(&self, key: &str) -> &Json {
+        static NULL: Json = Json::Null;
+        match self {
+            Json::Obj(m) => m.get(key).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    /// Path lookup: `j.at(&["variants", "gcn_mlp", "params"])`.
+    pub fn at(&self, path: &[&str]) -> &Json {
+        path.iter().fold(self, |j, k| j.get(k))
+    }
+
+    // ---- constructors ----------------------------------------------------
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+    pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+    pub fn num<T: Into<f64>>(x: T) -> Json {
+        Json::Num(x.into())
+    }
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Insert into an object (panics on non-objects: programmer error).
+    pub fn set(&mut self, key: &str, value: Json) {
+        match self {
+            Json::Obj(m) => {
+                m.insert(key.to_string(), value);
+            }
+            _ => panic!("Json::set on non-object"),
+        }
+    }
+
+    // ---- io ----------------------------------------------------------------
+    pub fn parse(text: &str) -> Result<Json, JsonError> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(p.err("trailing data"));
+        }
+        Ok(v)
+    }
+
+    pub fn read_file(path: &std::path::Path) -> anyhow::Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        Ok(Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?)
+    }
+
+    pub fn write_file(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, format!("{self:#}"))?;
+        Ok(())
+    }
+}
+
+/// Parse error with byte offset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JsonError {
+    pub msg: String,
+    pub offset: usize,
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.offset, self.msg)
+    }
+}
+impl std::error::Error for JsonError {}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { msg: msg.to_string(), offset: self.i }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json, JsonError> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{s}'")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        match self.peek() {
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected value")),
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            self.skip_ws();
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.eat(b'{')?;
+        let mut out = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            out.insert(key, self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let c = self.peek().ok_or_else(|| self.err("bad escape"))?;
+                    self.i += 1;
+                    match c {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .ok_or_else(|| self.err("short \\u"))?;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex)
+                                    .map_err(|_| self.err("bad \\u"))?,
+                                16,
+                            )
+                            .map_err(|_| self.err("bad \\u"))?;
+                            self.i += 4;
+                            // Surrogate pairs: not needed by our files;
+                            // map unpaired surrogates to U+FFFD.
+                            s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        }
+                        _ => return Err(self.err("bad escape char")),
+                    }
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar.
+                    let rest = &self.b[self.i..];
+                    let text = std::str::from_utf8(rest)
+                        .map_err(|_| self.err("invalid utf8"))?;
+                    let ch = text.chars().next().unwrap();
+                    s.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self
+            .peek()
+            .map(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .unwrap_or(false)
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| self.err("bad number"))
+    }
+}
+
+// ---- writer ----------------------------------------------------------------
+
+impl fmt::Display for Json {
+    /// `{}` for compact, `{:#}` for pretty (2-space indent).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write_json(self, f, if f.alternate() { Some(0) } else { None })
+    }
+}
+
+fn write_json(
+    j: &Json,
+    f: &mut fmt::Formatter<'_>,
+    indent: Option<usize>,
+) -> fmt::Result {
+    match j {
+        Json::Null => write!(f, "null"),
+        Json::Bool(b) => write!(f, "{b}"),
+        Json::Num(x) => {
+            if x.fract() == 0.0 && x.abs() < 1e15 {
+                write!(f, "{}", *x as i64)
+            } else {
+                write!(f, "{x}")
+            }
+        }
+        Json::Str(s) => write_str(s, f),
+        Json::Arr(v) => {
+            if v.is_empty() {
+                return write!(f, "[]");
+            }
+            let (open, sep, close, pad) = seps('[', ']', indent);
+            write!(f, "{open}")?;
+            for (i, item) in v.iter().enumerate() {
+                if i > 0 {
+                    write!(f, "{sep}")?;
+                }
+                write!(f, "{pad}")?;
+                write_json(item, f, indent.map(|d| d + 1))?;
+            }
+            write!(f, "{close}")
+        }
+        Json::Obj(m) => {
+            if m.is_empty() {
+                return write!(f, "{{}}");
+            }
+            let (open, sep, close, pad) = seps('{', '}', indent);
+            write!(f, "{open}")?;
+            for (i, (k, v)) in m.iter().enumerate() {
+                if i > 0 {
+                    write!(f, "{sep}")?;
+                }
+                write!(f, "{pad}")?;
+                write_str(k, f)?;
+                write!(f, ": ")?;
+                write_json(v, f, indent.map(|d| d + 1))?;
+            }
+            write!(f, "{close}")
+        }
+    }
+}
+
+fn seps(o: char, c: char, indent: Option<usize>) -> (String, String, String, String) {
+    match indent {
+        None => (o.to_string(), ",".into(), c.to_string(), "".into()),
+        Some(d) => {
+            let inner = "  ".repeat(d + 1);
+            let outer = "  ".repeat(d);
+            (
+                format!("{o}"),
+                ",".to_string(),
+                format!("\n{outer}{c}"),
+                format!("\n{inner}"),
+            )
+        }
+    }
+}
+
+fn write_str(s: &str, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    write!(f, "\"")?;
+    for ch in s.chars() {
+        match ch {
+            '"' => write!(f, "\\\"")?,
+            '\\' => write!(f, "\\\\")?,
+            '\n' => write!(f, "\\n")?,
+            '\r' => write!(f, "\\r")?,
+            '\t' => write!(f, "\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    write!(f, "\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("-3.5e2").unwrap(), Json::Num(-350.0));
+        assert_eq!(Json::parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": false}], "c": "x"}"#).unwrap();
+        assert_eq!(j.at(&["a"]).as_arr().unwrap().len(), 3);
+        assert_eq!(j.at(&["a"]).as_arr().unwrap()[2].get("b"), &Json::Bool(false));
+        assert_eq!(j.get("c").as_str(), Some("x"));
+        assert_eq!(j.get("missing"), &Json::Null);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn roundtrip_compact_and_pretty() {
+        let j = Json::obj(vec![
+            ("name", Json::str("tma")),
+            ("xs", Json::arr([Json::num(1), Json::num(2.5)])),
+            ("flag", Json::Bool(true)),
+            ("nothing", Json::Null),
+        ]);
+        for text in [format!("{j}"), format!("{j:#}")] {
+            assert_eq!(Json::parse(&text).unwrap(), j);
+        }
+    }
+
+    #[test]
+    fn integers_print_without_fraction() {
+        assert_eq!(format!("{}", Json::num(256)), "256");
+        assert_eq!(format!("{}", Json::num(0.5)), "0.5");
+    }
+
+    #[test]
+    fn unicode_and_escapes_roundtrip() {
+        let j = Json::str("π \"quoted\"\ttab\nnl");
+        let text = format!("{j}");
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn parses_real_manifest_shape() {
+        let text = r#"{
+          "adam": {"beta1": 0.9, "lr": 0.001},
+          "variants": {"gcn_mlp": {"params": {"total": 260,
+            "tensors": [{"init": "glorot", "name": "enc0.w",
+                         "offset": 0, "shape": [8, 8]}]}}}
+        }"#;
+        let j = Json::parse(text).unwrap();
+        assert_eq!(j.at(&["adam", "lr"]).as_f64(), Some(0.001));
+        let t = &j.at(&["variants", "gcn_mlp", "params", "tensors"]).as_arr().unwrap()[0];
+        assert_eq!(t.get("shape").as_arr().unwrap()[0].as_usize(), Some(8));
+    }
+
+    #[test]
+    fn prop_roundtrip_random_values() {
+        // Property: parse(print(v)) == v for arbitrary generated values.
+        use crate::util::rng::Rng;
+        fn gen(r: &mut Rng, depth: usize) -> Json {
+            match if depth == 0 { r.below(4) } else { r.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(r.chance(0.5)),
+                2 => Json::Num((r.gaussian() * 100.0 * 8.0).round() / 8.0),
+                3 => Json::Str(format!("s{}", r.next_u64() % 1000)),
+                4 => Json::Arr((0..r.below(4)).map(|_| gen(r, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..r.below(4))
+                        .map(|i| (format!("k{i}"), gen(r, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let mut r = Rng::new(99);
+        for _ in 0..200 {
+            let v = gen(&mut r, 3);
+            assert_eq!(Json::parse(&format!("{v}")).unwrap(), v);
+            assert_eq!(Json::parse(&format!("{v:#}")).unwrap(), v);
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Standard-library substrates.
+//!
+//! The build environment is offline and the local crate cache lacks the
+//! usual ecosystem crates (serde, rand, clap, criterion, proptest,
+//! tokio), so this module provides small, fully-tested replacements:
+//!
+//! - [`rng`] — splitmix64 / xoshiro256++ PRNGs, Gaussian sampling,
+//!   shuffles, weighted choice (replaces `rand`).
+//! - [`json`] — JSON value model, parser and writer (replaces
+//!   `serde_json`); used for the AOT manifest, configs and results.
+//! - [`stats`] — mean/std/median/percentiles, EMA smoothing, ranking.
+//! - [`cli`] — flag/subcommand parser for the `rtma` binary and the
+//!   bench harnesses (replaces `clap`).
+//! - [`prop`] — a seeded property-testing harness (replaces `proptest`).
+//! - [`bench`] — timing harness with warmup and robust statistics
+//!   (replaces `criterion`; every `[[bench]]` target uses it).
+//! - [`threadpool`] — scoped worker pool for parallel sections.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,80 @@
+//! Seeded property-testing harness (replaces `proptest`).
+//!
+//! `check(cases, seed, |rng| ...)` runs a closure over `cases`
+//! independent RNG streams; a failure reports the exact case seed so it
+//! can be replayed with `check(1, <seed>, ...)`. Deliberately minimal:
+//! no shrinking, but deterministic seeds make failures reproducible,
+//! which is what matters for CI.
+//!
+//! Used throughout the crate for coordinator invariants (partition
+//! coverage/balance, sampler validity, aggregation algebra, routing).
+
+use crate::util::rng::Rng;
+
+/// Run `f` across `cases` forked RNG streams; panics with the failing
+/// case seed on the first error returned.
+pub fn check<F>(cases: usize, seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let root = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = root.fork(case as u64);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property failed on case {case}/{cases} \
+                 (replay: check(1, {case_seed:#x}, ..)): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing `Result` for use inside [`check`].
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        check(50, 1, |rng| {
+            let n = rng.range(1, 100);
+            prop_assert!(n < 100);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_with_case_info() {
+        check(50, 2, |rng| {
+            let n = rng.range(0, 10);
+            prop_assert!(n < 9, "n was {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cases_see_distinct_streams() {
+        let mut seen = std::collections::HashSet::new();
+        check(20, 3, |rng| {
+            seen.insert(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen.len(), 20);
+    }
+}

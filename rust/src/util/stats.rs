@@ -1,0 +1,169 @@
+//! Summary statistics, EMA smoothing and ranking helpers.
+//!
+//! Used by the metrics pipeline (convergence-time extraction, Fig 3
+//! loss smoothing) and by the bench harness (robust timing summaries,
+//! the paper's "Average Rank" columns in Table 2).
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (n-1 denominator); 0 for n < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// p-th percentile (0..=100) by linear interpolation.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Exponential moving average with factor `alpha` (paper Fig 3 uses
+/// alpha = 0.1 on the raw loss curves).
+pub fn ema(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = None;
+    for &x in xs {
+        acc = Some(match acc {
+            None => x,
+            Some(prev) => alpha * x + (1.0 - alpha) * prev,
+        });
+        out.push(acc.unwrap());
+    }
+    out
+}
+
+/// 1-based competition ranks of `xs` (rank 1 = best). `higher_better`
+/// selects the direction; ties share the smallest applicable rank —
+/// matching how the paper computes its "Average Rank" columns.
+pub fn ranks(xs: &[f64], higher_better: bool) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        let (x, y) = (xs[a], xs[b]);
+        if higher_better {
+            y.partial_cmp(&x).unwrap()
+        } else {
+            x.partial_cmp(&y).unwrap()
+        }
+    });
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        for k in i..=j {
+            out[idx[k]] = (i + 1) as f64;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Mean ± std as the paper prints it, e.g. `47.78 ±0.21`.
+pub fn fmt_mean_std(xs: &[f64], decimals: usize) -> String {
+    format!(
+        "{:.*} ±{:.*}",
+        decimals,
+        mean(xs),
+        decimals,
+        std_dev(xs)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.138089935).abs() < 1e-6);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn ema_matches_hand_computation() {
+        let out = ema(&[1.0, 2.0, 3.0], 0.5);
+        assert_eq!(out, vec![1.0, 1.5, 2.25]);
+        assert!(ema(&[], 0.1).is_empty());
+    }
+
+    #[test]
+    fn ranks_directions_and_ties() {
+        // higher better: 9 -> rank 1
+        assert_eq!(ranks(&[1.0, 9.0, 5.0], true), vec![3.0, 1.0, 2.0]);
+        // lower better: 1 -> rank 1
+        assert_eq!(ranks(&[1.0, 9.0, 5.0], false), vec![1.0, 3.0, 2.0]);
+        // ties share the smallest rank
+        assert_eq!(ranks(&[5.0, 5.0, 1.0], true), vec![1.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn fmt_matches_paper_style() {
+        assert_eq!(fmt_mean_std(&[47.57, 47.99], 2), "47.78 ±0.30");
+    }
+
+    #[test]
+    fn prop_percentile_bounded_and_monotone() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(5);
+        for _ in 0..100 {
+            let n = r.range(1, 40);
+            let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+            let (lo, hi) = (min(&xs), max(&xs));
+            let mut prev = f64::NEG_INFINITY;
+            for p in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 100.0] {
+                let v = percentile(&xs, p);
+                assert!(v >= lo - 1e-12 && v <= hi + 1e-12);
+                assert!(v >= prev - 1e-12);
+                prev = v;
+            }
+        }
+    }
+}

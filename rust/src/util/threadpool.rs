@@ -1,0 +1,61 @@
+//! Scoped parallel-map helper over std threads.
+//!
+//! Replaces rayon for the few embarrassingly-parallel preprocessing
+//! sections (per-partition subgraph induction, eval block encoding is
+//! *not* parallelised — the PJRT executables are per-thread). On this
+//! testbed (1 core) parallelism degenerates gracefully to sequential.
+
+/// Run `f(i)` for i in 0..n on up to `workers` scoped threads and
+/// collect results in index order.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(workers > 0);
+    if n == 0 {
+        return Vec::new();
+    }
+    if workers == 1 || n == 1 {
+        return (0..n).map(&f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(n) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                **slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    out.into_iter().map(|x| x.expect("worker missed slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_path_matches() {
+        assert_eq!(parallel_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
+        assert!(parallel_map(0, 4, |i: usize| i).is_empty());
+    }
+
+    #[test]
+    fn workers_capped_by_n() {
+        assert_eq!(parallel_map(1, 16, |_| 7), vec![7]);
+    }
+}

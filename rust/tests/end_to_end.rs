@@ -1,0 +1,89 @@
+//! End-to-end coordinator tests: full distributed runs on quick data.
+//! Requires artifacts (skips gracefully otherwise). Time-boxed short.
+
+use random_tma::config::{Approach, RunConfig};
+use random_tma::coordinator::run_experiment;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn quick_cfg(approach: Approach) -> RunConfig {
+    RunConfig {
+        dataset: "citation-sim".into(),
+        quick: true,
+        approach,
+        trainers: 2,
+        train_secs: 5.0,
+        agg_secs: 1.0,
+        eval_edges: 32,
+        negatives: 16,
+        eval_sample: 16,
+        seed: 23,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn tma_run_produces_learning_and_metrics() {
+    if !have_artifacts() {
+        eprintln!("skip: artifacts missing");
+        return;
+    }
+    let r = run_experiment(&quick_cfg(Approach::RandomTma)).expect("run");
+    assert_eq!(r.steps.len(), 2);
+    assert!(r.steps.iter().all(|&s| s > 10), "steps {:?}", r.steps);
+    assert!(r.best_val_mrr > 0.1, "no learning: {}", r.best_val_mrr);
+    assert!(r.test_mrr > 0.1, "test mrr {}", r.test_mrr);
+    assert!(!r.val_curve.is_empty());
+    assert!((r.ratio_r - 0.5).abs() < 0.1, "r={}", r.ratio_r); // M=2
+    assert!(r.convergence_secs(0.01).is_finite());
+    // timelines are time-ordered
+    for tl in &r.trainer_losses {
+        assert!(tl.windows(2).all(|w| w[0].t <= w[1].t));
+    }
+}
+
+#[test]
+fn ggs_run_is_synchronous() {
+    if !have_artifacts() {
+        eprintln!("skip: artifacts missing");
+        return;
+    }
+    let r = run_experiment(&quick_cfg(Approach::Ggs)).expect("run");
+    // lock-step: all trainers do the same number of steps (±1 on stop)
+    let (min, max, _) = r.step_spread();
+    assert!(max - min <= 1, "ggs not synchronous: {:?}", r.steps);
+    assert!((r.ratio_r - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn failure_run_drops_partition_but_completes() {
+    if !have_artifacts() {
+        eprintln!("skip: artifacts missing");
+        return;
+    }
+    let mut cfg = quick_cfg(Approach::RandomTma);
+    cfg.trainers = 3;
+    cfg.failures = 1;
+    cfg.failed_ids = vec![1];
+    let r = run_experiment(&cfg).expect("run");
+    assert_eq!(r.steps.len(), 2, "one trainer should be gone");
+    assert!(r.test_mrr > 0.05);
+}
+
+#[test]
+fn supertma_and_psgd_have_higher_r_than_random() {
+    if !have_artifacts() {
+        eprintln!("skip: artifacts missing");
+        return;
+    }
+    let rnd = run_experiment(&quick_cfg(Approach::RandomTma)).unwrap();
+    let sup = run_experiment(&quick_cfg(Approach::SuperTma {
+        num_clusters: 256,
+    }))
+    .unwrap();
+    let cut = run_experiment(&quick_cfg(Approach::PsgdPa)).unwrap();
+    assert!(sup.ratio_r > rnd.ratio_r, "{} vs {}", sup.ratio_r, rnd.ratio_r);
+    assert!(cut.ratio_r > sup.ratio_r, "{} vs {}", cut.ratio_r, sup.ratio_r);
+}

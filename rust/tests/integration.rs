@@ -1,0 +1,197 @@
+//! Integration tests across the runtime boundary: AOT artifacts →
+//! PJRT engine → samplers → training/eval numerics.
+//!
+//! These require `artifacts/` (run `make artifacts` first); they skip
+//! gracefully when it is absent so `cargo test` stays usable on a
+//! fresh checkout.
+
+use random_tma::gen::{dcsbm, DcsbmConfig};
+use random_tma::model::ModelState;
+use random_tma::runtime::{Engine, Manifest};
+use random_tma::sampler::{AdjMode, TrainSampler, TrainSamplerConfig};
+use random_tma::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping integration test: run `make artifacts`");
+        return None;
+    }
+    Some(Manifest::load(&dir).expect("manifest"))
+}
+
+fn graph(seed: u64) -> random_tma::graph::Graph {
+    dcsbm(&DcsbmConfig {
+        nodes: 800,
+        communities: 8,
+        avg_degree: 12.0,
+        homophily: 0.85,
+        feat_dim: 64,
+        feature_noise: 0.5,
+        degree_exponent: 0.5,
+        seed,
+    })
+}
+
+fn sampler(m: &Manifest, encoder: &str, seed: u64) -> TrainSampler {
+    let g = graph(seed);
+    let globals: Vec<u32> = (0..g.num_nodes() as u32).collect();
+    let cfg = TrainSamplerConfig {
+        block_nodes: m.dims.block_nodes,
+        block_edges: m.dims.block_edges,
+        feat_dim: m.dims.feat_dim,
+        fanouts: vec![10, 5],
+        adj_mode: AdjMode::for_encoder(encoder),
+        relations: 1,
+        boundary: 0,
+    };
+    TrainSampler::new(g, globals, cfg)
+}
+
+#[test]
+fn train_step_runs_and_loss_is_sane() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::load(&m, "gcn_mlp", "pallas").expect("engine");
+    let mut s = sampler(&m, "gcn", 1);
+    let mut rng = Rng::new(2);
+    let mut state = ModelState::init(&engine.variant, &mut rng);
+
+    let block = s.next_block(&mut rng).unwrap().clone();
+    let loss = engine.train_step(&mut state, &block).expect("train");
+    // BCE at init should be near 2 ln 2 ~= 1.386
+    assert!(loss > 0.3 && loss < 4.0, "loss={loss}");
+    assert_eq!(state.step_count(), 1);
+}
+
+#[test]
+fn training_reduces_loss_on_fixed_block() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::load(&m, "gcn_mlp", "pallas").expect("engine");
+    let mut s = sampler(&m, "gcn", 3);
+    let mut rng = Rng::new(4);
+    let mut state = ModelState::init(&engine.variant, &mut rng);
+    let block = s.next_block(&mut rng).unwrap().clone();
+
+    let first = engine.train_step(&mut state, &block).unwrap();
+    let mut last = first;
+    for _ in 0..60 {
+        last = engine.train_step(&mut state, &block).unwrap();
+    }
+    assert!(
+        last < first * 0.8,
+        "no learning: first={first} last={last}"
+    );
+}
+
+#[test]
+fn pallas_and_jnp_artifacts_agree() {
+    // The core L1 validation at the artifact level: same inputs, same
+    // numerics through the Pallas kernels and the XLA-dot reference.
+    let Some(m) = manifest() else { return };
+    let pallas = Engine::load(&m, "gcn_mlp", "pallas").unwrap();
+    let jnp = Engine::load(&m, "gcn_mlp", "jnp").unwrap();
+    let mut s = sampler(&m, "gcn", 5);
+    let mut rng = Rng::new(6);
+    let state = ModelState::init(&pallas.variant, &mut rng);
+    let block = s.next_block(&mut rng).unwrap().clone();
+
+    let (gp, lp) = pallas.grad_step(&state.params, &block).unwrap();
+    let (gj, lj) = jnp.grad_step(&state.params, &block).unwrap();
+    assert!((lp - lj).abs() < 1e-4, "loss mismatch {lp} vs {lj}");
+    let max_diff = gp
+        .iter()
+        .zip(&gj)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "grad mismatch {max_diff}");
+}
+
+#[test]
+fn grad_step_matches_train_step_loss() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::load(&m, "sage_mlp", "pallas").unwrap();
+    let mut s = sampler(&m, "sage", 7);
+    let mut rng = Rng::new(8);
+    let mut state = ModelState::init(&engine.variant, &mut rng);
+    let block = s.next_block(&mut rng).unwrap().clone();
+
+    let (_, loss_g) = engine.grad_step(&state.params, &block).unwrap();
+    let loss_t = engine.train_step(&mut state, &block).unwrap();
+    assert!((loss_g - loss_t).abs() < 1e-5, "{loss_g} vs {loss_t}");
+}
+
+#[test]
+fn encode_and_score_shapes() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::load(&m, "gcn_mlp", "pallas").unwrap();
+    let mut rng = Rng::new(9);
+    let state = ModelState::init(&engine.variant, &mut rng);
+
+    let g = graph(10);
+    let edges: Vec<(u32, u32)> = (0..8)
+        .map(|i| {
+            let u = (i * 37) % g.num_nodes();
+            (u as u32, g.neighbors_of(u)[0])
+        })
+        .collect();
+    let negs: Vec<Vec<u32>> = edges
+        .iter()
+        .map(|_| (0..4).map(|_| rng.below(g.num_nodes()) as u32).collect())
+        .collect();
+    let cfg = random_tma::sampler::eval::EvalBlockConfig::new(
+        m.dims.block_nodes,
+        m.dims.feat_dim,
+        AdjMode::SelfLoop,
+        1,
+        0,
+    );
+    let plan = random_tma::sampler::EvalPlan::build(&g, &edges, &negs, &cfg);
+
+    let emb = engine.encode(&state.params, &plan.blocks[0]).unwrap();
+    assert_eq!(emb.len(), m.dims.block_nodes * m.dims.hidden);
+    assert!(emb.iter().any(|&x| x != 0.0));
+
+    let s_len = m.dims.score_batch;
+    let eu = vec![0.1f32; s_len * m.dims.hidden];
+    let ev = vec![0.2f32; s_len * m.dims.hidden];
+    let rel = vec![0i32; s_len];
+    let scores = engine.score(&state.params, &eu, &ev, &rel).unwrap();
+    assert_eq!(scores.len(), s_len);
+    // identical pairs -> identical scores
+    assert!(scores.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-6));
+}
+
+#[test]
+fn hetero_engine_runs() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::load(&m, "rgcn_distmult", "pallas").unwrap();
+    let bg = random_tma::gen::bipartite(&random_tma::gen::BipartiteConfig {
+        num_queries: 300,
+        num_items: 500,
+        communities: 5,
+        qi_degree: 6.0,
+        ii_degree: 4.0,
+        homophily: 0.8,
+        feat_dim: 64,
+        feature_noise: 0.4,
+        seed: 11,
+    });
+    let globals: Vec<u32> = (0..bg.graph.num_nodes() as u32).collect();
+    let cfg = TrainSamplerConfig {
+        block_nodes: m.dims.block_nodes,
+        block_edges: m.dims.block_edges,
+        feat_dim: m.dims.feat_dim,
+        fanouts: vec![8, 4],
+        adj_mode: AdjMode::Relational,
+        relations: m.dims.relations,
+        boundary: bg.boundary,
+    };
+    let mut s = TrainSampler::new(bg.graph, globals, cfg);
+    let mut rng = Rng::new(12);
+    let mut state = ModelState::init(&engine.variant, &mut rng);
+    let block = s.next_block(&mut rng).unwrap().clone();
+    let l1 = engine.train_step(&mut state, &block).unwrap();
+    let l2 = engine.train_step(&mut state, &block).unwrap();
+    assert!(l1.is_finite() && l2.is_finite());
+    assert!(l2 <= l1 * 1.2, "diverging: {l1} -> {l2}");
+}
