@@ -1,13 +1,104 @@
-//! Perf probe: per-component latency of the training hot path.
+//! Perf probe: prep-path (partition → subgraph) throughput, comm
+//! encode throughput, and per-component latency of the training hot
+//! path. The prep and comm sections need no AOT artifacts; the engine
+//! section skips gracefully without them.
+
+use std::hint::black_box;
+
+use random_tma::comm::Message;
 use random_tma::gen::{dcsbm, DcsbmConfig};
+use random_tma::graph::{induce_all, Subgraph};
 use random_tma::model::ModelState;
+use random_tma::partition::{
+    partition_stats, partition_stats_with_cuts, parts_of, random_partition,
+};
 use random_tma::runtime::{Engine, Manifest};
 use random_tma::sampler::{AdjMode, TrainSampler, TrainSamplerConfig};
 use random_tma::util::bench::{fmt_secs, time};
 use random_tma::util::rng::Rng;
 
 fn main() {
-    let manifest = Manifest::load(&Manifest::default_dir()).expect("artifacts");
+    prep_path();
+    comm_encode();
+    engine_path();
+}
+
+/// Partition→subgraph extraction at mag-sim scale (120k nodes, M=8):
+/// the serial per-part HashMap path vs the fused parallel
+/// `induce_all`, and `partition_stats` with vs without its own edge
+/// scan. This is the Table 3 / Table 7 prep column.
+fn prep_path() {
+    let g = dcsbm(&DcsbmConfig {
+        nodes: 120_000,
+        communities: 150,
+        avg_degree: 12.0,
+        homophily: 0.8,
+        feat_dim: 64,
+        feature_noise: 0.7,
+        degree_exponent: 1.1,
+        seed: 1,
+    });
+    let m = 8;
+    let mut rng = Rng::new(2);
+    let assign = random_partition(g.num_nodes(), m, &mut rng);
+    let parts = parts_of(&assign, m);
+
+    let t_serial = time("induce serial (HashMap reference)", 1, 3, || {
+        for p in &parts {
+            black_box(Subgraph::induce(&g, p));
+        }
+    });
+    let t_fused = time("induce_all (fused parallel)", 1, 3, || {
+        black_box(induce_all(&g, &assign, m));
+    });
+    let cuts: Vec<usize> = induce_all(&g, &assign, m)
+        .iter()
+        .map(|s| s.cut_edges)
+        .collect();
+    let t_scan = time("partition_stats (edge scan)", 1, 3, || {
+        black_box(partition_stats(&g, &assign, m));
+    });
+    let t_reuse = time("partition_stats_with_cuts", 1, 3, || {
+        black_box(partition_stats_with_cuts(&g, &assign, m, &cuts));
+    });
+    println!(
+        "prep |V|={} |E|={} M={m}: serial {}  fused {}  ({:.1}x)",
+        g.num_nodes(),
+        g.num_edges(),
+        fmt_secs(t_serial.median_s()),
+        fmt_secs(t_fused.median_s()),
+        t_serial.median_s() / t_fused.median_s().max(1e-12),
+    );
+    println!(
+        "stats: edge scan {}  cut reuse {}  ({:.1}x)",
+        fmt_secs(t_scan.median_s()),
+        fmt_secs(t_reuse.median_s()),
+        t_scan.median_s() / t_reuse.median_s().max(1e-12),
+    );
+}
+
+/// Wire-protocol encode of a realistic (1M-parameter) weight vector.
+fn comm_encode() {
+    let msg = Message::Weights {
+        round: 1,
+        loss: 0.5,
+        steps: 1,
+        data: (0..1 << 20).map(|i| i as f32).collect(),
+    };
+    let t = time("comm encode 1M f32", 1, 5, || {
+        black_box(msg.encode());
+    });
+    println!("comm: encode 1M-f32 Weights {}", fmt_secs(t.median_s()));
+}
+
+fn engine_path() {
+    let Ok(manifest) = Manifest::load(&Manifest::default_dir()) else {
+        eprintln!(
+            "skipping engine hot path: artifacts missing \
+             (run `make artifacts`)"
+        );
+        return;
+    };
     let g = dcsbm(&DcsbmConfig {
         nodes: 5000, communities: 10, avg_degree: 12.0, homophily: 0.8,
         feat_dim: 64, feature_noise: 0.5, degree_exponent: 0.8, seed: 1,

@@ -57,17 +57,13 @@ impl Message {
                 b.extend_from_slice(&loss.to_le_bytes());
                 b.extend_from_slice(&steps.to_le_bytes());
                 b.extend_from_slice(&(data.len() as u64).to_le_bytes());
-                for x in data {
-                    b.extend_from_slice(&x.to_le_bytes());
-                }
+                put_f32s(&mut b, data);
             }
             Message::Broadcast { round, data } => {
                 b.push(TAG_BROADCAST);
                 b.extend_from_slice(&round.to_le_bytes());
                 b.extend_from_slice(&(data.len() as u64).to_le_bytes());
-                for x in data {
-                    b.extend_from_slice(&x.to_le_bytes());
-                }
+                put_f32s(&mut b, data);
             }
             Message::Collect { round } => {
                 b.push(TAG_COLLECT);
@@ -103,6 +99,32 @@ impl Message {
     }
 }
 
+/// Append `data` as raw little-endian f32 bytes. Weight vectors run to
+/// millions of parameters, so this is the encode hot loop: on LE hosts
+/// (every deployment target) it is a single bulk copy rather than a
+/// per-element `to_le_bytes` round-trip through a 4-byte temporary.
+fn put_f32s(out: &mut Vec<u8>, data: &[f32]) {
+    if cfg!(target_endian = "little") {
+        // SAFETY: f32 and [u8; 4] have the same size with no invalid
+        // bit patterns, `data` is a fully initialized slice, and u8
+        // has the weakest alignment — reinterpreting the buffer as
+        // bytes is sound. On little-endian hosts the in-memory layout
+        // already equals the wire format.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(
+                data.as_ptr().cast::<u8>(),
+                std::mem::size_of_val(data),
+            )
+        };
+        out.extend_from_slice(bytes);
+    } else {
+        out.reserve(4 * data.len());
+        for x in data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
 struct Cursor<'a> {
     b: &'a [u8],
     i: usize,
@@ -110,7 +132,9 @@ struct Cursor<'a> {
 
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.i + n > self.b.len() {
+        // `remaining` form rather than `i + n` so a huge `n` can't
+        // overflow the bound check.
+        if n > self.b.len() - self.i {
             bail!("truncated message");
         }
         let s = &self.b[self.i..self.i + n];
@@ -130,7 +154,12 @@ impl<'a> Cursor<'a> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
-        let raw = self.take(n * 4)?;
+        // A hostile element count must not wrap the byte length into a
+        // small (and then "successful") read.
+        let Some(bytes) = n.checked_mul(4) else {
+            bail!("f32 count overflow: {n}");
+        };
+        let raw = self.take(bytes)?;
         Ok(raw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -190,6 +219,104 @@ mod tests {
         assert!(Message::decode(&[]).is_err());
         assert!(Message::decode(&[99]).is_err());
         assert!(Message::decode(&[TAG_WEIGHTS, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_overflowing_element_count() {
+        // Broadcast frame whose u64 element count would wrap n*4.
+        let mut b = vec![TAG_BROADCAST];
+        b.extend_from_slice(&1u64.to_le_bytes()); // round
+        b.extend_from_slice(&u64::MAX.to_le_bytes()); // count
+        assert!(Message::decode(&b).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_truncated_weights_body() {
+        let msg = Message::Weights {
+            round: 2,
+            loss: 1.0,
+            steps: 9,
+            data: vec![0.5; 100],
+        };
+        let body = msg.encode();
+        // Header is 29 bytes (tag + round + loss + steps + count);
+        // every cut below the promised payload length must error, not
+        // yield a short vector.
+        for cut in [body.len() - 1, body.len() - 50, 30, 29, 10] {
+            assert!(Message::decode(&body[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn large_weights_roundtrip_bulk_encode() {
+        // ≥1M f32 parameters: the bulk LE encode path must round-trip
+        // bit-exactly and lay bytes out identically to `to_le_bytes`.
+        let n = 1 << 20;
+        let data: Vec<f32> =
+            (0..n).map(|i| (i as f32) * 0.5 - 3.0).collect();
+        let msg = Message::Weights {
+            round: 3,
+            loss: f32::NAN,
+            steps: 7,
+            data: data.clone(),
+        };
+        let b = msg.encode();
+        assert_eq!(b.len(), 29 + 4 * n);
+        assert_eq!(&b[29..33], &data[0].to_le_bytes());
+        assert_eq!(&b[b.len() - 4..], &data[n - 1].to_le_bytes());
+        match Message::decode(&b).unwrap() {
+            Message::Weights { round, loss, steps, data: d } => {
+                assert_eq!(round, 3);
+                assert!(loss.is_nan(), "NaN loss must survive the wire");
+                assert_eq!(steps, 7);
+                assert_eq!(d.len(), n);
+                assert!(d
+                    .iter()
+                    .zip(&data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()));
+            }
+            other => panic!("decoded wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn recv_rejects_oversized_length_prefix() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // 2 GiB frame announcement: recv must refuse before
+            // attempting the allocation.
+            s.write_all(&(1u32 << 31).to_le_bytes()).unwrap();
+            s.flush().unwrap();
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        let err = recv(&mut client).unwrap_err();
+        assert!(err.to_string().contains("too large"), "{err}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn recv_errors_on_weights_truncated_mid_stream() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let msg = Message::Weights {
+                round: 1,
+                loss: 0.0,
+                steps: 5,
+                data: vec![1.0; 256],
+            };
+            let body = msg.encode();
+            // Promise the full frame, deliver half, drop the socket.
+            s.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+            s.write_all(&body[..body.len() / 2]).unwrap();
+            s.flush().unwrap();
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        assert!(recv(&mut client).is_err(), "half a payload must error");
+        h.join().unwrap();
     }
 
     #[test]

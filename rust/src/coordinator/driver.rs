@@ -1,9 +1,9 @@
 //! The driver: one [`RunConfig`] in, one [`RunResult`] out.
 //!
-//! Assembles a full distributed run: dataset → partition (timed, as
-//! Table 7's prep column) → per-trainer subgraphs and samplers →
-//! evaluator + trainer threads → server loop → final test evaluation
-//! of the best validation round.
+//! Assembles a full distributed run: dataset → fused partition +
+//! per-trainer subgraph extraction ([`induce_all_except`], timed as
+//! Table 3/7's prep column) → samplers → evaluator + trainer threads →
+//! server loop → final test evaluation of the best validation round.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -13,10 +13,10 @@ use anyhow::{Context, Result};
 
 use crate::config::{Approach, RunConfig};
 use crate::gen::{load_preset, Preset};
-use crate::graph::Subgraph;
+use crate::graph::induce_all_except;
 use crate::metrics::RunResult;
 use crate::model::ModelState;
-use crate::partition::{parts_of, partition_stats};
+use crate::partition::partition_stats_with_cuts;
 use crate::runtime::Manifest;
 use crate::sampler::eval::EvalBlockConfig;
 use crate::sampler::{AdjMode, EvalPlan, TrainSampler, TrainSamplerConfig};
@@ -57,20 +57,33 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
     let m = cfg.trainers;
     let mut rng = Rng::new(cfg.seed ^ 0xC0FFEE);
 
-    // ---- Partition (R1) --------------------------------------------------
+    // ---- Partition + subgraph extraction (R1) ----------------------------
+    // The timed prep step now covers the *whole* data-preparation cost
+    // a deployment would pay before training starts (Table 3 / Table
+    // 7's prep column): assignment, the fused parallel multi-induction
+    // of every surviving trainer's subgraph, and the partition
+    // statistics — which reuse the induction's per-part cut counts
+    // instead of re-scanning the edge set. Failed trainers' partitions
+    // (Table 6 drills) are never materialised, only cut-counted, so
+    // failure runs pay extraction cost for survivors alone as before.
+    let failed = cfg.failed_set();
     let t_prep = Instant::now();
-    let (assignment, ratio_r) = match cfg.approach.scheme() {
+    let (subgraphs, ratio_r) = match cfg.approach.scheme() {
         Some(scheme) => {
-            let a = scheme.assign(train_graph, m, &mut rng);
-            let stats = partition_stats(train_graph, &a, m);
-            (Some(a), stats.ratio_r)
+            let assignment = scheme.assign(train_graph, m, &mut rng);
+            let subs =
+                induce_all_except(train_graph, &assignment, m, &failed);
+            let cuts: Vec<usize> =
+                subs.iter().map(|s| s.cut_edges).collect();
+            let stats =
+                partition_stats_with_cuts(train_graph, &assignment, m, &cuts);
+            (Some(subs), stats.ratio_r)
         }
         None => (None, 1.0),
     };
     let prep_secs = t_prep.elapsed().as_secs_f64();
 
     // ---- Per-trainer data -------------------------------------------------
-    let failed = cfg.failed_set();
     let adj_mode = AdjMode::for_encoder(&variant.encoder);
     let relations = if adj_mode == AdjMode::Relational {
         dims.relations
@@ -89,14 +102,12 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
 
     let mut samplers: Vec<(usize, TrainSampler)> = Vec::new();
     let mut local_bytes = 0usize;
-    match &assignment {
-        Some(assign) => {
-            let parts = parts_of(assign, m);
-            for (id, part) in parts.iter().enumerate() {
+    match subgraphs {
+        Some(subs) => {
+            for (id, sub) in subs.into_iter().enumerate() {
                 if failed.contains(&id) {
                     continue; // this trainer (and its data) is lost
                 }
-                let sub = Subgraph::induce(train_graph, part);
                 local_bytes += graph_bytes(&sub.graph);
                 samplers.push((
                     id,
@@ -317,12 +328,20 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
         }
     }
 
+    // NaN-safe best-round selection: an eval that produced NaN (e.g. a
+    // diverged model scoring NaN everywhere) must not panic the whole
+    // run or win the argmax — filter to finite points and order with
+    // total_cmp.
     let best_idx = val_curve
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.val_mrr.partial_cmp(&b.1.val_mrr).unwrap())
+        .filter(|(_, p)| p.val_mrr.is_finite())
+        .max_by(|a, b| a.1.val_mrr.total_cmp(&b.1.val_mrr))
         .map(|(i, _)| i)
-        .context("no evaluations completed — train_secs too short?")?;
+        .context(
+            "no finite validation MRR — every eval returned NaN, or \
+             train_secs too short for a single evaluation",
+        )?;
     let best_val_mrr = val_curve[best_idx].val_mrr;
     eval_req_tx
         .send(EvalReq::Final { params: eval_params[best_idx].clone() })

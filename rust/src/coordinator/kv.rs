@@ -50,6 +50,45 @@ impl Control {
     pub fn ready_count(&self) -> usize {
         self.ready.load(Ordering::SeqCst)
     }
+
+    /// Decide a trainer's next move given the last round it served.
+    ///
+    /// The round check comes **before** the stop check, and the stop
+    /// path re-reads the round counter, so a trainer can never exit
+    /// while an open round still awaits its weights. The server opens
+    /// its final collection round *before* raising `stop`
+    /// (`tma_server`); with SeqCst ordering, any thread that observes
+    /// the stop flag is guaranteed to also observe that final round on
+    /// the re-read. Without this, a trainer that happened to poll
+    /// `stop` first exited silently and the server's final collection
+    /// blocked on its 60 s timeout, aggregating a subset.
+    pub fn next_action(&self, last_round: u64) -> TrainerAction {
+        let round = self.current_round();
+        if round > last_round {
+            return TrainerAction::Ship { round };
+        }
+        if self.stopped() {
+            let round = self.current_round(); // final-round re-read
+            if round > last_round {
+                return TrainerAction::Ship { round };
+            }
+            return TrainerAction::Stop;
+        }
+        TrainerAction::Train
+    }
+}
+
+/// What a trainer should do at the top of its loop (see
+/// [`Control::next_action`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainerAction {
+    /// Round `round` is open and unanswered: ship local weights, then
+    /// block for that round's broadcast.
+    Ship { round: u64 },
+    /// Stop requested and no round pending: exit the loop.
+    Stop,
+    /// Keep taking local steps.
+    Train,
 }
 
 /// Message a trainer ships to the server at an aggregation round (or
@@ -94,6 +133,21 @@ mod tests {
         c.mark_ready();
         c.mark_ready();
         assert_eq!(c.ready_count(), 2);
+    }
+
+    #[test]
+    fn next_action_orders_round_before_stop() {
+        let c = Control::new();
+        assert_eq!(c.next_action(0), TrainerAction::Train);
+        c.open_round();
+        assert_eq!(c.next_action(0), TrainerAction::Ship { round: 1 });
+        assert_eq!(c.next_action(1), TrainerAction::Train);
+        // Budget expiry: final round opens, then stop is raised. A
+        // trainer that has not served round 2 must ship, not stop.
+        c.open_round();
+        c.request_stop();
+        assert_eq!(c.next_action(1), TrainerAction::Ship { round: 2 });
+        assert_eq!(c.next_action(2), TrainerAction::Stop);
     }
 
     #[test]

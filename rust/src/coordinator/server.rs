@@ -6,6 +6,15 @@
 //! correction on the server, broadcast the new global weights, and
 //! enqueue an asynchronous validation evaluation. Stops at ΔT_train,
 //! then the driver selects t* = argmax val-MRR and evaluates test MRR.
+//!
+//! Shutdown ordering matters: at budget expiry the final round is
+//! opened **before** the stop flag is raised, pairing with the
+//! round-before-stop check in [`super::kv::Control::next_action`] so
+//! every live trainer ships its last-interval weights instead of
+//! racing out of the loop (and the final collection never has to ride
+//! its timeout). Collections also validate each message's round stamp
+//! ([`collect_round`]) so a stale message can't be aggregated into the
+//! wrong round.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -120,6 +129,13 @@ pub fn tma_server(
         }
 
         if start.elapsed().as_secs_f64() >= cfg.train_secs {
+            // Budget expired: open the FINAL aggregation round before
+            // raising stop. Trainers re-check the round counter after
+            // observing the stop flag (Control::next_action), so every
+            // live trainer ships its last-interval weights instead of
+            // exiting — the final collection below completes within
+            // one local step rather than timing out per lost trainer.
+            rounds = control.open_round();
             control.request_stop();
             break;
         }
@@ -127,24 +143,10 @@ pub fn tma_server(
         if t_agg.elapsed().as_secs_f64() >= cfg.agg_secs {
             rounds = control.open_round();
             // Collect W_i from every live trainer (Alg 1 l. 10).
-            let mut weights = Vec::with_capacity(active);
-            let mut losses = Vec::with_capacity(active);
-            for _ in 0..active {
-                match rx.recv_timeout(Duration::from_secs(60)) {
-                    Ok(msg) => {
-                        losses.push(if msg.loss.is_nan() {
-                            f32::MAX // trainer with no batch yet
-                        } else {
-                            msg.loss
-                        });
-                        weights.push(msg.weights);
-                    }
-                    Err(_) => {
-                        anyhow::bail!(
-                            "round {rounds}: trainer unresponsive"
-                        );
-                    }
-                }
+            let (weights, losses) =
+                collect_round(rx, active, rounds, Duration::from_secs(60));
+            if weights.len() < active {
+                anyhow::bail!("round {rounds}: trainer unresponsive");
             }
             // φ (Alg 1 l. 12).
             w_global = aggregate(cfg.aggregate_op, &weights, &losses);
@@ -174,15 +176,19 @@ pub fn tma_server(
         }
     }
 
-    // Final aggregation so the last interval's work is not lost.
-    rounds = control.open_round();
-    let mut weights = Vec::with_capacity(active);
-    let mut losses = Vec::with_capacity(active);
-    for _ in 0..active {
-        if let Ok(msg) = rx.recv_timeout(Duration::from_secs(60)) {
-            losses.push(if msg.loss.is_nan() { f32::MAX } else { msg.loss });
-            weights.push(msg.weights);
-        }
+    // Final aggregation so the last interval's work is not lost. The
+    // final round was opened before `stop` was raised, so every live
+    // trainer ships; the timeout is only a safety net for trainers
+    // that died outright (engine failure), in which case we aggregate
+    // the survivors.
+    let (weights, losses) =
+        collect_round(rx, active, rounds, Duration::from_secs(60));
+    if weights.len() < active {
+        eprintln!(
+            "[server] final round {rounds}: {} of {active} trainers \
+             reported (aggregating survivors)",
+            weights.len()
+        );
     }
     if !weights.is_empty() {
         w_global = aggregate(cfg.aggregate_op, &weights, &losses);
@@ -209,6 +215,46 @@ pub fn tma_server(
         wall_secs: start.elapsed().as_secs_f64(),
         evals_sent,
     })
+}
+
+/// Collect up to `active` round-`round` weight messages within
+/// `deadline`, returning the weight vectors and sanitised losses.
+///
+/// A message stamped with a different round is *stale* — rounds are
+/// collected fully before the next one opens, so it can only come from
+/// a trainer that died mid-protocol or a logic bug — and is dropped
+/// with a warning rather than silently attributed to the wrong round's
+/// aggregation. Public so the shutdown-protocol regression tests drive
+/// the exact collection path the server uses.
+pub fn collect_round(
+    rx: &mpsc::Receiver<TrainerMsg>,
+    active: usize,
+    round: u64,
+    deadline: Duration,
+) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let t0 = Instant::now();
+    let mut weights = Vec::with_capacity(active);
+    let mut losses = Vec::with_capacity(active);
+    while weights.len() < active {
+        let left = deadline.saturating_sub(t0.elapsed());
+        match rx.recv_timeout(left) {
+            Ok(msg) if msg.round == round => {
+                losses.push(if msg.loss.is_nan() {
+                    f32::MAX // trainer with no batch yet
+                } else {
+                    msg.loss
+                });
+                weights.push(msg.weights);
+            }
+            Ok(msg) => eprintln!(
+                "[server] dropping stale round-{} message from trainer \
+                 {} while collecting round {round}",
+                msg.round, msg.id
+            ),
+            Err(_) => break, // timeout, or every sender hung up
+        }
+    }
+    (weights, losses)
 }
 
 /// Helper used by the driver to pick LLCG correction settings.

@@ -21,7 +21,7 @@ use crate::runtime::{Engine, Manifest};
 use crate::sampler::TrainSampler;
 use crate::util::rng::Rng;
 
-use super::kv::{Control, TrainerMsg, TrainerReport};
+use super::kv::{Control, TrainerAction, TrainerMsg, TrainerReport};
 
 /// Everything a TMA trainer thread needs (moved into the thread).
 pub struct TrainerSpec {
@@ -91,28 +91,35 @@ pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
     let mut timeline: Vec<LossPoint> = Vec::new();
 
     loop {
-        if control.stopped() {
-            break;
-        }
-        // Aggregation round open? Ship weights, await global broadcast.
-        let round = control.current_round();
-        if round > last_round {
-            let msg = TrainerMsg {
-                id,
-                round,
-                weights: state.params.clone(),
-                loss: last_loss,
-                steps,
-            };
-            if tx.send(msg).is_err() {
-                break;
+        // Round-check BEFORE stop-check (Control::next_action): when
+        // the budget expires the server opens one final collection
+        // round and only then raises stop, so a trainer must ship its
+        // last weights before honouring the stop flag — otherwise the
+        // final aggregation silently loses this trainer's interval and
+        // the server blocks on its collection timeout.
+        match control.next_action(last_round) {
+            TrainerAction::Ship { round } => {
+                let msg = TrainerMsg {
+                    id,
+                    round,
+                    weights: state.params.clone(),
+                    loss: last_loss,
+                    steps,
+                };
+                if tx.send(msg).is_err() {
+                    break;
+                }
+                // The server broadcasts once per opened round — the
+                // final one included — so this never deadlocks.
+                match rx_global.recv() {
+                    Ok(w) => state.set_params(&w),
+                    Err(_) => break, // server gone
+                }
+                last_round = round;
+                continue;
             }
-            match rx_global.recv() {
-                Ok(w) => state.set_params(&w),
-                Err(_) => break, // server gone
-            }
-            last_round = round;
-            continue;
+            TrainerAction::Stop => break,
+            TrainerAction::Train => {}
         }
 
         // One local step.

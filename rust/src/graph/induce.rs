@@ -1,0 +1,408 @@
+//! Fused multi-partition subgraph induction — the prep hot path.
+//!
+//! [`Subgraph::induce`] is the *reference* implementation: per part it
+//! builds a `HashMap` global→local index, feeds every internal edge
+//! through a [`GraphBuilder`] and pays an O(E log E) re-sort, so
+//! materialising all `k` trainer subgraphs scans the parent CSR `k`
+//! times and sorts what was already sorted. [`induce_all`] replaces
+//! that with one fused, single-logical-pass extraction:
+//!
+//! 1. a **dense** `global → (part, local)` index array (two `Vec`
+//!    lookups per adjacency entry, no hashing);
+//! 2. per-part CSRs built **count-then-fill** directly from the
+//!    parent's sorted rows — local ids are assigned in ascending
+//!    global order, so the monotone global→local map emits already
+//!    sorted local rows and no builder or re-sort is needed;
+//! 3. partitions extracted in parallel on [`parallel_map`] workers
+//!    (each parent adjacency entry belongs to exactly one part's node
+//!    range, so the parts together traverse the edge set once);
+//! 4. per-part cut counts returned on each [`Subgraph`], letting
+//!    [`partition_stats_with_cuts`] skip its own full edge scan.
+//!
+//! The output is field-for-field identical to running
+//! [`Subgraph::induce`] on each part of the assignment (see the
+//! differential tests at the bottom), which is what the coordinator
+//! relied on before this path existed.
+//!
+//! [`partition_stats_with_cuts`]: crate::partition::partition_stats_with_cuts
+
+use crate::util::threadpool::parallel_map;
+
+use super::{Graph, Subgraph};
+
+/// Induce all `k` partition subgraphs of `assignment` at once.
+///
+/// `assignment[v]` is node `v`'s partition in `0..k` (every node must
+/// be assigned — this is the coordinator's R1 contract). Returns one
+/// [`Subgraph`] per partition, index-aligned with trainer ids; empty
+/// partitions yield empty subgraphs. Each subgraph's `cut_edges` is
+/// the number of directed parent adjacency entries leaving the
+/// partition, so across a full assignment they sum to twice the
+/// undirected edge-cut.
+///
+/// Relation types are copied per directed entry from the parent, which
+/// assumes the parent stores symmetric relations — true of every
+/// [`GraphBuilder`]-built graph ([`Subgraph::induce`] makes the same
+/// assumption by copying the lower-endpoint row's value).
+///
+/// [`GraphBuilder`]: crate::graph::GraphBuilder
+pub fn induce_all(parent: &Graph, assignment: &[u32], k: usize) -> Vec<Subgraph> {
+    induce_all_except(parent, assignment, k, &[])
+}
+
+/// [`induce_all`] for the coordinator's failure drills: partitions
+/// listed in `skip` (trainers lost at start) still contribute *exact*
+/// cut counts — the partition statistics describe the full assignment
+/// regardless of who survives — but their CSRs and feature slabs are
+/// never materialised, so failure runs pay extraction cost only for
+/// surviving trainers, as the serial path always did. Skipped entries
+/// come back as placeholders: correct `global_ids` and `cut_edges`,
+/// empty graph.
+pub fn induce_all_except(
+    parent: &Graph,
+    assignment: &[u32],
+    k: usize,
+    skip: &[usize],
+) -> Vec<Subgraph> {
+    assert_eq!(
+        assignment.len(),
+        parent.num_nodes(),
+        "assignment must cover every parent node"
+    );
+
+    // Dense global → (part, local) index. Locals count same-part nodes
+    // in ascending global order, so each part's `global_ids` list is
+    // born sorted and the global→local map is monotone within a part.
+    let n = parent.num_nodes();
+    let mut local_of: Vec<u32> = vec![0; n];
+    let mut parts: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for v in 0..n {
+        let p = assignment[v] as usize;
+        assert!(p < k, "node {v} assigned to part {p} >= k={k}");
+        local_of[v] = parts[p].len() as u32;
+        parts[p].push(v as u32);
+    }
+
+    let workers = std::thread::available_parallelism()
+        .map_or(1, |c| c.get())
+        .min(k.max(1));
+    parallel_map(k, workers, |p| {
+        if skip.contains(&p) {
+            cut_only_placeholder(parent, assignment, &parts[p], p as u32)
+        } else {
+            induce_part(parent, assignment, &local_of, &parts[p], p as u32)
+        }
+    })
+}
+
+/// Count a skipped partition's cut views without building its CSR or
+/// copying its feature slab (the data is lost with its trainer).
+fn cut_only_placeholder(
+    parent: &Graph,
+    assignment: &[u32],
+    part: &[u32],
+    p: u32,
+) -> Subgraph {
+    let mut cut = 0usize;
+    for &g in part {
+        for &nb in parent.neighbors_of(g as usize) {
+            if assignment[nb as usize] != p {
+                cut += 1;
+            }
+        }
+    }
+    let graph = Graph {
+        offsets: vec![0],
+        feat_dim: parent.feat_dim,
+        num_classes: parent.num_classes,
+        num_relations: parent.num_relations,
+        ..Graph::default()
+    };
+    Subgraph { graph, global_ids: part.to_vec(), cut_edges: cut }
+}
+
+/// Build one partition's subgraph by count-then-fill over the parent
+/// rows of its nodes. `part` holds the partition's global ids in
+/// ascending order.
+fn induce_part(
+    parent: &Graph,
+    assignment: &[u32],
+    local_of: &[u32],
+    part: &[u32],
+    p: u32,
+) -> Subgraph {
+    let size = part.len();
+
+    // Pass 1: per-node internal degree → CSR offsets, plus cut views.
+    let mut offsets = vec![0u64; size + 1];
+    let mut cut = 0usize;
+    for (l, &g) in part.iter().enumerate() {
+        let mut internal = 0u64;
+        for &nb in parent.neighbors_of(g as usize) {
+            if assignment[nb as usize] == p {
+                internal += 1;
+            } else {
+                cut += 1;
+            }
+        }
+        offsets[l + 1] = internal;
+    }
+    for l in 0..size {
+        offsets[l + 1] += offsets[l];
+    }
+    let num_adj = offsets[size] as usize;
+
+    // Pass 2: fill. Parent rows are sorted by global id and the
+    // global→local map is monotone within the part, so appending in
+    // row order yields sorted local rows — no re-sort.
+    let mut neighbors: Vec<u32> = Vec::with_capacity(num_adj);
+    let mut rel: Vec<u8> = if parent.rel.is_some() {
+        Vec::with_capacity(num_adj)
+    } else {
+        Vec::new()
+    };
+    let mut any_rel = false;
+    for &g in part {
+        let row = parent.neighbors_of(g as usize);
+        match parent.rels_of(g as usize) {
+            Some(rels) => {
+                for (i, &nb) in row.iter().enumerate() {
+                    if assignment[nb as usize] == p {
+                        neighbors.push(local_of[nb as usize]);
+                        any_rel |= rels[i] > 0;
+                        rel.push(rels[i]);
+                    }
+                }
+            }
+            None => {
+                for &nb in row {
+                    if assignment[nb as usize] == p {
+                        neighbors.push(local_of[nb as usize]);
+                    }
+                }
+            }
+        }
+    }
+    debug_assert_eq!(neighbors.len(), num_adj);
+
+    // Feature/label slabs, copied for trainer locality exactly as the
+    // reference path does.
+    let feat_dim = parent.feat_dim;
+    let mut features: Vec<f32> = Vec::with_capacity(size * feat_dim);
+    let mut labels: Vec<u16> = Vec::with_capacity(size);
+    for &g in part {
+        features.extend_from_slice(parent.feature(g as usize));
+        labels.push(parent.labels[g as usize]);
+    }
+
+    let graph = Graph {
+        offsets,
+        neighbors,
+        // Match the reference semantics: a subgraph records relation
+        // types only when an internal entry is actually typed (>0) —
+        // GraphBuilder's `hetero` flag behaves the same way.
+        rel: if any_rel { Some(rel) } else { None },
+        features,
+        feat_dim,
+        labels,
+        num_classes: parent.num_classes,
+        num_relations: parent.num_relations,
+    };
+    Subgraph { graph, global_ids: part.to_vec(), cut_edges: cut }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{bipartite, dcsbm, BipartiteConfig, DcsbmConfig};
+    use crate::graph::GraphBuilder;
+    use crate::partition::{parts_of, random_partition};
+    use crate::util::rng::Rng;
+
+    /// Field-for-field equality against the reference implementation.
+    fn diff(a: &Subgraph, b: &Subgraph) -> Result<(), String> {
+        crate::prop_assert!(a.global_ids == b.global_ids, "global_ids");
+        crate::prop_assert!(a.cut_edges == b.cut_edges, "cut_edges");
+        crate::prop_assert!(a.graph.offsets == b.graph.offsets, "offsets");
+        crate::prop_assert!(
+            a.graph.neighbors == b.graph.neighbors,
+            "neighbors"
+        );
+        crate::prop_assert!(a.graph.rel == b.graph.rel, "rel");
+        crate::prop_assert!(a.graph.features == b.graph.features, "features");
+        crate::prop_assert!(a.graph.labels == b.graph.labels, "labels");
+        crate::prop_assert!(a.graph.feat_dim == b.graph.feat_dim, "feat_dim");
+        crate::prop_assert!(
+            a.graph.num_classes == b.graph.num_classes,
+            "num_classes"
+        );
+        crate::prop_assert!(
+            a.graph.num_relations == b.graph.num_relations,
+            "num_relations"
+        );
+        Ok(())
+    }
+
+    fn assert_matches_reference(g: &Graph, assign: &[u32], k: usize) {
+        let fused = induce_all(g, assign, k);
+        assert_eq!(fused.len(), k);
+        let parts = parts_of(assign, k);
+        for (p, part) in parts.iter().enumerate() {
+            let reference = Subgraph::induce(g, part);
+            diff(&fused[p], &reference)
+                .unwrap_or_else(|f| panic!("part {p}: {f} mismatch"));
+        }
+        // Cut views from inside each part account for every cross edge
+        // twice; internal edges partition the remainder.
+        let internal: usize =
+            fused.iter().map(|s| s.graph.num_edges()).sum();
+        let cut_views: usize = fused.iter().map(|s| s.cut_edges).sum();
+        assert_eq!(cut_views % 2, 0);
+        assert_eq!(internal + cut_views / 2, g.num_edges());
+    }
+
+    #[test]
+    fn matches_reference_on_dcsbm_preset() {
+        let g = dcsbm(&DcsbmConfig {
+            nodes: 1500,
+            communities: 10,
+            avg_degree: 12.0,
+            homophily: 0.8,
+            feat_dim: 8,
+            feature_noise: 0.5,
+            degree_exponent: 0.8,
+            seed: 9,
+        });
+        let mut rng = Rng::new(11);
+        for k in [1, 2, 5, 8] {
+            let assign = random_partition(g.num_nodes(), k, &mut rng);
+            assert_matches_reference(&g, &assign, k);
+        }
+    }
+
+    #[test]
+    fn matches_reference_on_bipartite_hetero_preset() {
+        let bg = bipartite(&BipartiteConfig {
+            num_queries: 200,
+            num_items: 300,
+            communities: 5,
+            qi_degree: 6.0,
+            ii_degree: 4.0,
+            homophily: 0.8,
+            feat_dim: 8,
+            feature_noise: 0.4,
+            seed: 13,
+        });
+        assert!(bg.graph.rel.is_some(), "bipartite preset must be typed");
+        let mut rng = Rng::new(17);
+        for k in [2, 4] {
+            let assign = random_partition(bg.graph.num_nodes(), k, &mut rng);
+            assert_matches_reference(&bg.graph, &assign, k);
+        }
+    }
+
+    #[test]
+    fn empty_parts_yield_empty_subgraphs() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1);
+        b.add_edge(2, 3);
+        let mut g = b.build();
+        g.feat_dim = 1;
+        g.features = (0..4).map(|i| i as f32).collect();
+        // part 1 is never assigned
+        let assign = vec![0, 0, 2, 2];
+        let subs = induce_all(&g, &assign, 3);
+        assert_eq!(subs[1].num_nodes(), 0);
+        assert_eq!(subs[1].graph.num_adj(), 0);
+        assert_eq!(subs[1].graph.offsets, vec![0]);
+        assert_eq!(subs[1].cut_edges, 0);
+        assert_eq!(subs[0].graph.num_edges(), 1);
+        assert_eq!(subs[2].graph.num_edges(), 1);
+    }
+
+    #[test]
+    fn skipped_parts_keep_exact_cuts_without_materialising() {
+        let g = dcsbm(&DcsbmConfig {
+            nodes: 800,
+            communities: 8,
+            avg_degree: 10.0,
+            homophily: 0.8,
+            feat_dim: 4,
+            feature_noise: 0.5,
+            degree_exponent: 0.5,
+            seed: 31,
+        });
+        let mut rng = Rng::new(33);
+        let k = 4;
+        let assign = random_partition(g.num_nodes(), k, &mut rng);
+        let full = induce_all(&g, &assign, k);
+        let drilled = induce_all_except(&g, &assign, k, &[1, 3]);
+        for p in 0..k {
+            assert_eq!(
+                drilled[p].cut_edges, full[p].cut_edges,
+                "part {p}: cut counts must not depend on skipping"
+            );
+            assert_eq!(drilled[p].global_ids, full[p].global_ids);
+        }
+        // Skipped parts carry no graph data; survivors are identical.
+        for p in [1usize, 3] {
+            assert_eq!(drilled[p].graph.num_nodes(), 0);
+            assert!(drilled[p].graph.neighbors.is_empty());
+            assert!(drilled[p].graph.features.is_empty());
+        }
+        for p in [0usize, 2] {
+            diff(&drilled[p], &full[p]).unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "assignment must cover")]
+    fn rejects_short_assignment() {
+        let g = GraphBuilder::new(3).build();
+        induce_all(&g, &[0, 0], 1);
+    }
+
+    #[test]
+    fn prop_matches_reference_on_random_graphs() {
+        crate::util::prop::check(25, 29, |rng: &mut Rng| {
+            let n = rng.range(1, 80);
+            let hetero = rng.chance(0.5);
+            let mut b = GraphBuilder::new(n);
+            for _ in 0..rng.range(0, 250) {
+                let r = if hetero { rng.below(3) as u8 } else { 0 };
+                b.add_rel_edge(
+                    rng.below(n) as u32,
+                    rng.below(n) as u32,
+                    r,
+                );
+            }
+            let mut g = b.build();
+            g.feat_dim = rng.below(3);
+            g.features =
+                (0..n * g.feat_dim).map(|_| rng.f32()).collect();
+            g.labels = (0..n).map(|_| rng.below(4) as u16).collect();
+            g.num_classes = 4;
+
+            let k = rng.range(1, 7);
+            let assign: Vec<u32> =
+                (0..n).map(|_| rng.below(k) as u32).collect();
+            let fused = induce_all(&g, &assign, k);
+            let parts = parts_of(&assign, k);
+            for (p, part) in parts.iter().enumerate() {
+                let reference = Subgraph::induce(&g, part);
+                diff(&fused[p], &reference)?;
+            }
+            let internal: usize =
+                fused.iter().map(|s| s.graph.num_edges()).sum();
+            let cut_views: usize =
+                fused.iter().map(|s| s.cut_edges).sum();
+            crate::prop_assert!(
+                internal + cut_views / 2 == g.num_edges(),
+                "edge accounting: internal={internal} cuts={cut_views} \
+                 total={}",
+                g.num_edges()
+            );
+            Ok(())
+        });
+    }
+}

@@ -6,13 +6,19 @@
 //! labels). Node-induced subgraphs ([`subgraph::Subgraph`]) are what
 //! each TMA trainer receives — local IDs plus the mapping back to
 //! global IDs, matching the paper's restricted-local-access setting.
+//! The coordinator materialises all of them at once through the fused
+//! parallel path ([`induce::induce_all`]); [`Subgraph::induce`] is the
+//! single-set reference implementation it is differentially tested
+//! against.
 
 pub mod csr;
+pub mod induce;
 pub mod io;
 pub mod split;
 pub mod stats;
 pub mod subgraph;
 
 pub use csr::{Graph, GraphBuilder};
+pub use induce::{induce_all, induce_all_except};
 pub use split::{LinkSplit, split_links};
 pub use subgraph::Subgraph;

@@ -84,22 +84,52 @@ pub fn split_links(
     let negs_for = |edges: &[(u32, u32)], rng: &mut Rng| {
         edges
             .iter()
-            .map(|&(u, _)| {
-                let mut negs = Vec::with_capacity(negatives);
-                while negs.len() < negatives {
-                    let cand = rng.below(n) as u32;
-                    if cand != u && !g.has_edge(u as usize, cand as usize) {
-                        negs.push(cand);
-                    }
-                }
-                negs
-            })
+            .map(|&(u, _)| sample_negatives(g, u, negatives, rng))
             .collect::<Vec<_>>()
     };
     let val_negatives = negs_for(&val, &mut rng);
     let test_negatives = negs_for(&test, &mut rng);
 
     LinkSplit { train, val, test, val_negatives, test_negatives }
+}
+
+/// `count` negative tails for source `u`, uniform over non-neighbours
+/// (duplicates are possible, matching the paper's sampled-candidate
+/// protocol). Rejection sampling is fast when non-neighbours abound —
+/// the common case — but a hub adjacent to almost every node used to
+/// spin forever, so the attempts are bounded and the remainder is
+/// drawn from an explicitly materialised non-neighbour pool.
+///
+/// Panics (cleanly, with the offending node) only when `u` is adjacent
+/// to *every* other node, i.e. no negative candidate exists at all.
+fn sample_negatives(g: &Graph, u: u32, count: usize, rng: &mut Rng) -> Vec<u32> {
+    let n = g.num_nodes();
+    let mut negs = Vec::with_capacity(count);
+    // Acceptance rate is (n - 1 - deg(u)) / n; 32 tries per slot covers
+    // everything but near-complete rows without changing the sampled
+    // stream on ordinary graphs.
+    let mut attempts = 32 * count + 64;
+    while negs.len() < count && attempts > 0 {
+        attempts -= 1;
+        let cand = rng.below(n) as u32;
+        if cand != u && !g.has_edge(u as usize, cand as usize) {
+            negs.push(cand);
+        }
+    }
+    if negs.len() < count {
+        let pool: Vec<u32> = (0..n as u32)
+            .filter(|&v| v != u && !g.has_edge(u as usize, v as usize))
+            .collect();
+        assert!(
+            !pool.is_empty(),
+            "node {u} is adjacent to every other node — no negative \
+             candidates exist"
+        );
+        while negs.len() < count {
+            negs.push(pool[rng.below(pool.len())]);
+        }
+    }
+    negs
 }
 
 #[cfg(test)]
@@ -168,6 +198,37 @@ mod tests {
             .filter(|&v| s.train.degree(v) == 0)
             .count();
         assert_eq!(before, after);
+    }
+
+    #[test]
+    fn hub_node_negative_sampling_terminates() {
+        // Node 0 adjacent to all but one node: rejection sampling alone
+        // would need ~n tries per accept; the pool fallback must fill
+        // the remainder with the single non-neighbour.
+        let n = 40;
+        let mut b = GraphBuilder::new(n);
+        for v in 1..(n as u32 - 1) {
+            b.add_edge(0, v);
+        }
+        // keep the last node connected (elsewhere) so it's not isolated
+        b.add_edge(n as u32 - 1, 1);
+        let g = b.build();
+        let mut rng = Rng::new(5);
+        let negs = sample_negatives(&g, 0, 16, &mut rng);
+        assert_eq!(negs.len(), 16);
+        assert!(negs.iter().all(|&v| v == n as u32 - 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "no negative candidates exist")]
+    fn fully_connected_node_errors_cleanly() {
+        let mut b = GraphBuilder::new(4);
+        for v in 1..4u32 {
+            b.add_edge(0, v);
+        }
+        let g = b.build();
+        let mut rng = Rng::new(6);
+        sample_negatives(&g, 0, 2, &mut rng);
     }
 
     #[test]

@@ -4,6 +4,12 @@
 //! receives `Subgraph` induced by its partition `alpha^{-1}(i)` —
 //! edges crossing the partition boundary are *discarded*, exactly the
 //! data loss the randomized schemes are designed to tolerate.
+//!
+//! [`Subgraph::induce`] here is the straightforward single-set
+//! implementation; the coordinator's hot path materialises all
+//! partitions at once via [`super::induce::induce_all`], which is
+//! differentially tested to produce identical output and keeps this
+//! version as its reference.
 
 use std::collections::HashMap;
 

@@ -28,7 +28,7 @@ pub mod supernode;
 
 pub use metis::{cluster_coarsen, metis_like, MetisConfig};
 pub use random::random_partition;
-pub use stats::{partition_stats, PartitionStats};
+pub use stats::{partition_stats, partition_stats_with_cuts, PartitionStats};
 pub use supernode::supernode_partition;
 
 use crate::graph::Graph;

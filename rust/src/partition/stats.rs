@@ -25,18 +25,51 @@ pub struct PartitionStats {
 }
 
 pub fn partition_stats(g: &Graph, assign: &[u32], k: usize) -> PartitionStats {
+    stats_inner(g, assign, k, None)
+}
+
+/// [`partition_stats`] without the edge scan: reuses the per-partition
+/// *directed cut-view* counts that [`crate::graph::induce_all`] already
+/// computed while extracting the trainer subgraphs. `cut_views[p]`
+/// counts parent adjacency entries leaving part `p`, so across a full
+/// assignment they sum to exactly twice the undirected edge-cut.
+pub fn partition_stats_with_cuts(
+    g: &Graph,
+    assign: &[u32],
+    k: usize,
+    cut_views: &[usize],
+) -> PartitionStats {
+    assert_eq!(cut_views.len(), k, "one cut count per partition");
+    stats_inner(g, assign, k, Some(cut_views))
+}
+
+fn stats_inner(
+    g: &Graph,
+    assign: &[u32],
+    k: usize,
+    cut_views: Option<&[usize]>,
+) -> PartitionStats {
     assert_eq!(assign.len(), g.num_nodes());
     let parts = parts_of(assign, k);
     let part_sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
 
-    let mut cut = 0usize;
-    let mut total = 0usize;
-    for (u, v) in g.edges() {
-        total += 1;
-        if assign[u as usize] != assign[v as usize] {
-            cut += 1;
+    let (cut, total) = match cut_views {
+        // Every cross edge is seen once from each side: sum/2.
+        Some(views) => {
+            (views.iter().sum::<usize>() / 2, g.num_edges())
         }
-    }
+        None => {
+            let mut cut = 0usize;
+            let mut total = 0usize;
+            for (u, v) in g.edges() {
+                total += 1;
+                if assign[u as usize] != assign[v as usize] {
+                    cut += 1;
+                }
+            }
+            (cut, total)
+        }
+    };
     let ratio_r = if total == 0 {
         0.0
     } else {
@@ -155,5 +188,36 @@ mod tests {
         let s = partition_stats(&g, &vec![0; 10], 1);
         assert_eq!(s.edge_cut, 0);
         assert!((s.ratio_r - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn supplied_cuts_match_full_edge_scan() {
+        use crate::graph::induce_all;
+        use crate::partition::random_partition;
+        use crate::util::rng::Rng;
+        let g = crate::gen::dcsbm(&crate::gen::DcsbmConfig {
+            nodes: 900,
+            communities: 9,
+            avg_degree: 11.0,
+            homophily: 0.8,
+            feat_dim: 4,
+            feature_noise: 0.4,
+            degree_exponent: 0.5,
+            seed: 21,
+        });
+        let mut rng = Rng::new(23);
+        for k in [1, 2, 4] {
+            let assign = random_partition(g.num_nodes(), k, &mut rng);
+            let cuts: Vec<usize> = induce_all(&g, &assign, k)
+                .iter()
+                .map(|s| s.cut_edges)
+                .collect();
+            let scanned = partition_stats(&g, &assign, k);
+            let reused = partition_stats_with_cuts(&g, &assign, k, &cuts);
+            assert_eq!(scanned.edge_cut, reused.edge_cut, "k={k}");
+            assert!((scanned.ratio_r - reused.ratio_r).abs() < 1e-12);
+            assert_eq!(scanned.part_sizes, reused.part_sizes);
+            assert!((scanned.balance - reused.balance).abs() < 1e-12);
+        }
     }
 }

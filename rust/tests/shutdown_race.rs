@@ -1,0 +1,201 @@
+//! Shutdown-protocol regression tests (no artifacts required).
+//!
+//! The bug: `tma_trainer` used to check `Control::stopped()` *before*
+//! checking for an open aggregation round, while `tma_server` raised
+//! stop *before* opening its final collection round. A trainer that
+//! observed the stop flag first exited without shipping its
+//! last-interval weights, so the final collection blocked for its full
+//! 60 s timeout per lost trainer and then silently aggregated a
+//! subset. The fix is a protocol pair: the server opens the final
+//! round before raising stop, and trainers decide their next move via
+//! [`Control::next_action`] (round-check before stop-check, with a
+//! round re-read after observing stop). These tests drive exactly
+//! those primitives — plus the server's round-validated
+//! [`collect_round`] — with mock trainer threads standing in for the
+//! engine-bound loop.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use random_tma::coordinator::kv::{Control, TrainerAction, TrainerMsg};
+use random_tma::coordinator::server::collect_round;
+
+/// A mock trainer running the exact control-flow skeleton of
+/// `tma_trainer`: next_action → ship + await broadcast | stop | one
+/// "local step". Returns the rounds it shipped.
+fn mock_trainer(
+    id: usize,
+    control: Arc<Control>,
+    tx: mpsc::Sender<TrainerMsg>,
+    rx_global: mpsc::Receiver<Vec<f32>>,
+) -> thread::JoinHandle<Vec<u64>> {
+    thread::spawn(move || {
+        let mut last_round = 0u64;
+        let mut shipped = Vec::new();
+        loop {
+            match control.next_action(last_round) {
+                TrainerAction::Ship { round } => {
+                    let msg = TrainerMsg {
+                        id,
+                        round,
+                        weights: vec![id as f32],
+                        loss: 0.5,
+                        steps: shipped.len() as u64,
+                    };
+                    if tx.send(msg).is_err() {
+                        break;
+                    }
+                    match rx_global.recv() {
+                        Ok(_) => {}
+                        Err(_) => break,
+                    }
+                    shipped.push(round);
+                    last_round = round;
+                }
+                TrainerAction::Stop => break,
+                TrainerAction::Train => {
+                    // One "local step": long enough that trainers are
+                    // usually mid-step when rounds open, as real ones
+                    // are.
+                    thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        shipped
+    })
+}
+
+#[test]
+fn budget_expiry_mid_round_collects_all_live_trainers_fast() {
+    let m = 4usize;
+    let control = Arc::new(Control::new());
+    let (msg_tx, msg_rx) = mpsc::channel::<TrainerMsg>();
+    let mut global_txs = Vec::new();
+    let mut handles = Vec::new();
+    for id in 0..m {
+        let (gtx, grx) = mpsc::channel::<Vec<f32>>();
+        global_txs.push(gtx);
+        handles.push(mock_trainer(id, control.clone(), msg_tx.clone(), grx));
+    }
+    drop(msg_tx);
+
+    // Two regular rounds, fully collected and broadcast.
+    for expect in 1..=2u64 {
+        let round = control.open_round();
+        assert_eq!(round, expect);
+        let (weights, losses) =
+            collect_round(&msg_rx, m, round, Duration::from_secs(10));
+        assert_eq!(weights.len(), m, "round {round} incomplete");
+        assert_eq!(losses.len(), m);
+        for tx in &global_txs {
+            tx.send(vec![0.0]).ok();
+        }
+    }
+
+    // Budget expires "mid-round": final round opens, then stop — the
+    // server-side ordering of tma_server. All live trainers must ship
+    // within one local step; well under a second, not 60 s.
+    let t0 = Instant::now();
+    let final_round = control.open_round();
+    control.request_stop();
+    let (weights, _) =
+        collect_round(&msg_rx, m, final_round, Duration::from_secs(30));
+    let elapsed = t0.elapsed();
+    assert_eq!(
+        weights.len(),
+        m,
+        "final aggregation lost trainers: got {} of {m}",
+        weights.len()
+    );
+    assert!(
+        elapsed < Duration::from_secs(1),
+        "final collection took {elapsed:?} — the 60 s timeout path"
+    );
+
+    // Unblock the final-round broadcast waiters and join.
+    for tx in &global_txs {
+        tx.send(vec![0.0]).ok();
+    }
+    for h in handles {
+        let shipped = h.join().expect("mock trainer panicked");
+        assert_eq!(
+            shipped,
+            vec![1, 2, final_round],
+            "every trainer serves every round, the final one included"
+        );
+    }
+}
+
+#[test]
+fn stop_without_open_round_exits_promptly() {
+    // When no round is pending at stop time there is nothing to flush:
+    // trainers must exit without shipping anything extra.
+    let control = Arc::new(Control::new());
+    let (msg_tx, msg_rx) = mpsc::channel::<TrainerMsg>();
+    let (_gtx, grx) = mpsc::channel::<Vec<f32>>();
+    let h = mock_trainer(0, control.clone(), msg_tx, grx);
+    thread::sleep(Duration::from_millis(10));
+    control.request_stop();
+    let shipped = h.join().expect("trainer panicked");
+    assert!(shipped.is_empty());
+    assert!(msg_rx.try_recv().is_err(), "spurious message after stop");
+}
+
+#[test]
+fn collection_drops_stale_round_messages() {
+    // A message stamped with an old round (a dying trainer's last
+    // gasp) must not be counted into the current round's aggregate.
+    let (tx, rx) = mpsc::channel::<TrainerMsg>();
+    let stale = TrainerMsg {
+        id: 7,
+        round: 1,
+        weights: vec![7.0],
+        loss: 9.9,
+        steps: 0,
+    };
+    let fresh = TrainerMsg {
+        id: 1,
+        round: 2,
+        weights: vec![1.0],
+        loss: 0.1,
+        steps: 3,
+    };
+    tx.send(stale).unwrap();
+    tx.send(fresh).unwrap();
+    let (weights, losses) =
+        collect_round(&rx, 1, 2, Duration::from_secs(5));
+    assert_eq!(weights, vec![vec![1.0]]);
+    assert_eq!(losses, vec![0.1f32]);
+}
+
+#[test]
+fn collection_times_out_on_truly_dead_trainer() {
+    // The deadline is a safety net, not the normal path: with one
+    // registered trainer that never reports, collection returns the
+    // survivors (none) after the deadline instead of hanging forever.
+    let (tx, rx) = mpsc::channel::<TrainerMsg>();
+    let t0 = Instant::now();
+    let (weights, _) = collect_round(&rx, 1, 1, Duration::from_millis(50));
+    assert!(weights.is_empty());
+    assert!(t0.elapsed() >= Duration::from_millis(50));
+    drop(tx);
+}
+
+#[test]
+fn nan_losses_are_sanitised_during_collection() {
+    // A trainer that never produced a batch reports loss = NaN; the
+    // aggregation operators expect a large-but-finite sentinel.
+    let (tx, rx) = mpsc::channel::<TrainerMsg>();
+    tx.send(TrainerMsg {
+        id: 0,
+        round: 1,
+        weights: vec![0.0],
+        loss: f32::NAN,
+        steps: 0,
+    })
+    .unwrap();
+    let (_, losses) = collect_round(&rx, 1, 1, Duration::from_secs(5));
+    assert_eq!(losses, vec![f32::MAX]);
+}
