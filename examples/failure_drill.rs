@@ -1,14 +1,28 @@
 //! Failure drill: Q4 robustness, interactively.
 //!
-//! Runs the same training twice — once healthy, once with trainer 0
-//! failed at start (its partition lost) — for both RandomTMA and
-//! PSGD-PA, and prints the MRR deltas side by side. A compressed
-//! version of Table 6 meant for eyeballing the robustness gap.
+//! Two stages:
+//!
+//! 1. **Prep drill** (always runs, no artifacts needed — this is what
+//!    the CI smoke job exercises): partition the dataset, extract
+//!    survivor subgraphs with trainer 0's partition dropped via
+//!    `induce_all_except`, and verify the drill invariants — exact cut
+//!    accounting, nothing materialised for the lost partition, and all
+//!    survivors borrowing one shared feature slab (zero copies).
+//! 2. **Training drill** (needs compiled artifacts; skipped with a
+//!    note otherwise): the same training twice — once healthy, once
+//!    with trainer 0 failed at start — for both RandomTMA and PSGD-PA,
+//!    printing the MRR deltas side by side. A compressed Table 6 for
+//!    eyeballing the robustness gap.
 
 use random_tma::config::{Approach, RunConfig};
 use random_tma::coordinator::run_experiment;
+use random_tma::gen::load_preset;
+use random_tma::graph::{induce_all, induce_all_except};
+use random_tma::partition::{partition_stats_with_cuts, random_partition};
+use random_tma::runtime::Manifest;
 use random_tma::util::bench::Table;
 use random_tma::util::cli::Args;
+use random_tma::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(&["quick"]);
@@ -22,6 +36,72 @@ fn main() -> anyhow::Result<()> {
         ..RunConfig::default()
     };
 
+    prep_drill(&base)?;
+
+    if Manifest::load(&Manifest::default_dir()).is_err() {
+        println!(
+            "training drill skipped: artifacts missing (run `make \
+             artifacts` for the MRR comparison)"
+        );
+        return Ok(());
+    }
+    training_drill(&base)
+}
+
+/// Stage 1: partition + drill extraction invariants, artifact-free.
+fn prep_drill(base: &RunConfig) -> anyhow::Result<()> {
+    let preset = load_preset(&base.dataset, base.quick, 20, 8, base.seed)?;
+    let g = &preset.split.train;
+    let m = base.trainers;
+    let mut rng = Rng::new(base.seed);
+    let assign = random_partition(g.num_nodes(), m, &mut rng);
+
+    let healthy = induce_all(g, &assign, m);
+    let drilled = induce_all_except(g, &assign, m, &[0]);
+    let cuts: Vec<usize> = drilled.iter().map(|s| s.cut_edges).collect();
+    let stats = partition_stats_with_cuts(g, &assign, m, &cuts);
+
+    // Drill invariants — fail loudly in CI if any regresses.
+    let parent_slab = g.features.slab_ptr();
+    anyhow::ensure!(
+        parent_slab.is_some(),
+        "train graph is not slab-backed ({}) — the zero-copy prep \
+         contract is broken at the source",
+        g.features.backend()
+    );
+    for (p, (h, d)) in healthy.iter().zip(&drilled).enumerate() {
+        anyhow::ensure!(
+            h.cut_edges == d.cut_edges,
+            "part {p}: drill changed the cut count"
+        );
+        if p == 0 {
+            anyhow::ensure!(
+                d.graph.num_nodes() == 0 && d.graph.features.is_empty(),
+                "lost partition 0 was materialised"
+            );
+        } else {
+            anyhow::ensure!(
+                d.graph.features.slab_ptr() == parent_slab,
+                "part {p}: survivor does not share the parent feature slab"
+            );
+        }
+    }
+    println!(
+        "prep drill ok: |V|={} M={m} F=1, r={:.3}, survivors share one \
+         {}-f32 slab ({} private feature bytes across survivors)",
+        g.num_nodes(),
+        stats.ratio_r,
+        g.num_nodes() * g.feat_dim,
+        drilled
+            .iter()
+            .map(|s| s.graph.features.heap_bytes())
+            .sum::<usize>(),
+    );
+    Ok(())
+}
+
+/// Stage 2: the full Table-6-style MRR comparison.
+fn training_drill(base: &RunConfig) -> anyhow::Result<()> {
     let mut t = Table::new(
         "Failure drill: F=1 of M=3 (trainer 0 never starts)",
         &["Approach", "MRR healthy", "MRR F=1", "Δ"],

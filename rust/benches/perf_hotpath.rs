@@ -19,6 +19,7 @@ use random_tma::util::rng::Rng;
 
 fn main() {
     prep_path();
+    prep_feature_store();
     comm_encode();
     engine_path();
 }
@@ -74,6 +75,54 @@ fn prep_path() {
         fmt_secs(t_scan.median_s()),
         fmt_secs(t_reuse.median_s()),
         t_scan.median_s() / t_reuse.median_s().max(1e-12),
+    );
+}
+
+/// Feature-store prep at high feature width: `induce_all` over an
+/// Owned parent (per-trainer slab copies — the pre-FeatureStore
+/// behaviour) vs a Shared parent (index-only views over one Arc'd
+/// slab). At d=256 the copy is the dominant prep cost the refactor
+/// removes; the byte counters show what each trainer privately holds.
+fn prep_feature_store() {
+    let g = dcsbm(&DcsbmConfig {
+        nodes: 60_000,
+        communities: 100,
+        avg_degree: 10.0,
+        homophily: 0.8,
+        feat_dim: 256,
+        feature_noise: 0.6,
+        degree_exponent: 0.9,
+        seed: 3,
+    });
+    let m = 8;
+    let mut rng = Rng::new(4);
+    let assign = random_partition(g.num_nodes(), m, &mut rng);
+    let owned = {
+        let mut h = g.clone();
+        h.features = h.features.to_vec(h.feat_dim).into();
+        h
+    };
+
+    let t_copied = time("induce_all d=256 (Owned: copy slabs)", 1, 3, || {
+        black_box(induce_all(&owned, &assign, m));
+    });
+    let t_shared = time("induce_all d=256 (Shared: zero-copy)", 1, 3, || {
+        black_box(induce_all(&g, &assign, m));
+    });
+    let feat_bytes = |subs: &[random_tma::graph::Subgraph]| -> usize {
+        subs.iter().map(|s| s.graph.features.heap_bytes()).sum()
+    };
+    let copied_bytes = feat_bytes(&induce_all(&owned, &assign, m));
+    let shared_bytes = feat_bytes(&induce_all(&g, &assign, m));
+    println!(
+        "feature store |V|={} d=256 M={m}: copied {}  shared {}  ({:.1}x); \
+         private feature bytes {:.1} MB -> {:.1} MB",
+        g.num_nodes(),
+        fmt_secs(t_copied.median_s()),
+        fmt_secs(t_shared.median_s()),
+        t_copied.median_s() / t_shared.median_s().max(1e-12),
+        copied_bytes as f64 / 1e6,
+        shared_bytes as f64 / 1e6,
     );
 }
 

@@ -11,7 +11,7 @@
 //! expect, matching the paper's "4 bases = total forward and inverse
 //! relations" setup.
 
-use crate::graph::{Graph, GraphBuilder};
+use crate::graph::{FeatureStore, Graph, GraphBuilder};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -107,7 +107,7 @@ pub fn bipartite(cfg: &BipartiteConfig) -> BipartiteGraph {
                 mu[cc * f + d] + noise as f32 * rng.gaussian() as f32;
         }
     }
-    g.features = features;
+    g.features = FeatureStore::shared_from_vec(features, f);
     g.feat_dim = f;
     g.labels = labels;
     g.num_classes = c;

@@ -13,7 +13,7 @@
 //! theory assumes (one-hot features are the noise→0, orthogonal-mu
 //! special case).
 
-use crate::graph::{Graph, GraphBuilder};
+use crate::graph::{FeatureStore, Graph, GraphBuilder};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -145,7 +145,9 @@ pub fn dcsbm(cfg: &DcsbmConfig) -> Graph {
         }
     }
 
-    g.features = features;
+    // Shared identity slab: trainer subgraphs induced from this graph
+    // are zero-copy index views over one Arc'd allocation.
+    g.features = FeatureStore::shared_from_vec(features, f);
     g.feat_dim = f;
     g.labels = labels;
     g.num_classes = c;
@@ -198,7 +200,8 @@ mod tests {
         let a = dcsbm(&base(0.8, 5));
         let b = dcsbm(&base(0.8, 5));
         assert_eq!(a.neighbors, b.neighbors);
-        assert_eq!(a.features, b.features);
+        assert!(a.features.rows_equal(&b.features, a.feat_dim));
+        assert_eq!(a.features.backend(), "shared");
         let c = dcsbm(&base(0.8, 6));
         assert_ne!(a.neighbors, c.neighbors);
     }

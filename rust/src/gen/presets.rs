@@ -58,6 +58,14 @@ fn cache_path(name: &str, quick: bool, seed: u64) -> PathBuf {
     PathBuf::from("data").join(format!("{name}{q}.s{seed}.bin"))
 }
 
+/// `RTMA_MMAP=1` opts cache opens into [`crate::graph::io::load_mapped`]:
+/// the CSR arrays come into the heap as usual, but the feature slab is
+/// served straight from the page cache — the path for feature matrices
+/// that exceed RAM. Default stays the heap loader (a Shared slab).
+fn use_mmap() -> bool {
+    std::env::var("RTMA_MMAP").is_ok_and(|v| v == "1")
+}
+
 fn cached_graph(
     name: &str,
     quick: bool,
@@ -66,12 +74,51 @@ fn cached_graph(
     let boundary = bipartite_boundary(name, quick);
     let path = cache_path(name, quick, seed);
     if path.exists() {
-        if let Ok(g) = crate::graph::io::load(&path) {
+        if use_mmap() {
+            match crate::graph::io::load_mapped(&path) {
+                Ok(g) => return Ok((g, boundary)),
+                Err(e) if crate::graph::io::is_mappable_layout(&path) => {
+                    // The layout is already mappable, so regenerating
+                    // cannot help — mmap is unavailable in this
+                    // environment (non-unix, filesystem without mmap).
+                    // Heap-load the same cache, loudly.
+                    eprintln!(
+                        "RTMA_MMAP=1: cannot map {} ({e:#}); falling \
+                         back to the in-memory shared slab",
+                        path.display()
+                    );
+                    if let Ok(g) = crate::graph::io::load(&path) {
+                        return Ok((g, boundary));
+                    }
+                }
+                // Legacy (v1) or corrupt cache: NO silent heap
+                // fallback — that would load the full slab into RAM
+                // forever, the exact thing the opt-in avoids. Fall
+                // through to regenerate + re-save, which upgrades the
+                // cache to the mappable RTMAGRF2 layout.
+                Err(e) => eprintln!(
+                    "RTMA_MMAP=1: cannot map {}: {e:#}; regenerating \
+                     the cache in the mappable layout",
+                    path.display()
+                ),
+            }
+        } else if let Ok(g) = crate::graph::io::load(&path) {
             return Ok((g, boundary));
         }
     }
     let g = generate(name, quick, seed)?;
-    crate::graph::io::save(&g, &path).ok(); // cache best-effort
+    let saved = crate::graph::io::save(&g, &path).is_ok(); // best-effort
+    if saved && use_mmap() {
+        // Re-open through the cache so a first run under RTMA_MMAP=1
+        // actually maps the file it just wrote.
+        match crate::graph::io::load_mapped(&path) {
+            Ok(m) => return Ok((m, boundary)),
+            Err(e) => eprintln!(
+                "RTMA_MMAP=1: mmap failed after save ({e:#}); \
+                 continuing with the in-memory shared slab",
+            ),
+        }
+    }
     Ok((g, boundary))
 }
 

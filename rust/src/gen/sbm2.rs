@@ -7,7 +7,7 @@
 //! discrepancies (Thm 2) on graphs from this generator and compares
 //! them with the closed forms.
 
-use crate::graph::{Graph, GraphBuilder};
+use crate::graph::{FeatureStore, Graph, GraphBuilder};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -50,10 +50,11 @@ pub fn sbm2(cfg: &Sbm2Config) -> Graph {
     let mut g = b.build();
     // one-hot features
     g.feat_dim = 2;
-    g.features = labels
+    let onehot: Vec<f32> = labels
         .iter()
         .flat_map(|&y| if y == 0 { [1.0, 0.0] } else { [0.0, 1.0] })
         .collect();
+    g.features = FeatureStore::shared_from_vec(onehot, 2);
     g.labels = labels;
     g.num_classes = 2;
     g

@@ -1,5 +1,7 @@
 //! CSR graph with node features, class labels and optional edge types.
 
+use super::FeatureStore;
+
 /// Compact undirected graph in CSR form. Both directions of every
 /// undirected edge are stored, so `deg(v)` is the true degree and the
 /// undirected edge count is `num_adj() / 2`.
@@ -11,8 +13,9 @@ pub struct Graph {
     pub neighbors: Vec<u32>,
     /// Optional per-adjacency-entry relation type (heterogeneous graphs).
     pub rel: Option<Vec<u8>>,
-    /// Row-major node features, `num_nodes x feat_dim`.
-    pub features: Vec<f32>,
+    /// `num_nodes x feat_dim` node features behind one of the three
+    /// [`FeatureStore`] backends (owned / shared slab / mmap).
+    pub features: FeatureStore,
     pub feat_dim: usize,
     /// Synthetic community / class label per node (ground truth used by
     /// the theory benches and the feature generator; never by training).
@@ -56,7 +59,7 @@ impl Graph {
 
     #[inline]
     pub fn feature(&self, v: usize) -> &[f32] {
-        &self.features[v * self.feat_dim..(v + 1) * self.feat_dim]
+        self.features.row(v, self.feat_dim)
     }
 
     pub fn has_edge(&self, u: usize, v: usize) -> bool {
@@ -137,7 +140,7 @@ impl GraphBuilder {
             offsets,
             neighbors,
             rel,
-            features: Vec::new(),
+            features: FeatureStore::default(),
             feat_dim: 0,
             labels: vec![0; n],
             num_classes: 1,

@@ -1,0 +1,613 @@
+//! Feature storage backends: owned, shared-slab, and mmap'd.
+//!
+//! Every trainer subgraph used to carry a private `Vec<f32>` copy of
+//! its `|V_p| x d` feature rows, which dominated prep cost on high-d
+//! graphs and capped dataset size at RAM. [`FeatureStore`] replaces the
+//! raw vector behind [`Graph::feature`] with three backends:
+//!
+//! - [`FeatureStore::Owned`] — a plain row-major `Vec<f32>`. The
+//!   construction-time backend for hand-built test graphs and the
+//!   *reference* the differential suite compares the other two against.
+//! - [`FeatureStore::Shared`] — an `Arc<[f32]>` slab plus a `u32`
+//!   row-index. Generators and the binary loader produce the full
+//!   graph in this form (identity index); subgraph induction then
+//!   emits index-only *views* over the parent slab, so extracting `k`
+//!   trainer subgraphs copies **zero** feature floats and every
+//!   trainer borrows the same allocation through the `Arc`.
+//! - [`FeatureStore::Mapped`] — the feature section of an RTMAGRF2
+//!   cache file mapped read-only into the address space
+//!   ([`crate::graph::io::load_mapped`]). Rows are faulted in by the
+//!   page cache on first touch, so graphs whose feature slab exceeds
+//!   RAM still train; views compose the same way as `Shared`.
+//!
+//! The store is deliberately dumb about geometry: the row width `dim`
+//! lives on [`Graph::feat_dim`] (one source of truth) and is passed
+//! into every accessor. All three backends yield bit-identical
+//! [`row`](FeatureStore::row) slices for the same logical content —
+//! locked in by the differential tests in `graph::induce` and
+//! `tests/feature_store.rs`.
+//!
+//! [`Graph::feature`]: super::Graph::feature
+//! [`Graph::feat_dim`]: super::Graph::feat_dim
+
+use std::sync::Arc;
+
+/// Node-feature storage: one logical `rows x dim` row-major f32 matrix
+/// behind one of three physical backends. See the module docs.
+#[derive(Clone)]
+pub enum FeatureStore {
+    /// Private row-major buffer (row `v` at `v*dim..(v+1)*dim`).
+    Owned(Vec<f32>),
+    /// Reference-counted slab; `index[local] = row` within the slab.
+    Shared { slab: Arc<[f32]>, index: Vec<u32> },
+    /// Memory-mapped slab; `index` of `None` means identity (the full
+    /// on-disk graph), `Some` is a subgraph view into the mapped rows.
+    Mapped { map: Arc<MappedSlab>, index: Option<Vec<u32>> },
+}
+
+impl Default for FeatureStore {
+    fn default() -> FeatureStore {
+        FeatureStore::Owned(Vec::new())
+    }
+}
+
+/// `Vec<f32>` literals become the `Owned` baseline backend.
+impl From<Vec<f32>> for FeatureStore {
+    fn from(data: Vec<f32>) -> FeatureStore {
+        FeatureStore::Owned(data)
+    }
+}
+
+impl std::fmt::Debug for FeatureStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FeatureStore::Owned(d) => {
+                write!(f, "FeatureStore::Owned({} f32)", d.len())
+            }
+            FeatureStore::Shared { slab, index } => write!(
+                f,
+                "FeatureStore::Shared({} rows over {}-f32 slab)",
+                index.len(),
+                slab.len()
+            ),
+            FeatureStore::Mapped { map, index } => write!(
+                f,
+                "FeatureStore::Mapped({} rows over {}-f32 map)",
+                index.as_ref().map_or(map.len(), |i| i.len()),
+                map.len()
+            ),
+        }
+    }
+}
+
+impl FeatureStore {
+    /// Full-graph `Shared` store: moves `data` into an `Arc` slab with
+    /// an identity index of `data.len() / dim` rows. This is what the
+    /// generators and `io::load` hand the coordinator so later
+    /// induction is zero-copy. A featureless graph (`dim == 0`)
+    /// degenerates to the empty `Owned` store — there is no slab worth
+    /// sharing and no per-node row to index.
+    pub fn shared_from_vec(data: Vec<f32>, dim: usize) -> FeatureStore {
+        if dim == 0 {
+            return FeatureStore::default();
+        }
+        debug_assert_eq!(
+            data.len() % dim,
+            0,
+            "feature buffer is not a whole number of {dim}-wide rows"
+        );
+        let rows = data.len() / dim;
+        FeatureStore::Shared {
+            slab: Arc::from(data),
+            index: (0..rows as u32).collect(),
+        }
+    }
+
+    /// Short backend tag for logs and test diagnostics.
+    pub fn backend(&self) -> &'static str {
+        match self {
+            FeatureStore::Owned(_) => "owned",
+            FeatureStore::Shared { .. } => "shared",
+            FeatureStore::Mapped { .. } => "mapped",
+        }
+    }
+
+    /// Row `v` as a feature slice of width `dim`.
+    #[inline]
+    pub fn row(&self, v: usize, dim: usize) -> &[f32] {
+        if dim == 0 {
+            return &[];
+        }
+        match self {
+            FeatureStore::Owned(d) => &d[v * dim..(v + 1) * dim],
+            FeatureStore::Shared { slab, index } => {
+                let r = index[v] as usize;
+                &slab[r * dim..(r + 1) * dim]
+            }
+            FeatureStore::Mapped { map, index } => {
+                let r = index.as_ref().map_or(v, |i| i[v] as usize);
+                &map.as_slice()[r * dim..(r + 1) * dim]
+            }
+        }
+    }
+
+    /// Number of logical rows (nodes) this store describes.
+    pub fn num_rows(&self, dim: usize) -> usize {
+        match self {
+            FeatureStore::Owned(d) => {
+                if dim == 0 {
+                    0
+                } else {
+                    d.len() / dim
+                }
+            }
+            FeatureStore::Shared { index, .. } => index.len(),
+            FeatureStore::Mapped { map, index } => match index {
+                Some(i) => i.len(),
+                None => {
+                    if dim == 0 {
+                        0
+                    } else {
+                        map.len() / dim
+                    }
+                }
+            },
+        }
+    }
+
+    /// True when the store describes no feature data at all.
+    pub fn is_empty(&self) -> bool {
+        match self {
+            FeatureStore::Owned(d) => d.is_empty(),
+            FeatureStore::Shared { index, .. } => index.is_empty(),
+            FeatureStore::Mapped { map, index } => match index {
+                Some(i) => i.is_empty(),
+                None => map.len() == 0,
+            },
+        }
+    }
+
+    /// Subgraph view: row `i` of the result is row `rows[i]` of
+    /// `self`. `Shared`/`Mapped` compose indices without touching a
+    /// single feature float; `Owned` falls back to a gathering copy
+    /// (the pre-refactor per-trainer-slab semantics, kept as the
+    /// differential baseline).
+    pub fn view(&self, rows: &[u32], dim: usize) -> FeatureStore {
+        match self {
+            FeatureStore::Owned(d) => {
+                let mut out = Vec::with_capacity(rows.len() * dim);
+                for &g in rows {
+                    let g = g as usize;
+                    out.extend_from_slice(&d[g * dim..(g + 1) * dim]);
+                }
+                FeatureStore::Owned(out)
+            }
+            FeatureStore::Shared { slab, index } => FeatureStore::Shared {
+                slab: Arc::clone(slab),
+                index: rows.iter().map(|&g| index[g as usize]).collect(),
+            },
+            FeatureStore::Mapped { map, index } => FeatureStore::Mapped {
+                map: Arc::clone(map),
+                index: Some(match index {
+                    Some(i) => {
+                        rows.iter().map(|&g| i[g as usize]).collect()
+                    }
+                    None => rows.to_vec(),
+                }),
+            },
+        }
+    }
+
+    /// Gather the logical matrix into a fresh row-major vector.
+    pub fn to_vec(&self, dim: usize) -> Vec<f32> {
+        if let FeatureStore::Owned(d) = self {
+            return d.clone();
+        }
+        let n = self.num_rows(dim);
+        let mut out = Vec::with_capacity(n * dim);
+        for v in 0..n {
+            out.extend_from_slice(self.row(v, dim));
+        }
+        out
+    }
+
+    /// The backing slab as one contiguous row-major slice, when the
+    /// store IS its slab in row order (Owned; Shared with an identity
+    /// index covering the whole slab; Mapped without a view index).
+    /// `None` for scattered views — callers gather instead.
+    pub fn contiguous(&self, dim: usize) -> Option<&[f32]> {
+        match self {
+            FeatureStore::Owned(d) => Some(d),
+            FeatureStore::Shared { slab, index } => {
+                let identity = dim > 0
+                    && index.len().checked_mul(dim) == Some(slab.len())
+                    && index
+                        .iter()
+                        .enumerate()
+                        .all(|(i, &r)| r as usize == i);
+                if identity || (slab.is_empty() && index.is_empty()) {
+                    Some(slab)
+                } else {
+                    None
+                }
+            }
+            FeatureStore::Mapped { map, index: None } => {
+                Some(map.as_slice())
+            }
+            FeatureStore::Mapped { .. } => None,
+        }
+    }
+
+    /// Bytes of process heap this store *privately* adds on top of the
+    /// backing slab: the whole buffer for `Owned`, only the u32 row
+    /// index for `Shared`/`Mapped` views. The slab itself is
+    /// attributed to no store (it is one allocation however many views
+    /// borrow it; mapped bytes belong to the page cache). The
+    /// zero-copy regression tests assert on this; the driver's
+    /// `local_bytes` deployment metric instead counts logical
+    /// `rows x dim` bytes per trainer.
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            FeatureStore::Owned(d) => d.len() * 4,
+            FeatureStore::Shared { index, .. } => index.len() * 4,
+            FeatureStore::Mapped { index, .. } => {
+                index.as_ref().map_or(0, |i| i.len() * 4)
+            }
+        }
+    }
+
+    /// Base address of the backing slab — `None` for `Owned`. Two
+    /// stores returning the same pointer share one allocation; the
+    /// zero-copy regression tests assert this across all `k` trainer
+    /// subgraphs of one induction.
+    pub fn slab_ptr(&self) -> Option<*const f32> {
+        match self {
+            FeatureStore::Owned(_) => None,
+            FeatureStore::Shared { slab, .. } => Some(slab.as_ptr()),
+            FeatureStore::Mapped { map, .. } => {
+                Some(map.as_slice().as_ptr())
+            }
+        }
+    }
+
+    /// True for the zero-copy in-memory backend.
+    pub fn is_shared(&self) -> bool {
+        matches!(self, FeatureStore::Shared { .. })
+    }
+
+    /// Bit-exact row-by-row equality (the differential-suite check:
+    /// `f32` compared as raw bits, so even NaN payloads must agree).
+    pub fn rows_equal(&self, other: &FeatureStore, dim: usize) -> bool {
+        if dim == 0 {
+            return true;
+        }
+        let n = self.num_rows(dim);
+        if n != other.num_rows(dim) {
+            return false;
+        }
+        (0..n).all(|v| {
+            self.row(v, dim)
+                .iter()
+                .zip(other.row(v, dim))
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+        })
+    }
+}
+
+/// Test support for the differential suites (unit, integration and
+/// bench harnesses all rehost the same way — keep ONE recipe): the
+/// same graph with its features rehosted on each backend — `owned`
+/// (the copying reference), `shared`, and, on unix, `mapped` via an
+/// RTMAGRF2 temp-file round trip. Panics on IO errors; hidden from
+/// the public docs.
+#[doc(hidden)]
+pub fn rehost_backends(
+    g: &super::Graph,
+    tag: &str,
+) -> Vec<(&'static str, super::Graph)> {
+    let owned = {
+        let mut h = g.clone();
+        h.features = h.features.to_vec(h.feat_dim).into();
+        h
+    };
+    let shared = {
+        let mut h = g.clone();
+        h.features = FeatureStore::shared_from_vec(
+            g.features.to_vec(g.feat_dim),
+            g.feat_dim,
+        );
+        h
+    };
+    let mut out = vec![("owned", owned), ("shared", shared)];
+    if cfg!(unix) {
+        // Unique file per call: differential tests run concurrently in
+        // one process, so tag + pid alone could collide.
+        static SEQ: std::sync::atomic::AtomicUsize =
+            std::sync::atomic::AtomicUsize::new(0);
+        let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "rtma_rehost_{tag}_{}_{seq}.bin",
+            std::process::id()
+        ));
+        super::io::save(g, &path).unwrap();
+        let mapped = super::io::load_mapped(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(mapped.features.backend(), "mapped");
+        out.push(("mapped", mapped));
+    }
+    out
+}
+
+/// A read-only `mmap` of one cache file, exposing its aligned feature
+/// section as `&[f32]`. Built by [`crate::graph::io::load_mapped`];
+/// dropped views unmap when the last `Arc` goes away.
+pub struct MappedSlab {
+    base: *mut u8,
+    map_len: usize,
+    /// Byte offset of the f32 feature section within the map. The
+    /// RTMAGRF2 writer 8-aligns it, so the f32 view is always aligned.
+    data_offset: usize,
+    floats: usize,
+}
+
+// SAFETY: the mapping is PROT_READ/MAP_PRIVATE and never mutated after
+// construction, so concurrent reads from any thread are sound.
+unsafe impl Send for MappedSlab {}
+unsafe impl Sync for MappedSlab {}
+
+impl std::fmt::Debug for MappedSlab {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MappedSlab({} f32 @ +{} of {} mapped bytes)",
+            self.floats, self.data_offset, self.map_len
+        )
+    }
+}
+
+impl MappedSlab {
+    /// Map `file` (whole, read-only) and expose `floats` f32s starting
+    /// at byte `data_offset`. The offset must be 4-byte aligned and the
+    /// f32 section must lie within the file — callers (`io`) validate
+    /// the layout against the file length before getting here.
+    #[cfg(unix)]
+    pub fn map_file(
+        file: &std::fs::File,
+        data_offset: usize,
+        floats: usize,
+    ) -> anyhow::Result<MappedSlab> {
+        use std::os::unix::io::AsRawFd;
+
+        anyhow::ensure!(
+            data_offset % 4 == 0,
+            "feature section at byte {data_offset} is not f32-aligned \
+             (legacy cache file? re-save to the RTMAGRF2 layout)"
+        );
+        if cfg!(target_endian = "big") {
+            anyhow::bail!(
+                "mmap'd features require a little-endian host \
+                 (file layout is LE)"
+            );
+        }
+        let map_len = file.metadata()?.len() as usize;
+        anyhow::ensure!(
+            data_offset
+                .checked_add(floats.checked_mul(4).ok_or_else(|| {
+                    anyhow::anyhow!("feature section size overflows")
+                })?)
+                .is_some_and(|end| end <= map_len),
+            "feature section [{data_offset}, +{floats}*4) exceeds the \
+             {map_len}-byte file"
+        );
+        if floats == 0 {
+            // Zero-length mappings are invalid; an empty slab needs none.
+            return Ok(MappedSlab {
+                base: std::ptr::null_mut(),
+                map_len: 0,
+                data_offset: 0,
+                floats: 0,
+            });
+        }
+
+        const PROT_READ: i32 = 0x1;
+        const MAP_PRIVATE: i32 = 0x2;
+        // SAFETY: length is the exact file size, fd is a valid open
+        // file, and the returned region is only ever read.
+        let base = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                map_len,
+                PROT_READ,
+                MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if base as isize == -1 {
+            anyhow::bail!(
+                "mmap({} bytes) failed: {}",
+                map_len,
+                std::io::Error::last_os_error()
+            );
+        }
+        Ok(MappedSlab {
+            base: base.cast(),
+            map_len,
+            data_offset,
+            floats,
+        })
+    }
+
+    /// Non-unix hosts fall back to heap loading at the `io` layer.
+    #[cfg(not(unix))]
+    pub fn map_file(
+        _file: &std::fs::File,
+        _data_offset: usize,
+        _floats: usize,
+    ) -> anyhow::Result<MappedSlab> {
+        anyhow::bail!("mmap'd feature slabs are only supported on unix")
+    }
+
+    /// The mapped feature section.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        if self.floats == 0 {
+            return &[];
+        }
+        // SAFETY: construction validated alignment and bounds; the
+        // mapping lives as long as `self` and is never written.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.base.add(self.data_offset).cast::<f32>(),
+                self.floats,
+            )
+        }
+    }
+
+    /// f32 capacity of the mapped section.
+    pub fn len(&self) -> usize {
+        self.floats
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.floats == 0
+    }
+}
+
+impl Drop for MappedSlab {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if self.map_len > 0 {
+            // SAFETY: base/map_len came from a successful mmap.
+            unsafe {
+                munmap(self.base.cast(), self.map_len);
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+extern "C" {
+    fn mmap(
+        addr: *mut std::ffi::c_void,
+        length: usize,
+        prot: i32,
+        flags: i32,
+        fd: i32,
+        offset: i64,
+    ) -> *mut std::ffi::c_void;
+    fn munmap(addr: *mut std::ffi::c_void, length: usize) -> i32;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn owned() -> FeatureStore {
+        FeatureStore::Owned((0..12).map(|i| i as f32).collect())
+    }
+
+    #[test]
+    fn owned_rows_and_geometry() {
+        let s = owned();
+        assert_eq!(s.num_rows(3), 4);
+        assert_eq!(s.row(1, 3), &[3.0, 4.0, 5.0]);
+        assert_eq!(s.backend(), "owned");
+        assert!(s.slab_ptr().is_none());
+        assert_eq!(s.heap_bytes(), 48);
+        assert!(!s.is_empty());
+        assert!(FeatureStore::default().is_empty());
+    }
+
+    #[test]
+    fn shared_identity_matches_owned() {
+        let o = owned();
+        let s = FeatureStore::shared_from_vec(o.to_vec(3), 3);
+        assert_eq!(s.num_rows(3), 4);
+        assert!(s.is_shared());
+        assert!(s.rows_equal(&o, 3));
+        assert_eq!(s.contiguous(3).unwrap(), o.contiguous(3).unwrap());
+        // views share the allocation, never copy
+        let v = s.view(&[2, 0], 3);
+        assert_eq!(v.num_rows(3), 2);
+        assert_eq!(v.row(0, 3), &[6.0, 7.0, 8.0]);
+        assert_eq!(v.row(1, 3), &[0.0, 1.0, 2.0]);
+        assert_eq!(v.slab_ptr(), s.slab_ptr());
+        assert_eq!(v.heap_bytes(), 8); // two u32 index entries
+        assert!(v.contiguous(3).is_none());
+        // nested views compose indices
+        let vv = v.view(&[1], 3);
+        assert_eq!(vv.row(0, 3), &[0.0, 1.0, 2.0]);
+        assert_eq!(vv.slab_ptr(), s.slab_ptr());
+    }
+
+    #[test]
+    fn owned_view_gathers() {
+        let o = owned();
+        let v = o.view(&[3, 1], 3);
+        assert_eq!(v.backend(), "owned");
+        assert_eq!(v.to_vec(3), vec![9.0, 10.0, 11.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn zero_dim_is_benign() {
+        let s = FeatureStore::shared_from_vec(Vec::new(), 0);
+        assert_eq!(s.num_rows(0), 0);
+        assert!(s.is_empty());
+        assert!(s.rows_equal(&FeatureStore::default(), 0));
+        let o = FeatureStore::default();
+        assert_eq!(o.row(5, 0), &[] as &[f32]);
+    }
+
+    #[test]
+    fn rows_equal_is_bitwise() {
+        let a = FeatureStore::Owned(vec![0.0, -0.0]);
+        let b = FeatureStore::Owned(vec![0.0, 0.0]);
+        assert!(!a.rows_equal(&b, 1), "-0.0 must differ bitwise");
+        assert!(a.rows_equal(&a.clone(), 2));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapped_slab_reads_aligned_f32s() {
+        let path = std::env::temp_dir().join(format!(
+            "rtma_slab_{}.bin",
+            std::process::id()
+        ));
+        let floats: Vec<f32> = (0..6).map(|i| i as f32 * 1.5).collect();
+        let mut bytes = vec![0u8; 8]; // 8-byte "header"
+        for f in &floats {
+            bytes.extend_from_slice(&f.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let file = std::fs::File::open(&path).unwrap();
+        let map = MappedSlab::map_file(&file, 8, 6).unwrap();
+        assert_eq!(map.as_slice(), &floats[..]);
+        let store = FeatureStore::Mapped {
+            map: Arc::new(map),
+            index: None,
+        };
+        assert_eq!(store.num_rows(3), 2);
+        assert_eq!(store.row(1, 3), &floats[3..6]);
+        let view = store.view(&[1, 0], 3);
+        assert_eq!(view.row(0, 3), &floats[3..6]);
+        assert_eq!(view.slab_ptr(), store.slab_ptr());
+        assert_eq!(view.heap_bytes(), 8);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapped_slab_rejects_misaligned_and_oversized() {
+        let path = std::env::temp_dir().join(format!(
+            "rtma_slab_bad_{}.bin",
+            std::process::id()
+        ));
+        std::fs::write(&path, vec![0u8; 32]).unwrap();
+        let file = std::fs::File::open(&path).unwrap();
+        assert!(MappedSlab::map_file(&file, 3, 2).is_err(), "misaligned");
+        assert!(MappedSlab::map_file(&file, 8, 100).is_err(), "oversized");
+        assert!(MappedSlab::map_file(&file, 8, 2).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -17,14 +17,22 @@
 //!    (each parent adjacency entry belongs to exactly one part's node
 //!    range, so the parts together traverse the edge set once);
 //! 4. per-part cut counts returned on each [`Subgraph`], letting
-//!    [`partition_stats_with_cuts`] skip its own full edge scan.
+//!    [`partition_stats_with_cuts`] skip its own full edge scan;
+//! 5. feature slabs **shared, not copied**: each part's store is a
+//!    [`FeatureStore::view`] over the parent — an index-only `Shared`
+//!    (or `Mapped`) view when the parent uses a sharable backend, so
+//!    extracting `k` trainer subgraphs moves zero feature floats and
+//!    all trainers borrow one slab via `Arc`. Only an `Owned` parent
+//!    still gathers per-part copies (the reference semantics).
 //!
-//! The output is field-for-field identical to running
-//! [`Subgraph::induce`] on each part of the assignment (see the
-//! differential tests at the bottom), which is what the coordinator
-//! relied on before this path existed.
+//! The output reads identically to running [`Subgraph::induce`] on
+//! each part of the assignment — bit-for-bit on every `feature(v)`
+//! slice across all three store backends (see the differential tests
+//! at the bottom), which is what the coordinator relied on before this
+//! path existed.
 //!
 //! [`partition_stats_with_cuts`]: crate::partition::partition_stats_with_cuts
+//! [`FeatureStore::view`]: super::FeatureStore::view
 
 use crate::util::threadpool::parallel_map;
 
@@ -185,13 +193,14 @@ fn induce_part(
     }
     debug_assert_eq!(neighbors.len(), num_adj);
 
-    // Feature/label slabs, copied for trainer locality exactly as the
-    // reference path does.
+    // Features: an index view over the parent's slab — zero floats
+    // copied for Shared/Mapped parents (the coordinator's run-time
+    // backends), a gathering copy only for Owned ones. Labels are a
+    // 2-byte-per-node copy and stay private.
     let feat_dim = parent.feat_dim;
-    let mut features: Vec<f32> = Vec::with_capacity(size * feat_dim);
+    let features = parent.features.view(part, feat_dim);
     let mut labels: Vec<u16> = Vec::with_capacity(size);
     for &g in part {
-        features.extend_from_slice(parent.feature(g as usize));
         labels.push(parent.labels[g as usize]);
     }
 
@@ -215,11 +224,13 @@ fn induce_part(
 mod tests {
     use super::*;
     use crate::gen::{bipartite, dcsbm, BipartiteConfig, DcsbmConfig};
-    use crate::graph::GraphBuilder;
+    use crate::graph::{FeatureStore, GraphBuilder};
     use crate::partition::{parts_of, random_partition};
     use crate::util::rng::Rng;
 
-    /// Field-for-field equality against the reference implementation.
+    /// Field-for-field equality against the reference implementation
+    /// (features compared bit-for-bit through the store accessors, so
+    /// the same check covers every backend).
     fn diff(a: &Subgraph, b: &Subgraph) -> Result<(), String> {
         crate::prop_assert!(a.global_ids == b.global_ids, "global_ids");
         crate::prop_assert!(a.cut_edges == b.cut_edges, "cut_edges");
@@ -229,9 +240,14 @@ mod tests {
             "neighbors"
         );
         crate::prop_assert!(a.graph.rel == b.graph.rel, "rel");
-        crate::prop_assert!(a.graph.features == b.graph.features, "features");
-        crate::prop_assert!(a.graph.labels == b.graph.labels, "labels");
         crate::prop_assert!(a.graph.feat_dim == b.graph.feat_dim, "feat_dim");
+        crate::prop_assert!(
+            a.graph.features.rows_equal(&b.graph.features, a.graph.feat_dim),
+            "features ({} vs {})",
+            a.graph.features.backend(),
+            b.graph.features.backend()
+        );
+        crate::prop_assert!(a.graph.labels == b.graph.labels, "labels");
         crate::prop_assert!(
             a.graph.num_classes == b.graph.num_classes,
             "num_classes"
@@ -243,22 +259,36 @@ mod tests {
         Ok(())
     }
 
+    use crate::graph::features::rehost_backends as backends;
+
     fn assert_matches_reference(g: &Graph, assign: &[u32], k: usize) {
-        let fused = induce_all(g, assign, k);
-        assert_eq!(fused.len(), k);
+        // Reference: the serial copying path over the Owned baseline.
         let parts = parts_of(assign, k);
-        for (p, part) in parts.iter().enumerate() {
-            let reference = Subgraph::induce(g, part);
-            diff(&fused[p], &reference)
-                .unwrap_or_else(|f| panic!("part {p}: {f} mismatch"));
+        let baseline = {
+            let mut h = g.clone();
+            h.features = h.features.to_vec(h.feat_dim).into();
+            h
+        };
+        let references: Vec<Subgraph> =
+            parts.iter().map(|p| Subgraph::induce(&baseline, p)).collect();
+
+        for (backend, host) in backends(g, "ref") {
+            let fused = induce_all(&host, assign, k);
+            assert_eq!(fused.len(), k);
+            for (p, reference) in references.iter().enumerate() {
+                diff(&fused[p], reference).unwrap_or_else(|f| {
+                    panic!("backend {backend}, part {p}: {f} mismatch")
+                });
+            }
+            // Cut views from inside each part account for every cross
+            // edge twice; internal edges partition the remainder.
+            let internal: usize =
+                fused.iter().map(|s| s.graph.num_edges()).sum();
+            let cut_views: usize =
+                fused.iter().map(|s| s.cut_edges).sum();
+            assert_eq!(cut_views % 2, 0);
+            assert_eq!(internal + cut_views / 2, g.num_edges());
         }
-        // Cut views from inside each part account for every cross edge
-        // twice; internal edges partition the remainder.
-        let internal: usize =
-            fused.iter().map(|s| s.graph.num_edges()).sum();
-        let cut_views: usize = fused.iter().map(|s| s.cut_edges).sum();
-        assert_eq!(cut_views % 2, 0);
-        assert_eq!(internal + cut_views / 2, g.num_edges());
     }
 
     #[test]
@@ -308,7 +338,7 @@ mod tests {
         b.add_edge(2, 3);
         let mut g = b.build();
         g.feat_dim = 1;
-        g.features = (0..4).map(|i| i as f32).collect();
+        g.features = (0..4).map(|i| i as f32).collect::<Vec<f32>>().into();
         // part 1 is never assigned
         let assign = vec![0, 0, 2, 2];
         let subs = induce_all(&g, &assign, 3);
@@ -335,23 +365,29 @@ mod tests {
         let mut rng = Rng::new(33);
         let k = 4;
         let assign = random_partition(g.num_nodes(), k, &mut rng);
-        let full = induce_all(&g, &assign, k);
-        let drilled = induce_all_except(&g, &assign, k, &[1, 3]);
-        for p in 0..k {
-            assert_eq!(
-                drilled[p].cut_edges, full[p].cut_edges,
-                "part {p}: cut counts must not depend on skipping"
-            );
-            assert_eq!(drilled[p].global_ids, full[p].global_ids);
-        }
-        // Skipped parts carry no graph data; survivors are identical.
-        for p in [1usize, 3] {
-            assert_eq!(drilled[p].graph.num_nodes(), 0);
-            assert!(drilled[p].graph.neighbors.is_empty());
-            assert!(drilled[p].graph.features.is_empty());
-        }
-        for p in [0usize, 2] {
-            diff(&drilled[p], &full[p]).unwrap();
+        // The drill path must behave identically on every backend.
+        for (backend, host) in backends(&g, "drill") {
+            let full = induce_all(&host, &assign, k);
+            let drilled = induce_all_except(&host, &assign, k, &[1, 3]);
+            for p in 0..k {
+                assert_eq!(
+                    drilled[p].cut_edges, full[p].cut_edges,
+                    "{backend} part {p}: cuts must not depend on skipping"
+                );
+                assert_eq!(drilled[p].global_ids, full[p].global_ids);
+            }
+            // Skipped parts carry no graph data — the lost partition is
+            // never materialised in any backend.
+            for p in [1usize, 3] {
+                assert_eq!(drilled[p].graph.num_nodes(), 0, "{backend}");
+                assert!(drilled[p].graph.neighbors.is_empty());
+                assert!(drilled[p].graph.features.is_empty());
+                assert_eq!(drilled[p].graph.features.heap_bytes(), 0);
+            }
+            for p in [0usize, 2] {
+                diff(&drilled[p], &full[p])
+                    .unwrap_or_else(|f| panic!("{backend}: {f}"));
+            }
         }
     }
 
@@ -378,8 +414,16 @@ mod tests {
             }
             let mut g = b.build();
             g.feat_dim = rng.below(3);
-            g.features =
+            let feats: Vec<f32> =
                 (0..n * g.feat_dim).map(|_| rng.f32()).collect();
+            // Half the cases exercise the zero-copy Shared backend
+            // (Mapped is covered by the preset-based tests — per-case
+            // file IO would dominate the property run).
+            g.features = if rng.chance(0.5) {
+                FeatureStore::shared_from_vec(feats, g.feat_dim)
+            } else {
+                feats.into()
+            };
             g.labels = (0..n).map(|_| rng.below(4) as u16).collect();
             g.num_classes = 4;
 

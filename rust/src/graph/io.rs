@@ -1,129 +1,431 @@
-//! Binary graph serialization (little-endian, versioned).
+//! Binary graph serialization (little-endian, versioned) + mmap open.
 //!
 //! Used to cache generated datasets between bench runs so the
-//! generators run once per configuration. Format:
+//! generators run once per configuration. Current format (RTMAGRF2):
 //!
 //! ```text
-//! magic "RTMAGRF1" | n: u64 | adj: u64 | feat_dim: u64 | classes: u64
+//! magic "RTMAGRF2" | n: u64 | adj: u64 | feat_dim: u64 | classes: u64
 //! relations: u64 | has_rel: u8
+//! -- every section below starts 8-byte aligned (zero padding) --
 //! offsets [n+1] u64 | neighbors [adj] u32 | rel [adj] u8 (if has_rel)
 //! labels [n] u16 | features [n*feat_dim] f32
 //! ```
+//!
+//! The legacy RTMAGRF1 layout (same sections, unaligned) is still
+//! readable by [`load`]; [`save`] always writes RTMAGRF2. The
+//! alignment exists for [`load_mapped`]: the feature section of a v2
+//! file can be handed to trainers as an f32 slice straight out of an
+//! `mmap` ([`FeatureStore::Mapped`]) without a heap copy — the slab
+//! for graphs whose features exceed RAM.
+//!
+//! All array sections are bulk little-endian (one `read_exact` /
+//! `write_all` per section on LE hosts — the same treatment the comm
+//! wire format got), and every header is validated against the actual
+//! file length with overflow-checked arithmetic *before* any
+//! allocation, so truncated or corrupted caches fail with an error
+//! instead of an OOM or an out-of-bounds map.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use super::Graph;
+use super::{FeatureStore, Graph, MappedSlab};
 
-const MAGIC: &[u8; 8] = b"RTMAGRF1";
+const MAGIC_V1: &[u8; 8] = b"RTMAGRF1";
+const MAGIC_V2: &[u8; 8] = b"RTMAGRF2";
+const HEADER_BYTES: u64 = 8 + 5 * 8 + 1;
+
+/// Bulk LE array IO: on little-endian hosts (every deployment target)
+/// one `read_exact`/`write_all` over the element buffer's bytes; a
+/// per-element `from_le`/`to_le` loop elsewhere.
+///
+/// SAFETY of the byte views: the element types are plain-old-data
+/// (no invalid bit patterns, no padding), the slices are fully
+/// initialized, and `u8` has the weakest alignment.
+macro_rules! bulk_le {
+    ($read:ident, $write:ident, $t:ty, $size:expr) => {
+        fn $read<R: Read>(r: &mut R, out: &mut [$t]) -> std::io::Result<()> {
+            if cfg!(target_endian = "little") {
+                let bytes = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        out.as_mut_ptr().cast::<u8>(),
+                        out.len() * $size,
+                    )
+                };
+                r.read_exact(bytes)
+            } else {
+                let mut b = [0u8; $size];
+                for x in out.iter_mut() {
+                    r.read_exact(&mut b)?;
+                    *x = <$t>::from_le_bytes(b);
+                }
+                Ok(())
+            }
+        }
+
+        fn $write<W: Write>(w: &mut W, xs: &[$t]) -> std::io::Result<()> {
+            if cfg!(target_endian = "little") {
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(
+                        xs.as_ptr().cast::<u8>(),
+                        xs.len() * $size,
+                    )
+                };
+                w.write_all(bytes)
+            } else {
+                for x in xs {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+                Ok(())
+            }
+        }
+    };
+}
+
+bulk_le!(read_u64s, write_u64s, u64, 8);
+bulk_le!(read_u32s, write_u32s, u32, 4);
+bulk_le!(read_u16s, write_u16s, u16, 2);
+bulk_le!(read_f32s, write_f32s, f32, 4);
+
+#[derive(Clone, Copy, Debug)]
+struct Header {
+    v2: bool,
+    n: u64,
+    adj: u64,
+    feat_dim: u64,
+    num_classes: u64,
+    num_relations: u64,
+    has_rel: bool,
+}
+
+/// Absolute byte offsets of each section plus the exact file size the
+/// header implies. Everything is overflow-checked: a corrupt length
+/// field yields an error here, before any allocation or mapping.
+#[derive(Clone, Copy, Debug)]
+struct Layout {
+    off_offsets: u64,
+    off_neighbors: u64,
+    off_rel: u64,
+    off_labels: u64,
+    off_features: u64,
+    total: u64,
+}
+
+fn align8(x: u64) -> Option<u64> {
+    x.checked_add(7).map(|y| y & !7)
+}
+
+impl Layout {
+    fn of(h: &Header) -> Result<Layout> {
+        let err = || anyhow::anyhow!("header length fields overflow");
+        let align = |x: u64| -> Result<u64> {
+            if h.v2 {
+                align8(x).ok_or_else(err)
+            } else {
+                Ok(x)
+            }
+        };
+        let sec = |pos: u64, count: u64, elem: u64| -> Result<u64> {
+            pos.checked_add(count.checked_mul(elem).ok_or_else(err)?)
+                .ok_or_else(err)
+        };
+
+        let off_offsets = align(HEADER_BYTES)?;
+        let rows = h.n.checked_add(1).ok_or_else(err)?;
+        let off_neighbors = align(sec(off_offsets, rows, 8)?)?;
+        let off_rel = align(sec(off_neighbors, h.adj, 4)?)?;
+        let rel_end = if h.has_rel {
+            sec(off_rel, h.adj, 1)?
+        } else {
+            off_rel
+        };
+        let off_labels = align(rel_end)?;
+        let off_features = align(sec(off_labels, h.n, 2)?)?;
+        let floats = h.n.checked_mul(h.feat_dim).ok_or_else(err)?;
+        let total = sec(off_features, floats, 4)?;
+        Ok(Layout {
+            off_offsets,
+            off_neighbors,
+            off_rel,
+            off_labels,
+            off_features,
+            total,
+        })
+    }
+}
 
 pub fn save(g: &Graph, path: &Path) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    let mut w = BufWriter::new(std::fs::File::create(path)?);
-    w.write_all(MAGIC)?;
-    for v in [
-        g.num_nodes() as u64,
-        g.num_adj() as u64,
-        g.feat_dim as u64,
-        g.num_classes as u64,
-        g.num_relations as u64,
-    ] {
-        w.write_all(&v.to_le_bytes())?;
+    // Write to a sibling temp file and rename into place: concurrent
+    // readers always see a complete file, and an existing cache inode
+    // that another process may have mmap'd is never truncated
+    // (shrinking a live mapping's file turns its next page touch into
+    // SIGBUS — rename leaves the old inode intact until unmapped).
+    // pid + in-process counter: concurrent savers (test threads, racing
+    // bench binaries) each get a private temp file.
+    static SEQ: std::sync::atomic::AtomicUsize =
+        std::sync::atomic::AtomicUsize::new(0);
+    let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = path
+        .with_extension(format!("tmp{}.{seq}", std::process::id()));
+    if let Err(e) = write_graph(g, &tmp) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
     }
-    w.write_all(&[g.rel.is_some() as u8])?;
-    for &o in &g.offsets {
-        w.write_all(&o.to_le_bytes())?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename into {}", path.display()))?;
+    Ok(())
+}
+
+fn write_graph(g: &Graph, path: &Path) -> Result<()> {
+    let n = g.num_nodes();
+    ensure!(
+        g.feat_dim == 0 || g.features.num_rows(g.feat_dim) == n,
+        "feature store has {} rows, graph has {n} nodes",
+        g.features.num_rows(g.feat_dim)
+    );
+    // An Owned buffer must be an exact n*d matrix: floor-division rows
+    // would pass the check above yet make the file's feature section
+    // contradict its own header (every later load rejects it).
+    if let FeatureStore::Owned(d) = &g.features {
+        ensure!(
+            d.len() == n * g.feat_dim,
+            "owned feature buffer has {} f32s, expected n*d = {}",
+            d.len(),
+            n * g.feat_dim
+        );
     }
-    for &nb in &g.neighbors {
-        w.write_all(&nb.to_le_bytes())?;
-    }
+    ensure!(g.labels.len() == n, "labels/node count mismatch");
     if let Some(rel) = &g.rel {
+        ensure!(
+            rel.len() == g.neighbors.len(),
+            "rel/adjacency length mismatch"
+        );
+    }
+    let h = Header {
+        v2: true,
+        n: n as u64,
+        adj: g.num_adj() as u64,
+        feat_dim: g.feat_dim as u64,
+        num_classes: g.num_classes as u64,
+        num_relations: g.num_relations as u64,
+        has_rel: g.rel.is_some(),
+    };
+    // One source of truth for the byte layout: the writer pads each
+    // section up to the very offsets the reader will compute.
+    let lay = Layout::of(&h)?;
+
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC_V2)?;
+    write_u64s(
+        &mut w,
+        &[h.n, h.adj, h.feat_dim, h.num_classes, h.num_relations],
+    )?;
+    w.write_all(&[h.has_rel as u8])?;
+
+    let mut pos = HEADER_BYTES;
+    let pad_to = |w: &mut BufWriter<std::fs::File>,
+                  pos: &mut u64,
+                  target: u64|
+     -> Result<()> {
+        ensure!(
+            target >= *pos,
+            "writer ahead of layout: at {pos}, section starts at {target}"
+        );
+        w.write_all(&vec![0u8; (target - *pos) as usize])?;
+        *pos = target;
+        Ok(())
+    };
+
+    pad_to(&mut w, &mut pos, lay.off_offsets)?;
+    write_u64s(&mut w, &g.offsets)?;
+    pos += g.offsets.len() as u64 * 8;
+    pad_to(&mut w, &mut pos, lay.off_neighbors)?;
+    write_u32s(&mut w, &g.neighbors)?;
+    pos += g.neighbors.len() as u64 * 4;
+    if let Some(rel) = &g.rel {
+        pad_to(&mut w, &mut pos, lay.off_rel)?;
         w.write_all(rel)?;
+        pos += rel.len() as u64;
     }
-    for &l in &g.labels {
-        w.write_all(&l.to_le_bytes())?;
-    }
-    for &f in &g.features {
-        w.write_all(&f.to_le_bytes())?;
+    pad_to(&mut w, &mut pos, lay.off_labels)?;
+    write_u16s(&mut w, &g.labels)?;
+    pos += g.labels.len() as u64 * 2;
+    pad_to(&mut w, &mut pos, lay.off_features)?;
+    match g.features.contiguous(g.feat_dim) {
+        Some(slab) => write_f32s(&mut w, slab)?,
+        // Scattered view (e.g. saving a trainer subgraph): gather once.
+        None => write_f32s(&mut w, &g.features.to_vec(g.feat_dim))?,
     }
     w.flush()?;
     Ok(())
 }
 
-pub fn load(path: &Path) -> Result<Graph> {
-    let mut r = BufReader::new(
-        std::fs::File::open(path)
-            .with_context(|| format!("open {}", path.display()))?,
-    );
+/// Whether `path` carries the mappable (RTMAGRF2) magic. Cache policy
+/// uses this to tell "regenerate to upgrade the layout" apart from
+/// "mmap is unavailable in this environment" when a map attempt fails.
+pub fn is_mappable_layout(path: &Path) -> bool {
+    let mut magic = [0u8; 8];
+    std::fs::File::open(path)
+        .and_then(|mut f| f.read_exact(&mut magic))
+        .map(|_| &magic == MAGIC_V2)
+        .unwrap_or(false)
+}
+
+/// Read the magic + fixed header fields and validate the implied
+/// layout against the real file length.
+fn read_header(
+    r: &mut impl Read,
+    file_len: u64,
+    path: &Path,
+) -> Result<(Header, Layout)> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{}: bad magic", path.display());
-    }
-    let mut u64buf = [0u8; 8];
-    let mut read_u64 = |r: &mut BufReader<std::fs::File>| -> Result<u64> {
-        r.read_exact(&mut u64buf)?;
-        Ok(u64::from_le_bytes(u64buf))
+    let v2 = match &magic {
+        m if m == MAGIC_V2 => true,
+        m if m == MAGIC_V1 => false,
+        _ => bail!("{}: bad magic", path.display()),
     };
-    let n = read_u64(&mut r)? as usize;
-    let adj = read_u64(&mut r)? as usize;
-    let feat_dim = read_u64(&mut r)? as usize;
-    let num_classes = read_u64(&mut r)? as usize;
-    let num_relations = read_u64(&mut r)? as usize;
+    let mut fields = [0u64; 5];
+    read_u64s(r, &mut fields)?;
     let mut flag = [0u8; 1];
     r.read_exact(&mut flag)?;
+    if flag[0] > 1 {
+        bail!("{}: bad has_rel flag {}", path.display(), flag[0]);
+    }
+    let h = Header {
+        v2,
+        n: fields[0],
+        adj: fields[1],
+        feat_dim: fields[2],
+        num_classes: fields[3],
+        num_relations: fields[4],
+        has_rel: flag[0] == 1,
+    };
+    let lay = Layout::of(&h)
+        .with_context(|| format!("{}: corrupt header", path.display()))?;
+    ensure!(
+        lay.total == file_len,
+        "{}: truncated or corrupt (file is {file_len} bytes, header \
+         implies {})",
+        path.display(),
+        lay.total
+    );
+    Ok((h, lay))
+}
 
+/// Skip `k` padding bytes of the reader.
+fn skip(r: &mut impl Read, k: u64) -> Result<()> {
+    let mut buf = [0u8; 8];
+    let mut left = k;
+    while left > 0 {
+        let take = left.min(8) as usize;
+        r.read_exact(&mut buf[..take])?;
+        left -= take as u64;
+    }
+    Ok(())
+}
+
+/// Everything before the feature section, plus where features start.
+fn load_prefix(
+    r: &mut impl Read,
+    h: &Header,
+    lay: &Layout,
+) -> Result<Graph> {
+    let n = h.n as usize;
+    let adj = h.adj as usize;
+
+    skip(r, lay.off_offsets - HEADER_BYTES)?;
     let mut offsets = vec![0u64; n + 1];
-    for o in &mut offsets {
-        let mut b = [0u8; 8];
-        r.read_exact(&mut b)?;
-        *o = u64::from_le_bytes(b);
-    }
+    read_u64s(r, &mut offsets)?;
+
     let mut neighbors = vec![0u32; adj];
-    for nb in &mut neighbors {
-        let mut b = [0u8; 4];
-        r.read_exact(&mut b)?;
-        *nb = u32::from_le_bytes(b);
-    }
-    let rel = if flag[0] == 1 {
+    read_u32s(r, &mut neighbors)?;
+
+    let rel = if h.has_rel {
+        skip(r, lay.off_rel - (lay.off_neighbors + h.adj * 4))?;
         let mut rel = vec![0u8; adj];
         r.read_exact(&mut rel)?;
+        skip(r, lay.off_labels - (lay.off_rel + h.adj))?;
         Some(rel)
     } else {
+        skip(r, lay.off_labels - (lay.off_neighbors + h.adj * 4))?;
         None
     };
+
     let mut labels = vec![0u16; n];
-    for l in &mut labels {
-        let mut b = [0u8; 2];
-        r.read_exact(&mut b)?;
-        *l = u16::from_le_bytes(b);
-    }
-    let mut features = vec![0f32; n * feat_dim];
-    for f in &mut features {
-        let mut b = [0u8; 4];
-        r.read_exact(&mut b)?;
-        *f = f32::from_le_bytes(b);
-    }
+    read_u16s(r, &mut labels)?;
+    skip(r, lay.off_features - (lay.off_labels + h.n * 2))?;
+
     Ok(Graph {
         offsets,
         neighbors,
         rel,
-        features,
-        feat_dim,
+        features: FeatureStore::default(), // caller fills
+        feat_dim: h.feat_dim as usize,
         labels,
-        num_classes,
-        num_relations,
+        num_classes: h.num_classes as usize,
+        num_relations: h.num_relations as usize,
     })
+}
+
+/// Load a cached graph fully into the heap. Features come back as a
+/// [`FeatureStore::Shared`] identity slab, so the coordinator's
+/// subsequent `induce_all` is zero-copy.
+pub fn load(path: &Path) -> Result<Graph> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
+    let (h, lay) = read_header(&mut r, file_len, path)?;
+    let mut g = load_prefix(&mut r, &h, &lay)?;
+    let mut features = vec![0f32; (h.n * h.feat_dim) as usize];
+    read_f32s(&mut r, &mut features)?;
+    g.features = FeatureStore::shared_from_vec(features, g.feat_dim);
+    Ok(g)
+}
+
+/// Load a cached graph with its feature section left on disk: the CSR
+/// arrays come into the heap as usual, but features become a
+/// [`FeatureStore::Mapped`] over the file's (8-aligned) f32 slab,
+/// paged in on first touch. Requires the RTMAGRF2 layout — legacy v1
+/// caches are rejected (re-save to upgrade) because their feature
+/// section is unaligned.
+pub fn load_mapped(path: &Path) -> Result<Graph> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
+    let (h, lay) = read_header(&mut r, file_len, path)?;
+    ensure!(
+        h.v2,
+        "{}: mmap requires the aligned RTMAGRF2 layout (legacy cache — \
+         delete it to regenerate)",
+        path.display()
+    );
+    let mut g = load_prefix(&mut r, &h, &lay)?;
+    let floats = (h.n * h.feat_dim) as usize;
+    g.features = if floats == 0 {
+        FeatureStore::default()
+    } else {
+        let file = r.into_inner();
+        let map =
+            MappedSlab::map_file(&file, lay.off_features as usize, floats)
+                .with_context(|| format!("mmap {}", path.display()))?;
+        FeatureStore::Mapped { map: Arc::new(map), index: None }
+    };
+    Ok(g)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::GraphBuilder;
+    use crate::util::rng::Rng;
 
     fn sample(hetero: bool) -> Graph {
         let mut b = GraphBuilder::new(6);
@@ -132,22 +434,29 @@ mod tests {
         b.add_rel_edge(4, 5, if hetero { 1 } else { 0 });
         let mut g = b.build();
         g.feat_dim = 3;
-        g.features = (0..18).map(|i| i as f32 * 0.5).collect();
+        g.features =
+            (0..18).map(|i| i as f32 * 0.5).collect::<Vec<f32>>().into();
         g.labels = vec![0, 1, 2, 0, 1, 2];
         g.num_classes = 3;
         g
     }
 
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("rtma_io_{name}_{}.bin", std::process::id()))
+    }
+
     #[test]
     fn roundtrip_homogeneous() {
         let g = sample(false);
-        let path = std::env::temp_dir().join("rtma_io_homo.bin");
+        let path = tmp("homo");
         save(&g, &path).unwrap();
         let h = load(&path).unwrap();
         assert_eq!(g.offsets, h.offsets);
         assert_eq!(g.neighbors, h.neighbors);
         assert_eq!(g.rel, h.rel);
-        assert_eq!(g.features, h.features);
+        assert!(g.features.rows_equal(&h.features, 3));
+        assert_eq!(h.features.backend(), "shared");
         assert_eq!(g.labels, h.labels);
         assert_eq!(g.num_classes, h.num_classes);
         std::fs::remove_file(path).ok();
@@ -156,7 +465,7 @@ mod tests {
     #[test]
     fn roundtrip_heterogeneous() {
         let g = sample(true);
-        let path = std::env::temp_dir().join("rtma_io_het.bin");
+        let path = tmp("het");
         save(&g, &path).unwrap();
         let h = load(&path).unwrap();
         assert!(h.rel.is_some());
@@ -165,11 +474,167 @@ mod tests {
         std::fs::remove_file(path).ok();
     }
 
+    /// save -> load -> save must reproduce the file byte-for-byte, on
+    /// both the homogeneous and the `rel` branch — the cache format is
+    /// a fixed point of the round trip.
+    #[test]
+    fn save_load_save_byte_identity() {
+        for (name, hetero) in [("ident_homo", false), ("ident_het", true)] {
+            let g = sample(hetero);
+            let p1 = tmp(name);
+            save(&g, &p1).unwrap();
+            let bytes1 = std::fs::read(&p1).unwrap();
+            let reloaded = load(&p1).unwrap();
+            let p2 = tmp(&format!("{name}_2"));
+            save(&reloaded, &p2).unwrap();
+            let bytes2 = std::fs::read(&p2).unwrap();
+            assert_eq!(bytes1, bytes2, "{name}: round trip not identity");
+            // And the mmap view reads the same features in place.
+            if cfg!(unix) {
+                let mapped = load_mapped(&p1).unwrap();
+                assert_eq!(mapped.features.backend(), "mapped");
+                assert!(mapped.features.rows_equal(&g.features, 3));
+                assert_eq!(mapped.neighbors, g.neighbors);
+                assert_eq!(mapped.rel, g.rel);
+            }
+            std::fs::remove_file(p1).ok();
+            std::fs::remove_file(p2).ok();
+        }
+    }
+
+    #[test]
+    fn legacy_v1_layout_still_loads() {
+        // Hand-encode the v1 (unaligned) layout of sample(false).
+        let g = sample(false);
+        let mut b: Vec<u8> = Vec::new();
+        b.extend_from_slice(MAGIC_V1);
+        for v in [6u64, g.num_adj() as u64, 3, 3, 1] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.push(0);
+        for &o in &g.offsets {
+            b.extend_from_slice(&o.to_le_bytes());
+        }
+        for &nb in &g.neighbors {
+            b.extend_from_slice(&nb.to_le_bytes());
+        }
+        for &l in &g.labels {
+            b.extend_from_slice(&l.to_le_bytes());
+        }
+        for f in g.features.to_vec(3) {
+            b.extend_from_slice(&f.to_le_bytes());
+        }
+        let path = tmp("v1");
+        std::fs::write(&path, &b).unwrap();
+        let h = load(&path).unwrap();
+        assert_eq!(h.offsets, g.offsets);
+        assert_eq!(h.neighbors, g.neighbors);
+        assert!(h.features.rows_equal(&g.features, 3));
+        // ...but the unaligned layout cannot be mapped.
+        assert!(load_mapped(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
     #[test]
     fn rejects_bad_magic() {
-        let path = std::env::temp_dir().join("rtma_io_bad.bin");
+        let path = tmp("bad");
         std::fs::write(&path, b"NOTAGRAPH").unwrap();
         assert!(load(&path).is_err());
+        assert!(load_mapped(&path).is_err());
         std::fs::remove_file(path).ok();
+    }
+
+    /// Truncating a valid file anywhere must produce a clean error
+    /// from both open paths — never a panic, OOM or over-read.
+    #[test]
+    fn prop_truncated_files_rejected() {
+        let g = sample(true);
+        let path = tmp("trunc_src");
+        save(&g, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        crate::util::prop::check(40, 57, |rng: &mut Rng| {
+            let cut = rng.below(full.len()); // strictly shorter
+            let p = tmp(&format!("trunc_{cut}"));
+            std::fs::write(&p, &full[..cut]).unwrap();
+            let heap = load(&p);
+            let mapped = load_mapped(&p);
+            std::fs::remove_file(&p).ok();
+            crate::prop_assert!(heap.is_err(), "load accepted {cut} bytes");
+            crate::prop_assert!(
+                mapped.is_err(),
+                "load_mapped accepted {cut} bytes"
+            );
+            Ok(())
+        });
+    }
+
+    /// Corrupting header length fields with huge values (the overflow
+    /// and OOM vectors) must error out during layout validation —
+    /// before any allocation or mapping happens.
+    #[test]
+    fn prop_header_length_overflow_rejected() {
+        let g = sample(true);
+        let path = tmp("ovf_src");
+        save(&g, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        crate::util::prop::check(30, 91, |rng: &mut Rng| {
+            let mut bytes = full.clone();
+            // One of n/adj/feat_dim at byte 8/16/24, ORed with huge
+            // high bits (u64::MAX-ish down to "merely" 2^40).
+            let field = rng.below(3);
+            let huge: u64 = u64::MAX >> rng.below(24);
+            let off = 8 + field * 8;
+            let old = u64::from_le_bytes(
+                bytes[off..off + 8].try_into().unwrap(),
+            );
+            bytes[off..off + 8]
+                .copy_from_slice(&(old | huge).to_le_bytes());
+            let p = tmp(&format!("ovf_{field}_{huge}"));
+            std::fs::write(&p, &bytes).unwrap();
+            let heap = load(&p);
+            let mapped = load_mapped(&p);
+            std::fs::remove_file(&p).ok();
+            crate::prop_assert!(
+                heap.is_err(),
+                "load accepted field {field} |= {huge:#x}"
+            );
+            crate::prop_assert!(
+                mapped.is_err(),
+                "load_mapped accepted field {field} |= {huge:#x}"
+            );
+            Ok(())
+        });
+    }
+
+    /// Arbitrary single-byte header corruption never panics: either a
+    /// clean error or a structurally in-bounds graph.
+    #[test]
+    fn prop_header_corruption_never_panics() {
+        let g = sample(true);
+        let path = tmp("corr_src");
+        save(&g, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        crate::util::prop::check(60, 143, |rng: &mut Rng| {
+            let mut bytes = full.clone();
+            let off = rng.below(HEADER_BYTES as usize);
+            bytes[off] ^= 1u8 << rng.below(8);
+            let p = tmp(&format!("corr_{off}"));
+            std::fs::write(&p, &bytes).unwrap();
+            let heap = load(&p);
+            let mapped = load_mapped(&p);
+            std::fs::remove_file(&p).ok();
+            if let Ok(h) = heap {
+                // Whatever loaded stayed within the file's bytes.
+                crate::prop_assert!(
+                    h.features.num_rows(h.feat_dim) * h.feat_dim * 4
+                        <= full.len()
+                );
+            }
+            drop(mapped);
+            Ok(())
+        });
     }
 }

@@ -10,8 +10,38 @@
 //! parallel path ([`induce::induce_all`]); [`Subgraph::induce`] is the
 //! single-set reference implementation it is differentially tested
 //! against.
+//!
+//! # Feature storage backends
+//!
+//! Node features live behind [`features::FeatureStore`], an enum over
+//! three physical backends with bit-identical read semantics:
+//!
+//! - **`Owned`** (`Vec<f32>`) — private row-major buffer. Hand-built
+//!   test graphs land here (`g.features = vec.into()`), and it is the
+//!   reference backend the differential suite compares against.
+//!   Subgraph views of an `Owned` parent gather (copy) rows, which is
+//!   the pre-FeatureStore behaviour.
+//! - **`Shared`** (`Arc<[f32]>` slab + `u32` row index) — what the
+//!   generators ([`crate::gen`]) and [`io::load`] produce for full
+//!   graphs (identity index). [`induce_all`] turns a `Shared` parent
+//!   into `k` index-only views over the *same* slab: prep copies zero
+//!   feature floats, and every trainer thread borrows the slab through
+//!   the `Arc`. This is the coordinator's default at run time.
+//! - **`Mapped`** (mmap of an RTMAGRF2 cache file) — produced by
+//!   [`io::load_mapped`] when the operator opts in (`RTMA_MMAP=1`, see
+//!   [`crate::gen::presets`]). Feature rows are faulted in from the
+//!   page cache on first touch, so feature slabs larger than RAM
+//!   still train; induction composes views exactly like `Shared`.
+//!
+//! The coordinator picks the backend implicitly: whatever the dataset
+//! loader produced flows through `split_links` (slab-sharing clone)
+//! and `induce_all` (slab-sharing views) unchanged. Failure drills
+//! ([`induce::induce_all_except`]) give skipped partitions an empty
+//! `Owned` placeholder — lost data is never materialised in any
+//! backend.
 
 pub mod csr;
+pub mod features;
 pub mod induce;
 pub mod io;
 pub mod split;
@@ -19,6 +49,7 @@ pub mod stats;
 pub mod subgraph;
 
 pub use csr::{Graph, GraphBuilder};
+pub use features::{FeatureStore, MappedSlab};
 pub use induce::{induce_all, induce_all_except};
 pub use split::{LinkSplit, split_links};
 pub use subgraph::Subgraph;

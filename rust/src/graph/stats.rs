@@ -155,7 +155,7 @@ mod tests {
     fn mean_feature_averages() {
         let mut g = labeled_path();
         g.feat_dim = 2;
-        g.features = vec![1.0, 0.0, 3.0, 0.0, 0.0, 2.0, 0.0, 0.0];
+        g.features = vec![1.0, 0.0, 3.0, 0.0, 0.0, 2.0, 0.0, 0.0].into();
         let mu = mean_feature(&g, &[0, 1]);
         assert_eq!(mu, vec![2.0, 0.0]);
     }

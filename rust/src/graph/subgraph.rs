@@ -28,8 +28,11 @@ pub struct Subgraph {
 
 impl Subgraph {
     /// Induce the subgraph of `parent` on `nodes` (deduplicated and
-    /// sorted internally). Features/labels are copied for locality —
-    /// trainers never touch the parent graph afterwards.
+    /// sorted internally). Features and labels are *gathered into
+    /// private buffers* (an `Owned` feature store) regardless of the
+    /// parent's backend — this is the copying reference semantics the
+    /// zero-copy [`super::induce::induce_all`] views are differentially
+    /// tested against.
     pub fn induce(parent: &Graph, nodes: &[u32]) -> Subgraph {
         let mut global_ids: Vec<u32> = nodes.to_vec();
         global_ids.sort_unstable();
@@ -63,12 +66,14 @@ impl Subgraph {
         graph.feat_dim = parent.feat_dim;
         graph.num_classes = parent.num_classes;
         graph.num_relations = parent.num_relations;
-        graph.features = Vec::with_capacity(global_ids.len() * parent.feat_dim);
+        let mut features =
+            Vec::with_capacity(global_ids.len() * parent.feat_dim);
         graph.labels = Vec::with_capacity(global_ids.len());
         for &g in &global_ids {
-            graph.features.extend_from_slice(parent.feature(g as usize));
+            features.extend_from_slice(parent.feature(g as usize));
             graph.labels.push(parent.labels[g as usize]);
         }
+        graph.features = features.into();
         // Homogeneous parents produce rel=None subgraphs even if built
         // via add_rel_edge(0): GraphBuilder only records rel when >0.
         Subgraph { graph, global_ids, cut_edges: cut }
@@ -100,7 +105,7 @@ mod tests {
         }
         let mut g = b.build();
         g.feat_dim = 1;
-        g.features = (0..5).map(|i| i as f32).collect();
+        g.features = (0..5).map(|i| i as f32).collect::<Vec<f32>>().into();
         g.labels = vec![0, 1, 0, 1, 0];
         g.num_classes = 2;
         g
@@ -121,7 +126,7 @@ mod tests {
         let g = parent();
         let s = Subgraph::induce(&g, &[3, 1]);
         assert_eq!(s.global_ids, vec![1, 3]);
-        assert_eq!(s.graph.features, vec![1.0, 3.0]);
+        assert_eq!(s.graph.features.to_vec(1), vec![1.0, 3.0]);
         assert_eq!(s.graph.labels, vec![1, 1]);
         assert_eq!(s.local_of(3), Some(1));
         assert_eq!(s.local_of(0), None);

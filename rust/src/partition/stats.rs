@@ -128,7 +128,10 @@ mod tests {
         g.labels = (0..10).map(|v| (v >= 5) as u16).collect();
         g.num_classes = 2;
         g.feat_dim = 1;
-        g.features = (0..10).map(|v| if v >= 5 { 1.0 } else { 0.0 }).collect();
+        g.features = (0..10)
+            .map(|v| if v >= 5 { 1.0 } else { 0.0 })
+            .collect::<Vec<f32>>()
+            .into();
         g
     }
 
@@ -175,7 +178,10 @@ mod tests {
         g.labels = (0..8).map(|v| (v >= 4) as u16).collect();
         g.num_classes = 2;
         g.feat_dim = 1;
-        g.features = (0..8).map(|v| (v >= 4) as i32 as f32).collect();
+        g.features = (0..8)
+            .map(|v| (v >= 4) as i32 as f32)
+            .collect::<Vec<f32>>()
+            .into();
         let assign: Vec<u32> = vec![0, 0, 1, 1, 0, 0, 1, 1];
         let s = partition_stats(&g, &assign, 2);
         assert!(s.class_disparity < 1e-12);

@@ -200,7 +200,11 @@ impl Engine {
         Ok(parts)
     }
 
-    /// Block argument views shared by train/grad packing.
+    /// Block argument views shared by train/grad packing. `feats` is
+    /// the sampler's gather buffer — rows copied out of the graph's
+    /// FeatureStore (owned, shared-slab or mmap'd backends read
+    /// bit-identically), so literal packing is backend-agnostic and
+    /// the raw-LE byte view below stays valid for every store.
     fn block_sources<'a>(
         &self,
         params: &'a [f32],

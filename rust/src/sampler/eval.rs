@@ -215,6 +215,9 @@ fn build_block(graph: &Graph, targets: &[u32], cfg: &EvalBlockConfig) -> Block {
     let mut adj = vec![0.0f32; planes * bn * bn];
     fill_adj(&mut adj, bn, cfg.relations, n_used, &edges, cfg.adj_mode);
 
+    // Feature gather reads through the graph's FeatureStore — eval
+    // plans built over Shared/Mapped-backed train graphs never copy
+    // the slab, only the Bn rows each block actually uses.
     let mut feats = vec![0.0f32; bn * cfg.feat_dim];
     for (s, &g) in globals.iter().enumerate() {
         feats[s * cfg.feat_dim..(s + 1) * cfg.feat_dim]

@@ -247,7 +247,10 @@ impl TrainSampler {
             self.cfg.adj_mode,
         );
 
-        // Features.
+        // Features: the only per-step feature copy in the system — Bn
+        // rows gathered from the graph's FeatureStore (a borrowed
+        // Shared/Mapped slab row or a private Owned row, bit-identical
+        // either way) into the block's reused packing buffer.
         self.block.feats.iter_mut().for_each(|x| *x = 0.0);
         for (&v, &s) in self.slot_of.iter() {
             let dst = s as usize * self.cfg.feat_dim;

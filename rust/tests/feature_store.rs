@@ -1,0 +1,336 @@
+//! Differential suite for the three `FeatureStore` backends.
+//!
+//! Locks in the zero-copy FeatureStore contract end to end: every
+//! backend (Owned baseline, Shared slab, Mapped file) must read
+//! bit-identically through `feature(v)`, produce bit-identical sampler
+//! blocks, and — with artifacts present — bit-identical per-round
+//! training metrics; and `induce_all` must share one slab across all
+//! `k` trainer subgraphs instead of allocating per-trainer copies.
+
+use random_tma::gen::{dcsbm, DcsbmConfig};
+use random_tma::graph::{induce_all, induce_all_except, io, Graph};
+use random_tma::partition::random_partition;
+use random_tma::sampler::eval::EvalBlockConfig;
+use random_tma::sampler::{AdjMode, EvalPlan, TrainSampler, TrainSamplerConfig};
+use random_tma::util::rng::Rng;
+
+fn seeded_graph(feat_dim: usize) -> Graph {
+    dcsbm(&DcsbmConfig {
+        nodes: 2_000,
+        communities: 8,
+        avg_degree: 10.0,
+        homophily: 0.8,
+        feat_dim,
+        feature_noise: 0.5,
+        degree_exponent: 0.7,
+        seed: 77,
+    })
+}
+
+/// The same graph rehosted on each backend (`owned` reference first,
+/// then `shared` and — unix only — `mapped`): the one shared recipe
+/// from `graph::features`, also used by the in-crate induce suite.
+use random_tma::graph::features::rehost_backends as backends;
+
+fn assert_feats_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: f32 {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+/// The acceptance regression: prep allocates no per-trainer feature
+/// slab. Every subgraph of `induce_all` over a Shared parent is a
+/// `Shared` view whose slab pointer equals the parent's — one
+/// allocation for all `k` trainers — and its private heap is just the
+/// u32 row index.
+#[test]
+fn induce_all_shares_one_slab_zero_copy() {
+    let g = seeded_graph(16);
+    assert_eq!(g.features.backend(), "shared", "generators emit Shared");
+    let parent_ptr = g.features.slab_ptr().expect("parent has a slab");
+
+    let k = 6;
+    let mut rng = Rng::new(5);
+    let assign = random_partition(g.num_nodes(), k, &mut rng);
+    let subs = induce_all(&g, &assign, k);
+    assert_eq!(subs.len(), k);
+    for (p, sub) in subs.iter().enumerate() {
+        assert!(
+            sub.graph.features.is_shared(),
+            "part {p}: expected Shared, got {}",
+            sub.graph.features.backend()
+        );
+        assert_eq!(
+            sub.graph.features.slab_ptr(),
+            Some(parent_ptr),
+            "part {p}: view must point at the parent slab"
+        );
+        // Private feature bytes = 4 per node (the index), not 4*d.
+        assert_eq!(
+            sub.graph.features.heap_bytes(),
+            sub.num_nodes() * 4,
+            "part {p}: per-trainer slab was allocated"
+        );
+        // And the view reads exactly the parent's rows.
+        for (l, &gid) in sub.global_ids.iter().enumerate() {
+            assert_feats_bitwise(
+                sub.graph.feature(l),
+                g.feature(gid as usize),
+                &format!("part {p} node {l}"),
+            );
+        }
+    }
+    // Same contract on the drill path for survivors; lost partitions
+    // are never materialised.
+    let drilled = induce_all_except(&g, &assign, k, &[2]);
+    for (p, sub) in drilled.iter().enumerate() {
+        if p == 2 {
+            assert!(sub.graph.features.is_empty());
+            assert_eq!(sub.graph.features.heap_bytes(), 0);
+        } else {
+            assert_eq!(sub.graph.features.slab_ptr(), Some(parent_ptr));
+        }
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn mapped_parent_yields_mapped_views_over_one_map() {
+    let g = seeded_graph(16);
+    let path = std::env::temp_dir().join(format!(
+        "rtma_fstore_mapviews_{}.bin",
+        std::process::id()
+    ));
+    io::save(&g, &path).unwrap();
+    let m = io::load_mapped(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let map_ptr = m.features.slab_ptr().expect("mapped slab");
+
+    let k = 4;
+    let mut rng = Rng::new(9);
+    let assign = random_partition(m.num_nodes(), k, &mut rng);
+    let subs = induce_all(&m, &assign, k);
+    for (p, sub) in subs.iter().enumerate() {
+        assert_eq!(sub.graph.features.backend(), "mapped", "part {p}");
+        assert_eq!(sub.graph.features.slab_ptr(), Some(map_ptr));
+        for (l, &gid) in sub.global_ids.iter().enumerate() {
+            assert_feats_bitwise(
+                sub.graph.feature(l),
+                g.feature(gid as usize),
+                &format!("mapped part {p} node {l}"),
+            );
+        }
+    }
+}
+
+/// Training blocks sampled from each backend's subgraphs must be
+/// bit-identical to the Owned baseline: same features, adjacency,
+/// edge indices and masks for the same RNG stream.
+#[test]
+fn train_blocks_bit_identical_across_backends() {
+    let g = seeded_graph(8);
+    let k = 3;
+    let mut rng = Rng::new(13);
+    let assign = random_partition(g.num_nodes(), k, &mut rng);
+    let cfg = TrainSamplerConfig {
+        block_nodes: 64,
+        block_edges: 16,
+        feat_dim: 8,
+        fanouts: vec![4, 3],
+        adj_mode: AdjMode::SelfLoop,
+        relations: 1,
+        boundary: 0,
+    };
+
+    // Baseline blocks from the Owned backend.
+    let hosts = backends(&g, "train_blocks");
+    let baseline: Vec<Vec<random_tma::sampler::Block>> = {
+        let (_, owned) = &hosts[0];
+        sample_blocks(owned, &assign, k, &cfg)
+    };
+    for (backend, host) in &hosts[1..] {
+        let blocks = sample_blocks(host, &assign, k, &cfg);
+        for (p, (base_p, got_p)) in
+            baseline.iter().zip(&blocks).enumerate()
+        {
+            for (i, (base, got)) in base_p.iter().zip(got_p).enumerate() {
+                let what = format!("{backend} part {p} block {i}");
+                assert_eq!(base.n_used, got.n_used, "{what}: n_used");
+                assert_eq!(base.globals, got.globals, "{what}: globals");
+                assert_feats_bitwise(
+                    &base.feats,
+                    &got.feats,
+                    &format!("{what} feats"),
+                );
+                assert_feats_bitwise(
+                    &base.adj,
+                    &got.adj,
+                    &format!("{what} adj"),
+                );
+                assert_eq!(base.pos_u, got.pos_u, "{what}: pos_u");
+                assert_eq!(base.pos_v, got.pos_v, "{what}: pos_v");
+                assert_eq!(base.neg_v, got.neg_v, "{what}: neg_v");
+                assert_eq!(base.mask, got.mask, "{what}: mask");
+            }
+        }
+    }
+}
+
+fn sample_blocks(
+    host: &Graph,
+    assign: &[u32],
+    k: usize,
+    cfg: &TrainSamplerConfig,
+) -> Vec<Vec<random_tma::sampler::Block>> {
+    induce_all(host, assign, k)
+        .into_iter()
+        .enumerate()
+        .map(|(p, sub)| {
+            let mut sampler = TrainSampler::new(
+                sub.graph,
+                sub.global_ids,
+                cfg.clone(),
+            );
+            let mut rng = Rng::new(100 + p as u64);
+            (0..8)
+                .filter_map(|_| sampler.next_block(&mut rng).cloned())
+                .collect()
+        })
+        .collect()
+}
+
+/// Deterministic eval plans gather identical block features from every
+/// backend.
+#[test]
+fn eval_blocks_bit_identical_across_backends() {
+    let g = seeded_graph(8);
+    let mut rng = Rng::new(31);
+    let edges: Vec<(u32, u32)> = (0..24)
+        .map(|_| {
+            let u = rng.below(g.num_nodes()) as u32;
+            let nbrs = g.neighbors_of(u as usize);
+            if nbrs.is_empty() {
+                (u, (u + 1) % g.num_nodes() as u32)
+            } else {
+                (u, nbrs[0])
+            }
+        })
+        .collect();
+    let negs: Vec<Vec<u32>> = edges
+        .iter()
+        .map(|_| (0..6).map(|_| rng.below(g.num_nodes()) as u32).collect())
+        .collect();
+    let cfg = EvalBlockConfig::new(64, 8, AdjMode::SelfLoop, 1, 0);
+
+    let hosts = backends(&g, "eval_blocks");
+    let base = EvalPlan::build(&hosts[0].1, &edges, &negs, &cfg);
+    for (backend, host) in &hosts[1..] {
+        let plan = EvalPlan::build(host, &edges, &negs, &cfg);
+        assert_eq!(base.blocks.len(), plan.blocks.len(), "{backend}");
+        for (i, (a, b)) in base.blocks.iter().zip(&plan.blocks).enumerate()
+        {
+            assert_eq!(a.globals, b.globals, "{backend} block {i}");
+            assert_feats_bitwise(
+                &a.feats,
+                &b.feats,
+                &format!("{backend} eval block {i} feats"),
+            );
+            assert_feats_bitwise(
+                &a.adj,
+                &b.adj,
+                &format!("{backend} eval block {i} adj"),
+            );
+        }
+    }
+}
+
+/// End-to-end round metrics: a deterministic miniature of the TMA loop
+/// (fixed steps per round, mean aggregation — no wall clocks) must
+/// produce bit-identical losses and aggregated parameters on every
+/// backend. Needs compiled artifacts; skips gracefully without them.
+#[test]
+fn round_metrics_bit_identical_across_backends() {
+    use random_tma::model::ModelState;
+    use random_tma::runtime::{Engine, Manifest};
+
+    let Ok(manifest) = Manifest::load(&Manifest::default_dir()) else {
+        eprintln!("skip: artifacts missing");
+        return;
+    };
+    let engine = Engine::load(&manifest, "gcn_mlp", "pallas").expect("engine");
+    let dims = manifest.dims;
+    let g = seeded_graph(dims.feat_dim);
+    let k = 2;
+    let mut rng = Rng::new(41);
+    let assign = random_partition(g.num_nodes(), k, &mut rng);
+    let cfg = TrainSamplerConfig {
+        block_nodes: dims.block_nodes,
+        block_edges: dims.block_edges,
+        feat_dim: dims.feat_dim,
+        fanouts: vec![4, 3],
+        adj_mode: AdjMode::SelfLoop,
+        relations: 1,
+        boundary: 0,
+    };
+
+    let run = |host: &Graph| -> (Vec<f32>, Vec<f32>) {
+        let subs = induce_all(host, &assign, k);
+        let variant = engine.variant.clone();
+        let mut states: Vec<ModelState> = (0..k)
+            .map(|_| ModelState::init(&variant, &mut Rng::new(4242)))
+            .collect();
+        let mut samplers: Vec<TrainSampler> = subs
+            .into_iter()
+            .map(|s| TrainSampler::new(s.graph, s.global_ids, cfg.clone()))
+            .collect();
+        let mut rngs: Vec<Rng> =
+            (0..k).map(|p| Rng::new(900 + p as u64)).collect();
+        let mut losses = Vec::new();
+        for _round in 0..2 {
+            for (p, sampler) in samplers.iter_mut().enumerate() {
+                for _ in 0..3 {
+                    let block =
+                        sampler.next_block(&mut rngs[p]).expect("block");
+                    let loss = engine
+                        .train_step(&mut states[p], block)
+                        .expect("train step");
+                    losses.push(loss);
+                }
+            }
+            // Mean aggregation (the TMA server's reduce).
+            let dim = states[0].params.len();
+            let mut mean = vec![0f32; dim];
+            for s in &states {
+                for (m, &x) in mean.iter_mut().zip(&s.params) {
+                    *m += x / k as f32;
+                }
+            }
+            for s in &mut states {
+                s.set_params(&mean);
+            }
+        }
+        (losses, states[0].params.clone())
+    };
+
+    let hosts = backends(&g, "rounds");
+    let (base_losses, base_params) = run(&hosts[0].1);
+    assert!(!base_losses.is_empty());
+    for (backend, host) in &hosts[1..] {
+        let (losses, params) = run(host);
+        assert_feats_bitwise(
+            &base_losses,
+            &losses,
+            &format!("{backend} round losses"),
+        );
+        assert_feats_bitwise(
+            &base_params,
+            &params,
+            &format!("{backend} aggregated params"),
+        );
+    }
+}
