@@ -1,0 +1,118 @@
+//! Cache round-trip smoke: generate a `--quick` preset, save it, then
+//! reopen the cache both ways — the heap loader (`io::load`) and the
+//! fully-mapped loader (`io::load_mapped`) — and assert that graph
+//! statistics, partition cut counts and feature rows are identical.
+//! This is the CI gate for the RTMAGRF2 cache path: a layout
+//! regression (writer/reader disagreement, a section served from the
+//! wrong offsets) fails this binary, not a training run three steps
+//! later.
+//!
+//! Run under `RTMA_MMAP=1` the preset itself arrives mapped, so the
+//! smoke also exercises the preset-level opt-in end to end. Without
+//! `--quick` the full-size preset is generated and checked.
+//!
+//! ```text
+//! cargo run --release --example cache_smoke -- --quick \
+//!     [--preset mag-sim] [--seed 97]
+//! ```
+
+use random_tma::gen::{cache_path, load_preset, preset_names};
+use random_tma::graph::stats::graph_stats;
+use random_tma::graph::{induce_all, io};
+use random_tma::partition::random_partition;
+use random_tma::util::cli::Args;
+use random_tma::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&["quick"]);
+    let quick = args.flag("quick");
+    let preset = args.str_or("preset", "mag-sim");
+    let seed = args.u64_or("seed", 97);
+    anyhow::ensure!(
+        preset_names().contains(&preset.as_str()),
+        "unknown preset {preset:?}"
+    );
+
+    // Fresh generation (drop any stale cache), which also writes the
+    // cache file this smoke is about.
+    let path = cache_path(&preset, quick, seed);
+    let _ = std::fs::remove_file(&path);
+    let p = load_preset(&preset, quick, 16, 8, seed)?;
+    anyhow::ensure!(path.exists(), "preset did not write {}", path.display());
+    println!(
+        "generated {preset}{}: |V|={} |E|={} [{} features]",
+        if quick { " (quick)" } else { "" },
+        p.graph.num_nodes(),
+        p.graph.num_edges(),
+        p.graph.features.backend(),
+    );
+
+    let heap = io::load(&path)?;
+    let mapped = io::load_mapped(&path)?;
+    anyhow::ensure!(
+        mapped.offsets.backend() == "mapped"
+            && mapped.neighbors.backend() == "mapped"
+            && mapped.labels.backend() == "mapped"
+            && mapped.features.backend() == "mapped",
+        "load_mapped did not serve every section from the map"
+    );
+
+    // Graph statistics must agree exactly: both loaders read the same
+    // bytes, so even the float-valued stats are bit-equal.
+    let a = graph_stats(&heap);
+    let b = graph_stats(&mapped);
+    let same = a.num_nodes == b.num_nodes
+        && a.num_edges == b.num_edges
+        && a.feat_dim == b.feat_dim
+        && a.num_classes == b.num_classes
+        && a.num_relations == b.num_relations
+        && a.avg_degree == b.avg_degree
+        && a.max_degree == b.max_degree
+        && a.homophily == b.homophily
+        && a.isolated == b.isolated;
+    anyhow::ensure!(same, "graph stats diverge:\n  heap {a:?}\n  map  {b:?}");
+    println!(
+        "stats ok: |V|={} |E|={} h={:.4} (heap == mapped)",
+        a.num_nodes, a.num_edges, a.homophily
+    );
+
+    // Partition cut accounting must agree across loaders too (this is
+    // what the coordinator's prep step consumes).
+    let k = 4;
+    let mut rng = Rng::new(seed ^ 0xC0DE);
+    let assign = random_partition(heap.num_nodes(), k, &mut rng);
+    let cuts_heap: Vec<usize> = induce_all(&heap, &assign, k)
+        .iter()
+        .map(|s| s.cut_edges)
+        .collect();
+    let cuts_mapped: Vec<usize> = induce_all(&mapped, &assign, k)
+        .iter()
+        .map(|s| s.cut_edges)
+        .collect();
+    anyhow::ensure!(
+        cuts_heap == cuts_mapped,
+        "cut counts diverge: heap {cuts_heap:?} vs mapped {cuts_mapped:?}"
+    );
+    println!("cuts ok: M={k} {cuts_heap:?} (heap == mapped)");
+
+    // And the preset the coordinator actually received must match the
+    // cache on a sample of feature rows, bit for bit.
+    let n = heap.num_nodes();
+    for v in [0, n / 3, n / 2, n - 1] {
+        let rows = [p.graph.feature(v), heap.feature(v), mapped.feature(v)];
+        anyhow::ensure!(
+            rows[0].len() == rows[1].len() && rows[1].len() == rows[2].len(),
+            "feature width diverges at node {v}"
+        );
+        for d in 0..rows[0].len() {
+            anyhow::ensure!(
+                rows[0][d].to_bits() == rows[1][d].to_bits()
+                    && rows[1][d].to_bits() == rows[2][d].to_bits(),
+                "feature bits diverge at node {v} dim {d}"
+            );
+        }
+    }
+    println!("features ok: sampled rows bit-identical across loaders");
+    println!("cache round trip OK: {}", path.display());
+    Ok(())
+}

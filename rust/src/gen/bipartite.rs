@@ -10,9 +10,21 @@
 //! the 4 directional relations (forward + inverse) the RGCN artifacts
 //! expect, matching the paper's "4 bases = total forward and inverse
 //! relations" setup.
+//!
+//! Generation is parallel count-then-fill (`gen::par`): the two
+//! type blocks are chunked separately (each chunk samples one
+//! relation from its own `(seed, chunk)` stream) and the typed CSR is
+//! assembled without a builder or global re-sort. Output is
+//! byte-identical for a fixed seed at any worker count.
 
-use crate::graph::{FeatureStore, Graph, GraphBuilder};
+use crate::graph::{FeatureStore, Graph};
 use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
+
+use super::par::{
+    assemble_csr, default_workers, gaussian_mixture_features, plan_chunks,
+    ChunkEdges,
+};
 
 #[derive(Clone, Debug)]
 pub struct BipartiteConfig {
@@ -37,12 +49,25 @@ pub struct BipartiteGraph {
     pub boundary: u32,
 }
 
+const DOM_EDGES: u64 = 0xB1A0;
+const DOM_MU: u64 = 0xB1A1;
+const DOM_FEAT: u64 = 0xB1A2;
+
 pub fn bipartite(cfg: &BipartiteConfig) -> BipartiteGraph {
+    bipartite_with_workers(cfg, default_workers())
+}
+
+/// [`bipartite`] with an explicit worker count; output is independent
+/// of it.
+pub fn bipartite_with_workers(
+    cfg: &BipartiteConfig,
+    workers: usize,
+) -> BipartiteGraph {
     let nq = cfg.num_queries;
     let ni = cfg.num_items;
     let n = nq + ni;
     let c = cfg.communities;
-    let mut rng = Rng::new(cfg.seed);
+    assert!(c >= 1 && ni >= c && workers >= 1);
 
     // Community per node: queries inherit a "home" community too.
     let labels: Vec<u16> = (0..n).map(|v| (v % c) as u16).collect();
@@ -54,7 +79,6 @@ pub fn bipartite(cfg: &BipartiteConfig) -> BipartiteGraph {
         m
     };
 
-    let mut b = GraphBuilder::new(n);
     let pick_item = |rng: &mut Rng, home: usize| -> u32 {
         let cc = if rng.chance(cfg.homophily) || c == 1 {
             home
@@ -69,50 +93,76 @@ pub fn bipartite(cfg: &BipartiteConfig) -> BipartiteGraph {
         ms[rng.below(ms.len())]
     };
 
-    // query-item edges
+    // Two type blocks, chunked separately: group 0 = query-item edges
+    // (rel 0), group 1 = item-item (rel 1). The type of a chunk is a
+    // pure function of its position in the plan.
     let qi_total = (nq as f64 * cfg.qi_degree) as usize;
-    for _ in 0..qi_total {
-        let q = rng.below(nq);
-        let i = pick_item(&mut rng, labels[q] as usize);
-        b.add_rel_edge(q as u32, i, 0);
-    }
-    // item-item edges
     let ii_total = (ni as f64 * cfg.ii_degree / 2.0) as usize;
-    for _ in 0..ii_total {
-        let u = nq + rng.below(ni);
-        let v = pick_item(&mut rng, labels[u] as usize);
-        if u as u32 != v {
-            b.add_rel_edge(u as u32, v, 1);
-        }
-    }
+    let qi_chunks = plan_chunks(qi_total, &[1.0]);
+    let n_qi = qi_chunks.len();
+    let mut chunks = qi_chunks;
+    chunks.extend(plan_chunks(ii_total, &[1.0]));
 
-    let mut g = b.build();
+    let lists: Vec<ChunkEdges> = parallel_map(chunks.len(), workers, |i| {
+        let target = chunks[i].target;
+        let rel = (i >= n_qi) as u8;
+        let mut rng = Rng::stream(cfg.seed, DOM_EDGES, i as u64);
+        let mut pairs = Vec::with_capacity(target);
+        if rel == 0 {
+            for _ in 0..target {
+                let q = rng.below(nq);
+                let it = pick_item(&mut rng, labels[q] as usize);
+                pairs.push((q as u32, it));
+            }
+        } else {
+            for _ in 0..target {
+                let u = nq + rng.below(ni);
+                let v = pick_item(&mut rng, labels[u] as usize);
+                if u as u32 != v {
+                    pairs.push((u as u32, v));
+                }
+            }
+        }
+        ChunkEdges { rel, pairs }
+    });
+
+    let (offsets, neighbors, rel) = assemble_csr(n, &lists, workers);
+
     // Gaussian mixture features per community; queries noisier (they
     // are "BERT embeddings of query text" in the paper's setting).
     let f = cfg.feat_dim;
-    let mut mu = vec![0.0f32; c * f];
-    for x in mu.iter_mut() {
-        *x = rng.gaussian() as f32;
-    }
-    let mut features = vec![0.0f32; n * f];
-    for v in 0..n {
-        let cc = labels[v] as usize;
-        let noise = if v < nq {
-            cfg.feature_noise * 1.5
-        } else {
-            cfg.feature_noise
-        };
-        for d in 0..f {
-            features[v * f + d] =
-                mu[cc * f + d] + noise as f32 * rng.gaussian() as f32;
-        }
-    }
-    g.features = FeatureStore::shared_from_vec(features, f);
-    g.feat_dim = f;
-    g.labels = labels;
-    g.num_classes = c;
-    g.num_relations = 2;
-    BipartiteGraph { graph: g, boundary: nq as u32 }
+    let mu: Vec<f32> = {
+        let mut rng = Rng::stream(cfg.seed, DOM_MU, 0);
+        (0..c * f).map(|_| rng.gaussian() as f32).collect()
+    };
+    let features = gaussian_mixture_features(
+        n,
+        f,
+        &labels,
+        &mu,
+        |v| {
+            if v < nq {
+                cfg.feature_noise * 1.5
+            } else {
+                cfg.feature_noise
+            }
+        },
+        cfg.seed,
+        DOM_FEAT,
+        workers,
+    );
+
+    let graph = Graph {
+        offsets,
+        neighbors,
+        rel,
+        features: FeatureStore::shared_from_vec(features, f),
+        feat_dim: f,
+        labels: labels.into(),
+        num_classes: c,
+        num_relations: 2,
+    };
+    BipartiteGraph { graph, boundary: nq as u32 }
 }
 
 #[cfg(test)]
@@ -174,5 +224,18 @@ mod tests {
         let b = bipartite(&cfg());
         assert_eq!(a.graph.neighbors, b.graph.neighbors);
         assert_eq!(a.graph.rel, b.graph.rel);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_output() {
+        let one = bipartite_with_workers(&cfg(), 1);
+        let four = bipartite_with_workers(&cfg(), 4);
+        assert_eq!(one.graph.offsets, four.graph.offsets);
+        assert_eq!(one.graph.neighbors, four.graph.neighbors);
+        assert_eq!(one.graph.rel, four.graph.rel);
+        assert!(one
+            .graph
+            .features
+            .rows_equal(&four.graph.features, one.graph.feat_dim));
     }
 }

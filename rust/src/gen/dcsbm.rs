@@ -12,9 +12,24 @@
 //! noise * N(0, I), giving the feature/label correlation the paper's
 //! theory assumes (one-hot features are the noise→0, orthogonal-mu
 //! special case).
+//!
+//! Generation is parallel count-then-fill (see `gen::par`): the
+//! edge budget is chunked per community of `u` — weighted by each
+//! community's theta mass, the marginal of the old global sampler —
+//! every chunk samples from its own `(seed, chunk)` RNG stream, and
+//! the CSR and feature slab are filled in parallel. Output is
+//! byte-identical for a fixed seed at any worker count;
+//! [`super::reference::dcsbm_serial`] keeps the original serial
+//! `GraphBuilder` implementation for the perf baseline.
 
-use crate::graph::{FeatureStore, Graph, GraphBuilder};
+use crate::graph::{FeatureStore, Graph};
 use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
+
+use super::par::{
+    assemble_csr, default_workers, gaussian_mixture_features, plan_chunks,
+    ChunkEdges, CumSampler,
+};
 
 #[derive(Clone, Debug)]
 pub struct DcsbmConfig {
@@ -34,124 +49,125 @@ pub struct DcsbmConfig {
     pub seed: u64,
 }
 
-/// Weighted sampler over a fixed weight vector via cumulative sums.
-struct CumSampler {
-    cum: Vec<f64>,
-}
-
-impl CumSampler {
-    fn new(weights: &[f64]) -> CumSampler {
-        let mut cum = Vec::with_capacity(weights.len());
-        let mut acc = 0.0;
-        for &w in weights {
-            acc += w;
-            cum.push(acc);
-        }
-        CumSampler { cum }
-    }
-
-    fn total(&self) -> f64 {
-        *self.cum.last().unwrap_or(&0.0)
-    }
-
-    fn sample(&self, rng: &mut Rng) -> usize {
-        let x = rng.f64() * self.total();
-        match self
-            .cum
-            .binary_search_by(|c| c.partial_cmp(&x).unwrap())
-        {
-            Ok(i) => i,
-            Err(i) => i.min(self.cum.len() - 1),
-        }
-    }
-}
+// RNG stream domains: distinct per purpose (and per generator across
+// the crate), so no two streams of one seed ever coincide.
+const DOM_THETA: u64 = 0xDC01;
+const DOM_EDGES: u64 = 0xDC02;
+const DOM_MU: u64 = 0xDC03;
+const DOM_FEAT: u64 = 0xDC04;
 
 pub fn dcsbm(cfg: &DcsbmConfig) -> Graph {
+    dcsbm_with_workers(cfg, default_workers())
+}
+
+/// [`dcsbm`] with an explicit worker count — the knob the determinism
+/// tests and the generation bench turn; output is independent of it.
+pub fn dcsbm_with_workers(cfg: &DcsbmConfig, workers: usize) -> Graph {
     assert!(cfg.communities >= 1 && cfg.nodes >= cfg.communities);
-    let mut rng = Rng::new(cfg.seed);
+    assert!(workers >= 1);
     let n = cfg.nodes;
     let c = cfg.communities;
 
-    // Community assignment: contiguous equal-size ranges, then a light
-    // shuffle of boundaries via random residual assignment. Contiguity
-    // is irrelevant downstream (partitioners never see labels).
+    // Community assignment: cyclic, so every community is non-empty.
+    // Contiguity is irrelevant downstream (partitioners never see
+    // labels).
     let labels: Vec<u16> = (0..n).map(|v| (v % c) as u16).collect();
     let mut members: Vec<Vec<u32>> = vec![Vec::new(); c];
     for (v, &l) in labels.iter().enumerate() {
         members[l as usize].push(v as u32);
     }
 
-    // Degree propensities: theta ~ Pareto(exponent) capped for sanity.
-    let theta: Vec<f64> = (0..n)
-        .map(|_| {
-            if cfg.degree_exponent <= 0.0 {
-                1.0
+    // Degree propensities: theta ~ Pareto(exponent), capped for
+    // sanity. Drawn from a dedicated stream so edge chunks never see
+    // its consumption.
+    let theta: Vec<f64> = {
+        let mut rng = Rng::stream(cfg.seed, DOM_THETA, 0);
+        (0..n)
+            .map(|_| {
+                if cfg.degree_exponent <= 0.0 {
+                    1.0
+                } else {
+                    let u = 1.0 - rng.f64();
+                    u.powf(-cfg.degree_exponent).min(100.0)
+                }
+            })
+            .collect()
+    };
+    let per_comm: Vec<CumSampler> = parallel_map(c, workers.min(c), |cc| {
+        CumSampler::new(
+            &members[cc]
+                .iter()
+                .map(|&v| theta[v as usize])
+                .collect::<Vec<_>>(),
+        )
+    });
+
+    // Chunk the edge budget by the community of `u`, each community
+    // weighted by its theta mass — exactly the marginal under which
+    // the serial reference's global sampler lands in that community.
+    let target = (n as f64 * cfg.avg_degree / 2.0) as usize;
+    let weights: Vec<f64> = per_comm.iter().map(|s| s.total()).collect();
+    let chunks = plan_chunks(target, &weights);
+
+    let lists: Vec<ChunkEdges> = parallel_map(chunks.len(), workers, |i| {
+        let (cu, target) = (chunks[i].group, chunks[i].target);
+        let mut rng = Rng::stream(cfg.seed, DOM_EDGES, i as u64);
+        let mut pairs = Vec::with_capacity(target);
+        let mut attempts = 0usize;
+        let max_attempts = target * 20;
+        while pairs.len() < target && attempts < max_attempts {
+            attempts += 1;
+            let u = members[cu][per_comm[cu].sample(&mut rng)];
+            let cv = if rng.chance(cfg.homophily) || c == 1 {
+                cu
             } else {
-                let u = 1.0 - rng.f64();
-                u.powf(-cfg.degree_exponent).min(100.0)
+                // uniformly random *other* community
+                let mut k = rng.below(c - 1);
+                if k >= cu {
+                    k += 1;
+                }
+                k
+            };
+            let v = members[cv][per_comm[cv].sample(&mut rng)];
+            if u != v {
+                pairs.push((u, v));
             }
-        })
-        .collect();
-
-    let global = CumSampler::new(&theta);
-    let per_comm: Vec<CumSampler> = members
-        .iter()
-        .map(|ms| {
-            CumSampler::new(
-                &ms.iter().map(|&v| theta[v as usize]).collect::<Vec<_>>(),
-            )
-        })
-        .collect();
-
-    let target_edges = (n as f64 * cfg.avg_degree / 2.0) as usize;
-    let mut b = GraphBuilder::new(n);
-    let mut attempts = 0usize;
-    let max_attempts = target_edges * 20;
-    while b.num_pending() < target_edges && attempts < max_attempts {
-        attempts += 1;
-        let u = global.sample(&mut rng) as u32;
-        let cu = labels[u as usize] as usize;
-        let cv = if rng.chance(cfg.homophily) || c == 1 {
-            cu
-        } else {
-            // uniformly random *other* community
-            let mut k = rng.below(c - 1);
-            if k >= cu {
-                k += 1;
-            }
-            k
-        };
-        let v = members[cv][per_comm[cv].sample(&mut rng)];
-        if u != v {
-            b.add_edge(u, v);
         }
-    }
-    let mut g = b.build();
+        ChunkEdges { rel: 0, pairs }
+    });
 
-    // Per-community Gaussian feature mixture.
+    let (offsets, neighbors, rel) = assemble_csr(n, &lists, workers);
+
+    // Per-community Gaussian feature mixture; the slab is filled in
+    // parallel over fixed node blocks, one noise stream per block.
     let f = cfg.feat_dim;
-    let mut mu = vec![0.0f32; c * f];
-    for cc in 0..c {
-        for d in 0..f {
-            mu[cc * f + d] = rng.gaussian() as f32;
-        }
-    }
-    let mut features = vec![0.0f32; n * f];
-    for v in 0..n {
-        let cc = labels[v] as usize;
-        for d in 0..f {
-            features[v * f + d] = mu[cc * f + d]
-                + cfg.feature_noise as f32 * rng.gaussian() as f32;
-        }
-    }
+    let mu: Vec<f32> = {
+        let mut rng = Rng::stream(cfg.seed, DOM_MU, 0);
+        (0..c * f).map(|_| rng.gaussian() as f32).collect()
+    };
+    let features = gaussian_mixture_features(
+        n,
+        f,
+        &labels,
+        &mu,
+        |_| cfg.feature_noise,
+        cfg.seed,
+        DOM_FEAT,
+        workers,
+    );
 
     // Shared identity slab: trainer subgraphs induced from this graph
     // are zero-copy index views over one Arc'd allocation.
-    g.features = FeatureStore::shared_from_vec(features, f);
-    g.feat_dim = f;
-    g.labels = labels;
-    g.num_classes = c;
-    g
+    Graph {
+        offsets,
+        neighbors,
+        rel,
+        features: FeatureStore::shared_from_vec(features, f),
+        feat_dim: f,
+        labels: labels.into(),
+        num_classes: c,
+        num_relations: 1,
+    }
 }
 
 #[cfg(test)]
@@ -204,6 +220,18 @@ mod tests {
         assert_eq!(a.features.backend(), "shared");
         let c = dcsbm(&base(0.8, 6));
         assert_ne!(a.neighbors, c.neighbors);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_output() {
+        let cfg = base(0.8, 12);
+        let one = dcsbm_with_workers(&cfg, 1);
+        for workers in [2, 4] {
+            let w = dcsbm_with_workers(&cfg, workers);
+            assert_eq!(one.offsets, w.offsets, "workers={workers}");
+            assert_eq!(one.neighbors, w.neighbors, "workers={workers}");
+            assert!(one.features.rows_equal(&w.features, one.feat_dim));
+        }
     }
 
     #[test]

@@ -16,13 +16,31 @@
 //! - [`bipartite`] — query-item graph with typed edges for the
 //!   heterogeneous (E-comm) experiments.
 //! - [`presets`] — named dataset configurations + on-disk caching.
+//!
+//! # Parallel count-then-fill generation
+//!
+//! All three generators run the discipline of `par`: the edge
+//! budget is chunked deterministically (per community for
+//! dcsbm/sbm2, per type block for bipartite), every chunk samples
+//! from its own `Rng::stream(seed, domain, chunk)`, and the CSR and
+//! feature slab are counted and filled in parallel on the crate
+//! threadpool — no `GraphBuilder`, no O(E log E) re-sort. For a fixed
+//! seed the output is **byte-identical at any worker count** (the
+//! `*_with_workers` entry points expose the knob; the determinism
+//! suite in `tests/gen_determinism.rs` locks it in). The original
+//! serial implementations survive in [`reference`] as the perf
+//! baseline for `benches/perf_hotpath.rs`.
 
 mod bipartite;
 mod dcsbm;
+pub(crate) mod par;
 pub mod presets;
+pub mod reference;
 mod sbm2;
 
-pub use bipartite::{bipartite, BipartiteConfig};
-pub use dcsbm::{dcsbm, DcsbmConfig};
-pub use presets::{load_preset, preset_names, Preset};
-pub use sbm2::{sbm2, Sbm2Config};
+pub use bipartite::{
+    bipartite, bipartite_with_workers, BipartiteConfig, BipartiteGraph,
+};
+pub use dcsbm::{dcsbm, dcsbm_with_workers, DcsbmConfig};
+pub use presets::{cache_path, load_preset, preset_names, Preset};
+pub use sbm2::{sbm2, sbm2_with_workers, Sbm2Config};

@@ -1,0 +1,408 @@
+//! Shared machinery for the parallel count-then-fill generators.
+//!
+//! All three generators ([`super::dcsbm`], [`super::sbm2`],
+//! [`super::bipartite`]) follow the same discipline the prep hot path
+//! ([`crate::graph::induce_all`]) established:
+//!
+//! 1. **Chunk** the edge budget deterministically: per community
+//!    (dcsbm/sbm2) or per type block (bipartite), each group's share
+//!    apportioned by cumulative rounding of its sampling weight and
+//!    then split into sub-chunks of at most [`CHUNK_EDGES`] edges, so
+//!    chunk boundaries depend only on the config — never on threads.
+//! 2. **Sample** chunks in parallel on [`parallel_map`], each chunk
+//!    drawing from its own [`Rng::stream`]`(seed, domain, chunk)`, so
+//!    the sampled multiset of edges is a pure function of the seed.
+//! 3. **Count-then-fill** the CSR ([`assemble_csr`]): parallel
+//!    per-node-range counting sort of the directed entries, per-row
+//!    sort + dedup (rows are ~avg-degree long — no global O(E log E)
+//!    re-sort), then a parallel fill of the pre-sized arrays via
+//!    [`parallel_fill`]. Row content is a pure function of the edge
+//!    multiset, so the output is byte-identical for a fixed seed at
+//!    any worker count — the determinism property tests lock this in.
+//!
+//! Feature matrices get the same treatment: fixed node blocks, one
+//! RNG stream per block, parallel fill of one pre-sized slab
+//! ([`gaussian_mixture_features`]).
+
+use crate::util::rng::Rng;
+use crate::util::threadpool::{parallel_fill, parallel_map};
+
+use crate::graph::Slab;
+
+/// Upper bound on edges sampled by one chunk. Small enough that even
+/// a single hot community (degree-skewed dcsbm) splits into many
+/// chunks, large enough that per-chunk overhead stays negligible.
+pub(crate) const CHUNK_EDGES: usize = 16_384;
+
+/// Default worker count for the public generator entry points.
+pub(crate) fn default_workers() -> usize {
+    std::thread::available_parallelism().map_or(1, |c| c.get())
+}
+
+/// One sampling chunk: `target` edges drawn for `group` (a community
+/// or type block), as sub-chunk `index` of the whole plan — the tag
+/// that names its RNG stream.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Chunk {
+    pub group: usize,
+    pub target: usize,
+}
+
+/// Split `total` edges over groups proportionally to `weights` —
+/// cumulative rounding, so targets are integers that sum exactly to
+/// `total` and depend only on the inputs — then cut each group's
+/// share into sub-chunks of at most [`CHUNK_EDGES`].
+pub(crate) fn plan_chunks(total: usize, weights: &[f64]) -> Vec<Chunk> {
+    let mass: f64 = weights.iter().sum();
+    let mut chunks = Vec::new();
+    if mass <= 0.0 || weights.is_empty() {
+        return chunks;
+    }
+    let mut cum = 0.0;
+    let mut allotted_before = 0usize;
+    for (group, &w) in weights.iter().enumerate() {
+        cum += w;
+        let allotted_through =
+            ((total as f64 * cum / mass).round() as usize).min(total);
+        let mut left = allotted_through - allotted_before;
+        allotted_before = allotted_through;
+        while left > 0 {
+            let take = left.min(CHUNK_EDGES);
+            chunks.push(Chunk { group, target: take });
+            left -= take;
+        }
+    }
+    chunks
+}
+
+/// Undirected edges sampled by one chunk, all typed `rel` (generators
+/// sample one relation per type block; 0 for homogeneous graphs).
+pub(crate) struct ChunkEdges {
+    pub rel: u8,
+    pub pairs: Vec<(u32, u32)>,
+}
+
+/// Count-then-fill CSR assembly over per-chunk undirected edge lists.
+///
+/// Every pair `(u, v)` becomes the two directed entries `u->v` and
+/// `v->u`; rows come out sorted with duplicate neighbours removed
+/// (smallest relation wins, matching `GraphBuilder`'s first-wins rule
+/// on its sorted stream), exactly the invariants the rest of the crate
+/// assumes of generated CSRs. Callers must not pass self-loops.
+///
+/// Work is split over contiguous node ranges in two parallel passes:
+/// first each *chunk* buckets its directed entries by destination
+/// range (total work O(E), parallel across chunks), then each *range*
+/// consumes only its own buckets, counting-sorts them locally and
+/// sorts + dedups each row, and the pre-sized output arrays are
+/// filled in parallel. Row contents are a function of the edge
+/// multiset alone, so the result does not depend on `workers` or the
+/// range split.
+pub(crate) fn assemble_csr(
+    n: usize,
+    chunks: &[ChunkEdges],
+    workers: usize,
+) -> (Slab<u64>, Slab<u32>, Option<Slab<u8>>) {
+    let hetero = chunks.iter().any(|c| c.rel > 0 && !c.pairs.is_empty());
+
+    struct BlockRows {
+        /// Deduplicated row length per node of the range.
+        lens: Vec<u32>,
+        nbrs: Vec<u32>,
+        rels: Vec<u8>,
+    }
+
+    let nblocks = if n == 0 { 0 } else { (workers * 2).clamp(1, n) };
+    let span = if nblocks == 0 { 0 } else { n.div_ceil(nblocks) };
+
+    // Pass 1 (parallel over chunks): route both directions of every
+    // pair to the node range owning its source, so no range ever
+    // scans another range's edges.
+    let buckets: Vec<Vec<Vec<(u32, u32, u8)>>> = if nblocks == 0 {
+        Vec::new()
+    } else {
+        parallel_map(chunks.len(), workers.max(1), |ci| {
+            let ch = &chunks[ci];
+            let mut per_block: Vec<Vec<(u32, u32, u8)>> =
+                (0..nblocks).map(|_| Vec::new()).collect();
+            for &(u, v) in &ch.pairs {
+                per_block[u as usize / span].push((u, v, ch.rel));
+                per_block[v as usize / span].push((v, u, ch.rel));
+            }
+            per_block
+        })
+    };
+
+    // Pass 2 (parallel over ranges): build each range's rows from its
+    // own buckets. Bucket order is fixed (chunk order), but any order
+    // would do: rows are sorted below, so content depends only on the
+    // multiset.
+    let blocks: Vec<BlockRows> = parallel_map(nblocks, workers.max(1), |b| {
+        let lo = ((b * span).min(n)) as u32;
+        let hi = (((b + 1) * span).min(n)) as u32;
+        let width = (hi - lo) as usize;
+
+        let mut mine: Vec<(u32, u32, u8)> = Vec::new();
+        for per_block in &buckets {
+            for &(s, d, r) in &per_block[b] {
+                mine.push((s - lo, d, r));
+            }
+        }
+
+        // Counting sort by local source row.
+        let mut cur = vec![0u32; width + 1];
+        for &(l, _, _) in &mine {
+            cur[l as usize + 1] += 1;
+        }
+        for l in 0..width {
+            cur[l + 1] += cur[l];
+        }
+        let mut raw_n = vec![0u32; mine.len()];
+        let mut raw_r = vec![0u8; if hetero { mine.len() } else { 0 }];
+        let mut fill = cur.clone();
+        for &(l, nb, r) in &mine {
+            let pos = fill[l as usize] as usize;
+            fill[l as usize] += 1;
+            raw_n[pos] = nb;
+            if hetero {
+                raw_r[pos] = r;
+            }
+        }
+
+        // Per-row sort + dedup (first = smallest rel wins).
+        let mut lens = vec![0u32; width];
+        let mut nbrs = Vec::with_capacity(mine.len());
+        let mut rels = Vec::with_capacity(if hetero { mine.len() } else { 0 });
+        let mut row: Vec<(u32, u8)> = Vec::new();
+        for l in 0..width {
+            let (a, b) = (cur[l] as usize, cur[l + 1] as usize);
+            if hetero {
+                row.clear();
+                row.extend(
+                    raw_n[a..b].iter().zip(&raw_r[a..b]).map(|(&x, &r)| (x, r)),
+                );
+                row.sort_unstable();
+                row.dedup_by_key(|e| e.0);
+                lens[l] = row.len() as u32;
+                for &(x, r) in &row {
+                    nbrs.push(x);
+                    rels.push(r);
+                }
+            } else {
+                let start = nbrs.len();
+                nbrs.extend_from_slice(&raw_n[a..b]);
+                nbrs[start..].sort_unstable();
+                let mut keep = start;
+                for i in start..nbrs.len() {
+                    if keep == start || nbrs[keep - 1] != nbrs[i] {
+                        nbrs[keep] = nbrs[i];
+                        keep += 1;
+                    }
+                }
+                nbrs.truncate(keep);
+                lens[l] = (keep - start) as u32;
+            }
+        }
+        BlockRows { lens, nbrs, rels }
+    });
+
+    // Offsets from the deduplicated row lengths (count half done).
+    let mut offsets = vec![0u64; n + 1];
+    {
+        let mut v = 0usize;
+        for b in &blocks {
+            for &len in &b.lens {
+                offsets[v + 1] = offsets[v] + len as u64;
+                v += 1;
+            }
+        }
+        debug_assert_eq!(v, n);
+    }
+    let total = offsets[n] as usize;
+
+    // Parallel fill of the pre-sized arrays: each range's rows are
+    // contiguous in node order, so its slice of the output is one
+    // disjoint window.
+    let sizes: Vec<usize> = blocks.iter().map(|b| b.nbrs.len()).collect();
+    let mut neighbors = vec![0u32; total];
+    parallel_fill(&mut neighbors, &sizes, workers.max(1), |i, w| {
+        w.copy_from_slice(&blocks[i].nbrs);
+    });
+    let rel = if hetero {
+        let mut rel = vec![0u8; total];
+        parallel_fill(&mut rel, &sizes, workers.max(1), |i, w| {
+            w.copy_from_slice(&blocks[i].rels);
+        });
+        Some(rel.into())
+    } else {
+        None
+    };
+    (offsets.into(), neighbors.into(), rel)
+}
+
+/// Node span of one feature-fill block. Fixed (not worker-derived):
+/// each block's noise comes from its own RNG stream, so the split
+/// must be a pure function of the graph size.
+pub(crate) const FEAT_BLOCK_NODES: usize = 8_192;
+
+/// `n x f` Gaussian-mixture features, filled in parallel over fixed
+/// node blocks: row `v` is `mu[labels[v]] + noise_of(v) * N(0, I)`,
+/// with block `b` drawing from `Rng::stream(seed, domain, b)`.
+pub(crate) fn gaussian_mixture_features(
+    n: usize,
+    f: usize,
+    labels: &[u16],
+    mu: &[f32],
+    noise_of: impl Fn(usize) -> f64 + Sync,
+    seed: u64,
+    domain: u64,
+    workers: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; n * f];
+    if n == 0 || f == 0 {
+        return out;
+    }
+    let nblocks = n.div_ceil(FEAT_BLOCK_NODES);
+    let sizes: Vec<usize> = (0..nblocks)
+        .map(|b| {
+            let lo = b * FEAT_BLOCK_NODES;
+            let hi = ((b + 1) * FEAT_BLOCK_NODES).min(n);
+            (hi - lo) * f
+        })
+        .collect();
+    parallel_fill(&mut out, &sizes, workers.max(1), |b, w| {
+        let mut rng = Rng::stream(seed, domain, b as u64);
+        let lo = b * FEAT_BLOCK_NODES;
+        for (i, row) in w.chunks_exact_mut(f).enumerate() {
+            let v = lo + i;
+            let cc = labels[v] as usize;
+            let noise = noise_of(v) as f32;
+            for (d, x) in row.iter_mut().enumerate() {
+                *x = mu[cc * f + d] + noise * rng.gaussian() as f32;
+            }
+        }
+    });
+    out
+}
+
+/// Weighted sampler over a fixed weight vector via cumulative sums.
+/// Shared by the degree-corrected samplers of `dcsbm` (parallel and
+/// reference paths alike).
+pub(crate) struct CumSampler {
+    cum: Vec<f64>,
+}
+
+impl CumSampler {
+    pub fn new(weights: &[f64]) -> CumSampler {
+        let mut cum = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            acc += w;
+            cum.push(acc);
+        }
+        CumSampler { cum }
+    }
+
+    pub fn total(&self) -> f64 {
+        *self.cum.last().unwrap_or(&0.0)
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let x = rng.f64() * self.total();
+        match self.cum.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cum.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_chunks_sums_and_bounds() {
+        let chunks = plan_chunks(100_000, &[1.0, 3.0, 0.0, 1.0]);
+        let total: usize = chunks.iter().map(|c| c.target).sum();
+        assert_eq!(total, 100_000);
+        assert!(chunks.iter().all(|c| c.target <= CHUNK_EDGES));
+        assert!(chunks.iter().all(|c| c.group < 4));
+        // group 1 holds ~3/5 of the mass
+        let g1: usize =
+            chunks.iter().filter(|c| c.group == 1).map(|c| c.target).sum();
+        assert!((g1 as f64 - 60_000.0).abs() < 2.0, "g1={g1}");
+        // zero-weight groups sample nothing
+        assert!(chunks.iter().all(|c| c.group != 2));
+        assert!(plan_chunks(10, &[]).is_empty());
+        assert!(plan_chunks(10, &[0.0, 0.0]).is_empty());
+    }
+
+    #[test]
+    fn assemble_matches_graph_builder() {
+        use crate::graph::GraphBuilder;
+        use crate::util::rng::Rng;
+        crate::util::prop::check(25, 83, |rng: &mut Rng| {
+            let n = rng.range(1, 120);
+            let hetero = rng.chance(0.5);
+            let nchunks = rng.range(1, 6);
+            let mut chunks = Vec::new();
+            let mut b = GraphBuilder::new(n);
+            for c in 0..nchunks {
+                // Give each chunk a single rel, mirroring the
+                // generators' type blocks; keep (u, v) pairs disjoint
+                // across rels by parity so first-wins never fires
+                // across different relations (the generators'
+                // invariant).
+                let rel = if hetero { (c % 2) as u8 } else { 0 };
+                let mut pairs = Vec::new();
+                for _ in 0..rng.range(0, 120) {
+                    let u = rng.below(n) as u32;
+                    let v = rng.below(n) as u32;
+                    if u == v {
+                        continue;
+                    }
+                    let (lo, hi) = (u.min(v), u.max(v));
+                    if hetero && (lo + hi) % 2 != (rel as u32) % 2 {
+                        continue;
+                    }
+                    pairs.push((u, v));
+                    b.add_rel_edge(u, v, rel);
+                }
+                chunks.push(ChunkEdges { rel, pairs });
+            }
+            let reference = b.build();
+            for workers in [1, 2, 4] {
+                let (offsets, neighbors, rel) =
+                    assemble_csr(n, &chunks, workers);
+                crate::prop_assert!(
+                    offsets == reference.offsets,
+                    "offsets (w={workers})"
+                );
+                crate::prop_assert!(
+                    neighbors == reference.neighbors,
+                    "neighbors (w={workers})"
+                );
+                crate::prop_assert!(rel == reference.rel, "rel (w={workers})");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gaussian_features_deterministic_across_workers() {
+        let labels: Vec<u16> = (0..1000).map(|v| (v % 4) as u16).collect();
+        let mu: Vec<f32> = (0..4 * 3).map(|i| i as f32 * 0.25).collect();
+        let base = gaussian_mixture_features(
+            1000, 3, &labels, &mu, |_| 0.5, 7, 9, 1,
+        );
+        for workers in [2, 5] {
+            let other = gaussian_mixture_features(
+                1000, 3, &labels, &mu, |_| 0.5, 7, 9, workers,
+            );
+            assert!(
+                base.iter().zip(&other).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "workers={workers}"
+            );
+        }
+    }
+}

@@ -5,6 +5,11 @@
 //! *relative* characteristics of Table 1: Reddit is the densest, the
 //! citation graphs are sparser and larger, E-comm is bipartite and
 //! heterogeneous. `--quick` variants divide node counts for smoke runs.
+//!
+//! Generation runs the parallel count-then-fill generators on all
+//! available cores, and `RTMA_MMAP=1` reopens the cache fully
+//! memory-mapped — generate a big preset once, cache it, and train on
+//! machines where even the CSR exceeds RAM.
 
 use std::path::PathBuf;
 
@@ -53,15 +58,20 @@ pub fn load_preset(
     Ok(Preset { name: name.to_string(), graph, split, boundary })
 }
 
-fn cache_path(name: &str, quick: bool, seed: u64) -> PathBuf {
+/// On-disk cache location for a preset graph (`data/<name>.bin`,
+/// keyed by quick-scaling and seed). Public so out-of-crate smoke
+/// checks (the CI cache round trip) can reopen exactly the file a
+/// `load_preset` call produced.
+pub fn cache_path(name: &str, quick: bool, seed: u64) -> PathBuf {
     let q = if quick { ".quick" } else { "" };
     PathBuf::from("data").join(format!("{name}{q}.s{seed}.bin"))
 }
 
 /// `RTMA_MMAP=1` opts cache opens into [`crate::graph::io::load_mapped`]:
-/// the CSR arrays come into the heap as usual, but the feature slab is
-/// served straight from the page cache — the path for feature matrices
-/// that exceed RAM. Default stays the heap loader (a Shared slab).
+/// the *whole* graph — CSR offsets/neighbors/rel/labels and the
+/// feature slab alike — is served straight from the page cache, so a
+/// preset bigger than RAM in any dimension still loads. Default stays
+/// the heap loader (heap CSR + a Shared feature slab).
 fn use_mmap() -> bool {
     std::env::var("RTMA_MMAP").is_ok_and(|v| v == "1")
 }

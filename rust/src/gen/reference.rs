@@ -1,0 +1,276 @@
+//! Serial reference generators — the pre-parallel implementations.
+//!
+//! These are the original single-`Rng`, `GraphBuilder`-based samplers
+//! (one edge at a time through a global stream, O(E log E) build-time
+//! re-sort). They are kept for two jobs, mirroring how
+//! [`Subgraph::induce`](crate::graph::Subgraph::induce) anchors the
+//! fused induction path:
+//!
+//! - the **perf baseline** of `benches/perf_hotpath.rs`'s generation
+//!   section (serial reference vs parallel at 1/2/8 workers);
+//! - a **statistical cross-check** that the parallel rewrites sample
+//!   the same model (edge budget, homophily) even though their RNG
+//!   streams — and therefore their exact graphs — differ.
+//!
+//! Nothing in the runtime path calls these.
+
+use crate::graph::{FeatureStore, Graph, GraphBuilder};
+use crate::util::rng::Rng;
+
+use super::par::CumSampler;
+use super::{BipartiteConfig, BipartiteGraph, DcsbmConfig, Sbm2Config};
+
+/// Serial [`super::dcsbm`]: one global RNG, rejection sampling into a
+/// `GraphBuilder`.
+pub fn dcsbm_serial(cfg: &DcsbmConfig) -> Graph {
+    assert!(cfg.communities >= 1 && cfg.nodes >= cfg.communities);
+    let mut rng = Rng::new(cfg.seed);
+    let n = cfg.nodes;
+    let c = cfg.communities;
+
+    let labels: Vec<u16> = (0..n).map(|v| (v % c) as u16).collect();
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); c];
+    for (v, &l) in labels.iter().enumerate() {
+        members[l as usize].push(v as u32);
+    }
+
+    let theta: Vec<f64> = (0..n)
+        .map(|_| {
+            if cfg.degree_exponent <= 0.0 {
+                1.0
+            } else {
+                let u = 1.0 - rng.f64();
+                u.powf(-cfg.degree_exponent).min(100.0)
+            }
+        })
+        .collect();
+
+    let global = CumSampler::new(&theta);
+    let per_comm: Vec<CumSampler> = members
+        .iter()
+        .map(|ms| {
+            CumSampler::new(
+                &ms.iter().map(|&v| theta[v as usize]).collect::<Vec<_>>(),
+            )
+        })
+        .collect();
+
+    let target_edges = (n as f64 * cfg.avg_degree / 2.0) as usize;
+    let mut b = GraphBuilder::new(n);
+    let mut attempts = 0usize;
+    let max_attempts = target_edges * 20;
+    while b.num_pending() < target_edges && attempts < max_attempts {
+        attempts += 1;
+        let u = global.sample(&mut rng) as u32;
+        let cu = labels[u as usize] as usize;
+        let cv = if rng.chance(cfg.homophily) || c == 1 {
+            cu
+        } else {
+            let mut k = rng.below(c - 1);
+            if k >= cu {
+                k += 1;
+            }
+            k
+        };
+        let v = members[cv][per_comm[cv].sample(&mut rng)];
+        if u != v {
+            b.add_edge(u, v);
+        }
+    }
+    let mut g = b.build();
+
+    let f = cfg.feat_dim;
+    let mut mu = vec![0.0f32; c * f];
+    for x in mu.iter_mut() {
+        *x = rng.gaussian() as f32;
+    }
+    let mut features = vec![0.0f32; n * f];
+    for v in 0..n {
+        let cc = labels[v] as usize;
+        for d in 0..f {
+            features[v * f + d] =
+                mu[cc * f + d] + cfg.feature_noise as f32 * rng.gaussian() as f32;
+        }
+    }
+
+    g.features = FeatureStore::shared_from_vec(features, f);
+    g.feat_dim = f;
+    g.labels = labels.into();
+    g.num_classes = c;
+    g
+}
+
+/// Serial [`super::sbm2`].
+pub fn sbm2_serial(cfg: &Sbm2Config) -> Graph {
+    let n = cfg.class_size * 2;
+    let mut rng = Rng::new(cfg.seed);
+    let labels: Vec<u16> =
+        (0..n).map(|v| (v >= cfg.class_size) as u16).collect();
+
+    let target = (n as f64 * cfg.avg_degree / 2.0) as usize;
+    let mut b = GraphBuilder::new(n);
+    let mut attempts = 0;
+    while b.num_pending() < target && attempts < target * 20 {
+        attempts += 1;
+        let u = rng.below(n);
+        let same = rng.chance(cfg.homophily);
+        let v = loop {
+            let cand = if same == (labels[u] == 0) {
+                rng.below(cfg.class_size) // class 0
+            } else {
+                cfg.class_size + rng.below(cfg.class_size) // class 1
+            };
+            if cand != u {
+                break cand;
+            }
+        };
+        b.add_edge(u as u32, v as u32);
+    }
+    let mut g = b.build();
+    g.feat_dim = 2;
+    let onehot: Vec<f32> = labels
+        .iter()
+        .flat_map(|&y| if y == 0 { [1.0, 0.0] } else { [0.0, 1.0] })
+        .collect();
+    g.features = FeatureStore::shared_from_vec(onehot, 2);
+    g.labels = labels.into();
+    g.num_classes = 2;
+    g
+}
+
+/// Serial [`super::bipartite`].
+pub fn bipartite_serial(cfg: &BipartiteConfig) -> BipartiteGraph {
+    let nq = cfg.num_queries;
+    let ni = cfg.num_items;
+    let n = nq + ni;
+    let c = cfg.communities;
+    let mut rng = Rng::new(cfg.seed);
+
+    let labels: Vec<u16> = (0..n).map(|v| (v % c) as u16).collect();
+    let item_members: Vec<Vec<u32>> = {
+        let mut m = vec![Vec::new(); c];
+        for v in nq..n {
+            m[labels[v] as usize].push(v as u32);
+        }
+        m
+    };
+
+    let mut b = GraphBuilder::new(n);
+    let pick_item = |rng: &mut Rng, home: usize| -> u32 {
+        let cc = if rng.chance(cfg.homophily) || c == 1 {
+            home
+        } else {
+            let mut k = rng.below(c - 1);
+            if k >= home {
+                k += 1;
+            }
+            k
+        };
+        let ms = &item_members[cc];
+        ms[rng.below(ms.len())]
+    };
+
+    let qi_total = (nq as f64 * cfg.qi_degree) as usize;
+    for _ in 0..qi_total {
+        let q = rng.below(nq);
+        let it = pick_item(&mut rng, labels[q] as usize);
+        b.add_rel_edge(q as u32, it, 0);
+    }
+    let ii_total = (ni as f64 * cfg.ii_degree / 2.0) as usize;
+    for _ in 0..ii_total {
+        let u = nq + rng.below(ni);
+        let v = pick_item(&mut rng, labels[u] as usize);
+        if u as u32 != v {
+            b.add_rel_edge(u as u32, v, 1);
+        }
+    }
+
+    let mut g = b.build();
+    let f = cfg.feat_dim;
+    let mut mu = vec![0.0f32; c * f];
+    for x in mu.iter_mut() {
+        *x = rng.gaussian() as f32;
+    }
+    let mut features = vec![0.0f32; n * f];
+    for v in 0..n {
+        let cc = labels[v] as usize;
+        let noise = if v < nq {
+            cfg.feature_noise * 1.5
+        } else {
+            cfg.feature_noise
+        };
+        for d in 0..f {
+            features[v * f + d] =
+                mu[cc * f + d] + noise as f32 * rng.gaussian() as f32;
+        }
+    }
+    g.features = FeatureStore::shared_from_vec(features, f);
+    g.feat_dim = f;
+    g.labels = labels.into();
+    g.num_classes = c;
+    g.num_relations = 2;
+    BipartiteGraph { graph: g, boundary: nq as u32 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats::{graph_stats, homophily_ratio};
+
+    /// The parallel rewrites sample the same model as the serial
+    /// references: edge budgets within dedup slack, homophily within
+    /// sampling noise. (Exact graphs differ — the RNG streams do.)
+    #[test]
+    fn parallel_generators_match_reference_statistics() {
+        let dc = DcsbmConfig {
+            nodes: 3000,
+            communities: 10,
+            avg_degree: 12.0,
+            homophily: 0.8,
+            feat_dim: 4,
+            feature_noise: 0.4,
+            degree_exponent: 0.8,
+            seed: 42,
+        };
+        let a = graph_stats(&super::super::dcsbm(&dc));
+        let b = graph_stats(&dcsbm_serial(&dc));
+        assert!(
+            (a.avg_degree - b.avg_degree).abs() < 1.5,
+            "avg degree {} vs {}",
+            a.avg_degree,
+            b.avg_degree
+        );
+        let ha = homophily_ratio(&super::super::dcsbm(&dc));
+        let hb = homophily_ratio(&dcsbm_serial(&dc));
+        assert!((ha - hb).abs() < 0.05, "homophily {ha} vs {hb}");
+
+        let sb = Sbm2Config {
+            class_size: 2000,
+            avg_degree: 14.0,
+            homophily: 0.7,
+            seed: 43,
+        };
+        let ha = homophily_ratio(&super::super::sbm2(&sb));
+        let hb = homophily_ratio(&sbm2_serial(&sb));
+        assert!((ha - hb).abs() < 0.05, "sbm2 homophily {ha} vs {hb}");
+
+        let bc = BipartiteConfig {
+            num_queries: 800,
+            num_items: 1200,
+            communities: 8,
+            qi_degree: 6.0,
+            ii_degree: 4.0,
+            homophily: 0.8,
+            feat_dim: 4,
+            feature_noise: 0.3,
+            seed: 44,
+        };
+        let a = super::super::bipartite(&bc).graph;
+        let b = bipartite_serial(&bc).graph;
+        let (ea, eb) = (a.num_edges() as f64, b.num_edges() as f64);
+        assert!(
+            (ea - eb).abs() / eb < 0.05,
+            "bipartite edges {ea} vs {eb}"
+        );
+    }
+}

@@ -6,9 +6,18 @@
 //! measures expected edge-cut (Eq. 2) and the initial-gradient
 //! discrepancies (Thm 2) on graphs from this generator and compares
 //! them with the closed forms.
+//!
+//! Sampling follows the parallel count-then-fill discipline of
+//! `gen::par`: the edge budget is chunked by the class of `u`
+//! (uniform endpoint draw → equal class weights) and each chunk
+//! samples from its own `(seed, chunk)` stream, so output is
+//! byte-identical for a fixed seed at any worker count.
 
-use crate::graph::{FeatureStore, Graph, GraphBuilder};
+use crate::graph::{FeatureStore, Graph};
 use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
+
+use super::par::{assemble_csr, default_workers, plan_chunks, ChunkEdges};
 
 #[derive(Clone, Debug)]
 pub struct Sbm2Config {
@@ -20,44 +29,61 @@ pub struct Sbm2Config {
     pub seed: u64,
 }
 
+const DOM_EDGES: u64 = 0x5B20;
+
 pub fn sbm2(cfg: &Sbm2Config) -> Graph {
-    let n = cfg.class_size * 2;
-    let mut rng = Rng::new(cfg.seed);
+    sbm2_with_workers(cfg, default_workers())
+}
+
+/// [`sbm2`] with an explicit worker count; output is independent of it.
+pub fn sbm2_with_workers(cfg: &Sbm2Config, workers: usize) -> Graph {
+    assert!(cfg.class_size >= 1 && workers >= 1);
+    let cs = cfg.class_size;
+    let n = cs * 2;
     // labels: first half 0, second half 1 (node order is irrelevant to
     // every consumer; partitioners are label-blind).
-    let labels: Vec<u16> =
-        (0..n).map(|v| (v >= cfg.class_size) as u16).collect();
+    let labels: Vec<u16> = (0..n).map(|v| (v >= cs) as u16).collect();
 
+    // Chunk by the (uniformly drawn) class of `u`: equal weights.
     let target = (n as f64 * cfg.avg_degree / 2.0) as usize;
-    let mut b = GraphBuilder::new(n);
-    let mut attempts = 0;
-    while b.num_pending() < target && attempts < target * 20 {
-        attempts += 1;
-        let u = rng.below(n);
-        let same = rng.chance(cfg.homophily);
-        let v = loop {
-            let cand = if same == (labels[u] == 0) {
-                rng.below(cfg.class_size) // class 0
-            } else {
-                cfg.class_size + rng.below(cfg.class_size) // class 1
-            };
-            if cand != u {
-                break cand;
+    let chunks = plan_chunks(target, &[1.0, 1.0]);
+
+    let lists: Vec<ChunkEdges> = parallel_map(chunks.len(), workers, |i| {
+        let (cu, target) = (chunks[i].group, chunks[i].target);
+        let mut rng = Rng::stream(cfg.seed, DOM_EDGES, i as u64);
+        let mut pairs = Vec::with_capacity(target);
+        let mut attempts = 0usize;
+        let max_attempts = target * 20;
+        while pairs.len() < target && attempts < max_attempts {
+            attempts += 1;
+            let u = cu * cs + rng.below(cs);
+            let same = rng.chance(cfg.homophily);
+            let cv = if same { cu } else { 1 - cu };
+            let v = cv * cs + rng.below(cs);
+            if u != v {
+                pairs.push((u as u32, v as u32));
             }
-        };
-        b.add_edge(u as u32, v as u32);
-    }
-    let mut g = b.build();
+        }
+        ChunkEdges { rel: 0, pairs }
+    });
+
+    let (offsets, neighbors, rel) = assemble_csr(n, &lists, workers);
+
     // one-hot features
-    g.feat_dim = 2;
     let onehot: Vec<f32> = labels
         .iter()
         .flat_map(|&y| if y == 0 { [1.0, 0.0] } else { [0.0, 1.0] })
         .collect();
-    g.features = FeatureStore::shared_from_vec(onehot, 2);
-    g.labels = labels;
-    g.num_classes = 2;
-    g
+    Graph {
+        offsets,
+        neighbors,
+        rel,
+        features: FeatureStore::shared_from_vec(onehot, 2),
+        feat_dim: 2,
+        labels: labels.into(),
+        num_classes: 2,
+        num_relations: 1,
+    }
 }
 
 #[cfg(test)]
@@ -95,5 +121,19 @@ mod tests {
             let emp = homophily_ratio(&g);
             assert!((emp - h).abs() < 0.03, "h={h} emp={emp}");
         }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_output() {
+        let cfg = Sbm2Config {
+            class_size: 1500,
+            avg_degree: 12.0,
+            homophily: 0.75,
+            seed: 6,
+        };
+        let one = sbm2_with_workers(&cfg, 1);
+        let four = sbm2_with_workers(&cfg, 4);
+        assert_eq!(one.offsets, four.offsets);
+        assert_eq!(one.neighbors, four.neighbors);
     }
 }

@@ -1,25 +1,29 @@
 //! CSR graph with node features, class labels and optional edge types.
 
-use super::FeatureStore;
+use super::{FeatureStore, Slab};
 
 /// Compact undirected graph in CSR form. Both directions of every
 /// undirected edge are stored, so `deg(v)` is the true degree and the
 /// undirected edge count is `num_adj() / 2`.
+///
+/// Every array lives behind a [`Slab`] (heap `Owned` or `Mapped` view
+/// of an RTMAGRF2 cache file — see [`super::slab`]); reads deref to
+/// plain slices either way, so only `io::load_mapped` ever cares.
 #[derive(Clone, Debug, Default)]
 pub struct Graph {
     /// CSR row offsets, length `num_nodes + 1`.
-    pub offsets: Vec<u64>,
+    pub offsets: Slab<u64>,
     /// Flattened neighbour lists (sorted within each row).
-    pub neighbors: Vec<u32>,
+    pub neighbors: Slab<u32>,
     /// Optional per-adjacency-entry relation type (heterogeneous graphs).
-    pub rel: Option<Vec<u8>>,
+    pub rel: Option<Slab<u8>>,
     /// `num_nodes x feat_dim` node features behind one of the three
     /// [`FeatureStore`] backends (owned / shared slab / mmap).
     pub features: FeatureStore,
     pub feat_dim: usize,
     /// Synthetic community / class label per node (ground truth used by
     /// the theory benches and the feature generator; never by training).
-    pub labels: Vec<u16>,
+    pub labels: Slab<u16>,
     pub num_classes: usize,
     /// Number of distinct relation types (1 for homogeneous).
     pub num_relations: usize,
@@ -127,22 +131,22 @@ impl GraphBuilder {
             offsets[i + 1] += offsets[i];
         }
         let neighbors: Vec<u32> = self.edges.iter().map(|e| e.1).collect();
-        let rel = if self.hetero {
+        let rel: Option<Vec<u8>> = if self.hetero {
             Some(self.edges.iter().map(|e| e.2).collect())
         } else {
             None
         };
         let num_relations = rel
             .as_ref()
-            .map(|r: &Vec<u8>| r.iter().copied().max().unwrap_or(0) as usize + 1)
+            .map(|r| r.iter().copied().max().unwrap_or(0) as usize + 1)
             .unwrap_or(1);
         Graph {
-            offsets,
-            neighbors,
-            rel,
+            offsets: offsets.into(),
+            neighbors: neighbors.into(),
+            rel: rel.map(Into::into),
             features: FeatureStore::default(),
             feat_dim: 0,
-            labels: vec![0; n],
+            labels: vec![0; n].into(),
             num_classes: 1,
             num_relations,
         }

@@ -338,31 +338,18 @@ pub fn rehost_backends(
     out
 }
 
-/// A read-only `mmap` of one cache file, exposing its aligned feature
-/// section as `&[f32]`. Built by [`crate::graph::io::load_mapped`];
-/// dropped views unmap when the last `Arc` goes away.
+/// The f32 feature section of one cache file, served from a shared
+/// read-only [`MappedFile`]. Built by
+/// [`crate::graph::io::load_mapped`], which hands the *same* mapping
+/// to the CSR [`Slab`](super::Slab) views — one `mmap` covers the
+/// whole graph, unmapped when the last view drops.
+#[derive(Debug)]
 pub struct MappedSlab {
-    base: *mut u8,
-    map_len: usize,
+    file: Arc<super::MappedFile>,
     /// Byte offset of the f32 feature section within the map. The
     /// RTMAGRF2 writer 8-aligns it, so the f32 view is always aligned.
     data_offset: usize,
     floats: usize,
-}
-
-// SAFETY: the mapping is PROT_READ/MAP_PRIVATE and never mutated after
-// construction, so concurrent reads from any thread are sound.
-unsafe impl Send for MappedSlab {}
-unsafe impl Sync for MappedSlab {}
-
-impl std::fmt::Debug for MappedSlab {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(
-            f,
-            "MappedSlab({} f32 @ +{} of {} mapped bytes)",
-            self.floats, self.data_offset, self.map_len
-        )
-    }
 }
 
 impl MappedSlab {
@@ -370,98 +357,43 @@ impl MappedSlab {
     /// at byte `data_offset`. The offset must be 4-byte aligned and the
     /// f32 section must lie within the file — callers (`io`) validate
     /// the layout against the file length before getting here.
-    #[cfg(unix)]
     pub fn map_file(
         file: &std::fs::File,
         data_offset: usize,
         floats: usize,
     ) -> anyhow::Result<MappedSlab> {
-        use std::os::unix::io::AsRawFd;
-
-        anyhow::ensure!(
-            data_offset % 4 == 0,
-            "feature section at byte {data_offset} is not f32-aligned \
-             (legacy cache file? re-save to the RTMAGRF2 layout)"
-        );
-        if cfg!(target_endian = "big") {
-            anyhow::bail!(
-                "mmap'd features require a little-endian host \
-                 (file layout is LE)"
-            );
-        }
-        let map_len = file.metadata()?.len() as usize;
-        anyhow::ensure!(
-            data_offset
-                .checked_add(floats.checked_mul(4).ok_or_else(|| {
-                    anyhow::anyhow!("feature section size overflows")
-                })?)
-                .is_some_and(|end| end <= map_len),
-            "feature section [{data_offset}, +{floats}*4) exceeds the \
-             {map_len}-byte file"
-        );
         if floats == 0 {
-            // Zero-length mappings are invalid; an empty slab needs none.
+            // An empty slab needs no mapping at all.
             return Ok(MappedSlab {
-                base: std::ptr::null_mut(),
-                map_len: 0,
+                file: Arc::new(super::MappedFile::empty()),
                 data_offset: 0,
                 floats: 0,
             });
         }
-
-        const PROT_READ: i32 = 0x1;
-        const MAP_PRIVATE: i32 = 0x2;
-        // SAFETY: length is the exact file size, fd is a valid open
-        // file, and the returned region is only ever read.
-        let base = unsafe {
-            mmap(
-                std::ptr::null_mut(),
-                map_len,
-                PROT_READ,
-                MAP_PRIVATE,
-                file.as_raw_fd(),
-                0,
-            )
-        };
-        if base as isize == -1 {
-            anyhow::bail!(
-                "mmap({} bytes) failed: {}",
-                map_len,
-                std::io::Error::last_os_error()
-            );
-        }
-        Ok(MappedSlab {
-            base: base.cast(),
-            map_len,
-            data_offset,
-            floats,
-        })
+        let map = Arc::new(super::MappedFile::map(file)?);
+        MappedSlab::from_parts(map, data_offset, floats)
     }
 
-    /// Non-unix hosts fall back to heap loading at the `io` layer.
-    #[cfg(not(unix))]
-    pub fn map_file(
-        _file: &std::fs::File,
-        _data_offset: usize,
-        _floats: usize,
+    /// View an already-mapped file's feature section, sharing its
+    /// mapping with the caller's other section views.
+    pub fn from_parts(
+        file: Arc<super::MappedFile>,
+        data_offset: usize,
+        floats: usize,
     ) -> anyhow::Result<MappedSlab> {
-        anyhow::bail!("mmap'd feature slabs are only supported on unix")
+        file.check_window::<f32>(data_offset, floats).map_err(|e| {
+            e.context(
+                "feature section is not a valid f32 window of the map \
+                 (legacy cache file? re-save to the RTMAGRF2 layout)",
+            )
+        })?;
+        Ok(MappedSlab { file, data_offset, floats })
     }
 
     /// The mapped feature section.
     #[inline]
     pub fn as_slice(&self) -> &[f32] {
-        if self.floats == 0 {
-            return &[];
-        }
-        // SAFETY: construction validated alignment and bounds; the
-        // mapping lives as long as `self` and is never written.
-        unsafe {
-            std::slice::from_raw_parts(
-                self.base.add(self.data_offset).cast::<f32>(),
-                self.floats,
-            )
-        }
+        self.file.slice::<f32>(self.data_offset, self.floats)
     }
 
     /// f32 capacity of the mapped section.
@@ -472,31 +404,6 @@ impl MappedSlab {
     pub fn is_empty(&self) -> bool {
         self.floats == 0
     }
-}
-
-impl Drop for MappedSlab {
-    fn drop(&mut self) {
-        #[cfg(unix)]
-        if self.map_len > 0 {
-            // SAFETY: base/map_len came from a successful mmap.
-            unsafe {
-                munmap(self.base.cast(), self.map_len);
-            }
-        }
-    }
-}
-
-#[cfg(unix)]
-extern "C" {
-    fn mmap(
-        addr: *mut std::ffi::c_void,
-        length: usize,
-        prot: i32,
-        flags: i32,
-        fd: i32,
-        offset: i64,
-    ) -> *mut std::ffi::c_void;
-    fn munmap(addr: *mut std::ffi::c_void, length: usize) -> i32;
 }
 
 #[cfg(test)]

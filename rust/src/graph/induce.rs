@@ -120,7 +120,7 @@ fn cut_only_placeholder(
         }
     }
     let graph = Graph {
-        offsets: vec![0],
+        offsets: vec![0].into(),
         feat_dim: parent.feat_dim,
         num_classes: parent.num_classes,
         num_relations: parent.num_relations,
@@ -205,15 +205,15 @@ fn induce_part(
     }
 
     let graph = Graph {
-        offsets,
-        neighbors,
+        offsets: offsets.into(),
+        neighbors: neighbors.into(),
         // Match the reference semantics: a subgraph records relation
         // types only when an internal entry is actually typed (>0) —
         // GraphBuilder's `hetero` flag behaves the same way.
-        rel: if any_rel { Some(rel) } else { None },
+        rel: if any_rel { Some(rel.into()) } else { None },
         features,
         feat_dim,
-        labels,
+        labels: labels.into(),
         num_classes: parent.num_classes,
         num_relations: parent.num_relations,
     };
@@ -424,7 +424,8 @@ mod tests {
             } else {
                 feats.into()
             };
-            g.labels = (0..n).map(|_| rng.below(4) as u16).collect();
+            g.labels =
+                (0..n).map(|_| rng.below(4) as u16).collect::<Vec<_>>().into();
             g.num_classes = 4;
 
             let k = rng.range(1, 7);

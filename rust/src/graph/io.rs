@@ -13,10 +13,12 @@
 //!
 //! The legacy RTMAGRF1 layout (same sections, unaligned) is still
 //! readable by [`load`]; [`save`] always writes RTMAGRF2. The
-//! alignment exists for [`load_mapped`]: the feature section of a v2
-//! file can be handed to trainers as an f32 slice straight out of an
-//! `mmap` ([`FeatureStore::Mapped`]) without a heap copy — the slab
-//! for graphs whose features exceed RAM.
+//! alignment exists for [`load_mapped`]: every section of a v2 file —
+//! offsets, neighbors, rel, labels ([`Slab::Mapped`]) *and* features
+//! ([`FeatureStore::Mapped`]) — is handed out as a typed slice
+//! straight out of one shared `mmap` without a heap copy, so cached
+//! graphs whose CSR or feature matrix exceeds RAM still train from
+//! the page cache.
 //!
 //! All array sections are bulk little-endian (one `read_exact` /
 //! `write_all` per section on LE hosts — the same treatment the comm
@@ -31,7 +33,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use super::{FeatureStore, Graph, MappedSlab};
+use super::{FeatureStore, Graph, MappedFile, MappedSlab, Slab};
 
 const MAGIC_V1: &[u8; 8] = b"RTMAGRF1";
 const MAGIC_V2: &[u8; 8] = b"RTMAGRF2";
@@ -362,12 +364,12 @@ fn load_prefix(
     skip(r, lay.off_features - (lay.off_labels + h.n * 2))?;
 
     Ok(Graph {
-        offsets,
-        neighbors,
-        rel,
+        offsets: offsets.into(),
+        neighbors: neighbors.into(),
+        rel: rel.map(Into::into),
         features: FeatureStore::default(), // caller fills
         feat_dim: h.feat_dim as usize,
-        labels,
+        labels: labels.into(),
         num_classes: h.num_classes as usize,
         num_relations: h.num_relations as usize,
     })
@@ -389,36 +391,75 @@ pub fn load(path: &Path) -> Result<Graph> {
     Ok(g)
 }
 
-/// Load a cached graph with its feature section left on disk: the CSR
-/// arrays come into the heap as usual, but features become a
-/// [`FeatureStore::Mapped`] over the file's (8-aligned) f32 slab,
-/// paged in on first touch. Requires the RTMAGRF2 layout — legacy v1
-/// caches are rejected (re-save to upgrade) because their feature
-/// section is unaligned.
+/// Load a cached graph with *every* array section left on disk: the
+/// file is mapped once, and offsets / neighbors / rel / labels come
+/// back as [`Slab::Mapped`] windows of that mapping while features
+/// become a [`FeatureStore::Mapped`] over the same map — nothing but
+/// the fixed header is copied to the heap, and pages fault in on
+/// first touch. Requires the RTMAGRF2 layout — legacy v1 caches are
+/// rejected (re-save to upgrade) because their sections are
+/// unaligned.
 pub fn load_mapped(path: &Path) -> Result<Graph> {
     let file = std::fs::File::open(path)
         .with_context(|| format!("open {}", path.display()))?;
     let file_len = file.metadata()?.len();
-    let mut r = BufReader::new(file);
+    let mut r = BufReader::new(&file);
     let (h, lay) = read_header(&mut r, file_len, path)?;
+    drop(r);
     ensure!(
         h.v2,
         "{}: mmap requires the aligned RTMAGRF2 layout (legacy cache — \
          delete it to regenerate)",
         path.display()
     );
-    let mut g = load_prefix(&mut r, &h, &lay)?;
+    let map = Arc::new(
+        MappedFile::map(&file)
+            .with_context(|| format!("mmap {}", path.display()))?,
+    );
+    let n = h.n as usize;
+    let adj = h.adj as usize;
+    // Layout::of validated every section against the real file length,
+    // so these windows only fail on non-LE hosts.
+    fn section<T: super::slab::SlabElem>(
+        map: &Arc<MappedFile>,
+        path: &Path,
+        what: &str,
+        off: u64,
+        count: usize,
+    ) -> Result<Slab<T>> {
+        Slab::mapped(Arc::clone(map), off as usize, count)
+            .with_context(|| format!("{}: map {what}", path.display()))
+    }
+    let offsets: Slab<u64> =
+        section(&map, path, "offsets", lay.off_offsets, n + 1)?;
+    let neighbors: Slab<u32> =
+        section(&map, path, "neighbors", lay.off_neighbors, adj)?;
+    let rel: Option<Slab<u8>> = if h.has_rel {
+        Some(section(&map, path, "rel", lay.off_rel, adj)?)
+    } else {
+        None
+    };
+    let labels: Slab<u16> =
+        section(&map, path, "labels", lay.off_labels, n)?;
     let floats = (h.n * h.feat_dim) as usize;
-    g.features = if floats == 0 {
+    let features = if floats == 0 {
         FeatureStore::default()
     } else {
-        let file = r.into_inner();
-        let map =
-            MappedSlab::map_file(&file, lay.off_features as usize, floats)
-                .with_context(|| format!("mmap {}", path.display()))?;
-        FeatureStore::Mapped { map: Arc::new(map), index: None }
+        let slab =
+            MappedSlab::from_parts(map, lay.off_features as usize, floats)
+                .with_context(|| format!("{}: map features", path.display()))?;
+        FeatureStore::Mapped { map: Arc::new(slab), index: None }
     };
-    Ok(g)
+    Ok(Graph {
+        offsets,
+        neighbors,
+        rel,
+        features,
+        feat_dim: h.feat_dim as usize,
+        labels,
+        num_classes: h.num_classes as usize,
+        num_relations: h.num_relations as usize,
+    })
 }
 
 #[cfg(test)]
@@ -436,7 +477,7 @@ mod tests {
         g.feat_dim = 3;
         g.features =
             (0..18).map(|i| i as f32 * 0.5).collect::<Vec<f32>>().into();
-        g.labels = vec![0, 1, 2, 0, 1, 2];
+        g.labels = vec![0, 1, 2, 0, 1, 2].into();
         g.num_classes = 3;
         g
     }
@@ -489,13 +530,36 @@ mod tests {
             save(&reloaded, &p2).unwrap();
             let bytes2 = std::fs::read(&p2).unwrap();
             assert_eq!(bytes1, bytes2, "{name}: round trip not identity");
-            // And the mmap view reads the same features in place.
+            // And the fully-mapped view serves every section in place:
+            // CSR arrays and features all read back identically from
+            // `Mapped` backends, and re-saving the mapped graph still
+            // reproduces the file byte-for-byte.
             if cfg!(unix) {
                 let mapped = load_mapped(&p1).unwrap();
                 assert_eq!(mapped.features.backend(), "mapped");
                 assert!(mapped.features.rows_equal(&g.features, 3));
+                for (what, backend) in [
+                    ("offsets", mapped.offsets.backend()),
+                    ("neighbors", mapped.neighbors.backend()),
+                    ("labels", mapped.labels.backend()),
+                ] {
+                    assert_eq!(backend, "mapped", "{name}: {what}");
+                }
+                assert_eq!(mapped.offsets, g.offsets);
                 assert_eq!(mapped.neighbors, g.neighbors);
                 assert_eq!(mapped.rel, g.rel);
+                assert_eq!(mapped.labels, g.labels);
+                if let Some(rel) = &mapped.rel {
+                    assert_eq!(rel.backend(), "mapped");
+                }
+                let p3 = tmp(&format!("{name}_3"));
+                save(&mapped, &p3).unwrap();
+                let bytes3 = std::fs::read(&p3).unwrap();
+                assert_eq!(
+                    bytes1, bytes3,
+                    "{name}: mapped round trip not identity"
+                );
+                std::fs::remove_file(p3).ok();
             }
             std::fs::remove_file(p1).ok();
             std::fs::remove_file(p2).ok();
@@ -633,7 +697,21 @@ mod tests {
                         <= full.len()
                 );
             }
-            drop(mapped);
+            if let Ok(m) = mapped {
+                // Every mapped section window was validated against
+                // the real file length — reading each one end to end
+                // must stay in bounds (no fault, no over-read).
+                crate::prop_assert!(m.offsets.len() * 8 <= full.len());
+                crate::prop_assert!(m.neighbors.len() * 4 <= full.len());
+                crate::prop_assert!(m.labels.len() * 2 <= full.len());
+                let touch = m.offsets.iter().map(|&x| x as u128).sum::<u128>()
+                    + m.neighbors.iter().map(|&x| x as u128).sum::<u128>()
+                    + m.labels.iter().map(|&x| x as u128).sum::<u128>()
+                    + m.rel
+                        .as_ref()
+                        .map_or(0, |r| r.iter().map(|&x| x as u128).sum());
+                let _ = touch;
+            }
             Ok(())
         });
     }

@@ -39,11 +39,23 @@
 //! ([`induce::induce_all_except`]) give skipped partitions an empty
 //! `Owned` placeholder — lost data is never materialised in any
 //! backend.
+//!
+//! # CSR storage backends
+//!
+//! The CSR-side arrays (offsets / neighbors / rel / labels) get the
+//! same treatment through [`slab::Slab`]: `Owned` heap vectors for
+//! everything built in memory, or `Mapped` windows of one shared
+//! [`slab::MappedFile`] when a cache is opened with
+//! [`io::load_mapped`]. A fully-mapped graph touches the heap only
+//! for what training actually faults in, so billion-edge presets can
+//! be generated once, cached, and trained on machines where even the
+//! CSR exceeds RAM.
 
 pub mod csr;
 pub mod features;
 pub mod induce;
 pub mod io;
+pub mod slab;
 pub mod split;
 pub mod stats;
 pub mod subgraph;
@@ -51,5 +63,6 @@ pub mod subgraph;
 pub use csr::{Graph, GraphBuilder};
 pub use features::{FeatureStore, MappedSlab};
 pub use induce::{induce_all, induce_all_except};
+pub use slab::{MappedFile, Slab};
 pub use split::{LinkSplit, split_links};
 pub use subgraph::Subgraph;

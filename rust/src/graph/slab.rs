@@ -1,0 +1,361 @@
+//! Typed array slabs: heap-owned or served from a mapped cache file.
+//!
+//! [`Slab<T>`] is the storage behind every CSR-side array of
+//! [`Graph`](super::Graph) — offsets, neighbors, relation types and
+//! labels. It mirrors the shape [`FeatureStore`](super::FeatureStore)
+//! established for the feature matrix: an `Owned(Vec<T>)` backend for
+//! everything built in memory (generators, builders, induction,
+//! [`io::load`](super::io::load)), and a `Mapped` backend that reads
+//! the corresponding 8-aligned RTMAGRF2 section straight out of one
+//! shared [`MappedFile`] ([`io::load_mapped`](super::io::load_mapped)).
+//! With both in place, a cached graph whose *CSR* exceeds RAM — not
+//! just its feature slab — trains from the page cache.
+//!
+//! `Slab<T>` derefs to `&[T]`, so all read access (indexing, slicing,
+//! iteration, `binary_search`, equality) is exactly slice access; the
+//! backend only matters at construction time. Mutation goes through
+//! building a `Vec<T>` and converting with `.into()` — slabs are
+//! immutable once built, which is what lets the `Mapped` backend exist
+//! at all.
+
+use std::sync::Arc;
+
+/// Element types a mapped slab may expose: plain-old-data with no
+/// invalid bit patterns and no padding, stored little-endian in the
+/// cache file. Sealed by construction — implemented exactly for the
+/// section element types of the RTMAGRF2 layout.
+pub trait SlabElem:
+    Copy + Send + Sync + std::fmt::Debug + PartialEq + 'static
+{
+}
+
+impl SlabElem for u8 {}
+impl SlabElem for u16 {}
+impl SlabElem for u32 {}
+impl SlabElem for u64 {}
+impl SlabElem for f32 {}
+
+/// A whole cache file mapped read-only into the address space. All
+/// section views ([`Slab::mapped`] and the feature
+/// [`MappedSlab`](super::features::MappedSlab)) share one `Arc` of
+/// this, so a fully-mapped graph costs a single `mmap` and unmaps when
+/// the last view drops.
+pub struct MappedFile {
+    base: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ/MAP_PRIVATE and never mutated after
+// construction, so concurrent reads from any thread are sound.
+unsafe impl Send for MappedFile {}
+unsafe impl Sync for MappedFile {}
+
+impl std::fmt::Debug for MappedFile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MappedFile({} bytes)", self.len)
+    }
+}
+
+impl MappedFile {
+    /// An empty mapping (no file behind it). Zero-length sections view
+    /// this instead of calling `mmap`, which rejects length 0.
+    pub fn empty() -> MappedFile {
+        MappedFile { base: std::ptr::null_mut(), len: 0 }
+    }
+
+    /// Map `file` whole, read-only. Mapped sections are read verbatim,
+    /// so the (little-endian) layout requires a little-endian host —
+    /// big-endian hosts must use the heap loader instead.
+    #[cfg(unix)]
+    pub fn map(file: &std::fs::File) -> anyhow::Result<MappedFile> {
+        use std::os::unix::io::AsRawFd;
+
+        if cfg!(target_endian = "big") {
+            anyhow::bail!(
+                "mapped graph sections require a little-endian host \
+                 (file layout is LE)"
+            );
+        }
+        let len = file.metadata()?.len() as usize;
+        if len == 0 {
+            return Ok(MappedFile::empty());
+        }
+
+        const PROT_READ: i32 = 0x1;
+        const MAP_PRIVATE: i32 = 0x2;
+        // SAFETY: length is the exact file size, fd is a valid open
+        // file, and the returned region is only ever read.
+        let base = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ,
+                MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if base as isize == -1 {
+            anyhow::bail!(
+                "mmap({len} bytes) failed: {}",
+                std::io::Error::last_os_error()
+            );
+        }
+        Ok(MappedFile { base: base.cast(), len })
+    }
+
+    /// Non-unix hosts fall back to heap loading at the `io` layer.
+    #[cfg(not(unix))]
+    pub fn map(_file: &std::fs::File) -> anyhow::Result<MappedFile> {
+        anyhow::bail!("mapped graph sections are only supported on unix")
+    }
+
+    /// Mapped length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Validate that `[byte_off, byte_off + count * size_of::<T>())`
+    /// is an in-bounds, `T`-aligned window of the mapping. `count == 0`
+    /// is always valid (the view is the empty slice).
+    pub(crate) fn check_window<T: SlabElem>(
+        &self,
+        byte_off: usize,
+        count: usize,
+    ) -> anyhow::Result<()> {
+        if count == 0 {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            byte_off % std::mem::align_of::<T>() == 0,
+            "section at byte {byte_off} is not {}-byte aligned",
+            std::mem::align_of::<T>()
+        );
+        let bytes = count
+            .checked_mul(std::mem::size_of::<T>())
+            .and_then(|b| b.checked_add(byte_off));
+        anyhow::ensure!(
+            bytes.is_some_and(|end| end <= self.len),
+            "section [{byte_off}, +{count}*{}) exceeds the {}-byte map",
+            std::mem::size_of::<T>(),
+            self.len
+        );
+        Ok(())
+    }
+
+    /// The window as a typed slice. Callers must have validated it via
+    /// [`Self::check_window`] at construction time.
+    pub(crate) fn slice<T: SlabElem>(
+        &self,
+        byte_off: usize,
+        count: usize,
+    ) -> &[T] {
+        if count == 0 {
+            return &[];
+        }
+        debug_assert!(self.check_window::<T>(byte_off, count).is_ok());
+        // SAFETY: construction validated alignment and bounds, T is
+        // plain-old-data, and the mapping is never written and lives
+        // as long as `self`.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.base.add(byte_off).cast::<T>(),
+                count,
+            )
+        }
+    }
+}
+
+impl Drop for MappedFile {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if self.len > 0 {
+            // SAFETY: base/len came from a successful mmap.
+            unsafe {
+                munmap(self.base.cast(), self.len);
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+extern "C" {
+    fn mmap(
+        addr: *mut std::ffi::c_void,
+        length: usize,
+        prot: i32,
+        flags: i32,
+        fd: i32,
+        offset: i64,
+    ) -> *mut std::ffi::c_void;
+    fn munmap(addr: *mut std::ffi::c_void, length: usize) -> i32;
+}
+
+/// One immutable `[T]` array behind a heap or mapped backend. See the
+/// module docs; reads always go through [`std::ops::Deref`] to `&[T]`.
+#[derive(Clone)]
+pub enum Slab<T: SlabElem> {
+    /// Heap-resident array (the construction-time backend).
+    Owned(Vec<T>),
+    /// A validated window of a shared [`MappedFile`].
+    Mapped { file: Arc<MappedFile>, byte_off: usize, count: usize },
+}
+
+impl<T: SlabElem> Slab<T> {
+    /// View `count` elements of `file` starting at `byte_off`,
+    /// validating alignment and bounds up front so every later read is
+    /// a plain slice access.
+    pub fn mapped(
+        file: Arc<MappedFile>,
+        byte_off: usize,
+        count: usize,
+    ) -> anyhow::Result<Slab<T>> {
+        file.check_window::<T>(byte_off, count)?;
+        Ok(Slab::Mapped { file, byte_off, count })
+    }
+
+    /// Short backend tag for logs and test diagnostics.
+    pub fn backend(&self) -> &'static str {
+        match self {
+            Slab::Owned(_) => "owned",
+            Slab::Mapped { .. } => "mapped",
+        }
+    }
+
+    /// The array as a slice (what [`std::ops::Deref`] returns).
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            Slab::Owned(d) => d,
+            Slab::Mapped { file, byte_off, count } => {
+                file.slice(*byte_off, *count)
+            }
+        }
+    }
+
+    /// Bytes of process heap this slab privately holds: the buffer for
+    /// `Owned`, zero for `Mapped` (those bytes belong to the page
+    /// cache).
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            Slab::Owned(d) => d.len() * std::mem::size_of::<T>(),
+            Slab::Mapped { .. } => 0,
+        }
+    }
+}
+
+impl<T: SlabElem> std::ops::Deref for Slab<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+/// `for x in &slab` iterates the logical array (deref coercion does
+/// not reach `for` loops, so this is spelled out).
+impl<'a, T: SlabElem> IntoIterator for &'a Slab<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl<T: SlabElem> Default for Slab<T> {
+    fn default() -> Slab<T> {
+        Slab::Owned(Vec::new())
+    }
+}
+
+impl<T: SlabElem> From<Vec<T>> for Slab<T> {
+    fn from(data: Vec<T>) -> Slab<T> {
+        Slab::Owned(data)
+    }
+}
+
+impl<T: SlabElem> std::fmt::Debug for Slab<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Slab::{}({} elems)", self.backend(), self.len())
+    }
+}
+
+/// Slabs compare as their logical arrays, whatever the backends.
+impl<T: SlabElem> PartialEq for Slab<T> {
+    fn eq(&self, other: &Slab<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: SlabElem> Eq for Slab<T> where T: Eq {}
+
+impl<T: SlabElem> PartialEq<Vec<T>> for Slab<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: SlabElem> PartialEq<&[T]> for Slab<T> {
+    fn eq(&self, other: &&[T]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_reads_like_a_slice() {
+        let s: Slab<u32> = vec![5, 6, 7].into();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[1], 6);
+        assert_eq!(&s[1..], &[6, 7]);
+        assert_eq!(s.backend(), "owned");
+        assert_eq!(s.heap_bytes(), 12);
+        assert_eq!(s, vec![5, 6, 7]);
+        assert!(Slab::<u16>::default().is_empty());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapped_window_reads_and_validates() {
+        let path = std::env::temp_dir()
+            .join(format!("rtma_slabfile_{}.bin", std::process::id()));
+        let mut bytes = vec![0u8; 8];
+        for v in [3u32, 9, 27] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let file = std::fs::File::open(&path).unwrap();
+        let map = Arc::new(MappedFile::map(&file).unwrap());
+        std::fs::remove_file(&path).ok();
+
+        let s = Slab::<u32>::mapped(Arc::clone(&map), 8, 3).unwrap();
+        assert_eq!(s.backend(), "mapped");
+        assert_eq!(s.heap_bytes(), 0);
+        assert_eq!(s, vec![3, 9, 27]);
+        assert_eq!(s.clone(), s); // clones share the Arc
+
+        // misaligned / out-of-bounds windows are rejected up front
+        assert!(Slab::<u32>::mapped(Arc::clone(&map), 6, 1).is_err());
+        assert!(Slab::<u32>::mapped(Arc::clone(&map), 8, 4).is_err());
+        assert!(Slab::<u64>::mapped(Arc::clone(&map), 4, 1).is_err());
+        // zero-length windows are always fine
+        let empty = Slab::<u64>::mapped(map, 1, 0).unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn equality_is_logical_not_physical() {
+        let a: Slab<u16> = vec![1, 2].into();
+        let b: Slab<u16> = vec![1, 2].into();
+        let c: Slab<u16> = vec![1, 3].into();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

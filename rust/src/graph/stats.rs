@@ -120,7 +120,7 @@ mod tests {
         b.add_edge(1, 2);
         b.add_edge(2, 3);
         let mut g = b.build();
-        g.labels = vec![0, 0, 1, 1];
+        g.labels = vec![0, 0, 1, 1].into();
         g.num_classes = 2;
         g
     }

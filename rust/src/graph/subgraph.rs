@@ -68,11 +68,12 @@ impl Subgraph {
         graph.num_relations = parent.num_relations;
         let mut features =
             Vec::with_capacity(global_ids.len() * parent.feat_dim);
-        graph.labels = Vec::with_capacity(global_ids.len());
+        let mut labels = Vec::with_capacity(global_ids.len());
         for &g in &global_ids {
             features.extend_from_slice(parent.feature(g as usize));
-            graph.labels.push(parent.labels[g as usize]);
+            labels.push(parent.labels[g as usize]);
         }
+        graph.labels = labels.into();
         graph.features = features.into();
         // Homogeneous parents produce rel=None subgraphs even if built
         // via add_rel_edge(0): GraphBuilder only records rel when >0.
@@ -106,7 +107,7 @@ mod tests {
         let mut g = b.build();
         g.feat_dim = 1;
         g.features = (0..5).map(|i| i as f32).collect::<Vec<f32>>().into();
-        g.labels = vec![0, 1, 0, 1, 0];
+        g.labels = vec![0, 1, 0, 1, 0].into();
         g.num_classes = 2;
         g
     }
@@ -151,7 +152,7 @@ mod tests {
             }
             let mut g = b.build();
             g.feat_dim = 0;
-            g.labels = vec![0; n];
+            g.labels = vec![0; n].into();
             // random 2-way partition
             let assign: Vec<usize> = (0..n).map(|_| rng.below(2)).collect();
             let parts: Vec<Vec<u32>> = (0..2)

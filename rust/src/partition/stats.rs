@@ -125,7 +125,7 @@ mod tests {
         }
         b.add_edge(0, 5);
         let mut g = b.build();
-        g.labels = (0..10).map(|v| (v >= 5) as u16).collect();
+        g.labels = (0..10).map(|v| (v >= 5) as u16).collect::<Vec<_>>().into();
         g.num_classes = 2;
         g.feat_dim = 1;
         g.features = (0..10)
@@ -175,7 +175,7 @@ mod tests {
             }
         }
         let mut g = b.build();
-        g.labels = (0..8).map(|v| (v >= 4) as u16).collect();
+        g.labels = (0..8).map(|v| (v >= 4) as u16).collect::<Vec<_>>().into();
         g.num_classes = 2;
         g.feat_dim = 1;
         g.features = (0..8)

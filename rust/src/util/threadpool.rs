@@ -38,6 +38,55 @@ where
     out.into_iter().map(|x| x.expect("worker missed slot")).collect()
 }
 
+/// Split `out` into consecutive windows of the given `sizes` and run
+/// `f(i, window_i)` on up to `workers` scoped threads. The windows are
+/// disjoint `&mut` slices, so workers write the shared buffer with no
+/// locks on the data path (each window's mutex is locked exactly once,
+/// uncontended, to move the slice into its worker). Used by the
+/// parallel generators to fill pre-sized CSR and feature buffers in
+/// place — the "fill" half of their count-then-fill passes.
+pub fn parallel_fill<T, F>(out: &mut [T], sizes: &[usize], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(workers > 0);
+    assert_eq!(
+        sizes.iter().sum::<usize>(),
+        out.len(),
+        "window sizes must tile the output buffer exactly"
+    );
+    let mut windows: Vec<&mut [T]> = Vec::with_capacity(sizes.len());
+    let mut rest = out;
+    for &s in sizes {
+        let tmp = std::mem::take(&mut rest);
+        let (w, r) = tmp.split_at_mut(s);
+        windows.push(w);
+        rest = r;
+    }
+    if workers == 1 || windows.len() <= 1 {
+        for (i, w) in windows.into_iter().enumerate() {
+            f(i, w);
+        }
+        return;
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<&mut [T]>> =
+        windows.into_iter().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(slots.len()) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= slots.len() {
+                    break;
+                }
+                let mut w = slots[i].lock().unwrap();
+                f(i, &mut **w);
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -57,5 +106,32 @@ mod tests {
     #[test]
     fn workers_capped_by_n() {
         assert_eq!(parallel_map(1, 16, |_| 7), vec![7]);
+    }
+
+    #[test]
+    fn fill_tiles_windows_in_order() {
+        for workers in [1, 2, 4] {
+            let mut out = vec![0usize; 10];
+            parallel_fill(&mut out, &[3, 0, 2, 5], workers, |i, w| {
+                for x in w.iter_mut() {
+                    *x = i + 1;
+                }
+            });
+            assert_eq!(out, vec![1, 1, 1, 3, 3, 4, 4, 4, 4, 4], "w={workers}");
+        }
+    }
+
+    #[test]
+    fn fill_empty_buffer_is_noop() {
+        let mut out: Vec<u32> = Vec::new();
+        parallel_fill(&mut out, &[], 4, |_, _| panic!("no windows"));
+        parallel_fill(&mut out, &[0, 0], 4, |_, w| assert!(w.is_empty()));
+    }
+
+    #[test]
+    #[should_panic(expected = "tile the output buffer")]
+    fn fill_rejects_mismatched_sizes() {
+        let mut out = vec![0u8; 4];
+        parallel_fill(&mut out, &[1, 2], 2, |_, _| {});
     }
 }
