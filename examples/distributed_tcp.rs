@@ -2,33 +2,57 @@
 //!
 //! The leader (this example) binds a socket, spawns `M` `rtma worker`
 //! subprocesses, broadcasts initial weights, opens time-based
-//! aggregation rounds (Collect → Weights → average → Broadcast) and
-//! finally stops the workers — the same Alg 1 protocol as the
-//! in-process driver, across process boundaries.
+//! aggregation rounds (Collect → Weights → streaming-average →
+//! Broadcast) and finally stops the workers — the same Alg 1 protocol
+//! as the in-process driver, across process boundaries. The round
+//! data plane mirrors the in-process one: incoming weight vectors
+//! fold straight into one [`MeanAccum`] (no `Vec<Vec<f32>>` staging),
+//! and every broadcast frame is encoded from the shared global slab
+//! through one reused scratch buffer (`comm::send_wire`).
+//!
+//! After the last round the leader scores the aggregated weights on
+//! the validation split and asserts the MRR is finite — the
+//! `distributed-smoke` CI assertion.
 //!
 //! Run: `cargo run --release --example distributed_tcp`
-//! (builds on the quick citation dataset; ~20 s wall clock)
+//! (defaults: M=3 workers, ~9 s; the CI smoke job passes
+//! `--m 2 --train-secs 6`). Requires compiled artifacts; skips
+//! gracefully — exit 0 — without them, like the failure drill.
 
 use std::net::TcpListener;
 use std::process::{Child, Command};
 use std::time::{Duration, Instant};
 
-use random_tma::comm::{recv, send, Message};
-use random_tma::model::{aggregate, AggregateOp, ModelState};
-use random_tma::runtime::Manifest;
+use random_tma::comm::{recv, send, send_wire, Message, WireMsg};
+use random_tma::coordinator::evaluate_mrr;
+use random_tma::gen::load_preset;
+use random_tma::model::{MeanAccum, ModelState};
+use random_tma::runtime::{Engine, Manifest};
+use random_tma::sampler::eval::EvalBlockConfig;
+use random_tma::sampler::{AdjMode, EvalPlan};
+use random_tma::util::cli::Args;
 use random_tma::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let m = 3usize;
-    let seed = 17u64;
-    let train_secs = 9.0;
-    let agg_secs = 1.5;
-    let dataset = "citation-sim";
-    let variant = "gcn_mlp";
+    let args = Args::parse(&["quick"]);
+    let m = args.usize_or("m", 3);
+    let seed = args.u64_or("seed", 17);
+    let train_secs = args.f64_or("train-secs", 9.0);
+    let agg_secs = args.f64_or("agg-secs", 1.5);
+    let dataset = args.str_or("dataset", "citation-sim");
+    let variant = args.str_or("variant", "gcn_mlp");
+
+    let Ok(manifest) = Manifest::load(&Manifest::default_dir()) else {
+        println!(
+            "distributed_tcp skipped: artifacts missing (run `make \
+             artifacts` for the full TCP smoke)"
+        );
+        return Ok(());
+    };
 
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
-    println!("[leader] listening on {addr}");
+    println!("[leader] listening on {addr}, M={m}");
 
     // Spawn workers as real OS processes running `rtma worker`.
     let exe = rtma_binary()?;
@@ -45,11 +69,11 @@ fn main() -> anyhow::Result<()> {
                     "--m",
                     &m.to_string(),
                     "--dataset",
-                    dataset,
+                    &dataset,
                     "--seed",
                     &seed.to_string(),
                     "--variant",
-                    variant,
+                    &variant,
                 ])
                 .spawn()?,
         );
@@ -65,16 +89,22 @@ fn main() -> anyhow::Result<()> {
         streams.push(s);
     }
 
-    // Initial broadcast.
-    let manifest = Manifest::load(&Manifest::default_dir())?;
-    let spec = manifest.variant(variant)?;
-    let init = ModelState::init(spec, &mut Rng::new(seed ^ 0x1417)).params;
-    let mut w_global = init;
+    // Initial broadcast: one shared slab, frames encoded through one
+    // reused scratch buffer.
+    let spec = manifest.variant(&variant)?;
+    let mut w_global =
+        ModelState::init(spec, &mut Rng::new(seed ^ 0x1417)).params;
+    let mut scratch = Vec::new();
     for s in &mut streams {
-        send(s, &Message::Broadcast { round: 0, data: w_global.clone() })?;
+        send_wire(
+            s,
+            &WireMsg::Broadcast { round: 0, data: &w_global },
+            &mut scratch,
+        )?;
     }
 
-    // Time-based aggregation rounds.
+    // Time-based aggregation rounds with a streaming allreduce.
+    let mut acc = MeanAccum::new(w_global.len());
     let start = Instant::now();
     let mut round = 0u64;
     while start.elapsed().as_secs_f64() < train_secs {
@@ -83,27 +113,28 @@ fn main() -> anyhow::Result<()> {
         for s in &mut streams {
             send(s, &Message::Collect { round })?;
         }
-        let mut weights = Vec::new();
+        acc.reset();
         let mut total_steps = 0u64;
         for s in &mut streams {
             match recv(s)? {
                 Message::Weights { data, steps, .. } => {
                     total_steps += steps;
-                    weights.push(data);
+                    acc.add(&data);
                 }
                 other => anyhow::bail!("unexpected {other:?}"),
             }
         }
-        w_global = aggregate(AggregateOp::Mean, &weights, &[]);
+        w_global = acc.mean();
         for s in &mut streams {
-            send(
+            send_wire(
                 s,
-                &Message::Broadcast { round, data: w_global.clone() },
+                &WireMsg::Broadcast { round, data: &w_global },
+                &mut scratch,
             )?;
         }
         println!(
             "[leader] round {round}: aggregated {} workers, {} total steps",
-            weights.len(),
+            acc.count(),
             total_steps
         );
     }
@@ -119,6 +150,37 @@ fn main() -> anyhow::Result<()> {
          (weights moved from init — training happened across processes)"
     );
     anyhow::ensure!(round >= 2, "too few rounds completed");
+
+    // Score the aggregated weights on the validation split — the
+    // distributed run must produce a usable (finite-MRR) model.
+    let preset = load_preset(&dataset, true, 16, 8, seed)?;
+    let engine = Engine::load(&manifest, &variant, "pallas")?;
+    engine.prepare(&["encode", "score"])?;
+    let adj_mode = AdjMode::for_encoder(&engine.variant.encoder);
+    let relations = if adj_mode == AdjMode::Relational {
+        manifest.dims.relations
+    } else {
+        1
+    };
+    let eval_cfg = EvalBlockConfig::new(
+        manifest.dims.block_nodes,
+        manifest.dims.feat_dim,
+        adj_mode,
+        relations,
+        preset.boundary,
+    );
+    let plan = EvalPlan::build(
+        &preset.split.train,
+        &preset.split.val,
+        &preset.split.val_negatives,
+        &eval_cfg,
+    );
+    let mrr = evaluate_mrr(&engine, &plan, &w_global)?;
+    println!("[leader] final val MRR {mrr:.4}");
+    anyhow::ensure!(
+        mrr.is_finite() && mrr > 0.0,
+        "distributed run produced unusable weights (MRR {mrr})"
+    );
     println!("distributed_tcp OK");
     Ok(())
 }

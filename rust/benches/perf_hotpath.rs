@@ -1,15 +1,16 @@
 //! Perf probe: dataset generation throughput, prep-path (partition →
-//! subgraph) throughput, comm encode throughput, and per-component
-//! latency of the training hot path. The generation, prep and comm
-//! sections need no AOT artifacts; the engine section skips
-//! gracefully without them.
+//! subgraph) throughput, aggregation round data plane, comm encode
+//! throughput, and per-component latency of the training hot path.
+//! The generation, prep, aggregation and comm sections need no AOT
+//! artifacts; the engine section skips gracefully without them.
 
 use std::hint::black_box;
+use std::sync::Arc;
 
 use random_tma::comm::Message;
 use random_tma::gen::{dcsbm, dcsbm_with_workers, reference, DcsbmConfig};
 use random_tma::graph::{induce_all, Subgraph};
-use random_tma::model::ModelState;
+use random_tma::model::{aggregate, AggregateOp, MeanAccum, ModelState};
 use random_tma::partition::{
     partition_stats, partition_stats_with_cuts, parts_of, random_partition,
 };
@@ -22,6 +23,7 @@ fn main() {
     generation_path();
     prep_path();
     prep_feature_store();
+    aggregation_path();
     comm_encode();
     engine_path();
 }
@@ -173,6 +175,64 @@ fn prep_feature_store() {
         copied_bytes as f64 / 1e6,
         shared_bytes as f64 / 1e6,
     );
+}
+
+/// The aggregation round data plane at ~1M parameters, M ∈ {4,16,64}:
+/// the staged reference (hold all M weight vectors until the round
+/// completes, reduce, then clone the result once per trainer for
+/// broadcast) vs the streaming fold (each vector folded into one
+/// pre-sized [`MeanAccum`] as it arrives, one shared `Arc` broadcast).
+///
+/// Bytes per round on the server: staged holds M staged vectors + the
+/// reduce output + M broadcast clones = (2M+1)·P·4; streaming holds
+/// the accumulator + the one in-flight message + the output
+/// = 3·P·4 — O(P), independent of M (target ≥ 3x fewer bytes at
+/// M=4, growing linearly with M). The wall-clock win at M=64 is
+/// dominated by the M elided broadcast memcpys.
+fn aggregation_path() {
+    let p = 1 << 20;
+    let mut rng = Rng::new(9);
+    let base: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+    for m in [4usize, 16, 64] {
+        // The per-trainer round snapshots (trainer-side allocations —
+        // identical for both paths; the server-side handling differs).
+        let msgs: Vec<Vec<f32>> = (0..m)
+            .map(|i| base.iter().map(|x| x + i as f32).collect())
+            .collect();
+        let losses = vec![0.0f32; m];
+        let t_staged =
+            time(&format!("agg staged M={m}"), 1, 3, || {
+                let out = aggregate(AggregateOp::Mean, &msgs, &losses);
+                for _ in 0..m {
+                    black_box(out.clone()); // per-trainer broadcast clone
+                }
+                black_box(out);
+            });
+        let t_stream =
+            time(&format!("agg streaming M={m}"), 1, 3, || {
+                let mut acc = MeanAccum::new(p);
+                for w in &msgs {
+                    acc.add(w);
+                }
+                let out: Arc<[f32]> = acc.mean().into();
+                for _ in 0..m {
+                    black_box(out.clone()); // Arc bump per trainer
+                }
+                black_box(out);
+            });
+        let staged_bytes = (2 * m + 1) * p * 4;
+        let stream_bytes = 3 * p * 4;
+        println!(
+            "agg P=1M M={m}: staged {}  streaming {}  ({:.1}x); \
+             round bytes {:.1} MB -> {:.1} MB ({:.1}x, target >= 3x)",
+            fmt_secs(t_staged.median_s()),
+            fmt_secs(t_stream.median_s()),
+            t_staged.median_s() / t_stream.median_s().max(1e-12),
+            staged_bytes as f64 / 1e6,
+            stream_bytes as f64 / 1e6,
+            staged_bytes as f64 / stream_bytes as f64,
+        );
+    }
 }
 
 /// Wire-protocol encode of a realistic (1M-parameter) weight vector.

@@ -32,6 +32,22 @@ pub enum Message {
     Stop,
 }
 
+/// Borrowed view of a [`Message`] for zero-clone sends: the weight
+/// payloads reference the caller's live buffers — a trainer's current
+/// parameters, the leader's shared global slab — instead of owning a
+/// per-send copy. Encode with [`WireMsg::encode_into`] through a
+/// reused scratch buffer ([`send_wire`]); the receive side still
+/// decodes into an owned [`Message`].
+#[derive(Debug, Clone, Copy)]
+pub enum WireMsg<'a> {
+    Hello { id: u32 },
+    Ready { id: u32 },
+    Weights { round: u64, loss: f32, steps: u64, data: &'a [f32] },
+    Broadcast { round: u64, data: &'a [f32] },
+    Collect { round: u64 },
+    Stop,
+}
+
 const TAG_HELLO: u8 = 1;
 const TAG_READY: u8 = 2;
 const TAG_WEIGHTS: u8 = 3;
@@ -39,38 +55,71 @@ const TAG_BROADCAST: u8 = 4;
 const TAG_STOP: u8 = 5;
 const TAG_COLLECT: u8 = 6;
 
+impl WireMsg<'_> {
+    /// Encode into `out`, clearing it first. Callers keep one scratch
+    /// buffer per connection, so steady-state encodes reuse its
+    /// capacity and allocate nothing.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        match *self {
+            WireMsg::Hello { id } => {
+                out.push(TAG_HELLO);
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+            WireMsg::Ready { id } => {
+                out.push(TAG_READY);
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+            WireMsg::Weights { round, loss, steps, data } => {
+                out.push(TAG_WEIGHTS);
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&loss.to_le_bytes());
+                out.extend_from_slice(&steps.to_le_bytes());
+                out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+                put_f32s(out, data);
+            }
+            WireMsg::Broadcast { round, data } => {
+                out.push(TAG_BROADCAST);
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+                put_f32s(out, data);
+            }
+            WireMsg::Collect { round } => {
+                out.push(TAG_COLLECT);
+                out.extend_from_slice(&round.to_le_bytes());
+            }
+            WireMsg::Stop => out.push(TAG_STOP),
+        }
+    }
+}
+
 impl Message {
-    pub fn encode(&self) -> Vec<u8> {
-        let mut b = Vec::new();
+    /// Borrowed wire view of this message (payloads by reference).
+    pub fn wire(&self) -> WireMsg<'_> {
         match self {
-            Message::Hello { id } => {
-                b.push(TAG_HELLO);
-                b.extend_from_slice(&id.to_le_bytes());
-            }
-            Message::Ready { id } => {
-                b.push(TAG_READY);
-                b.extend_from_slice(&id.to_le_bytes());
-            }
+            Message::Hello { id } => WireMsg::Hello { id: *id },
+            Message::Ready { id } => WireMsg::Ready { id: *id },
             Message::Weights { round, loss, steps, data } => {
-                b.push(TAG_WEIGHTS);
-                b.extend_from_slice(&round.to_le_bytes());
-                b.extend_from_slice(&loss.to_le_bytes());
-                b.extend_from_slice(&steps.to_le_bytes());
-                b.extend_from_slice(&(data.len() as u64).to_le_bytes());
-                put_f32s(&mut b, data);
+                WireMsg::Weights {
+                    round: *round,
+                    loss: *loss,
+                    steps: *steps,
+                    data,
+                }
             }
             Message::Broadcast { round, data } => {
-                b.push(TAG_BROADCAST);
-                b.extend_from_slice(&round.to_le_bytes());
-                b.extend_from_slice(&(data.len() as u64).to_le_bytes());
-                put_f32s(&mut b, data);
+                WireMsg::Broadcast { round: *round, data }
             }
             Message::Collect { round } => {
-                b.push(TAG_COLLECT);
-                b.extend_from_slice(&round.to_le_bytes());
+                WireMsg::Collect { round: *round }
             }
-            Message::Stop => b.push(TAG_STOP),
+            Message::Stop => WireMsg::Stop,
         }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        self.wire().encode_into(&mut b);
         b
     }
 
@@ -167,13 +216,62 @@ impl<'a> Cursor<'a> {
     }
 }
 
-/// Write one length-prefixed message.
-pub fn send(stream: &mut TcpStream, msg: &Message) -> Result<()> {
-    let body = msg.encode();
-    stream.write_all(&(body.len() as u32).to_le_bytes())?;
-    stream.write_all(&body)?;
+/// Write one length-prefixed message, encoding through `scratch` —
+/// the caller's reused per-connection buffer. `Weights`/`Broadcast`
+/// payloads are written straight from the borrowed slab, so the
+/// steady-state round path neither clones the weight vector nor
+/// allocates the frame.
+pub fn send_wire(
+    stream: &mut TcpStream,
+    msg: &WireMsg<'_>,
+    scratch: &mut Vec<u8>,
+) -> Result<()> {
+    msg.encode_into(scratch);
+    stream.write_all(&(scratch.len() as u32).to_le_bytes())?;
+    stream.write_all(scratch)?;
     stream.flush()?;
     Ok(())
+}
+
+/// Write one length-prefixed message (allocating convenience wrapper
+/// over [`send_wire`] for the infrequent control messages).
+pub fn send(stream: &mut TcpStream, msg: &Message) -> Result<()> {
+    let mut scratch = Vec::new();
+    send_wire(stream, &msg.wire(), &mut scratch)
+}
+
+/// Drive a worker's local training until the leader's next message is
+/// pending on `stream` (or the peer hung up). `step` returns
+/// `Ok(true)` after training one step and `Ok(false)` when it had no
+/// work — an empty partition after failures. The no-work path sleeps
+/// 5 ms between socket polls, mirroring the in-process trainer's idle
+/// sleep: before this, a data-less worker's peek loop spun hot on
+/// `WouldBlock` with no sleep and no train step, pinning a core at
+/// 100% for the whole run. Blocking mode is restored on every exit
+/// path.
+pub fn train_until_pending(
+    stream: &mut TcpStream,
+    mut step: impl FnMut() -> Result<bool>,
+) -> Result<()> {
+    stream.set_nonblocking(true)?;
+    let outcome = loop {
+        let mut peek = [0u8; 1];
+        match stream.peek(&mut peek) {
+            Ok(_) => break Ok(()), // message waiting, or clean EOF
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock => {}
+            Err(e) => break Err(e.into()),
+        }
+        match step() {
+            Ok(true) => {}
+            Ok(false) => {
+                std::thread::sleep(std::time::Duration::from_millis(5))
+            }
+            Err(e) => break Err(e),
+        }
+    };
+    stream.set_nonblocking(false)?;
+    outcome
 }
 
 /// Read one length-prefixed message (blocking).
@@ -317,6 +415,125 @@ mod tests {
         let mut client = TcpStream::connect(addr).unwrap();
         assert!(recv(&mut client).is_err(), "half a payload must error");
         h.join().unwrap();
+    }
+
+    #[test]
+    fn wire_encoding_matches_owned_encoding() {
+        let msgs = vec![
+            Message::Hello { id: 7 },
+            Message::Ready { id: 3 },
+            Message::Weights {
+                round: 9,
+                loss: 1.25,
+                steps: 42,
+                data: vec![1.0, -2.5, 3.25],
+            },
+            Message::Broadcast { round: 2, data: vec![0.5; 100] },
+            Message::Collect { round: 5 },
+            Message::Stop,
+        ];
+        let mut scratch = Vec::new();
+        for m in &msgs {
+            m.wire().encode_into(&mut scratch);
+            assert_eq!(scratch, m.encode(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn encode_into_reuses_scratch_capacity() {
+        let big = Message::Broadcast {
+            round: 1,
+            data: (0..10_000).map(|i| i as f32).collect(),
+        };
+        let mut scratch = Vec::new();
+        big.wire().encode_into(&mut scratch);
+        let cap = scratch.capacity();
+        let ptr = scratch.as_ptr();
+        // A smaller frame into the same buffer: no reallocation, and
+        // the stale tail must not leak into the shorter encoding.
+        let small = Message::Collect { round: 3 };
+        small.wire().encode_into(&mut scratch);
+        assert_eq!(scratch.capacity(), cap);
+        assert_eq!(scratch.as_ptr(), ptr);
+        assert_eq!(Message::decode(&scratch).unwrap(), small);
+    }
+
+    #[test]
+    fn send_wire_writes_borrowed_payload() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            recv(&mut s).unwrap()
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        let slab: Vec<f32> = (0..512).map(|i| i as f32 * 0.25).collect();
+        let mut scratch = Vec::new();
+        send_wire(
+            &mut client,
+            &WireMsg::Broadcast { round: 4, data: &slab },
+            &mut scratch,
+        )
+        .unwrap();
+        match h.join().unwrap() {
+            Message::Broadcast { round, data } => {
+                assert_eq!(round, 4);
+                assert_eq!(data, slab);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn idle_worker_sleeps_instead_of_busy_spinning() {
+        // Regression: a worker with an empty partition (step has no
+        // work) used to spin the peek loop hot on WouldBlock — no
+        // sleep, no step — pinning a core. With the 5 ms idle sleep,
+        // ~100 ms of leader silence yields tens of polls, not
+        // hundreds of thousands.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            s.write_all(&[1u8]).unwrap(); // pending byte releases the loop
+            s.flush().unwrap();
+            s
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        let mut polls = 0u64;
+        train_until_pending(&mut client, || {
+            polls += 1;
+            Ok(false) // empty partition: never any work
+        })
+        .unwrap();
+        let _ = h.join().unwrap();
+        assert!(polls >= 1, "loop never polled");
+        assert!(
+            polls < 1000,
+            "idle loop busy-spun: {polls} polls in ~100 ms"
+        );
+    }
+
+    #[test]
+    fn train_until_pending_propagates_step_errors() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _keep = listener; // hold the socket open, send nothing
+        let mut client = TcpStream::connect(addr).unwrap();
+        let err = train_until_pending(&mut client, || {
+            bail!("engine exploded")
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("engine exploded"));
+        // Blocking mode was restored on the error path.
+        let mut scratch = Vec::new();
+        send_wire(
+            &mut client,
+            &WireMsg::Hello { id: 1 },
+            &mut scratch,
+        )
+        .unwrap();
     }
 
     #[test]

@@ -24,7 +24,7 @@ use crate::util::rng::Rng;
 
 use super::evaluator::{evaluator_thread, EvalDone, EvalReq};
 use super::ggs::{ggs_server, ggs_trainer, GgsTrainerSpec};
-use super::kv::Control;
+use super::kv::{Control, GlobalWeights};
 use super::server::{llcg_steps, tma_server, LlcgCorrector};
 use super::trainer::{tma_trainer, TrainerSpec};
 
@@ -197,7 +197,9 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
     let mut global_txs = Vec::with_capacity(active);
     let mut handles = Vec::with_capacity(active);
     for (id, sampler) in samplers {
-        let (gtx, grx) = mpsc::channel::<Vec<f32>>();
+        // Broadcast channel: the server sends one shared Arc per
+        // round, so M trainers cost M pointer clones, not M×P floats.
+        let (gtx, grx) = mpsc::channel::<GlobalWeights>();
         global_txs.push(gtx);
         let slowdown = if cfg.slowdown.is_empty() {
             1.0
@@ -315,9 +317,12 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
 
     // ---- Drain remaining evals, pick best, run the test eval ---------------
     let mut val_curve = outcome.val_curve;
-    let mut eval_params = outcome.eval_params;
+    let mut best = outcome.best;
     // Every periodic request eventually yields exactly one EvalDone;
-    // wait for the in-flight remainder (bounded timeout per eval).
+    // wait for the in-flight remainder (bounded timeout per eval). The
+    // tracker keeps only the best parameters so far plus the in-flight
+    // handful — not one clone per eval point — so run length no longer
+    // grows server-side memory.
     while val_curve.len() < outcome.evals_sent {
         match eval_done_rx.recv_timeout(std::time::Duration::from_secs(120)) {
             Ok(done) if !done.is_final => {
@@ -326,31 +331,24 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
                     round: done.round,
                     val_mrr: done.mrr,
                 });
-                eval_params.push(done.params);
+                best.on_result(done.round, done.mrr);
             }
             Ok(_) => {}
             Err(_) => break, // an eval errored server-side; proceed
         }
     }
 
-    // NaN-safe best-round selection: an eval that produced NaN (e.g. a
-    // diverged model scoring NaN everywhere) must not panic the whole
-    // run or win the argmax — filter to finite points and order with
-    // total_cmp.
-    let best_idx = val_curve
-        .iter()
-        .enumerate()
-        .filter(|(_, p)| p.val_mrr.is_finite())
-        .max_by(|a, b| a.1.val_mrr.total_cmp(&b.1.val_mrr))
-        .map(|(i, _)| i)
+    // NaN-safe best-round selection: the tracker only ever promotes
+    // finite MRRs, so a diverged model scoring NaN everywhere can
+    // neither panic the run nor win the argmax.
+    let (best_val_mrr, best_params) = best
+        .best()
+        .map(|(mrr, params)| (mrr, params.clone()))
         .context(
             "no finite validation MRR — every eval returned NaN, or \
              train_secs too short for a single evaluation",
         )?;
-    let best_val_mrr = val_curve[best_idx].val_mrr;
-    eval_req_tx
-        .send(EvalReq::Final { params: eval_params[best_idx].clone() })
-        .ok();
+    eval_req_tx.send(EvalReq::Final { params: best_params }).ok();
     drop(eval_req_tx);
     let mut test_mrr = 0.0;
     while let Ok(done) =
@@ -365,7 +363,7 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
                 round: done.round,
                 val_mrr: done.mrr,
             });
-            eval_params.push(done.params);
+            best.on_result(done.round, done.mrr);
         }
     }
     eval_handle.join().ok();

@@ -10,6 +10,8 @@ use anyhow::Result;
 use crate::runtime::Engine;
 use crate::sampler::{EvalPlan, Mrr};
 
+use super::kv::GlobalWeights;
+
 /// Full MRR evaluation of `params` under `plan`.
 ///
 /// Encodes every plan block, gathers target embeddings, scores the
@@ -74,24 +76,92 @@ pub fn evaluate_mrr(engine: &Engine, plan: &EvalPlan, params: &[f32]) -> Result<
     Ok(mrr.value())
 }
 
-/// Request to the evaluator thread.
+/// Request to the evaluator thread. Parameters travel as
+/// [`GlobalWeights`] — the same shared allocation the round broadcast
+/// uses — so enqueueing an evaluation costs an `Arc` clone, not `P`
+/// floats.
 pub enum EvalReq {
     /// Periodic validation eval of round `round` at time `t`.
-    Periodic { round: u64, t: f64, params: Vec<f32> },
+    Periodic { round: u64, t: f64, params: GlobalWeights },
     /// Final test eval of the best weights.
-    Final { params: Vec<f32> },
+    Final { params: GlobalWeights },
 }
 
-/// Response from the evaluator thread.
-#[derive(Debug, Clone)]
+/// Response from the evaluator thread: the score alone. The evaluated
+/// weights are NOT echoed back — the server side keeps the best
+/// parameters so far in a [`BestTracker`] instead, fixing the old
+/// O(rounds × P) `eval_params` growth (a full parameter clone per
+/// eval point, retained for the whole run).
+#[derive(Debug, Clone, Copy)]
 pub struct EvalDone {
     pub round: u64,
     pub t: f64,
     pub mrr: f64,
     pub is_final: bool,
-    /// The evaluated weights (kept so the server can recover the best
-    /// round's parameters for the final test evaluation).
-    pub params: Vec<f32>,
+}
+
+/// Best-validation-round bookkeeping with O(P) memory: the best
+/// parameters so far plus the (throttled, ≤3) in-flight requests —
+/// never one clone per eval point.
+///
+/// Evaluations are asynchronous: the server registers the parameters
+/// it sends with [`Self::on_request`] and resolves them against the
+/// returned score in [`Self::on_result`]. Requests are answered in
+/// FIFO order by the single evaluator thread, so resolving the first
+/// in-flight entry with a matching round is exact even when two
+/// requests share a round number (GGS's final eval can reuse the last
+/// round id). NaN-safety: a non-finite MRR (diverged model scoring
+/// NaN everywhere) can never become the best round — it only retires
+/// its in-flight entry.
+#[derive(Debug, Default)]
+pub struct BestTracker {
+    inflight: Vec<(u64, GlobalWeights)>,
+    best: Option<(f64, GlobalWeights)>,
+}
+
+impl BestTracker {
+    pub fn new() -> BestTracker {
+        BestTracker::default()
+    }
+
+    /// Register a periodic request's parameters until its score lands.
+    pub fn on_request(&mut self, round: u64, params: &GlobalWeights) {
+        self.inflight.push((round, params.clone()));
+    }
+
+    /// Resolve a periodic result: retire the matching in-flight entry
+    /// and promote it to best if its MRR is finite and strictly
+    /// better.
+    pub fn on_result(&mut self, round: u64, mrr: f64) {
+        let Some(i) =
+            self.inflight.iter().position(|(r, _)| *r == round)
+        else {
+            // A result for an unregistered round: a protocol bug, but
+            // never worth poisoning the run over.
+            eprintln!(
+                "[server] eval result for unknown round {round} dropped"
+            );
+            return;
+        };
+        let (_, params) = self.inflight.remove(i);
+        let better = match &self.best {
+            Some((best_mrr, _)) => mrr > *best_mrr,
+            None => true,
+        };
+        if mrr.is_finite() && better {
+            self.best = Some((mrr, params));
+        }
+    }
+
+    /// Best `(val_mrr, params)` so far, if any finite eval landed.
+    pub fn best(&self) -> Option<(f64, &GlobalWeights)> {
+        self.best.as_ref().map(|(m, p)| (*m, p))
+    }
+
+    /// Requests awaiting a score (bounded by the eval throttle).
+    pub fn inflight_len(&self) -> usize {
+        self.inflight.len()
+    }
 }
 
 /// Evaluator thread body: owns its engine, serves requests until the
@@ -126,7 +196,6 @@ pub fn evaluator_thread(
                             t,
                             mrr,
                             is_final: false,
-                            params,
                         });
                     }
                     Err(e) => eprintln!("[evaluator] round {round}: {e}"),
@@ -140,12 +209,89 @@ pub fn evaluator_thread(
                             t: 0.0,
                             mrr,
                             is_final: true,
-                            params,
                         });
                     }
                     Err(e) => eprintln!("[evaluator] final: {e}"),
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn params(tag: f32) -> GlobalWeights {
+        Arc::from(vec![tag; 4])
+    }
+
+    #[test]
+    fn tracker_keeps_only_best_and_inflight() {
+        let mut t = BestTracker::new();
+        assert!(t.best().is_none());
+        let (a, b, c) = (params(1.0), params(2.0), params(3.0));
+        t.on_request(1, &a);
+        t.on_request(2, &b);
+        assert_eq!(t.inflight_len(), 2);
+        t.on_result(1, 0.4);
+        t.on_result(2, 0.2); // worse: retired, not promoted
+        assert_eq!(t.inflight_len(), 0);
+        let (mrr, best) = t.best().unwrap();
+        assert_eq!(mrr, 0.4);
+        assert_eq!(best[0], 1.0);
+        t.on_request(3, &c);
+        t.on_result(3, 0.9);
+        assert_eq!(t.best().unwrap().1[0], 3.0);
+    }
+
+    #[test]
+    fn tracker_ignores_nonfinite_mrr() {
+        let mut t = BestTracker::new();
+        let a = params(1.0);
+        t.on_request(1, &a);
+        t.on_result(1, f64::NAN);
+        assert!(t.best().is_none(), "NaN must never win the argmax");
+        assert_eq!(t.inflight_len(), 0, "entry must still retire");
+        t.on_request(2, &a);
+        t.on_result(2, f64::NEG_INFINITY);
+        assert!(t.best().is_none());
+    }
+
+    #[test]
+    fn tracker_resolves_duplicate_rounds_fifo() {
+        // GGS can evaluate the same round id twice (last periodic +
+        // final-weights eval); the single evaluator thread answers in
+        // FIFO order, so first-match removal pairs them correctly.
+        let mut t = BestTracker::new();
+        let (a, b) = (params(1.0), params(2.0));
+        t.on_request(5, &a);
+        t.on_request(5, &b);
+        t.on_result(5, 0.9); // resolves the FIRST round-5 entry (a)
+        t.on_result(5, 0.1);
+        assert_eq!(t.best().unwrap().1[0], 1.0);
+        assert_eq!(t.inflight_len(), 0);
+    }
+
+    #[test]
+    fn tracker_shares_the_broadcast_allocation() {
+        // The whole point: tracking an eval point must not clone P
+        // floats.
+        let mut t = BestTracker::new();
+        let a = params(7.0);
+        t.on_request(1, &a);
+        t.on_result(1, 0.5);
+        assert!(std::ptr::eq(
+            t.best().unwrap().1.as_ptr(),
+            a.as_ptr()
+        ));
+    }
+
+    #[test]
+    fn tracker_drops_unknown_round_results() {
+        let mut t = BestTracker::new();
+        t.on_result(9, 0.5); // must not panic or become best
+        assert!(t.best().is_none());
     }
 }

@@ -6,6 +6,11 @@
 //! artifact, the server averages the gradients (allreduce-mean) and
 //! applies one shared rust-side Adam update. The slowest trainer gates
 //! every step — exactly the throughput penalty Table 3 quantifies.
+//!
+//! The allreduce is a streaming fold: each arriving gradient is
+//! accumulated straight into a reused [`MeanAccum`] buffer — no
+//! `Vec<Vec<f32>>` staging of M gradients, and no per-step buffer
+//! churn beyond the one broadcast `Arc`.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -15,13 +20,13 @@ use anyhow::Result;
 
 use crate::config::RunConfig;
 use crate::metrics::{EvalPoint, LossPoint};
-use crate::model::{mean_grads, Adam};
+use crate::model::{Adam, MeanAccum};
 use crate::runtime::{Engine, Manifest};
 use crate::sampler::TrainSampler;
 use crate::util::rng::Rng;
 
-use super::evaluator::{EvalDone, EvalReq};
-use super::kv::{Control, TrainerMsg, TrainerReport};
+use super::evaluator::{BestTracker, EvalDone, EvalReq};
+use super::kv::{Control, GlobalWeights, TrainerMsg, TrainerReport};
 use super::server::ServerOutcome;
 
 /// GGS trainer thread: gradient worker over the full graph.
@@ -32,7 +37,7 @@ pub struct GgsTrainerSpec {
     pub impl_name: String,
     pub sampler: TrainSampler,
     pub control: Arc<Control>,
-    pub rx_params: mpsc::Receiver<Vec<f32>>,
+    pub rx_params: mpsc::Receiver<GlobalWeights>,
     pub tx: mpsc::Sender<TrainerMsg>,
     pub slowdown: f64,
     pub seed: u64,
@@ -53,16 +58,20 @@ pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
         seed,
         start: _start,
     } = spec;
+    // Startup failures mark_dead so the server's ready barrier (which
+    // counts ready + dead) releases instead of hanging forever.
     let engine = match Engine::load(&manifest, &variant, &impl_name) {
         Ok(e) => e,
         Err(e) => {
             eprintln!("[ggs trainer {id}] engine load failed: {e}");
+            control.mark_dead();
             return TrainerReport { id, steps: 0, timeline: Vec::new() };
         }
     };
     let mut rng = Rng::new(seed).fork(id as u64 + 101);
     if let Err(e) = engine.prepare(&["grad"]) {
         eprintln!("[ggs trainer {id}] compile failed: {e}");
+        control.mark_dead();
         return TrainerReport { id, steps: 0, timeline: Vec::new() };
     }
     control.mark_ready();
@@ -81,7 +90,15 @@ pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
         let t0 = Instant::now();
         let block = match sampler.next_block(&mut rng) {
             Some(b) => b,
-            None => break, // full graph always has edges; defensive
+            None => {
+                // Defensive (the full graph always has edges) — but if
+                // it ever fires, the exit must still mark dead, or the
+                // server waits a full collection deadline for a
+                // gradient that will never come and aborts the run.
+                eprintln!("[ggs trainer {id}] no block; exiting");
+                control.mark_dead();
+                break;
+            }
         };
         match engine.grad_step(&params, block) {
             Ok((grad, loss)) => {
@@ -107,6 +124,7 @@ pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
             }
             Err(e) => {
                 eprintln!("[ggs trainer {id}] grad failed: {e}");
+                control.mark_dead();
                 break;
             }
         }
@@ -120,33 +138,43 @@ pub fn ggs_server(
     cfg: &RunConfig,
     control: &Arc<Control>,
     init_weights: Vec<f32>,
-    txs: &[mpsc::Sender<Vec<f32>>],
+    txs: &[mpsc::Sender<GlobalWeights>],
     rx: &mpsc::Receiver<TrainerMsg>,
     eval_tx: &mpsc::Sender<EvalReq>,
     eval_rx: &mpsc::Receiver<EvalDone>,
     manifest: &Manifest,
     start: Instant,
 ) -> Result<ServerOutcome> {
-    let active = txs.len();
-    while control.ready_count() < active {
-        std::thread::sleep(Duration::from_millis(5));
+    let registered = txs.len();
+    // Ready barrier counts dead trainers too (cf. tma_server).
+    let mut active = control.wait_ready(registered);
+    anyhow::ensure!(active > 0, "all {registered} ggs trainers failed");
+    if active < registered {
+        eprintln!(
+            "[ggs] {} of {registered} trainers died before ready; \
+             stepping with {active}",
+            registered - active
+        );
     }
     // Budget starts after the ready barrier (cf. tma_server).
     let _ = start;
     let start = Instant::now();
     let mut w = init_weights;
     let mut adam = Adam::new(manifest.adam, w.len());
-    let mut grad_mean: Vec<f32> = Vec::new();
-    let mut grads: Vec<Vec<f32>> = Vec::with_capacity(active);
+    // Streaming allreduce state, reused across every global step.
+    let mut acc = MeanAccum::new(w.len());
+    let mut grad_mean: Vec<f32> = Vec::with_capacity(w.len());
 
     let mut val_curve = Vec::new();
-    let mut eval_params = Vec::new();
+    let mut best = BestTracker::new();
     let mut evals_sent = 0usize;
     let mut t_eval = Instant::now();
+    let w0: GlobalWeights = w.as_slice().into();
     if eval_tx
-        .send(EvalReq::Periodic { round: 0, t: 0.0, params: w.clone() })
+        .send(EvalReq::Periodic { round: 0, t: 0.0, params: w0.clone() })
         .is_ok()
     {
+        best.on_request(0, &w0);
         evals_sent += 1;
     }
 
@@ -159,25 +187,48 @@ pub fn ggs_server(
                     round: done.round,
                     val_mrr: done.mrr,
                 });
-                eval_params.push(done.params);
+                best.on_result(done.round, done.mrr);
             }
         }
         if start.elapsed().as_secs_f64() >= cfg.train_secs {
             control.request_stop();
             break;
         }
-        // One synchronous global step.
+        // One synchronous global step: one shared broadcast
+        // allocation, M `Arc` clones.
+        let wb: GlobalWeights = w.as_slice().into();
         for tx in txs {
-            tx.send(w.clone()).ok();
+            tx.send(wb.clone()).ok();
         }
-        grads.clear();
-        for _ in 0..active {
-            match rx.recv_timeout(Duration::from_secs(60)) {
-                Ok(msg) => grads.push(msg.weights),
-                Err(_) => anyhow::bail!("ggs: trainer unresponsive"),
+        acc.reset();
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while acc.count() < active {
+            match rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(msg) => acc.add(&msg.weights),
+                Err(_) => {
+                    // Poll wakeup: a grad failure marks the trainer
+                    // dead — shrink this and every later step to the
+                    // survivors instead of riding a 60 s stall into a
+                    // whole-run abort. A live-but-silent trainer still
+                    // trips the deadline.
+                    let live = control.live_count(registered);
+                    if live < active {
+                        active = live;
+                        anyhow::ensure!(
+                            active > 0,
+                            "ggs: every trainer died"
+                        );
+                        eprintln!(
+                            "[ggs] a trainer died mid-step; continuing \
+                             with {active}"
+                        );
+                    } else if Instant::now() >= deadline {
+                        anyhow::bail!("ggs: trainer unresponsive");
+                    }
+                }
             }
         }
-        mean_grads(&grads, &mut grad_mean);
+        acc.mean_into(&mut grad_mean);
         adam.step(&mut w, &grad_mean);
         rounds += 1;
 
@@ -185,36 +236,40 @@ pub fn ggs_server(
         // Skip if the evaluator is >2 evals behind (bounds post-run
         // draining on the shared core).
         if t_eval.elapsed().as_secs_f64() >= cfg.agg_secs
-            && evals_sent - val_curve.len() <= 2
+            && best.inflight_len() <= 2
         {
+            let params: GlobalWeights = w.as_slice().into();
             if eval_tx
                 .send(EvalReq::Periodic {
                     round: rounds,
                     t: start.elapsed().as_secs_f64(),
-                    params: w.clone(),
+                    params: params.clone(),
                 })
                 .is_ok()
             {
+                best.on_request(rounds, &params);
                 evals_sent += 1;
             }
             t_eval = Instant::now();
         }
     }
     // Final eval of the last weights.
+    let params: GlobalWeights = w.as_slice().into();
     if eval_tx
         .send(EvalReq::Periodic {
             round: rounds,
             t: start.elapsed().as_secs_f64(),
-            params: w.clone(),
+            params: params.clone(),
         })
         .is_ok()
     {
+        best.on_request(rounds, &params);
         evals_sent += 1;
     }
 
     Ok(ServerOutcome {
         val_curve,
-        eval_params,
+        best,
         rounds,
         wall_secs: start.elapsed().as_secs_f64(),
         evals_sent,

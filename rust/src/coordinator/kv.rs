@@ -10,6 +10,13 @@
 //! semantics as Alg 1/2 without a timing hole.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// The server→trainer broadcast payload: one shared allocation of the
+/// global weights per round. Every trainer (and the evaluator request)
+/// clones the `Arc`, not the `P` floats — the round data plane's
+/// zero-clone contract.
+pub type GlobalWeights = Arc<[f32]>;
 
 /// Shared control block between server, trainers and evaluator.
 #[derive(Debug, Default)]
@@ -20,6 +27,10 @@ pub struct Control {
     stop: AtomicBool,
     /// `KV[ready]` count.
     ready: AtomicUsize,
+    /// Trainers that died before (or instead of) marking ready —
+    /// engine load or compile failures. The ready barrier counts these
+    /// so a failed trainer can't hang the whole run.
+    dead: AtomicUsize,
 }
 
 impl Control {
@@ -49,6 +60,43 @@ impl Control {
 
     pub fn ready_count(&self) -> usize {
         self.ready.load(Ordering::SeqCst)
+    }
+
+    /// Record a trainer that will never mark ready (engine load or
+    /// compile failed, or its loop died mid-run). Counted by
+    /// [`Self::wait_ready`] and by the server's per-round collection
+    /// targets, so the rest of the run proceeds with the survivors
+    /// instead of hanging.
+    pub fn mark_dead(&self) {
+        self.dead.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn dead_count(&self) -> usize {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    /// Of `total` registered trainers, how many are still live (have
+    /// not marked dead). Servers size their per-round collection
+    /// targets off this so a dead trainer shrinks the round to the
+    /// survivors instead of failing it.
+    pub fn live_count(&self, total: usize) -> usize {
+        total - self.dead_count().min(total)
+    }
+
+    /// The ready barrier (Alg 1 l. 3): block until every one of
+    /// `total` trainers has either marked ready or died, then return
+    /// the number of live trainers. Before [`Self::mark_dead`]
+    /// existed, a trainer whose `Engine::load`/`prepare` failed simply
+    /// returned, and the server spun forever in
+    /// `while ready_count() < total` — the ready-barrier hang.
+    pub fn wait_ready(&self, total: usize) -> usize {
+        loop {
+            let dead = self.dead_count();
+            if self.ready_count() + dead >= total {
+                return total - dead.min(total);
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
     }
 
     /// Decide a trainer's next move given the last round it served.
@@ -148,6 +196,40 @@ mod tests {
         c.request_stop();
         assert_eq!(c.next_action(1), TrainerAction::Ship { round: 2 });
         assert_eq!(c.next_action(2), TrainerAction::Stop);
+    }
+
+    #[test]
+    fn wait_ready_counts_dead_trainers() {
+        // 2 ready + 1 dead of 3: the barrier must release with 2 live
+        // trainers instead of spinning on ready_count() < 3 forever.
+        let c = Arc::new(Control::new());
+        let c2 = c.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            tx.send(c2.wait_ready(3)).unwrap();
+        });
+        c.mark_ready();
+        c.mark_ready();
+        assert!(
+            rx.try_recv().is_err(),
+            "barrier released before the last trainer resolved"
+        );
+        c.mark_dead();
+        let live = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("ready barrier hung on a dead trainer");
+        assert_eq!(live, 2);
+        assert_eq!(c.dead_count(), 1);
+        assert_eq!(c.live_count(3), 2);
+        assert_eq!(c.live_count(0), 0, "live_count never underflows");
+    }
+
+    #[test]
+    fn wait_ready_all_dead_returns_zero() {
+        let c = Control::new();
+        c.mark_dead();
+        c.mark_dead();
+        assert_eq!(c.wait_ready(2), 0);
     }
 
     #[test]

@@ -7,6 +7,19 @@
 //! enqueue an asynchronous validation evaluation. Stops at ΔT_train,
 //! then the driver selects t* = argmax val-MRR and evaluates test MRR.
 //!
+//! **Round data plane (PR 5):** the round path is zero-clone and O(P)
+//! per round however many trainers report. Collection is a streaming
+//! fold — each arriving [`TrainerMsg`] is accumulated in place into
+//! one pre-sized [`MeanAccum`] buffer (no `Vec<Vec<f32>>` staging),
+//! deduped by trainer id. Broadcast ships one [`GlobalWeights`]
+//! (`Arc<[f32]>`) allocation per round; trainers and the evaluator
+//! request clone the `Arc`, never the `P` floats. `InverseLoss` needs
+//! every loss before any vector can be scaled, so it stays on the
+//! staged path (ablation bench only). The streamed aggregate is
+//! locked bit-for-bit against the staged reference
+//! ([`collect_round_staged`] + [`aggregate`]) by
+//! `tests/aggregation.rs`.
+//!
 //! Shutdown ordering matters: at budget expiry the final round is
 //! opened **before** the stop flag is raised, pairing with the
 //! round-before-stop check in [`super::kv::Control::next_action`] so
@@ -14,7 +27,9 @@
 //! racing out of the loop (and the final collection never has to ride
 //! its timeout). Collections also validate each message's round stamp
 //! ([`collect_round`]) so a stale message can't be aggregated into the
-//! wrong round.
+//! wrong round, and the ready barrier counts dead trainers
+//! ([`super::kv::Control::wait_ready`]) so a failed engine can't hang
+//! the run before it starts.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -24,13 +39,13 @@ use anyhow::Result;
 
 use crate::config::{Approach, RunConfig};
 use crate::metrics::EvalPoint;
-use crate::model::{aggregate, ModelState};
+use crate::model::{aggregate, AggregateOp, MeanAccum, ModelState};
 use crate::runtime::Engine;
 use crate::sampler::TrainSampler;
 use crate::util::rng::Rng;
 
-use super::evaluator::{EvalDone, EvalReq};
-use super::kv::{Control, TrainerMsg};
+use super::evaluator::{BestTracker, EvalDone, EvalReq};
+use super::kv::{Control, GlobalWeights, TrainerMsg};
 
 /// LLCG's server-side global correction state: an engine + sampler
 /// over the *full* training graph and a persistent optimizer state.
@@ -59,34 +74,46 @@ impl LlcgCorrector {
 /// Outcome of the server loop.
 pub struct ServerOutcome {
     pub val_curve: Vec<EvalPoint>,
-    /// Weights per completed evaluation (aligned with `val_curve`).
-    pub eval_params: Vec<Vec<f32>>,
+    /// Best validation weights so far + in-flight eval bookkeeping.
+    /// Replaces the old `eval_params` log, which retained a full
+    /// parameter clone per eval point for the whole run.
+    pub best: BestTracker,
     pub rounds: u64,
     pub wall_secs: f64,
     /// Periodic evaluation requests issued (for driver-side draining).
     pub evals_sent: usize,
 }
 
-/// Run Algorithm 1 until ΔT_train elapses. `active` is the number of
-/// live trainers (M - F under failures).
+/// Run Algorithm 1 until ΔT_train elapses. `txs` holds one broadcast
+/// channel per registered trainer (M - F under failure drills).
 #[allow(clippy::too_many_arguments)]
 pub fn tma_server(
     cfg: &RunConfig,
     control: &Arc<Control>,
     init_weights: Vec<f32>,
-    txs: &[mpsc::Sender<Vec<f32>>],
+    txs: &[mpsc::Sender<GlobalWeights>],
     rx: &mpsc::Receiver<TrainerMsg>,
     eval_tx: &mpsc::Sender<EvalReq>,
     eval_rx: &mpsc::Receiver<EvalDone>,
     mut llcg: Option<LlcgCorrector>,
     start: Instant,
 ) -> Result<ServerOutcome> {
-    let active = txs.len();
-    // Wait for trainers to come up, then broadcast W[0] (Alg 1 l. 3-5).
-    while control.ready_count() < active {
-        std::thread::sleep(Duration::from_millis(5));
+    let registered = txs.len();
+    // Ready barrier (Alg 1 l. 3-5): wait until every trainer either
+    // compiled its engine and marked ready or died trying — a trainer
+    // that fails startup can no longer hang the barrier; the run
+    // proceeds with the survivors (failure-drill semantics).
+    let live = control.wait_ready(registered);
+    anyhow::ensure!(live > 0, "all {registered} trainers failed to start");
+    if live < registered {
+        eprintln!(
+            "[server] {} of {registered} trainers died before ready; \
+             training with {live}",
+            registered - live
+        );
     }
-    let mut w_global = init_weights;
+    // Broadcast W[0]: one shared allocation, M `Arc` clones.
+    let mut w_global: GlobalWeights = init_weights.into();
     for tx in txs {
         tx.send(w_global.clone()).ok();
     }
@@ -99,7 +126,7 @@ pub fn tma_server(
     #[allow(unused_assignments)]
     let mut rounds = 0u64;
     let mut val_curve = Vec::new();
-    let mut eval_params = Vec::new();
+    let mut best = BestTracker::new();
     let mut evals_sent = 0usize;
     // Evaluate the initial weights too (round 0 baseline).
     if eval_tx
@@ -110,6 +137,7 @@ pub fn tma_server(
         })
         .is_ok()
     {
+        best.on_request(0, &w_global);
         evals_sent += 1;
     }
 
@@ -124,7 +152,7 @@ pub fn tma_server(
                     round: done.round,
                     val_mrr: done.mrr,
                 });
-                eval_params.push(done.params);
+                best.on_result(done.round, done.mrr);
             }
         }
 
@@ -142,18 +170,49 @@ pub fn tma_server(
 
         if t_agg.elapsed().as_secs_f64() >= cfg.agg_secs {
             rounds = control.open_round();
-            // Collect W_i from every live trainer (Alg 1 l. 10).
-            let (weights, losses) =
-                collect_round(rx, active, rounds, Duration::from_secs(60));
-            if weights.len() < active {
-                anyhow::bail!("round {rounds}: trainer unresponsive");
+            // Collect W_i from every live trainer (Alg 1 l. 10),
+            // folding each message into the accumulator as it lands.
+            let expect = control.live_count(registered);
+            anyhow::ensure!(
+                expect > 0,
+                "round {rounds}: every trainer died"
+            );
+            let collected = collect_round_with(
+                rx,
+                &|| control.live_count(registered),
+                rounds,
+                Duration::from_secs(60),
+                cfg.aggregate_op,
+            );
+            if collected.reporters < expect {
+                // A trainer died *during* the collection (step
+                // failure marks dead): the target shrank within a
+                // poll slice and the round completed with the
+                // survivors — same semantics as the final round and
+                // the ready barrier. A live-but-silent trainer is
+                // still a hard error.
+                let live_now = control.live_count(registered);
+                anyhow::ensure!(
+                    collected.reporters >= live_now
+                        && collected.reporters > 0,
+                    "round {rounds}: trainer unresponsive \
+                     ({} of {expect} reported)",
+                    collected.reporters
+                );
+                eprintln!(
+                    "[server] round {rounds}: a trainer died mid-round; \
+                     aggregating {} survivors",
+                    collected.reporters
+                );
             }
-            // φ (Alg 1 l. 12).
-            w_global = aggregate(cfg.aggregate_op, &weights, &losses);
-            // LLCG: server-side global correction before broadcast.
+            // φ (Alg 1 l. 12) already folded; LLCG's server-side
+            // global correction runs before the broadcast.
+            let mut next =
+                collected.global.expect("non-empty round collection");
             if let Some(corr) = llcg.as_mut() {
-                w_global = corr.correct(&w_global)?;
+                next = corr.correct(&next)?;
             }
+            w_global = next.into();
             for tx in txs {
                 tx.send(w_global.clone()).ok();
             }
@@ -161,17 +220,17 @@ pub fn tma_server(
             // Async validation eval of the new global weights. Skip if
             // the evaluator is >2 evals behind (bounds the post-run
             // drain on the shared core).
-            if evals_sent - val_curve.len() <= 2 {
-            if eval_tx
-                .send(EvalReq::Periodic {
-                    round: rounds,
-                    t: start.elapsed().as_secs_f64(),
-                    params: w_global.clone(),
-                })
-                .is_ok()
+            if best.inflight_len() <= 2
+                && eval_tx
+                    .send(EvalReq::Periodic {
+                        round: rounds,
+                        t: start.elapsed().as_secs_f64(),
+                        params: w_global.clone(),
+                    })
+                    .is_ok()
             {
+                best.on_request(rounds, &w_global);
                 evals_sent += 1;
-            }
             }
         }
     }
@@ -181,17 +240,23 @@ pub fn tma_server(
     // trainer ships; the timeout is only a safety net for trainers
     // that died outright (engine failure), in which case we aggregate
     // the survivors.
-    let (weights, losses) =
-        collect_round(rx, active, rounds, Duration::from_secs(60));
-    if weights.len() < active {
+    let expect = control.live_count(registered);
+    let collected = collect_round_with(
+        rx,
+        &|| control.live_count(registered),
+        rounds,
+        Duration::from_secs(60),
+        cfg.aggregate_op,
+    );
+    if collected.reporters < expect {
         eprintln!(
-            "[server] final round {rounds}: {} of {active} trainers \
+            "[server] final round {rounds}: {} of {expect} trainers \
              reported (aggregating survivors)",
-            weights.len()
+            collected.reporters
         );
     }
-    if !weights.is_empty() {
-        w_global = aggregate(cfg.aggregate_op, &weights, &losses);
+    if let Some(next) = collected.global {
+        w_global = next.into();
         if eval_tx
             .send(EvalReq::Periodic {
                 round: rounds,
@@ -200,6 +265,7 @@ pub fn tma_server(
             })
             .is_ok()
         {
+            best.on_request(rounds, &w_global);
             evals_sent += 1;
         }
     }
@@ -210,45 +276,162 @@ pub fn tma_server(
 
     Ok(ServerOutcome {
         val_curve,
-        eval_params,
+        best,
         rounds,
         wall_secs: start.elapsed().as_secs_f64(),
         evals_sent,
     })
 }
 
-/// Collect up to `active` round-`round` weight messages within
-/// `deadline`, returning the weight vectors and sanitised losses.
-///
-/// A message stamped with a different round is *stale* — rounds are
-/// collected fully before the next one opens, so it can only come from
-/// a trainer that died mid-protocol or a logic bug — and is dropped
-/// with a warning rather than silently attributed to the wrong round's
-/// aggregation. Public so the shutdown-protocol regression tests drive
-/// the exact collection path the server uses.
+/// Outcome of one round's streaming collection.
+pub struct RoundOutcome {
+    /// φ over the deduped round messages (`None` when none arrived in
+    /// time).
+    pub global: Option<Vec<f32>>,
+    /// Distinct trainers that reported in time.
+    pub reporters: usize,
+}
+
+/// Collect up to `expect` round-`round` weight messages within
+/// `deadline` and reduce them with φ **as they arrive**. Fixed-target
+/// wrapper over [`collect_round_with`] (tests and the differential
+/// suite use this form).
 pub fn collect_round(
     rx: &mpsc::Receiver<TrainerMsg>,
-    active: usize,
+    expect: usize,
+    round: u64,
+    deadline: Duration,
+    op: AggregateOp,
+) -> RoundOutcome {
+    collect_round_with(rx, &|| expect, round, deadline, op)
+}
+
+/// Streaming round collection with a live-target callback.
+///
+/// Waits in ≤200 ms slices, re-polling `target()` between slices:
+/// the server passes `|| control.live_count(registered)`, so a
+/// trainer that dies *during* the collection (step failure →
+/// `mark_dead`) shrinks the target within a slice and the round
+/// completes with the survivors, instead of stalling out the full
+/// deadline on a message that will never come. The deadline remains
+/// the safety net for a live-but-silent trainer.
+///
+/// - A message stamped with a different round is *stale* — rounds are
+///   collected fully before the next one opens, so it can only come
+///   from a trainer that died mid-protocol or a logic bug — and is
+///   dropped with a warning rather than silently attributed to the
+///   wrong round's aggregation.
+/// - A second message from the same trainer id is a *duplicate* and is
+///   dropped too: before dedup it filled a collection slot, which both
+///   skewed the aggregate toward the duplicated trainer and silently
+///   evicted another trainer's weights from the round.
+/// - `Mean` folds each vector straight into one pre-sized accumulator
+///   (O(P) bytes per round, bit-identical to the staged reference —
+///   see [`MeanAccum`]); `InverseLoss` stages, since no vector can be
+///   scaled before every loss is known.
+///
+/// Public so the shutdown-protocol regression tests and the
+/// differential suite drive the exact collection path the server uses.
+pub fn collect_round_with(
+    rx: &mpsc::Receiver<TrainerMsg>,
+    target: &dyn Fn() -> usize,
+    round: u64,
+    deadline: Duration,
+    op: AggregateOp,
+) -> RoundOutcome {
+    const POLL: Duration = Duration::from_millis(200);
+    let t0 = Instant::now();
+    let mut seen: Vec<usize> = Vec::new();
+    let mut acc: Option<MeanAccum> = None;
+    let mut staged: Vec<Vec<f32>> = Vec::new();
+    let mut losses: Vec<f32> = Vec::new();
+    loop {
+        if seen.len() >= target() {
+            break;
+        }
+        let left = deadline.saturating_sub(t0.elapsed());
+        if left.is_zero() {
+            break; // overall deadline: return the survivors
+        }
+        let msg = match rx.recv_timeout(left.min(POLL)) {
+            Ok(msg) => msg,
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        if msg.round != round {
+            eprintln!(
+                "[server] dropping stale round-{} message from trainer \
+                 {} while collecting round {round}",
+                msg.round, msg.id
+            );
+            continue;
+        }
+        if seen.contains(&msg.id) {
+            eprintln!(
+                "[server] dropping duplicate round-{round} message from \
+                 trainer {}",
+                msg.id
+            );
+            continue;
+        }
+        seen.push(msg.id);
+        losses.push(if msg.loss.is_nan() {
+            f32::MAX // trainer with no batch yet
+        } else {
+            msg.loss
+        });
+        match op {
+            AggregateOp::Mean => acc
+                .get_or_insert_with(|| MeanAccum::new(msg.weights.len()))
+                .add(&msg.weights),
+            AggregateOp::InverseLoss => staged.push(msg.weights),
+        }
+    }
+    let global = match op {
+        AggregateOp::Mean => acc.map(|a| a.mean()),
+        AggregateOp::InverseLoss => {
+            if staged.is_empty() {
+                None
+            } else {
+                Some(aggregate(op, &staged, &losses))
+            }
+        }
+    };
+    RoundOutcome { global, reporters: seen.len() }
+}
+
+/// The pre-streaming staging collection: every weight vector is held
+/// in memory until the round completes (O(M·P) bytes live at once),
+/// then reduced by [`aggregate`]. Protocol-identical to
+/// [`collect_round`] (round-validated, id-deduped, NaN-sanitised
+/// losses); kept as the differential reference the streaming fold is
+/// locked against (`tests/aggregation.rs`) and the baseline of the
+/// `perf_hotpath` aggregation bench. The live server never calls this.
+pub fn collect_round_staged(
+    rx: &mpsc::Receiver<TrainerMsg>,
+    expect: usize,
     round: u64,
     deadline: Duration,
 ) -> (Vec<Vec<f32>>, Vec<f32>) {
     let t0 = Instant::now();
-    let mut weights = Vec::with_capacity(active);
-    let mut losses = Vec::with_capacity(active);
-    while weights.len() < active {
+    let mut ids: Vec<usize> = Vec::with_capacity(expect);
+    let mut weights = Vec::with_capacity(expect);
+    let mut losses = Vec::with_capacity(expect);
+    while weights.len() < expect {
         let left = deadline.saturating_sub(t0.elapsed());
         match rx.recv_timeout(left) {
-            Ok(msg) if msg.round == round => {
+            Ok(msg) if msg.round == round && !ids.contains(&msg.id) => {
+                ids.push(msg.id);
                 losses.push(if msg.loss.is_nan() {
-                    f32::MAX // trainer with no batch yet
+                    f32::MAX
                 } else {
                     msg.loss
                 });
                 weights.push(msg.weights);
             }
             Ok(msg) => eprintln!(
-                "[server] dropping stale round-{} message from trainer \
-                 {} while collecting round {round}",
+                "[server] staged reference dropping stale/duplicate \
+                 round-{} message from trainer {}",
                 msg.round, msg.id
             ),
             Err(_) => break, // timeout, or every sender hung up

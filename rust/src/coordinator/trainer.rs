@@ -21,7 +21,9 @@ use crate::runtime::{Engine, Manifest};
 use crate::sampler::TrainSampler;
 use crate::util::rng::Rng;
 
-use super::kv::{Control, TrainerAction, TrainerMsg, TrainerReport};
+use super::kv::{
+    Control, GlobalWeights, TrainerAction, TrainerMsg, TrainerReport,
+};
 
 /// Everything a TMA trainer thread needs (moved into the thread).
 pub struct TrainerSpec {
@@ -32,7 +34,9 @@ pub struct TrainerSpec {
     pub sampler: TrainSampler,
     pub control: Arc<Control>,
     /// Server -> trainer weight broadcasts (first message = W[0]).
-    pub rx_global: mpsc::Receiver<Vec<f32>>,
+    /// Broadcasts arrive as shared [`GlobalWeights`] allocations — the
+    /// server clones an `Arc` per trainer, never the parameters.
+    pub rx_global: mpsc::Receiver<GlobalWeights>,
     /// Trainer -> server round messages.
     pub tx: mpsc::Sender<TrainerMsg>,
     /// Speed factor >= 1.0 (1.0 = full speed).
@@ -58,10 +62,14 @@ pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
         start,
     } = spec;
 
+    // Startup failures MUST mark_dead before returning: the server's
+    // ready barrier counts ready + dead, so a trainer that can't come
+    // up releases the barrier instead of hanging it forever.
     let engine = match Engine::load(&manifest, &variant, &impl_name) {
         Ok(e) => e,
         Err(e) => {
             eprintln!("[trainer {id}] engine load failed: {e}");
+            control.mark_dead();
             return TrainerReport { id, steps: 0, timeline: Vec::new() };
         }
     };
@@ -71,6 +79,7 @@ pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
     // server's training window opens at the ready barrier.
     if let Err(e) = engine.prepare(&["train"]) {
         eprintln!("[trainer {id}] compile failed: {e}");
+        control.mark_dead();
         return TrainerReport { id, steps: 0, timeline: Vec::new() };
     }
     control.mark_ready();
@@ -142,6 +151,12 @@ pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
                 }
                 Err(e) => {
                     eprintln!("[trainer {id}] step failed: {e}");
+                    // Tell the server this trainer will never answer
+                    // another collection: later rounds size themselves
+                    // to the survivors, and a round already collecting
+                    // proceeds with them after its timeout instead of
+                    // failing the whole run.
+                    control.mark_dead();
                     break;
                 }
             },

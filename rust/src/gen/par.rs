@@ -36,7 +36,7 @@ pub(crate) const CHUNK_EDGES: usize = 16_384;
 
 /// Default worker count for the public generator entry points.
 pub(crate) fn default_workers() -> usize {
-    std::thread::available_parallelism().map_or(1, |c| c.get())
+    crate::util::threadpool::default_workers()
 }
 
 /// One sampling chunk: `target` edges drawn for `group` (a community

@@ -15,8 +15,10 @@
 //!   trainer subgraphs copies **zero** feature floats and every
 //!   trainer borrows the same allocation through the `Arc`.
 //! - [`FeatureStore::Mapped`] — the feature section of an RTMAGRF2
-//!   cache file mapped read-only into the address space
-//!   ([`crate::graph::io::load_mapped`]). Rows are faulted in by the
+//!   cache file mapped read-only into the address space, held as the
+//!   same generic [`Slab<f32>`] window the CSR sections use
+//!   ([`crate::graph::io::load_mapped`] hands every section one shared
+//!   [`MappedFile`](super::MappedFile)). Rows are faulted in by the
 //!   page cache on first touch, so graphs whose feature slab exceeds
 //!   RAM still train; views compose the same way as `Shared`.
 //!
@@ -32,6 +34,8 @@
 
 use std::sync::Arc;
 
+use super::Slab;
+
 /// Node-feature storage: one logical `rows x dim` row-major f32 matrix
 /// behind one of three physical backends. See the module docs.
 #[derive(Clone)]
@@ -40,9 +44,13 @@ pub enum FeatureStore {
     Owned(Vec<f32>),
     /// Reference-counted slab; `index[local] = row` within the slab.
     Shared { slab: Arc<[f32]>, index: Vec<u32> },
-    /// Memory-mapped slab; `index` of `None` means identity (the full
-    /// on-disk graph), `Some` is a subgraph view into the mapped rows.
-    Mapped { map: Arc<MappedSlab>, index: Option<Vec<u32>> },
+    /// Memory-mapped slab — a [`Slab<f32>`] window of the cache file's
+    /// shared mapping (`io::load_mapped` always builds it with
+    /// [`Slab::mapped`], never the heap backend); `index` of `None`
+    /// means identity (the full on-disk graph), `Some` is a subgraph
+    /// view into the mapped rows. Cloning a view clones the `Slab`
+    /// (an `Arc` bump), never feature floats.
+    Mapped { slab: Slab<f32>, index: Option<Vec<u32>> },
 }
 
 impl Default for FeatureStore {
@@ -70,11 +78,11 @@ impl std::fmt::Debug for FeatureStore {
                 index.len(),
                 slab.len()
             ),
-            FeatureStore::Mapped { map, index } => write!(
+            FeatureStore::Mapped { slab, index } => write!(
                 f,
                 "FeatureStore::Mapped({} rows over {}-f32 map)",
-                index.as_ref().map_or(map.len(), |i| i.len()),
-                map.len()
+                index.as_ref().map_or(slab.len(), |i| i.len()),
+                slab.len()
             ),
         }
     }
@@ -124,9 +132,9 @@ impl FeatureStore {
                 let r = index[v] as usize;
                 &slab[r * dim..(r + 1) * dim]
             }
-            FeatureStore::Mapped { map, index } => {
+            FeatureStore::Mapped { slab, index } => {
                 let r = index.as_ref().map_or(v, |i| i[v] as usize);
-                &map.as_slice()[r * dim..(r + 1) * dim]
+                &slab[r * dim..(r + 1) * dim]
             }
         }
     }
@@ -142,13 +150,13 @@ impl FeatureStore {
                 }
             }
             FeatureStore::Shared { index, .. } => index.len(),
-            FeatureStore::Mapped { map, index } => match index {
+            FeatureStore::Mapped { slab, index } => match index {
                 Some(i) => i.len(),
                 None => {
                     if dim == 0 {
                         0
                     } else {
-                        map.len() / dim
+                        slab.len() / dim
                     }
                 }
             },
@@ -160,9 +168,9 @@ impl FeatureStore {
         match self {
             FeatureStore::Owned(d) => d.is_empty(),
             FeatureStore::Shared { index, .. } => index.is_empty(),
-            FeatureStore::Mapped { map, index } => match index {
+            FeatureStore::Mapped { slab, index } => match index {
                 Some(i) => i.is_empty(),
-                None => map.len() == 0,
+                None => slab.is_empty(),
             },
         }
     }
@@ -186,8 +194,8 @@ impl FeatureStore {
                 slab: Arc::clone(slab),
                 index: rows.iter().map(|&g| index[g as usize]).collect(),
             },
-            FeatureStore::Mapped { map, index } => FeatureStore::Mapped {
-                map: Arc::clone(map),
+            FeatureStore::Mapped { slab, index } => FeatureStore::Mapped {
+                slab: slab.clone(),
                 index: Some(match index {
                     Some(i) => {
                         rows.iter().map(|&g| i[g as usize]).collect()
@@ -231,8 +239,8 @@ impl FeatureStore {
                     None
                 }
             }
-            FeatureStore::Mapped { map, index: None } => {
-                Some(map.as_slice())
+            FeatureStore::Mapped { slab, index: None } => {
+                Some(slab.as_slice())
             }
             FeatureStore::Mapped { .. } => None,
         }
@@ -264,8 +272,8 @@ impl FeatureStore {
         match self {
             FeatureStore::Owned(_) => None,
             FeatureStore::Shared { slab, .. } => Some(slab.as_ptr()),
-            FeatureStore::Mapped { map, .. } => {
-                Some(map.as_slice().as_ptr())
+            FeatureStore::Mapped { slab, .. } => {
+                Some(slab.as_slice().as_ptr())
             }
         }
     }
@@ -338,74 +346,6 @@ pub fn rehost_backends(
     out
 }
 
-/// The f32 feature section of one cache file, served from a shared
-/// read-only [`MappedFile`]. Built by
-/// [`crate::graph::io::load_mapped`], which hands the *same* mapping
-/// to the CSR [`Slab`](super::Slab) views — one `mmap` covers the
-/// whole graph, unmapped when the last view drops.
-#[derive(Debug)]
-pub struct MappedSlab {
-    file: Arc<super::MappedFile>,
-    /// Byte offset of the f32 feature section within the map. The
-    /// RTMAGRF2 writer 8-aligns it, so the f32 view is always aligned.
-    data_offset: usize,
-    floats: usize,
-}
-
-impl MappedSlab {
-    /// Map `file` (whole, read-only) and expose `floats` f32s starting
-    /// at byte `data_offset`. The offset must be 4-byte aligned and the
-    /// f32 section must lie within the file — callers (`io`) validate
-    /// the layout against the file length before getting here.
-    pub fn map_file(
-        file: &std::fs::File,
-        data_offset: usize,
-        floats: usize,
-    ) -> anyhow::Result<MappedSlab> {
-        if floats == 0 {
-            // An empty slab needs no mapping at all.
-            return Ok(MappedSlab {
-                file: Arc::new(super::MappedFile::empty()),
-                data_offset: 0,
-                floats: 0,
-            });
-        }
-        let map = Arc::new(super::MappedFile::map(file)?);
-        MappedSlab::from_parts(map, data_offset, floats)
-    }
-
-    /// View an already-mapped file's feature section, sharing its
-    /// mapping with the caller's other section views.
-    pub fn from_parts(
-        file: Arc<super::MappedFile>,
-        data_offset: usize,
-        floats: usize,
-    ) -> anyhow::Result<MappedSlab> {
-        file.check_window::<f32>(data_offset, floats).map_err(|e| {
-            e.context(
-                "feature section is not a valid f32 window of the map \
-                 (legacy cache file? re-save to the RTMAGRF2 layout)",
-            )
-        })?;
-        Ok(MappedSlab { file, data_offset, floats })
-    }
-
-    /// The mapped feature section.
-    #[inline]
-    pub fn as_slice(&self) -> &[f32] {
-        self.file.slice::<f32>(self.data_offset, self.floats)
-    }
-
-    /// f32 capacity of the mapped section.
-    pub fn len(&self) -> usize {
-        self.floats
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.floats == 0
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -476,7 +416,9 @@ mod tests {
 
     #[cfg(unix)]
     #[test]
-    fn mapped_slab_reads_aligned_f32s() {
+    fn mapped_store_reads_aligned_f32s() {
+        use super::super::MappedFile;
+
         let path = std::env::temp_dir().join(format!(
             "rtma_slab_{}.bin",
             std::process::id()
@@ -488,33 +430,18 @@ mod tests {
         }
         std::fs::write(&path, &bytes).unwrap();
         let file = std::fs::File::open(&path).unwrap();
-        let map = MappedSlab::map_file(&file, 8, 6).unwrap();
-        assert_eq!(map.as_slice(), &floats[..]);
-        let store = FeatureStore::Mapped {
-            map: Arc::new(map),
-            index: None,
-        };
+        let map = Arc::new(MappedFile::map(&file).unwrap());
+        let slab = Slab::<f32>::mapped(map, 8, 6).unwrap();
+        assert_eq!(slab.as_slice(), &floats[..]);
+        let store = FeatureStore::Mapped { slab, index: None };
         assert_eq!(store.num_rows(3), 2);
         assert_eq!(store.row(1, 3), &floats[3..6]);
+        assert_eq!(store.contiguous(3).unwrap(), &floats[..]);
         let view = store.view(&[1, 0], 3);
         assert_eq!(view.row(0, 3), &floats[3..6]);
         assert_eq!(view.slab_ptr(), store.slab_ptr());
         assert_eq!(view.heap_bytes(), 8);
-        std::fs::remove_file(&path).ok();
-    }
-
-    #[cfg(unix)]
-    #[test]
-    fn mapped_slab_rejects_misaligned_and_oversized() {
-        let path = std::env::temp_dir().join(format!(
-            "rtma_slab_bad_{}.bin",
-            std::process::id()
-        ));
-        std::fs::write(&path, vec![0u8; 32]).unwrap();
-        let file = std::fs::File::open(&path).unwrap();
-        assert!(MappedSlab::map_file(&file, 3, 2).is_err(), "misaligned");
-        assert!(MappedSlab::map_file(&file, 8, 100).is_err(), "oversized");
-        assert!(MappedSlab::map_file(&file, 8, 2).is_ok());
+        assert!(view.contiguous(3).is_none());
         std::fs::remove_file(&path).ok();
     }
 }

@@ -33,7 +33,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use super::{FeatureStore, Graph, MappedFile, MappedSlab, Slab};
+use super::{FeatureStore, Graph, MappedFile, Slab};
 
 const MAGIC_V1: &[u8; 8] = b"RTMAGRF1";
 const MAGIC_V2: &[u8; 8] = b"RTMAGRF2";
@@ -445,10 +445,11 @@ pub fn load_mapped(path: &Path) -> Result<Graph> {
     let features = if floats == 0 {
         FeatureStore::default()
     } else {
-        let slab =
-            MappedSlab::from_parts(map, lay.off_features as usize, floats)
-                .with_context(|| format!("{}: map features", path.display()))?;
-        FeatureStore::Mapped { map: Arc::new(slab), index: None }
+        // The feature section rides the same shared mapping as the
+        // CSR sections, behind the same generic Slab<f32> window.
+        let slab: Slab<f32> =
+            section(&map, path, "features", lay.off_features, floats)?;
+        FeatureStore::Mapped { slab, index: None }
     };
     Ok(Graph {
         offsets,

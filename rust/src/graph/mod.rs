@@ -61,7 +61,7 @@ pub mod stats;
 pub mod subgraph;
 
 pub use csr::{Graph, GraphBuilder};
-pub use features::{FeatureStore, MappedSlab};
+pub use features::FeatureStore;
 pub use induce::{induce_all, induce_all_except};
 pub use slab::{MappedFile, Slab};
 pub use split::{LinkSplit, split_links};

@@ -36,10 +36,10 @@ impl SlabElem for u64 {}
 impl SlabElem for f32 {}
 
 /// A whole cache file mapped read-only into the address space. All
-/// section views ([`Slab::mapped`] and the feature
-/// [`MappedSlab`](super::features::MappedSlab)) share one `Arc` of
-/// this, so a fully-mapped graph costs a single `mmap` and unmaps when
-/// the last view drops.
+/// section views — the CSR `Slab`s and the feature store's
+/// [`Slab<f32>`] ([`FeatureStore::Mapped`](super::FeatureStore)) —
+/// share one `Arc` of this, so a fully-mapped graph costs a single
+/// `mmap` and unmaps when the last view drops.
 pub struct MappedFile {
     base: *mut u8,
     len: usize,

@@ -242,7 +242,9 @@ fn train(args: &Args) -> Result<()> {
 /// trains on its partition between broadcasts, ships weights back.
 /// Driven by examples/distributed_tcp.rs.
 fn worker(args: &Args) -> Result<()> {
-    use random_tma::comm::{recv, send, Message};
+    use random_tma::comm::{
+        recv, send, send_wire, train_until_pending, Message, WireMsg,
+    };
     use random_tma::model::ModelState;
     use random_tma::runtime::{Engine, Manifest};
     use random_tma::sampler::{AdjMode, TrainSampler, TrainSamplerConfig};
@@ -287,40 +289,39 @@ fn worker(args: &Args) -> Result<()> {
     let mut steps = 0u64;
     let mut last_loss = f32::NAN;
     let mut trng = Rng::new(seed).fork(id as u64 + 1);
+    // One reused frame buffer: round shipping encodes straight from
+    // the live parameter slab into this scratch, no per-round clones.
+    let mut scratch = Vec::new();
     loop {
         match recv(&mut stream)? {
             Message::Broadcast { round: _, data } => {
                 state.set_params(&data);
-                // Train until the leader opens the next round (poll for
-                // a pending Collect/Stop between steps; non-blocking
-                // peek, one train step per miss).
-                stream.set_nonblocking(true)?;
-                loop {
-                    let mut peek = [0u8; 1];
-                    match stream.peek(&mut peek) {
-                        Ok(n) if n > 0 => break, // Collect/Stop waiting
-                        Ok(_) => break,          // connection closed
-                        Err(ref e)
-                            if e.kind()
-                                == std::io::ErrorKind::WouldBlock => {}
-                        Err(e) => return Err(e.into()),
+                // Train until the leader opens the next round
+                // (non-blocking peek between steps). An empty
+                // partition sleeps 5 ms per poll instead of
+                // busy-spinning — comm::train_until_pending.
+                train_until_pending(&mut stream, || {
+                    match sampler.next_block(&mut trng) {
+                        Some(block) => {
+                            last_loss =
+                                engine.train_step(&mut state, block)?;
+                            steps += 1;
+                            Ok(true)
+                        }
+                        None => Ok(false),
                     }
-                    if let Some(block) = sampler.next_block(&mut trng) {
-                        last_loss = engine.train_step(&mut state, block)?;
-                        steps += 1;
-                    }
-                }
-                stream.set_nonblocking(false)?;
+                })?;
             }
             Message::Collect { round } => {
-                send(
+                send_wire(
                     &mut stream,
-                    &Message::Weights {
+                    &WireMsg::Weights {
                         round,
                         loss: last_loss,
                         steps,
-                        data: state.params.clone(),
+                        data: &state.params,
                     },
+                    &mut scratch,
                 )?;
             }
             Message::Stop => {

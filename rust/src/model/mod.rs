@@ -79,9 +79,20 @@ pub enum AggregateOp {
     InverseLoss,
 }
 
-/// Aggregate trainer weight vectors into the global weights.
-/// `losses[i]` is trainer i's most recent training loss (used only by
-/// `InverseLoss`).
+/// Aggregate trainer weight vectors into the global weights —
+/// the **staged** reference implementation of φ (every vector in
+/// memory at once). The live server path streams each arriving vector
+/// into a [`MeanAccum`] instead and is locked to this reference
+/// bit-for-bit by `tests/aggregation.rs`. `losses[i]` is trainer i's
+/// most recent training loss (used only by `InverseLoss`).
+///
+/// `Mean` sums in input order and scales once at the end, so a
+/// streaming fold over the same vectors in the same order reproduces
+/// it exactly. `InverseLoss` needs every loss before any vector can be
+/// scaled, which is why it stays on the staging path (ablation bench
+/// only); when the inverse-loss mass is degenerate — every loss
+/// non-finite, e.g. all `inf`, so `total == 0` — it falls back to the
+/// plain mean instead of scaling the global weights by NaN.
 pub fn aggregate(
     op: AggregateOp,
     weights: &[Vec<f32>],
@@ -93,11 +104,14 @@ pub fn aggregate(
     let mut out = vec![0f32; n];
     match op {
         AggregateOp::Mean => {
-            let scale = 1.0 / weights.len() as f32;
             for w in weights {
                 for (o, &x) in out.iter_mut().zip(w) {
-                    *o += x * scale;
+                    *o += x;
                 }
+            }
+            let scale = 1.0 / weights.len() as f32;
+            for o in out.iter_mut() {
+                *o *= scale;
             }
         }
         AggregateOp::InverseLoss => {
@@ -105,6 +119,9 @@ pub fn aggregate(
             let inv: Vec<f32> =
                 losses.iter().map(|&l| 1.0 / (l.max(1e-6))).collect();
             let total: f32 = inv.iter().sum();
+            if !(total.is_finite() && total > 0.0) {
+                return aggregate(AggregateOp::Mean, weights, losses);
+            }
             for (w, &c) in weights.iter().zip(&inv) {
                 let scale = c / total;
                 for (o, &x) in out.iter_mut().zip(w) {
@@ -114,6 +131,137 @@ pub fn aggregate(
         }
     }
     out
+}
+
+/// Streaming mean accumulator — the zero-clone round data plane's φ.
+///
+/// The round collection used to stage all `M` incoming weight vectors
+/// (`Vec<Vec<f32>>`, O(M·P) bytes live at once) before reducing. A
+/// `MeanAccum` folds each arriving vector into one pre-sized sum
+/// buffer as it lands, so a round holds O(P) bytes however many
+/// trainers report, and the buffer (plus the fold chunk plan) is
+/// reusable across rounds ([`Self::reset`] — the GGS per-step
+/// allreduce stages no per-gradient buffers between steps). Large
+/// vectors are folded in disjoint windows across
+/// worker threads ([`crate::util::threadpool::parallel_fill`]);
+/// chunking never reorders per-element arithmetic, so the result is
+/// bit-identical to the staged [`aggregate`]`(Mean, ..)` fed the same
+/// vectors in the same order, at any worker count.
+pub struct MeanAccum {
+    sum: Vec<f32>,
+    count: usize,
+    /// Per-worker fold window sizes and start offsets, planned once at
+    /// construction (P and the worker count are fixed for the
+    /// accumulator's lifetime) so [`Self::add`] plans nothing per
+    /// message. Empty = serial fold.
+    chunk_sizes: Vec<usize>,
+    chunk_starts: Vec<usize>,
+}
+
+impl MeanAccum {
+    /// Vectors shorter than this always fold serially: spawning the
+    /// scoped fold threads costs tens of microseconds, so the
+    /// parallel path only pays for itself well past the point where
+    /// a serial pass stops fitting in that budget.
+    const PAR_MIN: usize = 1 << 18;
+
+    /// Accumulator for `n`-parameter vectors, one fold worker per
+    /// available core.
+    pub fn new(n: usize) -> MeanAccum {
+        MeanAccum::with_workers(
+            n,
+            crate::util::threadpool::default_workers(),
+        )
+    }
+
+    /// As [`Self::new`] with an explicit fold worker count (benches
+    /// and determinism tests pin it).
+    pub fn with_workers(n: usize, workers: usize) -> MeanAccum {
+        assert!(workers >= 1);
+        let (chunk_sizes, chunk_starts) =
+            if workers <= 1 || n < Self::PAR_MIN {
+                (Vec::new(), Vec::new())
+            } else {
+                let sizes =
+                    crate::util::threadpool::even_chunks(n, workers);
+                let mut next = 0usize;
+                let starts: Vec<usize> = sizes
+                    .iter()
+                    .map(|&s| {
+                        let b = next;
+                        next += s;
+                        b
+                    })
+                    .collect();
+                (sizes, starts)
+            };
+        MeanAccum { sum: vec![0.0; n], count: 0, chunk_sizes, chunk_starts }
+    }
+
+    /// Parameter count P this accumulator was sized for.
+    pub fn len(&self) -> usize {
+        self.sum.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sum.is_empty()
+    }
+
+    /// Vectors folded in since construction or the last reset.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Zero the accumulator for the next round, keeping the allocation.
+    pub fn reset(&mut self) {
+        self.sum.iter_mut().for_each(|x| *x = 0.0);
+        self.count = 0;
+    }
+
+    /// Fold one trainer's vector in: `sum[j] += w[j]`.
+    pub fn add(&mut self, w: &[f32]) {
+        assert_eq!(
+            w.len(),
+            self.sum.len(),
+            "weight vector length mismatch"
+        );
+        self.count += 1;
+        if self.chunk_sizes.is_empty() {
+            for (o, &x) in self.sum.iter_mut().zip(w) {
+                *o += x;
+            }
+            return;
+        }
+        let starts = &self.chunk_starts;
+        crate::util::threadpool::parallel_fill(
+            &mut self.sum,
+            &self.chunk_sizes,
+            self.chunk_sizes.len(),
+            |i, win| {
+                let src = &w[starts[i]..starts[i] + win.len()];
+                for (o, &x) in win.iter_mut().zip(src) {
+                    *o += x;
+                }
+            },
+        );
+    }
+
+    /// The mean of the folded vectors (`sum[j] * (1/count)`), as a
+    /// fresh vector.
+    pub fn mean(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.sum.len());
+        self.mean_into(&mut out);
+        out
+    }
+
+    /// As [`Self::mean`], writing into a reused buffer (the GGS
+    /// allreduce calls this every global step with the same `dst`).
+    pub fn mean_into(&self, dst: &mut Vec<f32>) {
+        assert!(self.count > 0, "mean of zero folded vectors");
+        let scale = 1.0 / self.count as f32;
+        dst.clear();
+        dst.extend(self.sum.iter().map(|&x| x * scale));
+    }
 }
 
 /// Rust-side Adam for the GGS baseline (gradients are averaged across
@@ -148,17 +296,23 @@ impl Adam {
     }
 }
 
-/// Average gradients into `dst` (allreduce-mean for GGS).
+/// Average gradients into `dst` — the staged reference for the GGS
+/// allreduce-mean. Sum-then-scale in input order, so the streaming
+/// [`MeanAccum`] fold the live `ggs_server` uses reproduces it
+/// bit-for-bit.
 pub fn mean_grads(grads: &[Vec<f32>], dst: &mut Vec<f32>) {
     assert!(!grads.is_empty());
     let n = grads[0].len();
     dst.clear();
     dst.resize(n, 0.0);
-    let scale = 1.0 / grads.len() as f32;
     for g in grads {
         for (d, &x) in dst.iter_mut().zip(g) {
-            *d += x * scale;
+            *d += x;
         }
+    }
+    let scale = 1.0 / grads.len() as f32;
+    for d in dst.iter_mut() {
+        *d *= scale;
     }
 }
 
@@ -291,5 +445,120 @@ mod tests {
         let mut dst = Vec::new();
         mean_grads(&gs, &mut dst);
         assert_eq!(dst, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn inverse_loss_all_nonfinite_falls_back_to_mean() {
+        // All-inf losses used to drive total == 0 and scale the global
+        // weights by 0/0 = NaN. The degenerate case must produce the
+        // plain mean instead.
+        let w = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let inf = f32::INFINITY;
+        let out = aggregate(AggregateOp::InverseLoss, &w, &[inf, inf]);
+        assert!(out.iter().all(|x| x.is_finite()), "NaN weights: {out:?}");
+        assert_eq!(out, aggregate(AggregateOp::Mean, &w, &[inf, inf]));
+        // A NaN total (inf - inf style inputs can't happen here, but
+        // inf + finite can): one inf loss among finite ones just drops
+        // that trainer's mass, it must NOT trip the fallback.
+        let out = aggregate(AggregateOp::InverseLoss, &w, &[inf, 1.0]);
+        assert!(
+            out.iter().zip(&w[1]).all(|(a, b)| (a - b).abs() < 1e-6),
+            "finite-loss trainer should dominate: {out:?}"
+        );
+    }
+
+    #[test]
+    fn mean_accum_matches_staged_aggregate_bitwise() {
+        crate::util::prop::check(40, 11, |rng: &mut Rng| {
+            let m = rng.range(1, 9);
+            let p = rng.range(1, 300);
+            let weights: Vec<Vec<f32>> = (0..m)
+                .map(|_| {
+                    (0..p).map(|_| rng.gaussian() as f32 * 3.0).collect()
+                })
+                .collect();
+            let staged =
+                aggregate(AggregateOp::Mean, &weights, &vec![0.0; m]);
+            let mut acc = MeanAccum::with_workers(p, 1);
+            for w in &weights {
+                acc.add(w);
+            }
+            let streamed = acc.mean();
+            crate::prop_assert!(
+                staged
+                    .iter()
+                    .zip(&streamed)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "streaming fold diverged from staged reference \
+                 (m={m} p={p})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mean_accum_parallel_fold_is_bit_deterministic() {
+        // Above the serial threshold the fold splits across workers;
+        // disjoint windows never reorder per-element arithmetic, so
+        // any worker count gives the same bits.
+        let p = MeanAccum::PAR_MIN + 1234;
+        let mut rng = Rng::new(7);
+        let weights: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..p).map(|_| rng.gaussian() as f32).collect())
+            .collect();
+        let fold = |workers: usize| -> Vec<f32> {
+            let mut acc = MeanAccum::with_workers(p, workers);
+            for w in &weights {
+                acc.add(w);
+            }
+            acc.mean()
+        };
+        let serial = fold(1);
+        for workers in [2, 4] {
+            let par = fold(workers);
+            assert!(
+                serial
+                    .iter()
+                    .zip(&par)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "workers={workers} changed the fold"
+            );
+        }
+    }
+
+    #[test]
+    fn mean_accum_reset_reuses_buffer() {
+        let mut acc = MeanAccum::with_workers(2, 1);
+        acc.add(&[1.0, 2.0]);
+        acc.add(&[3.0, 4.0]);
+        assert_eq!(acc.count(), 2);
+        assert_eq!(acc.mean(), vec![2.0, 3.0]);
+        acc.reset();
+        assert_eq!(acc.count(), 0);
+        acc.add(&[10.0, 20.0]);
+        assert_eq!(acc.mean(), vec![10.0, 20.0]);
+        let mut dst = Vec::new();
+        acc.mean_into(&mut dst);
+        assert_eq!(dst, vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn mean_accum_matches_mean_grads_bitwise() {
+        let gs: Vec<Vec<f32>> = vec![
+            vec![0.1, -0.7, 3.5, 0.0],
+            vec![2.0, 0.3, -1.25, 9.0],
+            vec![-0.5, 0.0, 0.75, 1.0],
+        ];
+        let mut staged = Vec::new();
+        mean_grads(&gs, &mut staged);
+        let mut acc = MeanAccum::with_workers(4, 1);
+        for g in &gs {
+            acc.add(g);
+        }
+        let streamed = acc.mean();
+        assert!(staged
+            .iter()
+            .zip(&streamed)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 }

@@ -5,6 +5,24 @@
 //! *not* parallelised — the PJRT executables are per-thread). On this
 //! testbed (1 core) parallelism degenerates gracefully to sequential.
 
+/// Worker-thread default: one per available core (1 when the core
+/// count is unknown). The generators and the streaming aggregation
+/// fold both size their chunking off this.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map_or(1, |c| c.get())
+}
+
+/// Near-even split of `n` items into `parts` consecutive window sizes:
+/// the first `n % parts` windows take one extra item. Sizes sum to
+/// exactly `n` (so they tile a buffer for [`parallel_fill`]); `parts`
+/// may exceed `n`, leaving zero-size trailing windows.
+pub fn even_chunks(n: usize, parts: usize) -> Vec<usize> {
+    assert!(parts > 0);
+    let base = n / parts;
+    let extra = n % parts;
+    (0..parts).map(|i| base + usize::from(i < extra)).collect()
+}
+
 /// Run `f(i)` for i in 0..n on up to `workers` scoped threads and
 /// collect results in index order.
 pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
@@ -90,6 +108,30 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn even_chunks_tile_exactly() {
+        assert_eq!(even_chunks(10, 3), vec![4, 3, 3]);
+        assert_eq!(even_chunks(9, 3), vec![3, 3, 3]);
+        assert_eq!(even_chunks(2, 4), vec![1, 1, 0, 0]);
+        assert_eq!(even_chunks(0, 2), vec![0, 0]);
+        for (n, parts) in [(17, 4), (1000, 7), (5, 5)] {
+            let sizes = even_chunks(n, parts);
+            assert_eq!(sizes.len(), parts);
+            assert_eq!(sizes.iter().sum::<usize>(), n);
+            // windows differ by at most one item
+            let (mn, mx) = (
+                sizes.iter().min().unwrap(),
+                sizes.iter().max().unwrap(),
+            );
+            assert!(mx - mn <= 1, "uneven split {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn default_workers_is_positive() {
+        assert!(default_workers() >= 1);
+    }
 
     #[test]
     fn preserves_order() {

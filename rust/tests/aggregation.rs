@@ -1,0 +1,179 @@
+//! Differential suite for the zero-clone aggregation data plane.
+//!
+//! The server's round collection is a streaming fold: each arriving
+//! `TrainerMsg` is accumulated in place into one pre-sized buffer
+//! (`model::MeanAccum`), so a round holds O(P) bytes however many
+//! trainers report — where the old path staged all `M` vectors
+//! (O(M·P)) before reducing. These tests lock the streamed aggregate
+//! to the staged reference (`collect_round_staged` + `aggregate`)
+//! **bit-for-bit** over random M/P grids, for both operators, at
+//! several fold worker counts, plus the degenerate InverseLoss cases.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use random_tma::coordinator::kv::TrainerMsg;
+use random_tma::coordinator::server::{collect_round, collect_round_staged};
+use random_tma::model::{aggregate, AggregateOp, MeanAccum};
+use random_tma::util::rng::Rng;
+
+fn random_round(
+    rng: &mut Rng,
+    m: usize,
+    p: usize,
+    round: u64,
+) -> Vec<TrainerMsg> {
+    (0..m)
+        .map(|id| TrainerMsg {
+            id,
+            round,
+            weights: (0..p)
+                .map(|_| (rng.gaussian() * 2.0) as f32)
+                .collect(),
+            loss: if rng.chance(0.15) {
+                f32::NAN // trainer with no batch yet
+            } else {
+                (rng.f64() * 3.0) as f32
+            },
+            steps: id as u64,
+        })
+        .collect()
+}
+
+fn send_all(tx: &mpsc::Sender<TrainerMsg>, msgs: &[TrainerMsg]) {
+    for m in msgs {
+        tx.send(m.clone()).unwrap();
+    }
+}
+
+/// Run both collection paths over the same message sequence (same
+/// arrival order — mpsc is FIFO) and return (reference, streamed).
+fn both_paths(
+    msgs: &[TrainerMsg],
+    m: usize,
+    round: u64,
+    op: AggregateOp,
+) -> (Vec<f32>, Vec<f32>) {
+    let (tx, rx) = mpsc::channel();
+    send_all(&tx, msgs);
+    let (weights, losses) =
+        collect_round_staged(&rx, m, round, Duration::from_secs(5));
+    assert_eq!(weights.len(), m, "staged reference lost messages");
+    let reference = aggregate(op, &weights, &losses);
+
+    let (tx, rx) = mpsc::channel();
+    send_all(&tx, msgs);
+    let out = collect_round(&rx, m, round, Duration::from_secs(5), op);
+    assert_eq!(out.reporters, m, "streaming path lost messages");
+    (reference, out.global.expect("non-empty round"))
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} diverged ({x} vs {y})"
+        );
+    }
+}
+
+#[test]
+fn streaming_mean_bit_identical_to_staged_reference() {
+    let mut rng = Rng::new(0x5EED);
+    for m in [1usize, 2, 3, 4, 8, 16, 33] {
+        for p in [1usize, 7, 129, 1024] {
+            let msgs = random_round(&mut rng, m, p, 3);
+            let (reference, streamed) =
+                both_paths(&msgs, m, 3, AggregateOp::Mean);
+            assert_bitwise(
+                &reference,
+                &streamed,
+                &format!("mean m={m} p={p}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn streaming_inverse_loss_bit_identical_to_staged_reference() {
+    // InverseLoss rides the staging path inside collect_round (it
+    // cannot scale any vector before every loss is known); the
+    // differential still locks the whole collection protocol.
+    let mut rng = Rng::new(0xAB1E);
+    for m in [1usize, 2, 5, 16] {
+        for p in [1usize, 33, 500] {
+            let msgs = random_round(&mut rng, m, p, 9);
+            let (reference, streamed) =
+                both_paths(&msgs, m, 9, AggregateOp::InverseLoss);
+            assert_bitwise(
+                &reference,
+                &streamed,
+                &format!("inverse-loss m={m} p={p}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_fold_workers_do_not_change_the_bits() {
+    // The streaming fold chunks big vectors across worker threads;
+    // disjoint windows never reorder per-element arithmetic, so the
+    // aggregate is worker-count-invariant. (collect_round itself uses
+    // the default worker count — this pins the invariant it relies
+    // on, above the accumulator's serial-fold threshold.)
+    // Above MeanAccum's serial-fold threshold (1 << 18), so the
+    // chunked multi-worker path actually engages.
+    let p = (1 << 18) + 777;
+    let mut rng = Rng::new(42);
+    let vectors: Vec<Vec<f32>> = (0..5)
+        .map(|_| (0..p).map(|_| rng.gaussian() as f32).collect())
+        .collect();
+    let fold = |workers: usize| {
+        let mut acc = MeanAccum::with_workers(p, workers);
+        for v in &vectors {
+            acc.add(v);
+        }
+        acc.mean()
+    };
+    let serial = fold(1);
+    for workers in [2, 3, 8] {
+        assert_bitwise(&serial, &fold(workers), &format!("w={workers}"));
+    }
+    // And the staged reference agrees with the serial fold.
+    let reference =
+        aggregate(AggregateOp::Mean, &vectors, &[0.0; 5]);
+    assert_bitwise(&reference, &serial, "staged vs fold");
+}
+
+#[test]
+fn inverse_loss_all_inf_losses_stay_finite_end_to_end() {
+    // Regression: all-inf losses (every trainer diverged) used to
+    // drive `total == 0` and NaN global weights through the whole
+    // collection path. The operator now falls back to the plain mean.
+    let (tx, rx) = mpsc::channel();
+    for id in 0..2usize {
+        tx.send(TrainerMsg {
+            id,
+            round: 1,
+            weights: vec![1.0 + id as f32; 3],
+            loss: f32::INFINITY,
+            steps: 1,
+        })
+        .unwrap();
+    }
+    let out = collect_round(
+        &rx,
+        2,
+        1,
+        Duration::from_secs(5),
+        AggregateOp::InverseLoss,
+    );
+    let agg = out.global.unwrap();
+    assert!(
+        agg.iter().all(|x| x.is_finite()),
+        "NaN global weights: {agg:?}"
+    );
+    assert_eq!(agg, vec![1.5f32; 3], "falls back to the plain mean");
+}

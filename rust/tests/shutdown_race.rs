@@ -1,26 +1,41 @@
-//! Shutdown-protocol regression tests (no artifacts required).
+//! Round-protocol regression tests (no artifacts required).
 //!
-//! The bug: `tma_trainer` used to check `Control::stopped()` *before*
-//! checking for an open aggregation round, while `tma_server` raised
-//! stop *before* opening its final collection round. A trainer that
-//! observed the stop flag first exited without shipping its
-//! last-interval weights, so the final collection blocked for its full
-//! 60 s timeout per lost trainer and then silently aggregated a
-//! subset. The fix is a protocol pair: the server opens the final
-//! round before raising stop, and trainers decide their next move via
-//! [`Control::next_action`] (round-check before stop-check, with a
-//! round re-read after observing stop). These tests drive exactly
-//! those primitives — plus the server's round-validated
-//! [`collect_round`] — with mock trainer threads standing in for the
-//! engine-bound loop.
+//! Three protocol bugs live here, each with a failing-before test:
+//!
+//! 1. **Shutdown race** — `tma_trainer` used to check
+//!    `Control::stopped()` *before* checking for an open aggregation
+//!    round, while `tma_server` raised stop *before* opening its final
+//!    collection round. A trainer that observed the stop flag first
+//!    exited without shipping its last-interval weights, so the final
+//!    collection blocked for its full 60 s timeout per lost trainer
+//!    and then silently aggregated a subset. Fix: the server opens the
+//!    final round before raising stop, and trainers decide their next
+//!    move via [`Control::next_action`].
+//! 2. **Ready-barrier hang** — a trainer whose engine load/compile
+//!    failed returned without `mark_ready()`, so the server spun
+//!    forever in `while ready_count() < active`. Fix:
+//!    [`Control::mark_dead`] + [`Control::wait_ready`] counting the
+//!    dead, releasing the barrier with the survivors.
+//! 3. **Duplicate double-count** — collection did not dedup by trainer
+//!    id, so a duplicated round-r message filled a slot, skewing the
+//!    aggregate toward the duplicated trainer and silently dropping
+//!    another trainer's weights. Fix: id-dedup in [`collect_round`].
+//!
+//! The mock trainer threads below drive exactly the primitives the
+//! real loops use, standing in for the engine-bound bodies.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use random_tma::coordinator::kv::{Control, TrainerAction, TrainerMsg};
-use random_tma::coordinator::server::collect_round;
+use random_tma::coordinator::kv::{
+    Control, GlobalWeights, TrainerAction, TrainerMsg,
+};
+use random_tma::coordinator::server::{
+    collect_round, collect_round_staged, collect_round_with,
+};
+use random_tma::model::AggregateOp;
 
 /// A mock trainer running the exact control-flow skeleton of
 /// `tma_trainer`: next_action → ship + await broadcast | stop | one
@@ -29,7 +44,7 @@ fn mock_trainer(
     id: usize,
     control: Arc<Control>,
     tx: mpsc::Sender<TrainerMsg>,
-    rx_global: mpsc::Receiver<Vec<f32>>,
+    rx_global: mpsc::Receiver<GlobalWeights>,
 ) -> thread::JoinHandle<Vec<u64>> {
     thread::spawn(move || {
         let mut last_round = 0u64;
@@ -67,6 +82,13 @@ fn mock_trainer(
     })
 }
 
+fn broadcast(txs: &[mpsc::Sender<GlobalWeights>]) {
+    let w: GlobalWeights = vec![0.0f32].into();
+    for tx in txs {
+        tx.send(w.clone()).ok();
+    }
+}
+
 #[test]
 fn budget_expiry_mid_round_collects_all_live_trainers_fast() {
     let m = 4usize;
@@ -75,7 +97,7 @@ fn budget_expiry_mid_round_collects_all_live_trainers_fast() {
     let mut global_txs = Vec::new();
     let mut handles = Vec::new();
     for id in 0..m {
-        let (gtx, grx) = mpsc::channel::<Vec<f32>>();
+        let (gtx, grx) = mpsc::channel::<GlobalWeights>();
         global_txs.push(gtx);
         handles.push(mock_trainer(id, control.clone(), msg_tx.clone(), grx));
     }
@@ -85,13 +107,16 @@ fn budget_expiry_mid_round_collects_all_live_trainers_fast() {
     for expect in 1..=2u64 {
         let round = control.open_round();
         assert_eq!(round, expect);
-        let (weights, losses) =
-            collect_round(&msg_rx, m, round, Duration::from_secs(10));
-        assert_eq!(weights.len(), m, "round {round} incomplete");
-        assert_eq!(losses.len(), m);
-        for tx in &global_txs {
-            tx.send(vec![0.0]).ok();
-        }
+        let out = collect_round(
+            &msg_rx,
+            m,
+            round,
+            Duration::from_secs(10),
+            AggregateOp::Mean,
+        );
+        assert_eq!(out.reporters, m, "round {round} incomplete");
+        assert!(out.global.is_some());
+        broadcast(&global_txs);
     }
 
     // Budget expires "mid-round": final round opens, then stop — the
@@ -100,24 +125,28 @@ fn budget_expiry_mid_round_collects_all_live_trainers_fast() {
     let t0 = Instant::now();
     let final_round = control.open_round();
     control.request_stop();
-    let (weights, _) =
-        collect_round(&msg_rx, m, final_round, Duration::from_secs(30));
+    let out = collect_round(
+        &msg_rx,
+        m,
+        final_round,
+        Duration::from_secs(30),
+        AggregateOp::Mean,
+    );
     let elapsed = t0.elapsed();
     assert_eq!(
-        weights.len(),
-        m,
+        out.reporters, m,
         "final aggregation lost trainers: got {} of {m}",
-        weights.len()
+        out.reporters
     );
+    // Mean of trainer ids 0..4 shipping [id]: (0+1+2+3)/4 = 1.5.
+    assert_eq!(out.global.unwrap(), vec![1.5f32]);
     assert!(
         elapsed < Duration::from_secs(1),
         "final collection took {elapsed:?} — the 60 s timeout path"
     );
 
     // Unblock the final-round broadcast waiters and join.
-    for tx in &global_txs {
-        tx.send(vec![0.0]).ok();
-    }
+    broadcast(&global_txs);
     for h in handles {
         let shipped = h.join().expect("mock trainer panicked");
         assert_eq!(
@@ -134,13 +163,142 @@ fn stop_without_open_round_exits_promptly() {
     // trainers must exit without shipping anything extra.
     let control = Arc::new(Control::new());
     let (msg_tx, msg_rx) = mpsc::channel::<TrainerMsg>();
-    let (_gtx, grx) = mpsc::channel::<Vec<f32>>();
+    let (_gtx, grx) = mpsc::channel::<GlobalWeights>();
     let h = mock_trainer(0, control.clone(), msg_tx, grx);
     thread::sleep(Duration::from_millis(10));
     control.request_stop();
     let shipped = h.join().expect("trainer panicked");
     assert!(shipped.is_empty());
     assert!(msg_rx.try_recv().is_err(), "spurious message after stop");
+}
+
+#[test]
+fn ready_barrier_releases_when_a_trainer_dies_at_startup() {
+    // Regression: a trainer whose Engine::load/prepare failed returned
+    // without mark_ready(), and the server's `while ready_count() <
+    // active` barrier spun forever. wait_ready counts the dead and
+    // releases with the survivors.
+    let m = 3usize;
+    let control = Arc::new(Control::new());
+    for id in 0..m {
+        let control = control.clone();
+        thread::spawn(move || {
+            // Trainer 1 "fails its engine load" after a delay; the
+            // others compile and mark ready.
+            thread::sleep(Duration::from_millis(5 * (id as u64 + 1)));
+            if id == 1 {
+                control.mark_dead();
+            } else {
+                control.mark_ready();
+            }
+        });
+    }
+    let (tx, rx) = mpsc::channel();
+    let c2 = control.clone();
+    thread::spawn(move || {
+        tx.send(c2.wait_ready(m)).unwrap();
+    });
+    // Before the fix this would hang forever; recv_timeout turns the
+    // hang into a clean failure.
+    let live = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("ready barrier hung on the dead trainer");
+    assert_eq!(live, m - 1, "barrier must report the survivors");
+}
+
+#[test]
+fn duplicate_trainer_message_does_not_displace_another() {
+    // Regression: before id-dedup, a duplicate round-1 message from
+    // trainer 0 filled the second collection slot — aggregate became
+    // (10+10)/2 = 10 and trainer 1's weights were silently dropped.
+    let (tx, rx) = mpsc::channel::<TrainerMsg>();
+    let dup = TrainerMsg {
+        id: 0,
+        round: 1,
+        weights: vec![10.0],
+        loss: 1.0,
+        steps: 4,
+    };
+    tx.send(dup.clone()).unwrap();
+    tx.send(dup).unwrap(); // duplicate (e.g. a retry after a hiccup)
+    tx.send(TrainerMsg {
+        id: 1,
+        round: 1,
+        weights: vec![2.0],
+        loss: 1.0,
+        steps: 4,
+    })
+    .unwrap();
+    let out = collect_round(
+        &rx,
+        2,
+        1,
+        Duration::from_secs(5),
+        AggregateOp::Mean,
+    );
+    assert_eq!(out.reporters, 2, "dedup must keep collecting");
+    assert_eq!(out.global.unwrap(), vec![6.0f32], "(10+2)/2, not (10+10)/2");
+
+    // The staged reference dedups identically.
+    let (tx, rx) = mpsc::channel::<TrainerMsg>();
+    for (id, w) in [(0usize, 10.0f32), (0, 10.0), (1, 2.0)] {
+        tx.send(TrainerMsg {
+            id,
+            round: 1,
+            weights: vec![w],
+            loss: 1.0,
+            steps: 0,
+        })
+        .unwrap();
+    }
+    let (weights, _) =
+        collect_round_staged(&rx, 2, 1, Duration::from_secs(5));
+    assert_eq!(weights, vec![vec![10.0], vec![2.0]]);
+}
+
+#[test]
+fn collection_shrinks_to_survivors_when_target_drops_mid_round() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    // Regression: a trainer dying *during* a collection used to stall
+    // the server for the full deadline (its message never comes) and
+    // then fail the run. collect_round_with re-polls the live target
+    // between ≤200 ms waits, so the recorded death shrinks the round
+    // to the survivors within a slice.
+    let (tx, rx) = mpsc::channel::<TrainerMsg>();
+    for id in 0..2usize {
+        tx.send(TrainerMsg {
+            id,
+            round: 1,
+            weights: vec![id as f32],
+            loss: 0.1,
+            steps: 1,
+        })
+        .unwrap();
+    }
+    // Trainer 2 never ships; ~300 ms in, its death is recorded.
+    let live = Arc::new(AtomicUsize::new(3));
+    let live2 = live.clone();
+    let h = thread::spawn(move || {
+        thread::sleep(Duration::from_millis(300));
+        live2.store(2, Ordering::SeqCst);
+    });
+    let t0 = Instant::now();
+    let out = collect_round_with(
+        &rx,
+        &|| live.load(Ordering::SeqCst),
+        1,
+        Duration::from_secs(30),
+        AggregateOp::Mean,
+    );
+    h.join().unwrap();
+    assert_eq!(out.reporters, 2);
+    assert_eq!(out.global.unwrap(), vec![0.5f32]); // (0 + 1) / 2
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "collection rode the deadline instead of shrinking: {:?}",
+        t0.elapsed()
+    );
 }
 
 #[test]
@@ -164,10 +322,15 @@ fn collection_drops_stale_round_messages() {
     };
     tx.send(stale).unwrap();
     tx.send(fresh).unwrap();
-    let (weights, losses) =
-        collect_round(&rx, 1, 2, Duration::from_secs(5));
-    assert_eq!(weights, vec![vec![1.0]]);
-    assert_eq!(losses, vec![0.1f32]);
+    let out = collect_round(
+        &rx,
+        1,
+        2,
+        Duration::from_secs(5),
+        AggregateOp::Mean,
+    );
+    assert_eq!(out.reporters, 1);
+    assert_eq!(out.global.unwrap(), vec![1.0f32]);
 }
 
 #[test]
@@ -177,8 +340,15 @@ fn collection_times_out_on_truly_dead_trainer() {
     // survivors (none) after the deadline instead of hanging forever.
     let (tx, rx) = mpsc::channel::<TrainerMsg>();
     let t0 = Instant::now();
-    let (weights, _) = collect_round(&rx, 1, 1, Duration::from_millis(50));
-    assert!(weights.is_empty());
+    let out = collect_round(
+        &rx,
+        1,
+        1,
+        Duration::from_millis(50),
+        AggregateOp::Mean,
+    );
+    assert_eq!(out.reporters, 0);
+    assert!(out.global.is_none());
     assert!(t0.elapsed() >= Duration::from_millis(50));
     drop(tx);
 }
@@ -186,7 +356,8 @@ fn collection_times_out_on_truly_dead_trainer() {
 #[test]
 fn nan_losses_are_sanitised_during_collection() {
     // A trainer that never produced a batch reports loss = NaN; the
-    // aggregation operators expect a large-but-finite sentinel.
+    // aggregation operators expect a large-but-finite sentinel. Both
+    // collection paths sanitise identically.
     let (tx, rx) = mpsc::channel::<TrainerMsg>();
     tx.send(TrainerMsg {
         id: 0,
@@ -196,6 +367,28 @@ fn nan_losses_are_sanitised_during_collection() {
         steps: 0,
     })
     .unwrap();
-    let (_, losses) = collect_round(&rx, 1, 1, Duration::from_secs(5));
+    let (_, losses) =
+        collect_round_staged(&rx, 1, 1, Duration::from_secs(5));
     assert_eq!(losses, vec![f32::MAX]);
+
+    // Streaming InverseLoss on a NaN-loss trainer: the sanitised
+    // sentinel keeps the aggregate finite.
+    let (tx, rx) = mpsc::channel::<TrainerMsg>();
+    tx.send(TrainerMsg {
+        id: 0,
+        round: 1,
+        weights: vec![4.0],
+        loss: f32::NAN,
+        steps: 0,
+    })
+    .unwrap();
+    let out = collect_round(
+        &rx,
+        1,
+        1,
+        Duration::from_secs(5),
+        AggregateOp::InverseLoss,
+    );
+    let agg = out.global.unwrap();
+    assert!(agg[0].is_finite(), "NaN leaked into the aggregate: {agg:?}");
 }
