@@ -10,19 +10,29 @@
 //! and every broadcast frame is encoded from the shared global slab
 //! through one reused scratch buffer (`comm::send_wire`).
 //!
-//! After the last round the leader scores the aggregated weights on
-//! the validation split and asserts the MRR is finite — the
-//! `distributed-smoke` CI assertion.
+//! With compiled artifacts the leader scores the aggregated weights
+//! on the validation split and asserts the MRR is finite. Without
+//! them it still runs the full wire protocol in *protocol-only* mode:
+//! workers get `--no-train` (echoing weights back with a NaN-loss
+//! sentinel the leader's fold ignores) so the CI `distributed-smoke`
+//! job exercises the real TCP round loop on a bare container.
+//!
+//! Observability: leader round phases are traced as `leader` spans
+//! (collect/aggregate/broadcast — `rtma trace-report` folds them with
+//! the in-process server phases), each worker writes its own JSONL
+//! sink at `$RTMA_TRACE.worker<id>` when tracing is on, and the run
+//! persists a `BENCH_distributed_smoke.json` baseline with round
+//! timings plus comm byte/frame counters.
 //!
 //! Run: `cargo run --release --example distributed_tcp`
 //! (defaults: M=3 workers, ~9 s; the CI smoke job passes
-//! `--m 2 --train-secs 6`). Requires compiled artifacts; skips
-//! gracefully — exit 0 — without them, like the failure drill.
+//! `--m 2 --train-secs 6 --agg-secs 1`).
 
 use std::net::TcpListener;
 use std::process::{Child, Command};
 use std::time::{Duration, Instant};
 
+use random_tma::benchkit::BenchBaseline;
 use random_tma::comm::{recv, send, send_wire, Message, WireMsg};
 use random_tma::coordinator::evaluate_mrr;
 use random_tma::gen::load_preset;
@@ -30,6 +40,8 @@ use random_tma::model::{MeanAccum, ModelState};
 use random_tma::runtime::{Engine, Manifest};
 use random_tma::sampler::eval::EvalBlockConfig;
 use random_tma::sampler::{AdjMode, EvalPlan};
+use random_tma::telemetry::{self, metrics, Span};
+use random_tma::util::bench::Timing;
 use random_tma::util::cli::Args;
 use random_tma::util::rng::Rng;
 
@@ -42,41 +54,51 @@ fn main() -> anyhow::Result<()> {
     let dataset = args.str_or("dataset", "citation-sim");
     let variant = args.str_or("variant", "gcn_mlp");
 
-    let Ok(manifest) = Manifest::load(&Manifest::default_dir()) else {
+    // Without compiled artifacts the smoke still runs the full wire
+    // protocol — workers echo weights instead of training.
+    let manifest = Manifest::load(&Manifest::default_dir()).ok();
+    if manifest.is_none() {
         println!(
-            "distributed_tcp skipped: artifacts missing (run `make \
-             artifacts` for the full TCP smoke)"
+            "[leader] artifacts missing — protocol-only mode (workers \
+             echo weights; run `make artifacts` for the full smoke)"
         );
-        return Ok(());
-    };
+    }
 
+    let tel_base = telemetry::snapshot();
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     println!("[leader] listening on {addr}, M={m}");
 
-    // Spawn workers as real OS processes running `rtma worker`.
+    // Spawn workers as real OS processes running `rtma worker`. When
+    // the leader is traced, give each worker its own JSONL sink so
+    // the per-process buffers never interleave in one file.
     let exe = rtma_binary()?;
+    let trace_base = std::env::var("RTMA_TRACE").ok();
     let mut children: Vec<Child> = Vec::new();
     for id in 0..m {
-        children.push(
-            Command::new(&exe)
-                .args([
-                    "worker",
-                    "--leader",
-                    &addr.to_string(),
-                    "--id",
-                    &id.to_string(),
-                    "--m",
-                    &m.to_string(),
-                    "--dataset",
-                    &dataset,
-                    "--seed",
-                    &seed.to_string(),
-                    "--variant",
-                    &variant,
-                ])
-                .spawn()?,
-        );
+        let mut cmd = Command::new(&exe);
+        cmd.args([
+            "worker",
+            "--leader",
+            &addr.to_string(),
+            "--id",
+            &id.to_string(),
+            "--m",
+            &m.to_string(),
+            "--dataset",
+            &dataset,
+            "--seed",
+            &seed.to_string(),
+            "--variant",
+            &variant,
+        ]);
+        if manifest.is_none() {
+            cmd.arg("--no-train");
+        }
+        if let Some(base) = &trace_base {
+            cmd.env("RTMA_TRACE", format!("{base}.worker{id}"));
+        }
+        children.push(cmd.spawn()?);
     }
 
     // Accept M workers (Hello + Ready).
@@ -85,15 +107,25 @@ fn main() -> anyhow::Result<()> {
         let (mut s, peer) = listener.accept()?;
         let hello = recv(&mut s)?;
         let ready = recv(&mut s)?;
-        println!("[leader] {peer} -> {hello:?} {ready:?}");
+        telemetry::info(
+            "leader",
+            "worker_joined",
+            &[],
+            format_args!("{peer} -> {hello:?} {ready:?}"),
+        );
         streams.push(s);
     }
 
     // Initial broadcast: one shared slab, frames encoded through one
-    // reused scratch buffer.
-    let spec = manifest.variant(&variant)?;
-    let mut w_global =
-        ModelState::init(spec, &mut Rng::new(seed ^ 0x1417)).params;
+    // reused scratch buffer. Protocol-only mode uses a fixed dummy
+    // slab in place of the manifest-shaped init.
+    let mut w_global = match &manifest {
+        Some(man) => {
+            let spec = man.variant(&variant)?;
+            ModelState::init(spec, &mut Rng::new(seed ^ 0x1417)).params
+        }
+        None => vec![0.1f32; 4096],
+    };
     let mut scratch = Vec::new();
     for s in &mut streams {
         send_wire(
@@ -103,35 +135,55 @@ fn main() -> anyhow::Result<()> {
         )?;
     }
 
-    // Time-based aggregation rounds with a streaming allreduce.
+    // Time-based aggregation rounds with a streaming allreduce. Each
+    // phase is traced as a `leader` span so `trace-report` folds it
+    // alongside the in-process server phases.
     let mut acc = MeanAccum::new(w_global.len());
+    let mut round_samples: Vec<f64> = Vec::new();
     let start = Instant::now();
     let mut round = 0u64;
     while start.elapsed().as_secs_f64() < train_secs {
         std::thread::sleep(Duration::from_secs_f64(agg_secs));
         round += 1;
-        for s in &mut streams {
-            send(s, &Message::Collect { round })?;
-        }
-        acc.reset();
+        let t_round = Instant::now();
         let mut total_steps = 0u64;
-        for s in &mut streams {
-            match recv(s)? {
-                Message::Weights { data, steps, .. } => {
-                    total_steps += steps;
-                    acc.add(&data);
+        {
+            let _sp = Span::start("leader", "collect")
+                .round(round)
+                .hist(&metrics().phase_collect);
+            for s in &mut streams {
+                send(s, &Message::Collect { round })?;
+            }
+            acc.reset();
+            for s in &mut streams {
+                match recv(s)? {
+                    Message::Weights { data, steps, .. } => {
+                        total_steps += steps;
+                        acc.add(&data);
+                    }
+                    other => anyhow::bail!("unexpected {other:?}"),
                 }
-                other => anyhow::bail!("unexpected {other:?}"),
             }
         }
-        w_global = acc.mean();
-        for s in &mut streams {
-            send_wire(
-                s,
-                &WireMsg::Broadcast { round, data: &w_global },
-                &mut scratch,
-            )?;
+        {
+            let _sp = Span::start("leader", "aggregate")
+                .round(round)
+                .hist(&metrics().phase_aggregate);
+            w_global = acc.mean();
         }
+        {
+            let _sp = Span::start("leader", "broadcast")
+                .round(round)
+                .hist(&metrics().phase_broadcast);
+            for s in &mut streams {
+                send_wire(
+                    s,
+                    &WireMsg::Broadcast { round, data: &w_global },
+                    &mut scratch,
+                )?;
+            }
+        }
+        round_samples.push(t_round.elapsed().as_secs_f64());
         println!(
             "[leader] round {round}: aggregated {} workers, {} total steps",
             acc.count(),
@@ -146,41 +198,81 @@ fn main() -> anyhow::Result<()> {
     }
     let norm: f32 = w_global.iter().map(|x| x * x).sum::<f32>().sqrt();
     println!(
-        "[leader] done: {round} rounds, final ||W|| = {norm:.3} \
-         (weights moved from init — training happened across processes)"
+        "[leader] done: {round} rounds, final ||W|| = {norm:.3}"
     );
     anyhow::ensure!(round >= 2, "too few rounds completed");
+    anyhow::ensure!(norm.is_finite(), "aggregated weights diverged");
 
-    // Score the aggregated weights on the validation split — the
-    // distributed run must produce a usable (finite-MRR) model.
-    let preset = load_preset(&dataset, true, 16, 8, seed)?;
-    let engine = Engine::load(&manifest, &variant, "pallas")?;
-    engine.prepare(&["encode", "score"])?;
-    let adj_mode = AdjMode::for_encoder(&engine.variant.encoder);
-    let relations = if adj_mode == AdjMode::Relational {
-        manifest.dims.relations
-    } else {
-        1
-    };
-    let eval_cfg = EvalBlockConfig::new(
-        manifest.dims.block_nodes,
-        manifest.dims.feat_dim,
-        adj_mode,
-        relations,
-        preset.boundary,
-    );
-    let plan = EvalPlan::build(
-        &preset.split.train,
-        &preset.split.val,
-        &preset.split.val_negatives,
-        &eval_cfg,
-    );
-    let mrr = evaluate_mrr(&engine, &plan, &w_global)?;
-    println!("[leader] final val MRR {mrr:.4}");
+    // Persist the smoke baseline: per-round wall time plus the comm
+    // counters this run added on top of the process baseline.
+    let delta = telemetry::snapshot().delta_since(&tel_base);
+    let mut bench = BenchBaseline::new("distributed_smoke");
+    bench.push_timing(&Timing {
+        label: "round".into(),
+        samples: round_samples,
+    });
+    for key in [
+        "comm_bytes_out",
+        "comm_bytes_in",
+        "comm_frames_out",
+        "comm_frames_in",
+        "comm_scratch_reuse",
+    ] {
+        bench.push_counter(key, delta.counter(key) as f64);
+    }
+    let path = bench.write()?;
+    let back = BenchBaseline::read("distributed_smoke")?;
     anyhow::ensure!(
-        mrr.is_finite() && mrr > 0.0,
-        "distributed run produced unusable weights (MRR {mrr})"
+        back == bench,
+        "bench baseline failed schema round-trip"
     );
+    println!("[leader] bench baseline -> {}", path.display());
+
+    match &manifest {
+        Some(man) => {
+            // Score the aggregated weights on the validation split —
+            // the distributed run must produce a usable model.
+            let preset = load_preset(&dataset, true, 16, 8, seed)?;
+            let engine = Engine::load(man, &variant, "pallas")?;
+            engine.prepare(&["encode", "score"])?;
+            let adj_mode = AdjMode::for_encoder(&engine.variant.encoder);
+            let relations = if adj_mode == AdjMode::Relational {
+                man.dims.relations
+            } else {
+                1
+            };
+            let eval_cfg = EvalBlockConfig::new(
+                man.dims.block_nodes,
+                man.dims.feat_dim,
+                adj_mode,
+                relations,
+                preset.boundary,
+            );
+            let plan = EvalPlan::build(
+                &preset.split.train,
+                &preset.split.val,
+                &preset.split.val_negatives,
+                &eval_cfg,
+            );
+            let mrr = evaluate_mrr(&engine, &plan, &w_global)?;
+            println!("[leader] final val MRR {mrr:.4}");
+            anyhow::ensure!(
+                mrr.is_finite() && mrr > 0.0,
+                "distributed run produced unusable weights (MRR {mrr})"
+            );
+        }
+        None => {
+            // Protocol-only: the workers echoed the broadcast slab, so
+            // the mean must reproduce it exactly.
+            anyhow::ensure!(
+                (norm - 0.1 * (w_global.len() as f32).sqrt()).abs() < 1e-2,
+                "echoed weights drifted (||W|| {norm})"
+            );
+            println!("[leader] protocol-only run verified (echo mean)");
+        }
+    }
+    telemetry::trace_counters("leader");
+    telemetry::flush();
     println!("distributed_tcp OK");
     Ok(())
 }

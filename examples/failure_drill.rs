@@ -104,7 +104,7 @@ fn prep_drill(base: &RunConfig) -> anyhow::Result<()> {
 fn training_drill(base: &RunConfig) -> anyhow::Result<()> {
     let mut t = Table::new(
         "Failure drill: F=1 of M=3 (trainer 0 never starts)",
-        &["Approach", "MRR healthy", "MRR F=1", "Δ"],
+        &["Approach", "MRR healthy", "MRR F=1", "Δ", "Survivors"],
     );
     for approach in [Approach::RandomTma, Approach::PsgdPa] {
         let healthy = run_experiment(&RunConfig {
@@ -117,11 +117,17 @@ fn training_drill(base: &RunConfig) -> anyhow::Result<()> {
             failed_ids: vec![0],
             ..base.clone()
         })?;
+        // Survivor count comes from the run's authoritative
+        // `Control::live_count` (via RunResult), not drill bookkeeping.
         t.row(vec![
             approach.name().to_string(),
             format!("{:.4}", healthy.test_mrr),
             format!("{:.4}", failed.test_mrr),
             format!("{:+.4}", failed.test_mrr - healthy.test_mrr),
+            format!(
+                "{}/{}",
+                failed.trainers_live, failed.trainers_spawned
+            ),
         ]);
     }
     t.emit("failure_drill");

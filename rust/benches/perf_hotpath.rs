@@ -7,6 +7,7 @@
 use std::hint::black_box;
 use std::sync::Arc;
 
+use random_tma::benchkit::BenchBaseline;
 use random_tma::comm::Message;
 use random_tma::gen::{dcsbm, dcsbm_with_workers, reference, DcsbmConfig};
 use random_tma::graph::{induce_all, Subgraph};
@@ -16,7 +17,8 @@ use random_tma::partition::{
 };
 use random_tma::runtime::{Engine, Manifest};
 use random_tma::sampler::{AdjMode, TrainSampler, TrainSamplerConfig};
-use random_tma::util::bench::{fmt_secs, time};
+use random_tma::telemetry::{self, metrics, Level, Span};
+use random_tma::util::bench::{fmt_secs, time, Timing};
 use random_tma::util::rng::Rng;
 
 fn main() {
@@ -25,6 +27,7 @@ fn main() {
     prep_feature_store();
     aggregation_path();
     comm_encode();
+    telemetry_overhead();
     engine_path();
 }
 
@@ -247,6 +250,69 @@ fn comm_encode() {
         black_box(msg.encode());
     });
     println!("comm: encode 1M-f32 Weights {}", fmt_secs(t.median_s()));
+}
+
+/// Telemetry overhead on the round data plane: the streaming fold
+/// with exactly the per-message instrumentation the server performs
+/// (counter bumps + one phase span) vs the bare fold. Contract
+/// (ISSUE 6): with logging off and no trace sink, telemetry is
+/// relaxed atomic bumps only — no allocation, no formatting — so the
+/// instrumented path must stay within 3% of the bare one. Compared
+/// on best-of-N to shed scheduler noise; persisted as the
+/// `BENCH_perf_hotpath.json` baseline.
+fn telemetry_overhead() {
+    telemetry::set_level(Level::Off);
+    let p = 1 << 20;
+    let m = 8usize;
+    let mut rng = Rng::new(11);
+    let base: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+    let msgs: Vec<Vec<f32>> = (0..m)
+        .map(|i| base.iter().map(|x| x + i as f32).collect())
+        .collect();
+
+    let t_plain = time("fold plain M=8 P=1M", 1, 7, || {
+        let mut acc = MeanAccum::new(p);
+        for w in &msgs {
+            acc.add(w);
+        }
+        black_box(acc.mean());
+    });
+    let t_instr = time("fold instrumented M=8 P=1M", 1, 7, || {
+        let mm = metrics();
+        let _sp =
+            Span::start("bench", "collect").hist(&mm.phase_collect);
+        let mut acc = MeanAccum::new(p);
+        for w in &msgs {
+            mm.round_msgs.inc();
+            mm.comm_frames_in.inc();
+            mm.comm_bytes_in.add((4 + w.len() * 4) as u64);
+            acc.add(w);
+        }
+        black_box(acc.mean());
+    });
+    let min_s = |t: &Timing| {
+        t.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    };
+    let ratio = min_s(&t_instr) / min_s(&t_plain).max(1e-12);
+    println!(
+        "telemetry off: plain {}  instrumented {}  overhead {:.2}% \
+         (budget 3%)",
+        fmt_secs(t_plain.median_s()),
+        fmt_secs(t_instr.median_s()),
+        (ratio - 1.0) * 100.0,
+    );
+    assert!(
+        ratio <= 1.03,
+        "telemetry-off overhead {:.2}% exceeds the 3% budget",
+        (ratio - 1.0) * 100.0
+    );
+
+    let mut bench = BenchBaseline::new("perf_hotpath");
+    bench.push_timing(&t_plain);
+    bench.push_timing(&t_instr);
+    bench.push_counter("telemetry_overhead_ratio", ratio);
+    let path = bench.write().expect("write bench baseline");
+    println!("bench baseline -> {}", path.display());
 }
 
 fn engine_path() {

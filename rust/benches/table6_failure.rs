@@ -22,7 +22,15 @@ fn main() {
 
     let mut t = Table::new(
         &format!("Table 6: failure robustness on {ds} (F=1 of M={m})"),
-        &["Approach", "MRR F=1", "MRR F=0", "ΔMRR", "Conv F=1", "Conv F=0"],
+        &[
+            "Approach",
+            "MRR F=1",
+            "MRR F=0",
+            "ΔMRR",
+            "Conv F=1",
+            "Conv F=0",
+            "Live F=1",
+        ],
     );
     for a in [
         Approach::RandomTma,
@@ -38,6 +46,7 @@ fn main() {
         // F=1: drop each partition in turn under the same assignment.
         let mut mrr_f1 = Vec::new();
         let mut conv_f1 = Vec::new();
+        let mut live_f1 = Vec::new();
         for dropped in 0..m {
             let cell = run_cell(&opts, &preset, variant, a, |cfg| {
                 cfg.trainers = m;
@@ -47,6 +56,9 @@ fn main() {
             .expect("run");
             mrr_f1.push(cell.mean_mrr());
             conv_f1.push(cell.mean_conv());
+            // Authoritative survivor count (Control::live_count via
+            // RunResult), not this bench's own bookkeeping.
+            live_f1.push(cell.mean_live());
         }
         t.row(vec![
             a.name().to_string(),
@@ -55,6 +67,7 @@ fn main() {
             format!("{:+.2}", stats::mean(&mrr_f1) - base.mean_mrr()),
             stats::fmt_mean_std(&conv_f1, 1),
             base.conv_str(),
+            format!("{:.1}/{m}", stats::mean(&live_f1)),
         ]);
     }
     t.emit("table6_failure");

@@ -20,7 +20,9 @@ use crate::config::{Approach, RunConfig};
 use crate::coordinator::driver::{default_clusters, run_on_preset};
 use crate::gen::{load_preset, Preset};
 use crate::metrics::RunResult;
+use crate::util::bench::Timing;
 use crate::util::cli::Args;
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// Common bench parameters parsed from argv.
@@ -139,6 +141,19 @@ impl Cell {
     pub fn mean_conv(&self) -> f64 {
         stats::mean(&self.conv)
     }
+
+    /// Mean surviving trainers across the cell's runs, off the
+    /// authoritative `Control::live_count` carried in each
+    /// [`RunResult`] (the failure tables report this instead of their
+    /// own bookkeeping).
+    pub fn mean_live(&self) -> f64 {
+        let live: Vec<f64> = self
+            .results
+            .iter()
+            .map(|r| r.trainers_live as f64)
+            .collect();
+        stats::mean(&live)
+    }
 }
 
 /// Run one (dataset, variant, approach) cell over `seeds` repeats.
@@ -159,6 +174,151 @@ pub fn run_cell(
         cell.push(run_on_preset(&cfg, preset)?);
     }
     Ok(cell)
+}
+
+/// One timing row of a persisted bench baseline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchTiming {
+    pub label: String,
+    pub median_s: f64,
+    pub p95_s: f64,
+    /// Samples the summary was computed from.
+    pub n: usize,
+}
+
+impl BenchTiming {
+    /// Summarise a finished [`Timing`] series.
+    pub fn from_timing(t: &Timing) -> BenchTiming {
+        BenchTiming {
+            label: t.label.clone(),
+            median_s: t.median_s(),
+            p95_s: t.p95_s(),
+            n: t.samples.len(),
+        }
+    }
+}
+
+/// Schema tag pinned into every baseline file (bump on layout change).
+pub const BENCH_SCHEMA: &str = "rtma-bench-v1";
+
+/// A persisted bench baseline: the timing summaries (and optionally
+/// counter totals) of one bench section, written to
+/// `results/BENCH_<section>.json` so CI uploads them as artifacts and
+/// successive runs can be diffed. [`BenchBaseline::from_json`]
+/// validates the schema, so a read-back is a round-trip check.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BenchBaseline {
+    pub section: String,
+    pub timings: Vec<BenchTiming>,
+    pub counters: Vec<(String, f64)>,
+}
+
+impl BenchBaseline {
+    pub fn new(section: &str) -> BenchBaseline {
+        BenchBaseline { section: section.into(), ..Default::default() }
+    }
+
+    pub fn push_timing(&mut self, t: &Timing) {
+        self.timings.push(BenchTiming::from_timing(t));
+    }
+
+    pub fn push_counter(&mut self, name: &str, value: f64) {
+        self.counters.push((name.into(), value));
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(BENCH_SCHEMA)),
+            ("section", Json::str(self.section.clone())),
+            (
+                "timings",
+                Json::arr(self.timings.iter().map(|t| {
+                    Json::obj(vec![
+                        ("label", Json::str(t.label.clone())),
+                        ("median_s", Json::num(t.median_s)),
+                        ("p95_s", Json::num(t.p95_s)),
+                        ("n", Json::num(t.n as f64)),
+                    ])
+                })),
+            ),
+            (
+                "counters",
+                Json::obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.as_str(), Json::num(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse + schema-validate a baseline object.
+    pub fn from_json(j: &Json) -> anyhow::Result<BenchBaseline> {
+        anyhow::ensure!(
+            j.get("schema").as_str() == Some(BENCH_SCHEMA),
+            "bench baseline: bad or missing schema tag (want {:?})",
+            BENCH_SCHEMA
+        );
+        let section = j
+            .get("section")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("baseline: missing section"))?
+            .to_string();
+        let mut out = BenchBaseline::new(&section);
+        let timings = j
+            .get("timings")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("baseline: missing timings"))?;
+        for t in timings {
+            let field = |k: &str| -> anyhow::Result<f64> {
+                t.get(k).as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("baseline timing: missing {k}")
+                })
+            };
+            out.timings.push(BenchTiming {
+                label: t
+                    .get("label")
+                    .as_str()
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("baseline timing: missing label")
+                    })?
+                    .to_string(),
+                median_s: field("median_s")?,
+                p95_s: field("p95_s")?,
+                n: field("n")? as usize,
+            });
+        }
+        if let Some(m) = j.get("counters").as_obj() {
+            for (k, v) in m {
+                if let Some(x) = v.as_f64() {
+                    out.counters.push((k.clone(), x));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// `$RTMA_BENCH_DIR|results/BENCH_<section>.json`.
+    pub fn path(section: &str) -> std::path::PathBuf {
+        let dir = std::env::var("RTMA_BENCH_DIR")
+            .unwrap_or_else(|_| "results".into());
+        std::path::Path::new(&dir).join(format!("BENCH_{section}.json"))
+    }
+
+    /// Write to [`Self::path`]; returns the path written.
+    pub fn write(&self) -> anyhow::Result<std::path::PathBuf> {
+        let p = Self::path(&self.section);
+        self.to_json().write_file(&p)?;
+        Ok(p)
+    }
+
+    /// Read + validate the persisted baseline of `section`.
+    pub fn read(section: &str) -> anyhow::Result<BenchBaseline> {
+        let p = Self::path(section);
+        let j = Json::read_file(&p)?;
+        Self::from_json(&j)
+    }
 }
 
 /// Average ranks across datasets (Table 2's final columns): for each
@@ -204,6 +364,47 @@ mod tests {
     fn best_variant_mapping() {
         assert_eq!(best_variant("mag-sim"), "sage_mlp");
         assert_eq!(best_variant("reddit-sim"), "gcn_mlp");
+    }
+
+    #[test]
+    fn bench_baseline_roundtrips_through_schema() {
+        let mut b = BenchBaseline::new("unit");
+        b.push_timing(&Timing {
+            label: "fold".into(),
+            samples: vec![0.5, 0.3, 0.4],
+        });
+        b.push_counter("comm_bytes_out", 1234.0);
+        let j = b.to_json();
+        let back = BenchBaseline::from_json(&j).unwrap();
+        assert_eq!(back.section, "unit");
+        assert_eq!(back.timings.len(), 1);
+        assert_eq!(back.timings[0].label, "fold");
+        assert_eq!(back.timings[0].median_s, 0.4);
+        assert_eq!(back.timings[0].n, 3);
+        assert_eq!(back.counters, vec![("comm_bytes_out".into(), 1234.0)]);
+        // The compact text form parses back too (what CI reads).
+        let reparsed = crate::util::json::Json::parse(&format!("{j}"))
+            .unwrap();
+        assert_eq!(BenchBaseline::from_json(&reparsed).unwrap(), back);
+    }
+
+    #[test]
+    fn bench_baseline_rejects_bad_schema() {
+        let j = Json::obj(vec![
+            ("schema", Json::str("other-v9")),
+            ("section", Json::str("x")),
+            ("timings", Json::arr(Vec::new())),
+        ]);
+        assert!(BenchBaseline::from_json(&j).is_err());
+        assert!(BenchBaseline::from_json(&Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn bench_baseline_path_respects_env_dir() {
+        // Default (results/) — don't set the env var here: tests run
+        // in parallel and RTMA_BENCH_DIR would race across threads.
+        let p = BenchBaseline::path("smoke");
+        assert!(p.ends_with("BENCH_smoke.json"), "{p:?}");
     }
 
     #[test]

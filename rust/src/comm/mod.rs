@@ -14,6 +14,8 @@ use std::net::TcpStream;
 
 use anyhow::{bail, Result};
 
+use crate::telemetry::metrics;
+
 /// Protocol messages between leader and workers.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
@@ -226,7 +228,19 @@ pub fn send_wire(
     msg: &WireMsg<'_>,
     scratch: &mut Vec<u8>,
 ) -> Result<()> {
+    let cap_before = scratch.capacity();
     msg.encode_into(scratch);
+    // Wire counters: did this encode reuse the scratch allocation
+    // (steady state) or grow it (first frame of a new high-water
+    // mark)? Plus raw frame/byte totals for `trace-report`.
+    let m = metrics();
+    if scratch.capacity() > cap_before {
+        m.comm_scratch_grow.inc();
+    } else {
+        m.comm_scratch_reuse.inc();
+    }
+    m.comm_frames_out.inc();
+    m.comm_bytes_out.add(4 + scratch.len() as u64);
     stream.write_all(&(scratch.len() as u32).to_le_bytes())?;
     stream.write_all(scratch)?;
     stream.flush()?;
@@ -284,6 +298,8 @@ pub fn recv(stream: &mut TcpStream) -> Result<Message> {
     }
     let mut body = vec![0u8; n];
     stream.read_exact(&mut body)?;
+    metrics().comm_frames_in.inc();
+    metrics().comm_bytes_in.add(4 + n as u64);
     Message::decode(&body)
 }
 

@@ -20,6 +20,7 @@ use crate::partition::partition_stats_with_cuts;
 use crate::runtime::Manifest;
 use crate::sampler::eval::EvalBlockConfig;
 use crate::sampler::{AdjMode, EvalPlan, TrainSampler, TrainSamplerConfig};
+use crate::telemetry;
 use crate::util::rng::Rng;
 
 use super::evaluator::{evaluator_thread, EvalDone, EvalReq};
@@ -171,7 +172,16 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
 
     // ---- Threads -----------------------------------------------------------
     let control = Arc::new(Control::new());
-    let start = Instant::now();
+    // Registry baseline: RunResult.telemetry reports this run's delta,
+    // not process-lifetime totals (benches run many configs in one
+    // process).
+    let telemetry_base = telemetry::snapshot();
+    telemetry::info(
+        "driver",
+        "run_start",
+        &[("trainers", active as f64)],
+        format_args!("run start: {} ({} trainers)", cfg.label(), active),
+    );
     let (msg_tx, msg_rx) = mpsc::channel();
     let (eval_req_tx, eval_req_rx) = mpsc::channel::<EvalReq>();
     let (eval_done_tx, eval_done_rx) = mpsc::channel::<EvalDone>();
@@ -225,7 +235,6 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
                     tx,
                     slowdown,
                     seed,
-                    start,
                 })
             }));
         } else {
@@ -241,7 +250,6 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
                     tx,
                     slowdown,
                     seed,
-                    start,
                 })
             }));
         }
@@ -289,7 +297,6 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
             &eval_req_tx,
             &eval_done_rx,
             &manifest,
-            start,
         )?
     } else {
         tma_server(
@@ -301,7 +308,6 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
             &eval_req_tx,
             &eval_done_rx,
             llcg,
-            start,
         )?
     };
     drop(global_txs); // unblock any trainer waiting on a broadcast
@@ -368,6 +374,27 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
     }
     eval_handle.join().ok();
 
+    // Survivor count from the authoritative control plane (not thread
+    // bookkeeping): a trainer that died mid-run marked itself dead.
+    let trainers_live = control.live_count(active);
+    telemetry::info(
+        "driver",
+        "run_end",
+        &[
+            ("wall_secs", outcome.wall_secs),
+            ("rounds", outcome.rounds as f64),
+            ("live", trainers_live as f64),
+        ],
+        format_args!(
+            "run end: {} ({} rounds, {trainers_live}/{active} \
+             trainers live)",
+            cfg.label(),
+            outcome.rounds
+        ),
+    );
+    telemetry::trace_counters("driver");
+    telemetry::flush();
+
     Ok(RunResult {
         label: cfg.label(),
         val_curve,
@@ -379,6 +406,9 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
         prep_secs,
         local_bytes,
         wall_secs: outcome.wall_secs,
+        trainers_spawned: active,
+        trainers_live,
+        telemetry: telemetry::snapshot().delta_since(&telemetry_base),
     })
 }
 

@@ -9,6 +9,7 @@ use anyhow::Result;
 
 use crate::runtime::Engine;
 use crate::sampler::{EvalPlan, Mrr};
+use crate::telemetry::{self, metrics};
 
 use super::kv::GlobalWeights;
 
@@ -138,8 +139,13 @@ impl BestTracker {
         else {
             // A result for an unregistered round: a protocol bug, but
             // never worth poisoning the run over.
-            eprintln!(
-                "[server] eval result for unknown round {round} dropped"
+            telemetry::info(
+                "server",
+                "eval_unknown_round",
+                &[("round", round as f64)],
+                format_args!(
+                    "eval result for unknown round {round} dropped"
+                ),
             );
             return;
         };
@@ -178,12 +184,22 @@ pub fn evaluator_thread(
     let engine = match Engine::load(&manifest, &variant, &impl_name) {
         Ok(e) => e,
         Err(e) => {
-            eprintln!("[evaluator] engine load failed: {e}");
+            telemetry::info(
+                "evaluator",
+                "engine_load_failed",
+                &[],
+                format_args!("engine load failed: {e}"),
+            );
             return;
         }
     };
     if let Err(e) = engine.prepare(&["encode", "score"]) {
-        eprintln!("[evaluator] compile failed: {e}");
+        telemetry::info(
+            "evaluator",
+            "compile_failed",
+            &[],
+            format_args!("compile failed: {e}"),
+        );
         return;
     }
     while let Ok(req) = rx.recv() {
@@ -191,6 +207,7 @@ pub fn evaluator_thread(
             EvalReq::Periodic { round, t, params } => {
                 match evaluate_mrr(&engine, &val_plan, &params) {
                     Ok(mrr) => {
+                        metrics().evals_done.inc();
                         let _ = tx.send(EvalDone {
                             round,
                             t,
@@ -198,12 +215,18 @@ pub fn evaluator_thread(
                             is_final: false,
                         });
                     }
-                    Err(e) => eprintln!("[evaluator] round {round}: {e}"),
+                    Err(e) => telemetry::info(
+                        "evaluator",
+                        "eval_failed",
+                        &[("round", round as f64)],
+                        format_args!("round {round}: {e}"),
+                    ),
                 }
             }
             EvalReq::Final { params } => {
                 match evaluate_mrr(&engine, &test_plan, &params) {
                     Ok(mrr) => {
+                        metrics().evals_done.inc();
                         let _ = tx.send(EvalDone {
                             round: u64::MAX,
                             t: 0.0,
@@ -211,7 +234,12 @@ pub fn evaluator_thread(
                             is_final: true,
                         });
                     }
-                    Err(e) => eprintln!("[evaluator] final: {e}"),
+                    Err(e) => telemetry::info(
+                        "evaluator",
+                        "final_eval_failed",
+                        &[],
+                        format_args!("final: {e}"),
+                    ),
                 }
             }
         }

@@ -23,6 +23,7 @@ use crate::metrics::{EvalPoint, LossPoint};
 use crate::model::{Adam, MeanAccum};
 use crate::runtime::{Engine, Manifest};
 use crate::sampler::TrainSampler;
+use crate::telemetry::{self, metrics, Span};
 use crate::util::rng::Rng;
 
 use super::evaluator::{BestTracker, EvalDone, EvalReq};
@@ -41,7 +42,6 @@ pub struct GgsTrainerSpec {
     pub tx: mpsc::Sender<TrainerMsg>,
     pub slowdown: f64,
     pub seed: u64,
-    pub start: Instant,
 }
 
 pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
@@ -56,21 +56,30 @@ pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
         tx,
         slowdown,
         seed,
-        start: _start,
     } = spec;
     // Startup failures mark_dead so the server's ready barrier (which
     // counts ready + dead) releases instead of hanging forever.
     let engine = match Engine::load(&manifest, &variant, &impl_name) {
         Ok(e) => e,
         Err(e) => {
-            eprintln!("[ggs trainer {id}] engine load failed: {e}");
+            telemetry::info(
+                "ggs",
+                "engine_load_failed",
+                &[("trainer", id as f64)],
+                format_args!("trainer {id}: engine load failed: {e}"),
+            );
             control.mark_dead();
             return TrainerReport { id, steps: 0, timeline: Vec::new() };
         }
     };
     let mut rng = Rng::new(seed).fork(id as u64 + 101);
     if let Err(e) = engine.prepare(&["grad"]) {
-        eprintln!("[ggs trainer {id}] compile failed: {e}");
+        telemetry::info(
+            "ggs",
+            "compile_failed",
+            &[("trainer", id as f64)],
+            format_args!("trainer {id}: compile failed: {e}"),
+        );
         control.mark_dead();
         return TrainerReport { id, steps: 0, timeline: Vec::new() };
     }
@@ -78,15 +87,13 @@ pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
 
     let mut steps = 0u64;
     let mut timeline = Vec::new();
-    let mut anchor: Option<Instant> = None;
-    // Lock-step: one params broadcast per global step.
+    // Lock-step: one params broadcast per global step. Timeline stamps
+    // read the shared run epoch the server anchors after the ready
+    // barrier (`Control::since_epoch`).
     while let Ok(params) = rx_params.recv() {
         if control.stopped() {
             break;
         }
-        // Re-anchor the timeline at the first broadcast (post-compile).
-        let start = *anchor.get_or_insert_with(Instant::now);
-        let _ = start;
         let t0 = Instant::now();
         let block = match sampler.next_block(&mut rng) {
             Some(b) => b,
@@ -95,7 +102,12 @@ pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
                 // it ever fires, the exit must still mark dead, or the
                 // server waits a full collection deadline for a
                 // gradient that will never come and aborts the run.
-                eprintln!("[ggs trainer {id}] no block; exiting");
+                telemetry::info(
+                    "ggs",
+                    "empty_sampler",
+                    &[("trainer", id as f64)],
+                    format_args!("trainer {id}: no block; exiting"),
+                );
                 control.mark_dead();
                 break;
             }
@@ -103,8 +115,13 @@ pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
         match engine.grad_step(&params, block) {
             Ok((grad, loss)) => {
                 steps += 1;
+                metrics().train_steps.inc();
+                metrics()
+                    .step_us
+                    .observe(t0.elapsed().as_micros() as u64);
+                metrics().last_loss_bits.set(loss.to_bits() as u64);
                 timeline.push(LossPoint {
-                    t: start.elapsed().as_secs_f64(),
+                    t: control.since_epoch(),
                     loss,
                     step: steps,
                 });
@@ -123,7 +140,12 @@ pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
                 }
             }
             Err(e) => {
-                eprintln!("[ggs trainer {id}] grad failed: {e}");
+                telemetry::info(
+                    "ggs",
+                    "grad_failed",
+                    &[("trainer", id as f64), ("step", steps as f64)],
+                    format_args!("trainer {id}: grad failed: {e}"),
+                );
                 control.mark_dead();
                 break;
             }
@@ -143,22 +165,29 @@ pub fn ggs_server(
     eval_tx: &mpsc::Sender<EvalReq>,
     eval_rx: &mpsc::Receiver<EvalDone>,
     manifest: &Manifest,
-    start: Instant,
 ) -> Result<ServerOutcome> {
     let registered = txs.len();
     // Ready barrier counts dead trainers too (cf. tma_server).
     let mut active = control.wait_ready(registered);
     anyhow::ensure!(active > 0, "all {registered} ggs trainers failed");
     if active < registered {
-        eprintln!(
-            "[ggs] {} of {registered} trainers died before ready; \
-             stepping with {active}",
-            registered - active
+        telemetry::info(
+            "ggs",
+            "startup_deaths",
+            &[
+                ("dead", (registered - active) as f64),
+                ("live", active as f64),
+            ],
+            format_args!(
+                "{} of {registered} trainers died before ready; \
+                 stepping with {active}",
+                registered - active
+            ),
         );
     }
-    // Budget starts after the ready barrier (cf. tma_server).
-    let _ = start;
-    let start = Instant::now();
+    // Budget starts after the ready barrier (cf. tma_server); this is
+    // also the shared timeline epoch the trainers stamp against.
+    let start = control.set_epoch();
     let mut w = init_weights;
     let mut adam = Adam::new(manifest.adam, w.len());
     // Streaming allreduce state, reused across every global step.
@@ -176,6 +205,7 @@ pub fn ggs_server(
     {
         best.on_request(0, &w0);
         evals_sent += 1;
+        metrics().evals_dispatched.inc();
     }
 
     let mut rounds = 0u64;
@@ -196,40 +226,63 @@ pub fn ggs_server(
         }
         // One synchronous global step: one shared broadcast
         // allocation, M `Arc` clones.
-        let wb: GlobalWeights = w.as_slice().into();
-        for tx in txs {
-            tx.send(wb.clone()).ok();
+        {
+            let _sp = Span::start("ggs", "broadcast")
+                .round(rounds + 1)
+                .hist(&metrics().phase_broadcast);
+            let wb: GlobalWeights = w.as_slice().into();
+            for tx in txs {
+                tx.send(wb.clone()).ok();
+            }
         }
-        acc.reset();
-        let deadline = Instant::now() + Duration::from_secs(60);
-        while acc.count() < active {
-            match rx.recv_timeout(Duration::from_millis(200)) {
-                Ok(msg) => acc.add(&msg.weights),
-                Err(_) => {
-                    // Poll wakeup: a grad failure marks the trainer
-                    // dead — shrink this and every later step to the
-                    // survivors instead of riding a 60 s stall into a
-                    // whole-run abort. A live-but-silent trainer still
-                    // trips the deadline.
-                    let live = control.live_count(registered);
-                    if live < active {
-                        active = live;
-                        anyhow::ensure!(
-                            active > 0,
-                            "ggs: every trainer died"
-                        );
-                        eprintln!(
-                            "[ggs] a trainer died mid-step; continuing \
-                             with {active}"
-                        );
-                    } else if Instant::now() >= deadline {
-                        anyhow::bail!("ggs: trainer unresponsive");
+        {
+            let _sp = Span::start("ggs", "collect")
+                .round(rounds + 1)
+                .hist(&metrics().phase_collect);
+            acc.reset();
+            let deadline = Instant::now() + Duration::from_secs(60);
+            while acc.count() < active {
+                match rx.recv_timeout(Duration::from_millis(200)) {
+                    Ok(msg) => {
+                        metrics().round_msgs.inc();
+                        acc.add(&msg.weights)
+                    }
+                    Err(_) => {
+                        // Poll wakeup: a grad failure marks the trainer
+                        // dead — shrink this and every later step to
+                        // the survivors instead of riding a 60 s stall
+                        // into a whole-run abort. A live-but-silent
+                        // trainer still trips the deadline.
+                        let live = control.live_count(registered);
+                        if live < active {
+                            active = live;
+                            anyhow::ensure!(
+                                active > 0,
+                                "ggs: every trainer died"
+                            );
+                            telemetry::info(
+                                "ggs",
+                                "mid_step_death",
+                                &[("live", active as f64)],
+                                format_args!(
+                                    "a trainer died mid-step; \
+                                     continuing with {active}"
+                                ),
+                            );
+                        } else if Instant::now() >= deadline {
+                            anyhow::bail!("ggs: trainer unresponsive");
+                        }
                     }
                 }
             }
         }
-        acc.mean_into(&mut grad_mean);
-        adam.step(&mut w, &grad_mean);
+        {
+            let _sp = Span::start("ggs", "aggregate")
+                .round(rounds + 1)
+                .hist(&metrics().phase_aggregate);
+            acc.mean_into(&mut grad_mean);
+            adam.step(&mut w, &grad_mean);
+        }
         rounds += 1;
 
         // Periodic eval on the same ρ cadence as TMA for fairness.
@@ -238,6 +291,9 @@ pub fn ggs_server(
         if t_eval.elapsed().as_secs_f64() >= cfg.agg_secs
             && best.inflight_len() <= 2
         {
+            let _sp = Span::start("ggs", "eval_dispatch")
+                .round(rounds)
+                .hist(&metrics().phase_eval_dispatch);
             let params: GlobalWeights = w.as_slice().into();
             if eval_tx
                 .send(EvalReq::Periodic {
@@ -249,6 +305,7 @@ pub fn ggs_server(
             {
                 best.on_request(rounds, &params);
                 evals_sent += 1;
+                metrics().evals_dispatched.inc();
             }
             t_eval = Instant::now();
         }
@@ -265,7 +322,9 @@ pub fn ggs_server(
     {
         best.on_request(rounds, &params);
         evals_sent += 1;
+        metrics().evals_dispatched.inc();
     }
+    telemetry::trace_counters("ggs");
 
     Ok(ServerOutcome {
         val_curve,

@@ -10,7 +10,10 @@
 //! semantics as Alg 1/2 without a timing hole.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use crate::telemetry::metrics;
 
 /// The server→trainer broadcast payload: one shared allocation of the
 /// global weights per round. Every trainer (and the evaluator request)
@@ -31,6 +34,13 @@ pub struct Control {
     /// engine load or compile failures. The ready barrier counts these
     /// so a failed trainer can't hang the whole run.
     dead: AtomicUsize,
+    /// The run epoch: set once by the server right after the ready
+    /// barrier. Every timeline stamp ([`crate::metrics::LossPoint::t`],
+    /// [`crate::metrics::EvalPoint::t`]) measures from this shared
+    /// instant, so curves from different trainers are directly
+    /// comparable — before, each producer re-anchored its own
+    /// `Instant::now()`.
+    epoch: OnceLock<Instant>,
 }
 
 impl Control {
@@ -39,7 +49,23 @@ impl Control {
     }
 
     pub fn open_round(&self) -> u64 {
+        metrics().rounds_opened.inc();
         self.agg_round.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    /// Fix the run epoch at `Instant::now()` (first call wins) and
+    /// return it. The server calls this once, after the ready barrier
+    /// — ΔT_train and every timeline stamp measure from here.
+    pub fn set_epoch(&self) -> Instant {
+        *self.epoch.get_or_init(Instant::now)
+    }
+
+    /// Seconds since the run epoch (0.0 before [`Self::set_epoch`]).
+    pub fn since_epoch(&self) -> f64 {
+        self.epoch
+            .get()
+            .map(|e| e.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
     }
 
     pub fn current_round(&self) -> u64 {
@@ -55,6 +81,7 @@ impl Control {
     }
 
     pub fn mark_ready(&self) {
+        metrics().trainer_ready_marks.inc();
         self.ready.fetch_add(1, Ordering::SeqCst);
     }
 
@@ -68,6 +95,7 @@ impl Control {
     /// targets, so the rest of the run proceeds with the survivors
     /// instead of hanging.
     pub fn mark_dead(&self) {
+        metrics().trainer_dead_marks.inc();
         self.dead.fetch_add(1, Ordering::SeqCst);
     }
 
@@ -230,6 +258,19 @@ mod tests {
         c.mark_dead();
         c.mark_dead();
         assert_eq!(c.wait_ready(2), 0);
+    }
+
+    #[test]
+    fn epoch_is_shared_first_call_wins_and_monotone() {
+        let c = Control::new();
+        assert_eq!(c.since_epoch(), 0.0, "unset epoch reads 0");
+        let e1 = c.set_epoch();
+        let e2 = c.set_epoch(); // second call must not re-anchor
+        assert_eq!(e1, e2);
+        let a = c.since_epoch();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = c.since_epoch();
+        assert!(a >= 0.0 && b >= a, "epoch clock went backwards");
     }
 
     #[test]

@@ -42,6 +42,7 @@ use crate::metrics::EvalPoint;
 use crate::model::{aggregate, AggregateOp, MeanAccum, ModelState};
 use crate::runtime::Engine;
 use crate::sampler::TrainSampler;
+use crate::telemetry::{self, metrics, Span};
 use crate::util::rng::Rng;
 
 use super::evaluator::{BestTracker, EvalDone, EvalReq};
@@ -96,7 +97,6 @@ pub fn tma_server(
     eval_tx: &mpsc::Sender<EvalReq>,
     eval_rx: &mpsc::Receiver<EvalDone>,
     mut llcg: Option<LlcgCorrector>,
-    start: Instant,
 ) -> Result<ServerOutcome> {
     let registered = txs.len();
     // Ready barrier (Alg 1 l. 3-5): wait until every trainer either
@@ -106,10 +106,15 @@ pub fn tma_server(
     let live = control.wait_ready(registered);
     anyhow::ensure!(live > 0, "all {registered} trainers failed to start");
     if live < registered {
-        eprintln!(
-            "[server] {} of {registered} trainers died before ready; \
-             training with {live}",
-            registered - live
+        telemetry::info(
+            "server",
+            "startup_deaths",
+            &[("dead", (registered - live) as f64), ("live", live as f64)],
+            format_args!(
+                "{} of {registered} trainers died before ready; \
+                 training with {live}",
+                registered - live
+            ),
         );
     }
     // Broadcast W[0]: one shared allocation, M `Arc` clones.
@@ -119,8 +124,9 @@ pub fn tma_server(
     }
     // T_start = now (Alg 1 l. 6): the budget starts after the ready
     // barrier + initial broadcast, excluding engine-compile startup.
-    let _ = start;
-    let start = Instant::now();
+    // This is also the shared run epoch every timeline stamp (trainer
+    // losses, eval points) measures from — see `Control::set_epoch`.
+    let start = control.set_epoch();
 
     let mut t_agg = Instant::now();
     #[allow(unused_assignments)]
@@ -139,6 +145,7 @@ pub fn tma_server(
     {
         best.on_request(0, &w_global);
         evals_sent += 1;
+        metrics().evals_dispatched.inc();
     }
 
     loop {
@@ -177,13 +184,18 @@ pub fn tma_server(
                 expect > 0,
                 "round {rounds}: every trainer died"
             );
-            let collected = collect_round_with(
-                rx,
-                &|| control.live_count(registered),
-                rounds,
-                Duration::from_secs(60),
-                cfg.aggregate_op,
-            );
+            let collected = {
+                let _sp = Span::start("server", "collect")
+                    .round(rounds)
+                    .hist(&metrics().phase_collect);
+                collect_round_with(
+                    rx,
+                    &|| control.live_count(registered),
+                    rounds,
+                    Duration::from_secs(60),
+                    cfg.aggregate_op,
+                )
+            };
             if collected.reporters < expect {
                 // A trainer died *during* the collection (step
                 // failure marks dead): the target shrank within a
@@ -199,27 +211,48 @@ pub fn tma_server(
                      ({} of {expect} reported)",
                     collected.reporters
                 );
-                eprintln!(
-                    "[server] round {rounds}: a trainer died mid-round; \
-                     aggregating {} survivors",
-                    collected.reporters
+                telemetry::info(
+                    "server",
+                    "mid_round_death",
+                    &[
+                        ("round", rounds as f64),
+                        ("reporters", collected.reporters as f64),
+                    ],
+                    format_args!(
+                        "round {rounds}: a trainer died mid-round; \
+                         aggregating {} survivors",
+                        collected.reporters
+                    ),
                 );
             }
             // φ (Alg 1 l. 12) already folded; LLCG's server-side
             // global correction runs before the broadcast.
-            let mut next =
-                collected.global.expect("non-empty round collection");
-            if let Some(corr) = llcg.as_mut() {
-                next = corr.correct(&next)?;
-            }
-            w_global = next.into();
-            for tx in txs {
-                tx.send(w_global.clone()).ok();
+            w_global = {
+                let _sp = Span::start("server", "aggregate")
+                    .round(rounds)
+                    .hist(&metrics().phase_aggregate);
+                let mut next =
+                    collected.global.expect("non-empty round collection");
+                if let Some(corr) = llcg.as_mut() {
+                    next = corr.correct(&next)?;
+                }
+                next.into()
+            };
+            {
+                let _sp = Span::start("server", "broadcast")
+                    .round(rounds)
+                    .hist(&metrics().phase_broadcast);
+                for tx in txs {
+                    tx.send(w_global.clone()).ok();
+                }
             }
             t_agg = Instant::now();
             // Async validation eval of the new global weights. Skip if
             // the evaluator is >2 evals behind (bounds the post-run
             // drain on the shared core).
+            let _sp = Span::start("server", "eval_dispatch")
+                .round(rounds)
+                .hist(&metrics().phase_eval_dispatch);
             if best.inflight_len() <= 2
                 && eval_tx
                     .send(EvalReq::Periodic {
@@ -231,7 +264,9 @@ pub fn tma_server(
             {
                 best.on_request(rounds, &w_global);
                 evals_sent += 1;
+                metrics().evals_dispatched.inc();
             }
+            metrics().eval_inflight.set(best.inflight_len() as u64);
         }
     }
 
@@ -241,22 +276,44 @@ pub fn tma_server(
     // that died outright (engine failure), in which case we aggregate
     // the survivors.
     let expect = control.live_count(registered);
-    let collected = collect_round_with(
-        rx,
-        &|| control.live_count(registered),
-        rounds,
-        Duration::from_secs(60),
-        cfg.aggregate_op,
-    );
+    let collected = {
+        let _sp = Span::start("server", "collect")
+            .round(rounds)
+            .hist(&metrics().phase_collect);
+        collect_round_with(
+            rx,
+            &|| control.live_count(registered),
+            rounds,
+            Duration::from_secs(60),
+            cfg.aggregate_op,
+        )
+    };
     if collected.reporters < expect {
-        eprintln!(
-            "[server] final round {rounds}: {} of {expect} trainers \
-             reported (aggregating survivors)",
-            collected.reporters
+        telemetry::info(
+            "server",
+            "final_round_partial",
+            &[
+                ("round", rounds as f64),
+                ("reporters", collected.reporters as f64),
+                ("expect", expect as f64),
+            ],
+            format_args!(
+                "final round {rounds}: {} of {expect} trainers \
+                 reported (aggregating survivors)",
+                collected.reporters
+            ),
         );
     }
     if let Some(next) = collected.global {
-        w_global = next.into();
+        w_global = {
+            let _sp = Span::start("server", "aggregate")
+                .round(rounds)
+                .hist(&metrics().phase_aggregate);
+            next.into()
+        };
+        let _sp = Span::start("server", "eval_dispatch")
+            .round(rounds)
+            .hist(&metrics().phase_eval_dispatch);
         if eval_tx
             .send(EvalReq::Periodic {
                 round: rounds,
@@ -267,12 +324,19 @@ pub fn tma_server(
         {
             best.on_request(rounds, &w_global);
             evals_sent += 1;
+            metrics().evals_dispatched.inc();
         }
     }
     // Unblock trainers waiting on the final round's broadcast.
-    for tx in txs {
-        tx.send(w_global.clone()).ok();
+    {
+        let _sp = Span::start("server", "broadcast")
+            .round(rounds)
+            .hist(&metrics().phase_broadcast);
+        for tx in txs {
+            tx.send(w_global.clone()).ok();
+        }
     }
+    telemetry::trace_counters("server");
 
     Ok(ServerOutcome {
         val_curve,
@@ -359,21 +423,34 @@ pub fn collect_round_with(
             Err(mpsc::RecvTimeoutError::Disconnected) => break,
         };
         if msg.round != round {
-            eprintln!(
-                "[server] dropping stale round-{} message from trainer \
-                 {} while collecting round {round}",
-                msg.round, msg.id
+            metrics().round_stale_dropped.inc();
+            telemetry::info(
+                "server",
+                "stale_drop",
+                &[("round", round as f64), ("trainer", msg.id as f64)],
+                format_args!(
+                    "dropping stale round-{} message from trainer \
+                     {} while collecting round {round}",
+                    msg.round, msg.id
+                ),
             );
             continue;
         }
         if seen.contains(&msg.id) {
-            eprintln!(
-                "[server] dropping duplicate round-{round} message from \
-                 trainer {}",
-                msg.id
+            metrics().round_dup_dropped.inc();
+            telemetry::info(
+                "server",
+                "dup_drop",
+                &[("round", round as f64), ("trainer", msg.id as f64)],
+                format_args!(
+                    "dropping duplicate round-{round} message from \
+                     trainer {}",
+                    msg.id
+                ),
             );
             continue;
         }
+        metrics().round_msgs.inc();
         seen.push(msg.id);
         losses.push(if msg.loss.is_nan() {
             f32::MAX // trainer with no batch yet
@@ -429,10 +506,15 @@ pub fn collect_round_staged(
                 });
                 weights.push(msg.weights);
             }
-            Ok(msg) => eprintln!(
-                "[server] staged reference dropping stale/duplicate \
-                 round-{} message from trainer {}",
-                msg.round, msg.id
+            Ok(msg) => telemetry::info(
+                "server",
+                "staged_drop",
+                &[("round", round as f64), ("trainer", msg.id as f64)],
+                format_args!(
+                    "staged reference dropping stale/duplicate \
+                     round-{} message from trainer {}",
+                    msg.round, msg.id
+                ),
             ),
             Err(_) => break, // timeout, or every sender hung up
         }

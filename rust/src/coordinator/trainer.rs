@@ -19,6 +19,7 @@ use crate::metrics::LossPoint;
 use crate::model::ModelState;
 use crate::runtime::{Engine, Manifest};
 use crate::sampler::TrainSampler;
+use crate::telemetry::{self, metrics};
 use crate::util::rng::Rng;
 
 use super::kv::{
@@ -42,8 +43,6 @@ pub struct TrainerSpec {
     /// Speed factor >= 1.0 (1.0 = full speed).
     pub slowdown: f64,
     pub seed: u64,
-    /// Shared run start for timeline stamps.
-    pub start: Instant,
 }
 
 /// Run Algorithm 2 to completion; returns the trainer's report.
@@ -59,7 +58,6 @@ pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
         tx,
         slowdown,
         seed,
-        start,
     } = spec;
 
     // Startup failures MUST mark_dead before returning: the server's
@@ -68,7 +66,12 @@ pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
     let engine = match Engine::load(&manifest, &variant, &impl_name) {
         Ok(e) => e,
         Err(e) => {
-            eprintln!("[trainer {id}] engine load failed: {e}");
+            telemetry::info(
+                "trainer",
+                "engine_load_failed",
+                &[("trainer", id as f64)],
+                format_args!("trainer {id}: engine load failed: {e}"),
+            );
             control.mark_dead();
             return TrainerReport { id, steps: 0, timeline: Vec::new() };
         }
@@ -78,21 +81,26 @@ pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
     // Compile this role's entry point BEFORE signalling ready — the
     // server's training window opens at the ready barrier.
     if let Err(e) = engine.prepare(&["train"]) {
-        eprintln!("[trainer {id}] compile failed: {e}");
+        telemetry::info(
+            "trainer",
+            "compile_failed",
+            &[("trainer", id as f64)],
+            format_args!("trainer {id}: compile failed: {e}"),
+        );
         control.mark_dead();
         return TrainerReport { id, steps: 0, timeline: Vec::new() };
     }
     control.mark_ready();
 
     // Initial broadcast (Alg 2 line 5). The server sends it only after
-    // every trainer is ready (engines compiled), so re-anchor the
-    // timeline clock here — ΔT_train excludes startup, as in Alg 1.
+    // every trainer is ready (engines compiled) and anchors the shared
+    // run epoch right after — every LossPoint stamp below reads that
+    // one clock (`Control::since_epoch`), so per-trainer curves and
+    // the server's eval curve share an origin.
     match rx_global.recv() {
         Ok(w) => state.set_params(&w),
         Err(_) => return TrainerReport { id, steps: 0, timeline: Vec::new() },
     }
-    let _ = start;
-    let start = Instant::now();
 
     let mut last_round = 0u64;
     let mut last_loss = f32::NAN;
@@ -143,14 +151,27 @@ pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
                 Ok(loss) => {
                     last_loss = loss;
                     steps += 1;
+                    metrics().train_steps.inc();
+                    metrics()
+                        .step_us
+                        .observe(t0.elapsed().as_micros() as u64);
+                    metrics().last_loss_bits.set(loss.to_bits() as u64);
                     timeline.push(LossPoint {
-                        t: start.elapsed().as_secs_f64(),
+                        t: control.since_epoch(),
                         loss,
                         step: steps,
                     });
                 }
                 Err(e) => {
-                    eprintln!("[trainer {id}] step failed: {e}");
+                    telemetry::info(
+                        "trainer",
+                        "step_failed",
+                        &[
+                            ("trainer", id as f64),
+                            ("step", steps as f64),
+                        ],
+                        format_args!("trainer {id}: step failed: {e}"),
+                    );
                     // Tell the server this trainer will never answer
                     // another collection: later rounds size themselves
                     // to the survivors, and a round already collecting

@@ -17,6 +17,8 @@
 
 pub mod util;
 
+pub mod telemetry;
+
 pub mod config;
 pub mod graph;
 pub mod gen;

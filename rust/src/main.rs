@@ -6,6 +6,7 @@
 //!   partition              compare partition schemes on one dataset
 //!   train                  run one full experiment (any approach)
 //!   worker                 TCP worker process for distributed mode
+//!   trace-report           fold an RTMA_TRACE JSONL file into tables
 //!
 //! Examples:
 //!   rtma train --dataset citation-sim --approach RandomTMA --m 3 \
@@ -23,12 +24,13 @@ use random_tma::gen::{load_preset, preset_names};
 use random_tma::graph::stats::graph_stats;
 use random_tma::model::AggregateOp;
 use random_tma::partition::{partition_stats, Scheme};
+use random_tma::telemetry;
 use random_tma::util::bench::Table;
 use random_tma::util::cli::Args;
 use random_tma::util::rng::Rng;
 
 fn main() {
-    let args = Args::parse(&["quick", "jnp", "help"]);
+    let args = Args::parse(&["quick", "jnp", "help", "no-train"]);
     let (cmd, rest) = args.subcommand();
     let result = match cmd {
         Some("doctor") => doctor(&rest),
@@ -36,11 +38,15 @@ fn main() {
         Some("partition") => partition(&rest),
         Some("train") => train(&rest),
         Some("worker") => worker(&rest),
+        Some("trace-report") => trace_report(&rest),
         _ => {
             print_usage();
             Ok(())
         }
     };
+    // Hand any buffered trace lines to the sink before exiting —
+    // main's thread-local destructor is not guaranteed to run.
+    telemetry::flush();
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -51,14 +57,22 @@ fn print_usage() {
     println!(
         "rtma — RandomTMA/SuperTMA distributed GNN training\n\
          \n\
-         usage: rtma <doctor|datasets|partition|train|worker> [flags]\n\
+         usage: rtma <doctor|datasets|partition|train|worker|\
+         trace-report> [flags]\n\
          \n\
          common flags:\n\
          \x20 --dataset <reddit-sim|citation-sim|mag-sim|ecomm-sim>\n\
          \x20 --variant <gcn_mlp|sage_mlp|mlp_mlp|gcn_distmult|rgcn_mlp|rgcn_distmult>\n\
          \x20 --approach <RandomTMA|SuperTMA|PSGD-PA|LLCG|GGS>\n\
          \x20 --m <trainers>  --train-secs <s>  --agg-secs <ρ>\n\
-         \x20 --seed <u64>  --quick  --jnp (use XLA-dot artifacts)"
+         \x20 --seed <u64>  --quick  --jnp (use XLA-dot artifacts)\n\
+         \n\
+         telemetry (all subcommands):\n\
+         \x20 RTMA_LOG=off|info|debug   stderr event level\n\
+         \x20 RTMA_TRACE=<path>         append a JSONL trace\n\
+         \x20 rtma trace-report --trace <path>   fold it into tables\n\
+         \x20 rtma worker --no-train    protocol-only worker (no \
+         artifacts needed)"
     );
 }
 
@@ -238,9 +252,45 @@ fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Fold a JSONL trace (`RTMA_TRACE`) into the per-round server phase
+/// table + final counter totals. Doubles as the trace schema check:
+/// any malformed line fails with its line number (the
+/// distributed-smoke CI job runs this over the trace it recorded).
+fn trace_report(args: &Args) -> Result<()> {
+    use random_tma::telemetry::report::parse_trace;
+    let path = match args.get("trace") {
+        Some(p) => p.to_string(),
+        None => std::env::var("RTMA_TRACE").map_err(|_| {
+            anyhow::anyhow!("pass --trace <file> or set RTMA_TRACE")
+        })?,
+    };
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let rep = parse_trace(&text)?;
+    println!(
+        "[trace-report] {path}: {} lines ({} events, {} spans, {} \
+         counter records) from {} component(s)",
+        rep.lines,
+        rep.events,
+        rep.spans,
+        rep.counter_records,
+        rep.comps.len(),
+    );
+    println!("{}", rep.phase_table().render());
+    if !rep.counters.is_empty() {
+        println!("{}", rep.counter_table().render());
+    }
+    Ok(())
+}
+
 /// TCP worker process (distributed mode): connects to the leader,
 /// trains on its partition between broadcasts, ships weights back.
 /// Driven by examples/distributed_tcp.rs.
+///
+/// With `--no-train` — or when the AOT artifacts are absent (CI) — it
+/// degrades to a *protocol-only* worker: it holds the last broadcast
+/// weights and answers every collection with them (NaN loss, 0
+/// steps), exercising the full wire protocol with no engine.
 fn worker(args: &Args) -> Result<()> {
     use random_tma::comm::{
         recv, send, send_wire, train_until_pending, Message, WireMsg,
@@ -256,6 +306,23 @@ fn worker(args: &Args) -> Result<()> {
     let dataset = args.str_or("dataset", "citation-sim");
     let seed = args.u64_or("seed", 17);
     let variant = args.str_or("variant", "gcn_mlp");
+
+    if args.flag("no-train")
+        || Manifest::load(&Manifest::default_dir()).is_err()
+    {
+        telemetry::info(
+            "worker",
+            "protocol_only",
+            &[("worker", id as f64)],
+            format_args!(
+                "worker {id}: protocol-only mode (no engine)"
+            ),
+        );
+        let r = worker_protocol_only(&addr, id);
+        telemetry::trace_counters("worker");
+        telemetry::flush();
+        return r;
+    }
 
     // Load local data exactly as the in-process driver would: same
     // seed -> same partition -> this worker takes part `id`.
@@ -325,12 +392,74 @@ fn worker(args: &Args) -> Result<()> {
                 )?;
             }
             Message::Stop => {
-                eprintln!("[worker {id}] stopping after {steps} steps");
+                telemetry::info(
+                    "worker",
+                    "stop",
+                    &[("worker", id as f64), ("steps", steps as f64)],
+                    format_args!(
+                        "worker {id}: stopping after {steps} steps"
+                    ),
+                );
+                telemetry::trace_counters("worker");
+                telemetry::flush();
                 return Ok(());
             }
             other => {
-                eprintln!("[worker {id}] unexpected message {other:?}");
+                telemetry::info(
+                    "worker",
+                    "unexpected_message",
+                    &[("worker", id as f64)],
+                    format_args!(
+                        "worker {id}: unexpected message {other:?}"
+                    ),
+                );
             }
+        }
+    }
+}
+
+/// The engine-less worker loop: same handshake, same framing, no
+/// training. The weights it ships are whatever the leader last
+/// broadcast, so a leader averaging them gets its own weights back —
+/// a pure round-protocol + wire-counter exercise that runs on any
+/// machine (the distributed-smoke CI job has no AOT artifacts).
+fn worker_protocol_only(addr: &str, id: usize) -> Result<()> {
+    use random_tma::comm::{recv, send, send_wire, Message, WireMsg};
+    use std::net::TcpStream;
+
+    let mut stream = TcpStream::connect(addr)?;
+    send(&mut stream, &Message::Hello { id: id as u32 })?;
+    send(&mut stream, &Message::Ready { id: id as u32 })?;
+    let mut params: Vec<f32> = Vec::new();
+    let mut scratch = Vec::new();
+    loop {
+        match recv(&mut stream)? {
+            Message::Broadcast { round: _, data } => params = data,
+            Message::Collect { round } => send_wire(
+                &mut stream,
+                &WireMsg::Weights {
+                    round,
+                    loss: f32::NAN, // "no batch yet" sentinel
+                    steps: 0,
+                    data: &params,
+                },
+                &mut scratch,
+            )?,
+            Message::Stop => {
+                telemetry::info(
+                    "worker",
+                    "stop",
+                    &[("worker", id as f64), ("steps", 0.0)],
+                    format_args!("worker {id}: stopping (protocol-only)"),
+                );
+                return Ok(());
+            }
+            other => telemetry::info(
+                "worker",
+                "unexpected_message",
+                &[("worker", id as f64)],
+                format_args!("worker {id}: unexpected message {other:?}"),
+            ),
         }
     }
 }

@@ -47,6 +47,15 @@ pub struct RunResult {
     pub local_bytes: usize,
     /// Wall-clock seconds the run actually trained.
     pub wall_secs: f64,
+    /// Trainers the run launched with.
+    pub trainers_spawned: usize,
+    /// Trainers still live at run end, from the authoritative
+    /// `Control::live_count` — the failure drills report survivor
+    /// counts off this instead of their own bookkeeping.
+    pub trainers_live: usize,
+    /// Telemetry registry delta over this run (counters, gauges and
+    /// phase histograms) — see [`crate::telemetry::Snapshot`].
+    pub telemetry: crate::telemetry::Snapshot,
 }
 
 impl RunResult {
@@ -54,6 +63,11 @@ impl RunResult {
     /// `frac` (paper: 1%) of the run's maximum validation MRR.
     pub fn convergence_secs(&self, frac: f64) -> f64 {
         convergence_secs(&self.val_curve, frac)
+    }
+
+    /// [`convergence_secs`] with an explicit no-convergence signal.
+    pub fn convergence_secs_opt(&self, frac: f64) -> Option<f64> {
+        convergence_secs_opt(&self.val_curve, frac)
     }
 
     /// Min/max/diff of per-trainer finished steps (Table 3).
@@ -95,6 +109,12 @@ impl RunResult {
             ("wall_secs", Json::num(self.wall_secs)),
             ("conv_secs", Json::num(self.convergence_secs(0.01))),
             (
+                "trainers_spawned",
+                Json::num(self.trainers_spawned as f64),
+            ),
+            ("trainers_live", Json::num(self.trainers_live as f64)),
+            ("telemetry", self.telemetry.to_json()),
+            (
                 "steps",
                 Json::arr(self.steps.iter().map(|&s| Json::num(s as f64))),
             ),
@@ -117,17 +137,35 @@ impl RunResult {
 }
 
 /// Paper rule: time to reach within `frac` of the max validation MRR.
+/// `f64::INFINITY` when the run never converged (see
+/// [`convergence_secs_opt`] for the explicit form).
 pub fn convergence_secs(curve: &[EvalPoint], frac: f64) -> f64 {
-    let best = curve.iter().map(|p| p.val_mrr).fold(0.0f64, f64::max);
-    if best <= 0.0 {
-        return f64::INFINITY;
+    convergence_secs_opt(curve, frac).unwrap_or(f64::INFINITY)
+}
+
+/// [`convergence_secs`], but `None` instead of `INFINITY` when there
+/// is no convergence time: an empty curve, a curve whose best MRR is
+/// non-positive (nothing to be within 1% *of*), or an all-NaN curve
+/// (a diverged model scoring NaN everywhere). NaN points are skipped
+/// — a single NaN eval must neither panic nor poison the max — and
+/// the threshold crossing is searched over finite points only.
+pub fn convergence_secs_opt(
+    curve: &[EvalPoint],
+    frac: f64,
+) -> Option<f64> {
+    let best = curve
+        .iter()
+        .map(|p| p.val_mrr)
+        .filter(|v| v.is_finite())
+        .fold(f64::NEG_INFINITY, f64::max);
+    if !best.is_finite() || best <= 0.0 {
+        return None;
     }
     let threshold = best * (1.0 - frac);
     curve
         .iter()
-        .find(|p| p.val_mrr >= threshold)
+        .find(|p| p.val_mrr.is_finite() && p.val_mrr >= threshold)
         .map(|p| p.t)
-        .unwrap_or(f64::INFINITY)
 }
 
 /// Write a (time, value) series as CSV (for Figs 2-3 replotting).
@@ -174,6 +212,52 @@ mod tests {
         assert!(convergence_secs(&[], 0.01).is_infinite());
     }
 
+    #[test]
+    fn convergence_plateau_at_max_from_t_zero() {
+        // Best value from the very first point: convergence is t=0,
+        // not the end of the plateau.
+        let c = curve(&[(0.0, 0.8), (10.0, 0.8), (20.0, 0.8)]);
+        assert_eq!(convergence_secs_opt(&c, 0.01), Some(0.0));
+    }
+
+    #[test]
+    fn convergence_non_monotone_takes_first_crossing() {
+        // Peak in the middle, dip after: the first crossing of the
+        // 1%-of-max threshold counts, even though later points fall
+        // back below it.
+        let c = curve(&[
+            (10.0, 0.50),
+            (20.0, 0.80),
+            (30.0, 0.60),
+            (40.0, 0.795),
+        ]);
+        assert_eq!(convergence_secs_opt(&c, 0.01), Some(20.0));
+    }
+
+    #[test]
+    fn convergence_single_point_is_its_own_max() {
+        let c = curve(&[(7.5, 0.3)]);
+        assert_eq!(convergence_secs_opt(&c, 0.01), Some(7.5));
+        // ... unless that single point is non-positive.
+        let z = curve(&[(7.5, 0.0)]);
+        assert_eq!(convergence_secs_opt(&z, 0.01), None);
+    }
+
+    #[test]
+    fn convergence_all_nan_curve_returns_none() {
+        let c = curve(&[(1.0, f64::NAN), (2.0, f64::NAN)]);
+        assert_eq!(convergence_secs_opt(&c, 0.01), None);
+        assert!(convergence_secs(&c, 0.01).is_infinite());
+    }
+
+    #[test]
+    fn convergence_skips_nan_points_without_poisoning_max() {
+        // One diverged eval (NaN) mid-curve: the max and the crossing
+        // search must both skip it.
+        let c = curve(&[(1.0, 0.2), (2.0, f64::NAN), (3.0, 0.9)]);
+        assert_eq!(convergence_secs_opt(&c, 0.01), Some(3.0));
+    }
+
     fn result_with(steps: Vec<u64>, losses: Vec<Vec<(f64, f32)>>) -> RunResult {
         RunResult {
             label: "t".into(),
@@ -194,6 +278,9 @@ mod tests {
             prep_secs: 0.0,
             local_bytes: 0,
             wall_secs: 0.0,
+            trainers_spawned: 0,
+            trainers_live: 0,
+            telemetry: Default::default(),
         }
     }
 

@@ -1,0 +1,407 @@
+//! Structured telemetry: leveled events, RAII span timers, a JSONL
+//! trace sink, and the counter registry (ISSUE 6's measurement plane).
+//!
+//! Three layers, all dependency-free:
+//!
+//! 1. **Events + spans** — [`info`]/[`debug`] replace the scattered
+//!    `eprintln!`s behind an `RTMA_LOG=off|info|debug` filter; a
+//!    [`Span`] times a scope and records the duration into a registry
+//!    histogram on drop. When a trace sink is armed (`RTMA_TRACE=path`
+//!    or [`set_trace_path`]) both also append one JSON object per line
+//!    (JSONL) built with [`crate::util::json::Json`], so every line is
+//!    parseable by construction.
+//! 2. **Registry** — [`registry`]: plain relaxed atomics, no
+//!    allocation on the hot path whether or not logging is on.
+//! 3. **Report** — [`report`]: folds a JSONL trace into per-round
+//!    server phase breakdowns (`rtma trace-report`).
+//!
+//! Trace lines buffer in a per-thread `String` (lock-free append) and
+//! flush to the shared sink file when the buffer passes 8 KiB, on
+//! [`flush`], and from the thread-local's destructor at thread exit —
+//! so trainer threads never contend on the sink lock mid-round.
+//!
+//! JSONL schema (pinned by `tests/telemetry.rs`): every line carries
+//! `ts` (seconds since process start), `kind`
+//! (`event|span|counters`), `comp` and `name`. Events add `lvl` +
+//! `msg` (+ flattened numeric kv pairs); spans add `dur_us` and
+//! optionally `round`/`trainer`; counters records nest the full
+//! registry under `counters`.
+
+pub mod registry;
+pub mod report;
+
+pub use registry::{
+    metrics, snapshot, Counter, Gauge, HistSnap, Histogram, Metrics,
+    Snapshot, METRICS,
+};
+
+use std::cell::RefCell;
+use std::fmt;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Stderr log level, from `RTMA_LOG` (default `info`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off = 0,
+    Info = 1,
+    Debug = 2,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Level {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "0" | "none" | "silent" => Level::Off,
+            "debug" | "2" => Level::Debug,
+            _ => Level::Info,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<File>> = Mutex::new(None);
+static ENV_INIT: Once = Once::new();
+static PROC_EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// One-time env configuration: `RTMA_LOG` sets the stderr level,
+/// `RTMA_TRACE` arms the JSONL sink. Called lazily from every public
+/// entry point; [`set_level`]/[`set_trace_path`] override it later.
+fn ensure_env() {
+    ENV_INIT.call_once(|| {
+        PROC_EPOCH.get_or_init(Instant::now);
+        if let Ok(v) = std::env::var("RTMA_LOG") {
+            LEVEL.store(Level::parse(&v) as u8, Ordering::Relaxed);
+        }
+        if let Ok(p) = std::env::var("RTMA_TRACE") {
+            if !p.is_empty() {
+                if let Err(e) = install_sink(Some(Path::new(&p))) {
+                    eprintln!("[telemetry] RTMA_TRACE={p}: {e}");
+                }
+            }
+        }
+    });
+}
+
+fn install_sink(path: Option<&Path>) -> std::io::Result<()> {
+    let file = match path {
+        Some(p) => {
+            if let Some(dir) = p.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            Some(OpenOptions::new().create(true).append(true).open(p)?)
+        }
+        None => None,
+    };
+    let armed = file.is_some();
+    *SINK.lock().unwrap() = file;
+    TRACE_ON.store(armed, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Current stderr level.
+pub fn level() -> Level {
+    ensure_env();
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Off,
+        2 => Level::Debug,
+        _ => Level::Info,
+    }
+}
+
+/// Override the stderr level (tests; wins over `RTMA_LOG`).
+pub fn set_level(l: Level) {
+    ensure_env();
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Would an event at `l` print to stderr right now?
+pub fn on(l: Level) -> bool {
+    l != Level::Off && l <= level()
+}
+
+/// Is the JSONL trace sink armed?
+pub fn trace_on() -> bool {
+    ensure_env();
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Arm (`Some(path)`, append/create) or disarm (`None`) the trace
+/// sink programmatically — wins over `RTMA_TRACE`, which tests can't
+/// set race-free in-process.
+pub fn set_trace_path(path: Option<&Path>) -> std::io::Result<()> {
+    ensure_env();
+    install_sink(path)
+}
+
+/// Seconds since process start (the `ts` field of every trace line).
+pub fn ts() -> f64 {
+    ensure_env();
+    PROC_EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+// ---- per-thread line buffer ------------------------------------------------
+
+const FLUSH_BYTES: usize = 8 * 1024;
+
+struct LineBuf {
+    s: String,
+}
+
+impl Drop for LineBuf {
+    fn drop(&mut self) {
+        // Thread exit: hand any buffered lines to the sink.
+        flush_buf(&mut self.s);
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<LineBuf> =
+        RefCell::new(LineBuf { s: String::new() });
+}
+
+fn flush_buf(s: &mut String) {
+    if s.is_empty() {
+        return;
+    }
+    if let Ok(mut sink) = SINK.lock() {
+        if let Some(f) = sink.as_mut() {
+            let _ = f.write_all(s.as_bytes());
+            let _ = f.flush();
+        }
+    }
+    s.clear();
+}
+
+fn push_line(line: &str) {
+    let pushed = BUF.try_with(|b| {
+        let mut b = b.borrow_mut();
+        b.s.push_str(line);
+        b.s.push('\n');
+        if b.s.len() >= FLUSH_BYTES {
+            flush_buf(&mut b.s);
+        }
+    });
+    if pushed.is_err() {
+        // TLS already destroyed (thread teardown): write through.
+        let mut one = String::with_capacity(line.len() + 1);
+        one.push_str(line);
+        one.push('\n');
+        flush_buf(&mut one);
+    }
+}
+
+/// Flush the calling thread's buffered trace lines to the sink. Call
+/// before process exit on threads that outlive their TLS destructors
+/// (main).
+pub fn flush() {
+    let _ = BUF.try_with(|b| flush_buf(&mut b.borrow_mut().s));
+}
+
+// ---- events ----------------------------------------------------------------
+
+/// Emit a leveled event: `[comp] msg` on stderr when `RTMA_LOG`
+/// allows, plus a JSONL record (with the numeric `kv` pairs flattened
+/// in) when the trace sink is armed. Fully disabled: no formatting,
+/// no allocation.
+pub fn event(
+    lvl: Level,
+    comp: &'static str,
+    name: &'static str,
+    kv: &[(&'static str, f64)],
+    args: fmt::Arguments<'_>,
+) {
+    let log = on(lvl);
+    let trace = trace_on();
+    if !log && !trace {
+        return;
+    }
+    let msg = fmt::format(args);
+    if log {
+        eprintln!("[{comp}] {msg}");
+    }
+    if trace {
+        let mut obj = Json::obj(vec![
+            ("ts", Json::num(ts())),
+            ("kind", Json::str("event")),
+            ("lvl", Json::str(lvl.name())),
+            ("comp", Json::str(comp)),
+            ("name", Json::str(name)),
+            ("msg", Json::str(msg)),
+        ]);
+        for (k, v) in kv {
+            obj.set(k, Json::num(*v));
+        }
+        push_line(&format!("{obj}"));
+    }
+}
+
+/// Info-level event (the old `eprintln!` sites).
+pub fn info(
+    comp: &'static str,
+    name: &'static str,
+    kv: &[(&'static str, f64)],
+    args: fmt::Arguments<'_>,
+) {
+    event(Level::Info, comp, name, kv, args);
+}
+
+/// Debug-level event (per-round chatter, off by default).
+pub fn debug(
+    comp: &'static str,
+    name: &'static str,
+    kv: &[(&'static str, f64)],
+    args: fmt::Arguments<'_>,
+) {
+    event(Level::Debug, comp, name, kv, args);
+}
+
+// ---- spans -----------------------------------------------------------------
+
+/// RAII scope timer. On drop it observes the elapsed µs into the
+/// attached registry histogram (always — counters are never gated)
+/// and appends a `kind:"span"` trace line when the sink is armed.
+///
+/// ```ignore
+/// let _s = Span::start("server", "collect")
+///     .round(r)
+///     .hist(&metrics().phase_collect);
+/// ```
+pub struct Span {
+    comp: &'static str,
+    name: &'static str,
+    round: Option<u64>,
+    trainer: Option<u64>,
+    hist: Option<&'static Histogram>,
+    t0: Instant,
+    traced: bool,
+}
+
+impl Span {
+    pub fn start(comp: &'static str, name: &'static str) -> Span {
+        Span {
+            comp,
+            name,
+            round: None,
+            trainer: None,
+            hist: None,
+            t0: Instant::now(),
+            traced: trace_on(),
+        }
+    }
+
+    pub fn round(mut self, r: u64) -> Span {
+        self.round = Some(r);
+        self
+    }
+
+    pub fn trainer(mut self, id: u64) -> Span {
+        self.trainer = Some(id);
+        self
+    }
+
+    pub fn hist(mut self, h: &'static Histogram) -> Span {
+        self.hist = Some(h);
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let dur_us = self.t0.elapsed().as_micros() as u64;
+        if let Some(h) = self.hist {
+            h.observe(dur_us);
+        }
+        if self.traced {
+            let mut obj = Json::obj(vec![
+                ("ts", Json::num(ts())),
+                ("kind", Json::str("span")),
+                ("comp", Json::str(self.comp)),
+                ("name", Json::str(self.name)),
+                ("dur_us", Json::num(dur_us as f64)),
+            ]);
+            if let Some(r) = self.round {
+                obj.set("round", Json::num(r as f64));
+            }
+            if let Some(t) = self.trainer {
+                obj.set("trainer", Json::num(t as f64));
+            }
+            push_line(&format!("{obj}"));
+        }
+    }
+}
+
+/// Append a `kind:"counters"` trace record — the full registry
+/// (counters + gauges) at this instant. Emitted by the server, the
+/// driver and the workers at run end so a trace carries its final
+/// byte/step/round totals. No-op when the sink is disarmed.
+pub fn trace_counters(comp: &'static str) {
+    if !trace_on() {
+        return;
+    }
+    let snap = snapshot();
+    let mut counters = Json::obj(vec![]);
+    for (n, v) in &snap.counters {
+        counters.set(n, Json::num(*v as f64));
+    }
+    for (n, v) in &snap.gauges {
+        counters.set(n, Json::num(*v as f64));
+    }
+    let obj = Json::obj(vec![
+        ("ts", Json::num(ts())),
+        ("kind", Json::str("counters")),
+        ("comp", Json::str(comp)),
+        ("name", Json::str("counters")),
+        ("counters", counters),
+    ]);
+    push_line(&format!("{obj}"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::parse("off"), Level::Off);
+        assert_eq!(Level::parse("0"), Level::Off);
+        assert_eq!(Level::parse("debug"), Level::Debug);
+        assert_eq!(Level::parse("info"), Level::Info);
+        assert_eq!(Level::parse("garbage"), Level::Info);
+        assert!(Level::Off < Level::Info && Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn ts_is_monotone() {
+        let a = ts();
+        let b = ts();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn disabled_event_is_inert() {
+        // No sink, level off: must neither panic nor print.
+        let prev = level();
+        set_level(Level::Off);
+        info("test", "noop", &[("k", 1.0)], format_args!("dropped"));
+        let _s = Span::start("test", "noop");
+        drop(_s);
+        set_level(prev);
+    }
+}

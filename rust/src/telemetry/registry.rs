@@ -1,0 +1,438 @@
+//! Counter/gauge/histogram registry — the always-on half of the
+//! telemetry plane.
+//!
+//! Every metric is a process-wide static of plain relaxed atomics, so
+//! the round hot path pays one `fetch_add` per increment and zero
+//! allocations whether or not a trace sink or stderr logging is
+//! enabled (the ISSUE-6 "telemetry off adds no allocation" contract;
+//! `perf_hotpath`'s telemetry-overhead section pins it within 3%).
+//!
+//! Histograms are fixed-bucket log2: bucket `i` counts observations
+//! whose bit length is `i` (bucket 0 = exactly zero), so a duration
+//! histogram in µs spans ns-to-hours in 64 buckets with no locks and
+//! no dynamic memory. [`Snapshot`] freezes the registry into plain
+//! vectors; [`Snapshot::delta_since`] subtracts a baseline so a driver
+//! run reports only its own activity even though the statics are
+//! shared process-wide.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Monotone counter (relaxed `AtomicU64`).
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (absolute level, not a rate).
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+pub const HIST_BUCKETS: usize = 64;
+
+/// Lock-free log2 histogram: bucket `i` holds observations with bit
+/// length `i` (bucket 0 = zero), i.e. values in `[2^(i-1), 2^i)`.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+}
+
+/// Index of the log2 bucket holding `v`.
+pub fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Lower bound of bucket `i` (the conservative representative value
+/// percentile queries report).
+pub fn bucket_floor(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            buckets: [ZERO; HIST_BUCKETS],
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snap(&self) -> HistSnap {
+        HistSnap {
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Frozen histogram state.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistSnap {
+    pub buckets: Vec<u64>,
+    pub sum: u64,
+}
+
+impl HistSnap {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Mean observed value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / n as f64
+        }
+    }
+
+    /// Approximate percentile: the floor of the bucket holding the
+    /// k-th ordered observation (log2 resolution; 0 when empty).
+    pub fn percentile(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let k = ((p / 100.0) * n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= k {
+                return bucket_floor(i);
+            }
+        }
+        bucket_floor(HIST_BUCKETS - 1)
+    }
+
+    /// Bucket-wise difference vs an earlier snapshot of the same
+    /// histogram.
+    pub fn delta_since(&self, base: &HistSnap) -> HistSnap {
+        HistSnap {
+            buckets: self
+                .buckets
+                .iter()
+                .zip(base.buckets.iter().chain(std::iter::repeat(&0)))
+                .map(|(a, b)| a.saturating_sub(*b))
+                .collect(),
+            sum: self.sum.saturating_sub(base.sum),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("sum_us", Json::num(self.sum as f64)),
+            ("mean_us", Json::num(self.mean())),
+            ("p50_us", Json::num(self.percentile(50.0) as f64)),
+            ("p95_us", Json::num(self.percentile(95.0) as f64)),
+        ])
+    }
+}
+
+/// The process-wide metric registry. Names here are the public
+/// contract: `docs/TELEMETRY.md` documents each, `trace-report` and
+/// the BENCH baselines key off them.
+pub struct Metrics {
+    // ---- coordinator round phases (durations in µs) ----
+    pub phase_collect: Histogram,
+    pub phase_aggregate: Histogram,
+    pub phase_broadcast: Histogram,
+    pub phase_eval_dispatch: Histogram,
+    // ---- round/control plane ----
+    pub rounds_opened: Counter,
+    pub round_msgs: Counter,
+    pub round_stale_dropped: Counter,
+    pub round_dup_dropped: Counter,
+    pub trainer_ready_marks: Counter,
+    pub trainer_dead_marks: Counter,
+    // ---- trainers ----
+    pub train_steps: Counter,
+    pub step_us: Histogram,
+    pub last_loss_bits: Gauge,
+    // ---- evaluator ----
+    pub evals_dispatched: Counter,
+    pub evals_done: Counter,
+    pub eval_inflight: Gauge,
+    // ---- wire protocol ----
+    pub comm_bytes_out: Counter,
+    pub comm_bytes_in: Counter,
+    pub comm_frames_out: Counter,
+    pub comm_frames_in: Counter,
+    pub comm_scratch_reuse: Counter,
+    pub comm_scratch_grow: Counter,
+    // ---- threadpool ----
+    pub pool_sections: Counter,
+    pub pool_tasks: Counter,
+    pub pool_workers: Counter,
+}
+
+impl Metrics {
+    pub const fn new() -> Metrics {
+        Metrics {
+            phase_collect: Histogram::new(),
+            phase_aggregate: Histogram::new(),
+            phase_broadcast: Histogram::new(),
+            phase_eval_dispatch: Histogram::new(),
+            rounds_opened: Counter::new(),
+            round_msgs: Counter::new(),
+            round_stale_dropped: Counter::new(),
+            round_dup_dropped: Counter::new(),
+            trainer_ready_marks: Counter::new(),
+            trainer_dead_marks: Counter::new(),
+            train_steps: Counter::new(),
+            step_us: Histogram::new(),
+            last_loss_bits: Gauge::new(),
+            evals_dispatched: Counter::new(),
+            evals_done: Counter::new(),
+            eval_inflight: Gauge::new(),
+            comm_bytes_out: Counter::new(),
+            comm_bytes_in: Counter::new(),
+            comm_frames_out: Counter::new(),
+            comm_frames_in: Counter::new(),
+            comm_scratch_reuse: Counter::new(),
+            comm_scratch_grow: Counter::new(),
+            pool_sections: Counter::new(),
+            pool_tasks: Counter::new(),
+            pool_workers: Counter::new(),
+        }
+    }
+
+    /// Every counter as `(name, value)` in a fixed order.
+    pub fn counters_list(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("rounds_opened", self.rounds_opened.get()),
+            ("round_msgs", self.round_msgs.get()),
+            ("round_stale_dropped", self.round_stale_dropped.get()),
+            ("round_dup_dropped", self.round_dup_dropped.get()),
+            ("trainer_ready_marks", self.trainer_ready_marks.get()),
+            ("trainer_dead_marks", self.trainer_dead_marks.get()),
+            ("train_steps", self.train_steps.get()),
+            ("evals_dispatched", self.evals_dispatched.get()),
+            ("evals_done", self.evals_done.get()),
+            ("comm_bytes_out", self.comm_bytes_out.get()),
+            ("comm_bytes_in", self.comm_bytes_in.get()),
+            ("comm_frames_out", self.comm_frames_out.get()),
+            ("comm_frames_in", self.comm_frames_in.get()),
+            ("comm_scratch_reuse", self.comm_scratch_reuse.get()),
+            ("comm_scratch_grow", self.comm_scratch_grow.get()),
+            ("pool_sections", self.pool_sections.get()),
+            ("pool_tasks", self.pool_tasks.get()),
+            ("pool_workers", self.pool_workers.get()),
+        ]
+    }
+
+    /// Every gauge as `(name, value)` in a fixed order.
+    pub fn gauges_list(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("eval_inflight", self.eval_inflight.get()),
+            ("last_loss_bits", self.last_loss_bits.get()),
+        ]
+    }
+
+    /// Every histogram as `(name, snapshot)` in a fixed order. The
+    /// four `phase_*` entries use the bare phase names `trace-report`
+    /// folds on.
+    pub fn hists_list(&self) -> Vec<(&'static str, HistSnap)> {
+        vec![
+            ("collect", self.phase_collect.snap()),
+            ("aggregate", self.phase_aggregate.snap()),
+            ("broadcast", self.phase_broadcast.snap()),
+            ("eval_dispatch", self.phase_eval_dispatch.snap()),
+            ("train_step", self.step_us.snap()),
+        ]
+    }
+}
+
+/// The one process-wide registry.
+pub static METRICS: Metrics = Metrics::new();
+
+pub fn metrics() -> &'static Metrics {
+    &METRICS
+}
+
+/// Frozen registry state: counters, gauges and histogram snapshots.
+/// `Default` is the all-zero snapshot (used by hand-built
+/// [`crate::metrics::RunResult`]s in tests).
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub counters: Vec<(&'static str, u64)>,
+    pub gauges: Vec<(&'static str, u64)>,
+    pub hists: Vec<(&'static str, HistSnap)>,
+}
+
+/// Freeze the registry now.
+pub fn snapshot() -> Snapshot {
+    Snapshot {
+        counters: METRICS.counters_list(),
+        gauges: METRICS.gauges_list(),
+        hists: METRICS.hists_list(),
+    }
+}
+
+impl Snapshot {
+    /// Counter value by name (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    /// Gauge value by name (0 when absent).
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    /// Histogram snapshot by name.
+    pub fn hist(&self, name: &str) -> Option<&HistSnap> {
+        self.hists.iter().find(|(n, _)| *n == name).map(|(_, h)| h)
+    }
+
+    /// Activity since `base` (an earlier snapshot of the same
+    /// process): counters and histograms subtract, gauges keep their
+    /// current (absolute) level. This is how a driver run reports only
+    /// its own work off the shared statics.
+    pub fn delta_since(&self, base: &Snapshot) -> Snapshot {
+        Snapshot {
+            counters: self
+                .counters
+                .iter()
+                .map(|(n, v)| (*n, v.saturating_sub(base.counter(n))))
+                .collect(),
+            gauges: self.gauges.clone(),
+            hists: self
+                .hists
+                .iter()
+                .map(|(n, h)| {
+                    let d = match base.hist(n) {
+                        Some(b) => h.delta_since(b),
+                        None => h.clone(),
+                    };
+                    (*n, d)
+                })
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj(vec![]);
+        for (n, v) in &self.counters {
+            counters.set(n, Json::num(*v as f64));
+        }
+        let mut gauges = Json::obj(vec![]);
+        for (n, v) in &self.gauges {
+            gauges.set(n, Json::num(*v as f64));
+        }
+        let mut hists = Json::obj(vec![]);
+        for (n, h) in &self.hists {
+            hists.set(n, h.to_json());
+        }
+        Json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("hists", hists),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_bit_length() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), 63);
+        // floors invert the index (lower bound of each bucket)
+        assert_eq!(bucket_floor(0), 0);
+        assert_eq!(bucket_floor(1), 1);
+        assert_eq!(bucket_floor(11), 1024);
+    }
+
+    #[test]
+    fn histogram_counts_and_percentiles() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 1, 3, 100, 1000] {
+            h.observe(v);
+        }
+        let s = h.snap();
+        assert_eq!(s.count(), 6);
+        assert_eq!(s.sum, 1105);
+        assert!((s.mean() - 1105.0 / 6.0).abs() < 1e-9);
+        // ordered buckets: 0, 1, 1, 3, 100, 1000 → p50 lands in the
+        // bit-length-1 bucket (floor 1), p95 in 1000's bucket.
+        assert_eq!(s.percentile(50.0), 1);
+        assert_eq!(s.percentile(95.0), bucket_floor(bucket_of(1000)));
+        assert_eq!(HistSnap::default().percentile(95.0), 0);
+    }
+
+    #[test]
+    fn snapshot_delta_subtracts_counters_and_hists() {
+        // Use registry statics additively: parallel tests may also
+        // bump them, so assert on deltas of a private baseline.
+        let base = snapshot();
+        METRICS.rounds_opened.add(3);
+        METRICS.phase_collect.observe(7);
+        let d = snapshot().delta_since(&base);
+        assert!(d.counter("rounds_opened") >= 3);
+        assert!(d.hist("collect").unwrap().count() >= 1);
+        assert_eq!(d.counter("no_such_counter"), 0);
+    }
+
+    #[test]
+    fn snapshot_json_has_all_sections() {
+        let j = snapshot().to_json();
+        assert!(j.get("counters").get("rounds_opened").as_f64().is_some());
+        assert!(j.get("gauges").get("eval_inflight").as_f64().is_some());
+        assert!(j.get("hists").get("collect").get("count").as_f64().is_some());
+    }
+}

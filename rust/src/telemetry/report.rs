@@ -1,0 +1,231 @@
+//! Trace folding: JSONL trace file → per-round server phase
+//! breakdown + final counter totals (`rtma trace-report`).
+//!
+//! Doubles as the schema validator: every line must parse as JSON and
+//! carry the required keys, with line-numbered errors otherwise — the
+//! distributed-smoke CI job runs it over the trace it just recorded,
+//! so a malformed line fails the build.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::util::bench::{fmt_secs, Table};
+use crate::util::json::Json;
+
+/// Keys every trace line must carry, whatever its kind.
+pub const REQUIRED_KEYS: [&str; 4] = ["ts", "kind", "comp", "name"];
+
+/// The four server phases `trace-report` folds per round, in emission
+/// order.
+pub const SERVER_PHASES: [&str; 4] =
+    ["collect", "aggregate", "broadcast", "eval_dispatch"];
+
+/// One aggregation round's phase totals (µs) and span counts.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRow {
+    pub round: u64,
+    pub phase_us: [u64; 4],
+    pub phase_n: [u64; 4],
+}
+
+/// A folded trace.
+#[derive(Clone, Debug, Default)]
+pub struct TraceReport {
+    pub lines: usize,
+    pub events: usize,
+    pub spans: usize,
+    pub counter_records: usize,
+    /// Per-round server phase rows, ordered by round.
+    pub rounds: Vec<RoundRow>,
+    pub phase_total_us: [u64; 4],
+    /// Final counter totals (last `counters` record wins per key,
+    /// merged across components).
+    pub counters: BTreeMap<String, f64>,
+    /// Lines per component.
+    pub comps: BTreeMap<String, usize>,
+}
+
+/// Parse + validate a JSONL trace and fold it. Errors carry the
+/// 1-based line number of the first offending line.
+pub fn parse_trace(text: &str) -> Result<TraceReport> {
+    let mut rep = TraceReport::default();
+    let mut by_round: BTreeMap<u64, RoundRow> = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
+        for k in REQUIRED_KEYS {
+            if j.get(k) == &Json::Null {
+                bail!("trace line {}: missing required key {k:?}", i + 1);
+            }
+        }
+        rep.lines += 1;
+        let comp = j.get("comp").as_str().unwrap_or("?").to_string();
+        *rep.comps.entry(comp).or_insert(0) += 1;
+        match j.get("kind").as_str() {
+            Some("event") => rep.events += 1,
+            Some("span") => {
+                rep.spans += 1;
+                let name = j.get("name").as_str();
+                if let Some(p) =
+                    SERVER_PHASES.iter().position(|n| Some(*n) == name)
+                {
+                    let dur =
+                        j.get("dur_us").as_f64().unwrap_or(0.0) as u64;
+                    let round =
+                        j.get("round").as_f64().unwrap_or(0.0) as u64;
+                    let row = by_round
+                        .entry(round)
+                        .or_insert_with(|| RoundRow {
+                            round,
+                            ..RoundRow::default()
+                        });
+                    row.phase_us[p] += dur;
+                    row.phase_n[p] += 1;
+                    rep.phase_total_us[p] += dur;
+                }
+            }
+            Some("counters") => {
+                rep.counter_records += 1;
+                if let Some(m) = j.get("counters").as_obj() {
+                    for (k, v) in m {
+                        if let Some(x) = v.as_f64() {
+                            rep.counters.insert(k.clone(), x);
+                        }
+                    }
+                }
+            }
+            other => {
+                bail!("trace line {}: unknown kind {other:?}", i + 1)
+            }
+        }
+    }
+    rep.rounds = by_round.into_values().collect();
+    Ok(rep)
+}
+
+fn fmt_us(us: u64) -> String {
+    fmt_secs(us as f64 / 1e6)
+}
+
+impl TraceReport {
+    /// The per-round phase-breakdown table (+ a totals row).
+    pub fn phase_table(&self) -> Table {
+        let mut t = Table::new(
+            "Per-round server phase breakdown",
+            &[
+                "Round",
+                "Collect",
+                "Aggregate",
+                "Broadcast",
+                "EvalDispatch",
+                "Total",
+            ],
+        );
+        for row in &self.rounds {
+            let total: u64 = row.phase_us.iter().sum();
+            t.row(vec![
+                row.round.to_string(),
+                fmt_us(row.phase_us[0]),
+                fmt_us(row.phase_us[1]),
+                fmt_us(row.phase_us[2]),
+                fmt_us(row.phase_us[3]),
+                fmt_us(total),
+            ]);
+        }
+        let total: u64 = self.phase_total_us.iter().sum();
+        t.row(vec![
+            "all".to_string(),
+            fmt_us(self.phase_total_us[0]),
+            fmt_us(self.phase_total_us[1]),
+            fmt_us(self.phase_total_us[2]),
+            fmt_us(self.phase_total_us[3]),
+            fmt_us(total),
+        ]);
+        t
+    }
+
+    /// Final counter totals as a table (empty when the trace carried
+    /// no counters record).
+    pub fn counter_table(&self) -> Table {
+        let mut t = Table::new("Final counters", &["Counter", "Value"]);
+        for (k, v) in &self.counters {
+            t.row(vec![k.clone(), format!("{v}")]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(round: u64, name: &str, dur: u64) -> String {
+        format!(
+            "{{\"ts\":0.1,\"kind\":\"span\",\"comp\":\"server\",\
+             \"name\":\"{name}\",\"dur_us\":{dur},\"round\":{round}}}"
+        )
+    }
+
+    #[test]
+    fn folds_phases_per_round() {
+        let mut text = String::new();
+        for r in 1..=2u64 {
+            for (i, p) in SERVER_PHASES.iter().enumerate() {
+                text.push_str(&span(r, p, 100 * (i as u64 + 1)));
+                text.push('\n');
+            }
+        }
+        text.push_str(
+            "{\"ts\":1.0,\"kind\":\"event\",\"lvl\":\"info\",\
+             \"comp\":\"server\",\"name\":\"x\",\"msg\":\"m\"}\n",
+        );
+        text.push_str(
+            "{\"ts\":2.0,\"kind\":\"counters\",\"comp\":\"server\",\
+             \"name\":\"counters\",\"counters\":{\"rounds_opened\":2}}\n",
+        );
+        let rep = parse_trace(&text).unwrap();
+        assert_eq!(rep.lines, 10);
+        assert_eq!(rep.spans, 8);
+        assert_eq!(rep.events, 1);
+        assert_eq!(rep.counter_records, 1);
+        assert_eq!(rep.rounds.len(), 2);
+        assert_eq!(rep.rounds[0].phase_us, [100, 200, 300, 400]);
+        assert_eq!(rep.phase_total_us, [200, 400, 600, 800]);
+        assert_eq!(rep.counters["rounds_opened"], 2.0);
+        let rendered = rep.phase_table().render();
+        assert!(rendered.contains("Round"));
+        assert!(rendered.contains("all"));
+    }
+
+    #[test]
+    fn rejects_unparseable_line_with_number() {
+        let text = format!("{}\nnot json\n", span(1, "collect", 5));
+        let err = parse_trace(&text).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_required_key() {
+        let text = "{\"ts\":0.1,\"kind\":\"span\",\"comp\":\"x\"}\n";
+        let err = parse_trace(text).unwrap_err().to_string();
+        assert!(err.contains("name"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let text = "{\"ts\":0.1,\"kind\":\"blob\",\"comp\":\"x\",\
+                    \"name\":\"y\"}\n";
+        assert!(parse_trace(text).is_err());
+    }
+
+    #[test]
+    fn empty_trace_is_valid_and_empty() {
+        let rep = parse_trace("\n\n").unwrap();
+        assert_eq!(rep.lines, 0);
+        assert!(rep.rounds.is_empty());
+    }
+}

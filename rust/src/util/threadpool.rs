@@ -34,6 +34,10 @@ where
     if n == 0 {
         return Vec::new();
     }
+    let m = crate::telemetry::metrics();
+    m.pool_sections.inc();
+    m.pool_tasks.add(n as u64);
+    m.pool_workers.add(workers.min(n) as u64);
     if workers == 1 || n == 1 {
         return (0..n).map(&f).collect();
     }
@@ -74,6 +78,10 @@ where
         out.len(),
         "window sizes must tile the output buffer exactly"
     );
+    let m = crate::telemetry::metrics();
+    m.pool_sections.inc();
+    m.pool_tasks.add(sizes.len() as u64);
+    m.pool_workers.add(workers.min(sizes.len()) as u64);
     let mut windows: Vec<&mut [T]> = Vec::with_capacity(sizes.len());
     let mut rest = out;
     for &s in sizes {

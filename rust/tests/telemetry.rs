@@ -1,0 +1,294 @@
+//! Telemetry integration tests (no artifacts required).
+//!
+//! 1. **Traced server run** — mock trainers + a mock evaluator drive
+//!    the real `tma_server` loop with a JSONL sink armed; the trace
+//!    must fold into per-round rows carrying all four server phases,
+//!    the final counters record must show the run's rounds, and the
+//!    val curve timestamps (stamped off the shared run epoch) must be
+//!    monotone.
+//! 2. **Comm loopback** — one framed send/recv over a loopback socket
+//!    bumps the wire byte/frame counters by at least the frame size.
+//! 3. **Schema pin** — every line kind (event/span/counters) carries
+//!    the required keys and its kind-specific fields; this is the
+//!    JSONL schema contract `rtma trace-report` validates in CI.
+//!
+//! The trace sink is process-global, so the tests that arm it
+//! serialize on one mutex and use distinct sink files.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use random_tma::comm::{recv, send_wire, Message, WireMsg};
+use random_tma::config::RunConfig;
+use random_tma::coordinator::evaluator::{EvalDone, EvalReq};
+use random_tma::coordinator::kv::{
+    Control, GlobalWeights, TrainerAction, TrainerMsg,
+};
+use random_tma::coordinator::server::tma_server;
+use random_tma::telemetry::{self, report, Level};
+use random_tma::util::json::Json;
+
+/// Serializes the tests that arm the process-global trace sink.
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_trace() -> std::sync::MutexGuard<'static, ()> {
+    TRACE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Mock trainer: the exact control-flow skeleton of `tma_trainer`
+/// (ready mark → initial broadcast → next_action loop), with a cheap
+/// arithmetic body standing in for the engine step.
+fn mock_trainer(
+    id: usize,
+    control: Arc<Control>,
+    rx: mpsc::Receiver<GlobalWeights>,
+    tx: mpsc::Sender<TrainerMsg>,
+) -> u64 {
+    control.mark_ready();
+    let mut w = rx.recv().expect("initial broadcast").to_vec();
+    let mut last_round = 0u64;
+    let mut steps = 0u64;
+    loop {
+        match control.next_action(last_round) {
+            TrainerAction::Train => {
+                steps += 1;
+                for x in w.iter_mut() {
+                    *x += 1e-3;
+                }
+                thread::sleep(Duration::from_millis(2));
+            }
+            TrainerAction::Ship { round } => {
+                tx.send(TrainerMsg {
+                    id,
+                    round,
+                    weights: w.clone(),
+                    loss: 0.5,
+                    steps,
+                })
+                .ok();
+                match rx.recv() {
+                    Ok(g) => w = g.to_vec(),
+                    Err(_) => break,
+                }
+                last_round = round;
+            }
+            TrainerAction::Stop => break,
+        }
+    }
+    steps
+}
+
+#[test]
+fn traced_server_run_produces_foldable_jsonl() {
+    let _guard = lock_trace();
+    telemetry::set_level(Level::Off);
+    let path = std::env::temp_dir().join("rtma_trace_server_test.jsonl");
+    std::fs::remove_file(&path).ok(); // sink appends
+    telemetry::set_trace_path(Some(&path)).unwrap();
+
+    let m = 2usize;
+    let cfg = RunConfig {
+        trainers: m,
+        train_secs: 1.2,
+        agg_secs: 0.25,
+        ..RunConfig::default()
+    };
+    let control = Arc::new(Control::new());
+    let (msg_tx, msg_rx) = mpsc::channel::<TrainerMsg>();
+    let (eval_tx, eval_req_rx) = mpsc::channel::<EvalReq>();
+    let (eval_done_tx, eval_done_rx) = mpsc::channel::<EvalDone>();
+
+    // Mock evaluator: echo every periodic request as MRR 0.5.
+    let evaluator = thread::spawn(move || {
+        while let Ok(req) = eval_req_rx.recv() {
+            if let EvalReq::Periodic { round, t, .. } = req {
+                eval_done_tx
+                    .send(EvalDone { round, t, mrr: 0.5, is_final: false })
+                    .ok();
+            }
+        }
+    });
+
+    let mut txs = Vec::new();
+    let mut trainers = Vec::new();
+    for id in 0..m {
+        let (tx, rx) = mpsc::channel::<GlobalWeights>();
+        txs.push(tx);
+        let control = control.clone();
+        let msg_tx = msg_tx.clone();
+        trainers
+            .push(thread::spawn(move || mock_trainer(id, control, rx, msg_tx)));
+    }
+
+    let outcome = tma_server(
+        &cfg,
+        &control,
+        vec![0.0f32; 64],
+        &txs,
+        &msg_rx,
+        &eval_tx,
+        &eval_done_rx,
+        None,
+    )
+    .expect("server run");
+
+    drop(txs);
+    drop(eval_tx);
+    for t in trainers {
+        assert!(t.join().unwrap() > 0, "mock trainer took no steps");
+    }
+    evaluator.join().unwrap();
+    telemetry::flush();
+    telemetry::set_trace_path(None).unwrap();
+
+    assert!(outcome.rounds >= 2, "only {} rounds", outcome.rounds);
+    // Epoch satellite: every eval timestamp measures from the shared
+    // run epoch, so the curve is monotone in t.
+    assert!(!outcome.val_curve.is_empty(), "no eval points landed");
+    for w in outcome.val_curve.windows(2) {
+        assert!(
+            w[1].t >= w[0].t,
+            "val curve went backwards: {} -> {}",
+            w[0].t,
+            w[1].t
+        );
+    }
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let rep = report::parse_trace(&text).expect("trace must validate");
+    std::fs::remove_file(&path).ok();
+    assert!(rep.spans > 0 && rep.lines > 0);
+    assert!(!rep.rounds.is_empty(), "no per-round span rows folded");
+    assert!(
+        rep.rounds
+            .iter()
+            .any(|r| r.phase_n.iter().all(|&n| n > 0)),
+        "no round carries all four server phases: {:?}",
+        rep.rounds
+    );
+    // The server's end-of-run counters record must be present and
+    // show the rounds this run opened.
+    assert!(rep.counter_records >= 1);
+    assert!(
+        rep.counters.get("rounds_opened").copied().unwrap_or(0.0) >= 1.0,
+        "counters record missing rounds_opened: {:?}",
+        rep.counters
+    );
+}
+
+#[test]
+fn comm_loopback_bumps_wire_counters() {
+    let base = telemetry::snapshot();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let n = 256usize;
+    let sender = thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut scratch = Vec::new();
+        let data = vec![1.0f32; n];
+        send_wire(
+            &mut s,
+            &WireMsg::Broadcast { round: 1, data: &data },
+            &mut scratch,
+        )
+        .unwrap();
+        // Second send through the same scratch: steady-state reuse.
+        send_wire(
+            &mut s,
+            &WireMsg::Broadcast { round: 2, data: &data },
+            &mut scratch,
+        )
+        .unwrap();
+    });
+    let (mut s, _) = listener.accept().unwrap();
+    for want in 1..=2u64 {
+        match recv(&mut s).unwrap() {
+            Message::Broadcast { round, data } => {
+                assert_eq!(round, want);
+                assert_eq!(data.len(), n);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    sender.join().unwrap();
+
+    // Parallel tests may bump these too, so all assertions are >=.
+    let frame = (4 + 1 + 8 + 8 + n * 4) as u64; // len + tag + round + count + payload
+    let d = telemetry::snapshot().delta_since(&base);
+    assert!(d.counter("comm_frames_out") >= 2);
+    assert!(d.counter("comm_frames_in") >= 2);
+    assert!(d.counter("comm_bytes_out") >= frame, "{d:?}");
+    assert!(d.counter("comm_bytes_in") >= frame, "{d:?}");
+    assert!(
+        d.counter("comm_scratch_reuse") >= 1,
+        "second send must reuse scratch capacity: {d:?}"
+    );
+}
+
+#[test]
+fn jsonl_schema_carries_required_and_kind_fields() {
+    let _guard = lock_trace();
+    telemetry::set_level(Level::Off);
+    let path = std::env::temp_dir().join("rtma_trace_schema_test.jsonl");
+    std::fs::remove_file(&path).ok();
+    telemetry::set_trace_path(Some(&path)).unwrap();
+
+    telemetry::info(
+        "test",
+        "pinned_event",
+        &[("answer", 42.0)],
+        format_args!("hello"),
+    );
+    {
+        let _sp = telemetry::Span::start("test", "pinned_span")
+            .round(7)
+            .trainer(3);
+    }
+    telemetry::trace_counters("test");
+    telemetry::flush();
+    telemetry::set_trace_path(None).unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    // Every line validates through the report parser...
+    report::parse_trace(&text).expect("schema-valid trace");
+    // ...and the pinned lines carry their kind-specific fields.
+    let lines: Vec<Json> = text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).expect("line parses"))
+        .collect();
+    for j in &lines {
+        for k in report::REQUIRED_KEYS {
+            assert!(j.get(k) != &Json::Null, "missing {k} in {j}");
+        }
+    }
+    let event = lines
+        .iter()
+        .find(|j| j.get("name").as_str() == Some("pinned_event"))
+        .expect("event line");
+    assert_eq!(event.get("lvl").as_str(), Some("info"));
+    assert_eq!(event.get("msg").as_str(), Some("hello"));
+    assert_eq!(event.get("answer").as_f64(), Some(42.0));
+    let span = lines
+        .iter()
+        .find(|j| j.get("name").as_str() == Some("pinned_span"))
+        .expect("span line");
+    assert!(span.get("dur_us").as_f64().is_some());
+    assert_eq!(span.get("round").as_f64(), Some(7.0));
+    assert_eq!(span.get("trainer").as_f64(), Some(3.0));
+    let counters = lines
+        .iter()
+        .find(|j| j.get("kind").as_str() == Some("counters"))
+        .expect("counters line");
+    assert!(
+        counters
+            .get("counters")
+            .get("rounds_opened")
+            .as_f64()
+            .is_some(),
+        "counters record must nest the registry"
+    );
+}
