@@ -10,12 +10,16 @@
 //! and every broadcast frame is encoded from the shared global slab
 //! through one reused scratch buffer (`comm::send_wire`).
 //!
-//! With compiled artifacts the leader scores the aggregated weights
-//! on the validation split and asserts the MRR is finite. Without
-//! them it still runs the full wire protocol in *protocol-only* mode:
-//! workers get `--no-train` (echoing weights back with a NaN-loss
-//! sentinel the leader's fold ignores) so the CI `distributed-smoke`
-//! job exercises the real TCP round loop on a bare container.
+//! By default the workers *really train* on the native backend (no
+//! artifacts needed — the builtin manifest covers a bare checkout)
+//! and the leader scores the aggregated weights on the validation
+//! split, asserting a finite positive MRR. With `--no-train` the run
+//! degrades to *protocol-only* mode: workers echo weights back with a
+//! NaN-loss sentinel (steps=0) and the leader verifies the echo mean
+//! instead — the CI `distributed-smoke-protocol` job uses this to
+//! isolate the wire protocol from the compute plane. In trained mode
+//! the leader asserts the sentinel never leaks: any worker reporting
+//! steps > 0 with a non-finite loss fails the run.
 //!
 //! Observability: leader round phases are traced as `leader` spans
 //! (collect/aggregate/broadcast — `rtma trace-report` folds them with
@@ -37,7 +41,7 @@ use random_tma::comm::{recv, send, send_wire, Message, WireMsg};
 use random_tma::coordinator::evaluate_mrr;
 use random_tma::gen::load_preset;
 use random_tma::model::{MeanAccum, ModelState};
-use random_tma::runtime::{Engine, Manifest};
+use random_tma::runtime::{load_backend, ComputeBackend, Manifest};
 use random_tma::sampler::eval::EvalBlockConfig;
 use random_tma::sampler::{AdjMode, EvalPlan};
 use random_tma::telemetry::{self, metrics, Span};
@@ -46,23 +50,31 @@ use random_tma::util::cli::Args;
 use random_tma::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::parse(&["quick"]);
+    let args = Args::parse(&["quick", "no-train"]);
     let m = args.usize_or("m", 3);
     let seed = args.u64_or("seed", 17);
     let train_secs = args.f64_or("train-secs", 9.0);
     let agg_secs = args.f64_or("agg-secs", 1.5);
     let dataset = args.str_or("dataset", "citation-sim");
     let variant = args.str_or("variant", "gcn_mlp");
+    let backend_flag = args.str_or("backend", "");
 
-    // Without compiled artifacts the smoke still runs the full wire
-    // protocol — workers echo weights instead of training.
-    let manifest = Manifest::load(&Manifest::default_dir()).ok();
-    if manifest.is_none() {
+    // `--no-train` isolates the wire protocol: workers echo weights
+    // instead of training. The default is a real training run — the
+    // native backend needs no artifacts.
+    let manifest = if args.flag("no-train") {
         println!(
-            "[leader] artifacts missing — protocol-only mode (workers \
-             echo weights; run `make artifacts` for the full smoke)"
+            "[leader] --no-train: protocol-only mode (workers echo \
+             weights)"
         );
-    }
+        None
+    } else {
+        let mut man = Manifest::load_or_builtin();
+        if !backend_flag.is_empty() {
+            man.backend = backend_flag.clone();
+        }
+        Some(man)
+    };
 
     let tel_base = telemetry::snapshot();
     let listener = TcpListener::bind("127.0.0.1:0")?;
@@ -94,6 +106,8 @@ fn main() -> anyhow::Result<()> {
         ]);
         if manifest.is_none() {
             cmd.arg("--no-train");
+        } else if !backend_flag.is_empty() {
+            cmd.args(["--backend", &backend_flag]);
         }
         if let Some(base) = &trace_base {
             cmd.env("RTMA_TRACE", format!("{base}.worker{id}"));
@@ -142,6 +156,7 @@ fn main() -> anyhow::Result<()> {
     let mut round_samples: Vec<f64> = Vec::new();
     let start = Instant::now();
     let mut round = 0u64;
+    let mut grand_steps = 0u64;
     while start.elapsed().as_secs_f64() < train_secs {
         std::thread::sleep(Duration::from_secs_f64(agg_secs));
         round += 1;
@@ -157,7 +172,17 @@ fn main() -> anyhow::Result<()> {
             acc.reset();
             for s in &mut streams {
                 match recv(s)? {
-                    Message::Weights { data, steps, .. } => {
+                    Message::Weights { data, steps, loss, .. } => {
+                        // A NaN loss is the protocol-only "no batch
+                        // yet" sentinel (steps = 0). A worker that DID
+                        // step must report a finite loss — otherwise
+                        // the sentinel (or a diverged model) would
+                        // silently leak into the run's metrics.
+                        anyhow::ensure!(
+                            steps == 0 || loss.is_finite(),
+                            "worker reported {steps} steps with \
+                             non-finite loss {loss}"
+                        );
                         total_steps += steps;
                         acc.add(&data);
                     }
@@ -165,6 +190,7 @@ fn main() -> anyhow::Result<()> {
                 }
             }
         }
+        grand_steps = grand_steps.max(total_steps);
         {
             let _sp = Span::start("leader", "aggregate")
                 .round(round)
@@ -230,12 +256,19 @@ fn main() -> anyhow::Result<()> {
 
     match &manifest {
         Some(man) => {
+            // A trained run that took zero steps is a silent failure
+            // even if the protocol round-tripped.
+            anyhow::ensure!(
+                grand_steps > 0,
+                "trained mode but no worker took a single step"
+            );
             // Score the aggregated weights on the validation split —
             // the distributed run must produce a usable model.
             let preset = load_preset(&dataset, true, 16, 8, seed)?;
-            let engine = Engine::load(man, &variant, "pallas")?;
+            let engine = load_backend(man, &variant, "pallas", "leader")?;
             engine.prepare(&["encode", "score"])?;
-            let adj_mode = AdjMode::for_encoder(&engine.variant.encoder);
+            let adj_mode =
+                AdjMode::for_encoder(&engine.variant().encoder);
             let relations = if adj_mode == AdjMode::Relational {
                 man.dims.relations
             } else {
@@ -254,7 +287,7 @@ fn main() -> anyhow::Result<()> {
                 &preset.split.val_negatives,
                 &eval_cfg,
             );
-            let mrr = evaluate_mrr(&engine, &plan, &w_global)?;
+            let mrr = evaluate_mrr(&*engine, &plan, &w_global)?;
             println!("[leader] final val MRR {mrr:.4}");
             anyhow::ensure!(
                 mrr.is_finite() && mrr > 0.0,

@@ -1,8 +1,14 @@
 //! Perf probe: dataset generation throughput, prep-path (partition →
 //! subgraph) throughput, aggregation round data plane, comm encode
-//! throughput, and per-component latency of the training hot path.
-//! The generation, prep, aggregation and comm sections need no AOT
-//! artifacts; the engine section skips gracefully without them.
+//! throughput, and per-entry latency of the native compute engine.
+//! No section needs AOT artifacts — the engine section times the
+//! native backend on the builtin manifest and persists its numbers as
+//! the `BENCH_engine.json` baseline (CI uploads it next to the
+//! distributed-smoke baseline).
+//!
+//! Positional args filter sections by substring, e.g.
+//! `cargo bench --bench perf_hotpath -- engine` runs only
+//! `engine_path`.
 
 use std::hint::black_box;
 use std::sync::Arc;
@@ -15,20 +21,40 @@ use random_tma::model::{aggregate, AggregateOp, MeanAccum, ModelState};
 use random_tma::partition::{
     partition_stats, partition_stats_with_cuts, parts_of, random_partition,
 };
-use random_tma::runtime::{Engine, Manifest};
+use random_tma::runtime::{Manifest, NativeEngine};
 use random_tma::sampler::{AdjMode, TrainSampler, TrainSamplerConfig};
 use random_tma::telemetry::{self, metrics, Level, Span};
 use random_tma::util::bench::{fmt_secs, time, Timing};
 use random_tma::util::rng::Rng;
 
 fn main() {
-    generation_path();
-    prep_path();
-    prep_feature_store();
-    aggregation_path();
-    comm_encode();
-    telemetry_overhead();
-    engine_path();
+    let filters: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let want = |section: &str| {
+        filters.is_empty()
+            || filters.iter().any(|f| section.contains(f.as_str()))
+    };
+    if want("generation") {
+        generation_path();
+    }
+    if want("prep") {
+        prep_path();
+        prep_feature_store();
+    }
+    if want("aggregation") {
+        aggregation_path();
+    }
+    if want("comm") {
+        comm_encode();
+    }
+    if want("telemetry") {
+        telemetry_overhead();
+    }
+    if want("engine") {
+        engine_path();
+    }
 }
 
 /// Dataset generation at mag-sim scale (120k nodes, avg degree 12):
@@ -315,27 +341,24 @@ fn telemetry_overhead() {
     println!("bench baseline -> {}", path.display());
 }
 
+/// Per-entry latency of the native engine on the builtin manifest —
+/// runs on a bare checkout (no artifacts, no PJRT). Persists the
+/// per-variant sample/step/encode timings as the `engine` bench
+/// baseline (`results/BENCH_engine.json`).
 fn engine_path() {
-    let Ok(manifest) = Manifest::load(&Manifest::default_dir()) else {
-        eprintln!(
-            "skipping engine hot path: artifacts missing \
-             (run `make artifacts`)"
-        );
-        return;
-    };
+    let manifest = Manifest::builtin();
     let g = dcsbm(&DcsbmConfig {
         nodes: 5000, communities: 10, avg_degree: 12.0, homophily: 0.8,
         feat_dim: 64, feature_noise: 0.5, degree_exponent: 0.8, seed: 1,
     });
     let globals: Vec<u32> = (0..g.num_nodes() as u32).collect();
-    for (variant, encoder, impl_name) in [
-        ("gcn_mlp", "gcn", "pallas"), ("gcn_mlp", "gcn", "jnp"),
-        ("sage_mlp", "sage", "pallas"), ("sage_mlp", "sage", "jnp"),
-        ("mlp_mlp", "mlp", "jnp"),
-    ] {
+    let mut bench = BenchBaseline::new("engine");
+    for (variant, encoder) in
+        [("gcn_mlp", "gcn"), ("sage_mlp", "sage"), ("mlp_mlp", "mlp")]
+    {
         let t0 = std::time::Instant::now();
-        let engine = Engine::load(&manifest, variant, impl_name).unwrap();
-        let compile_s = t0.elapsed().as_secs_f64();
+        let engine = NativeEngine::new(&manifest, variant).unwrap();
+        let load_s = t0.elapsed().as_secs_f64();
         let cfg = TrainSamplerConfig {
             block_nodes: manifest.dims.block_nodes,
             block_edges: manifest.dims.block_edges,
@@ -347,22 +370,29 @@ fn engine_path() {
         let mut sampler = TrainSampler::new(g.clone(), globals.clone(), cfg);
         let mut rng = Rng::new(2);
         let mut state = ModelState::init(&engine.variant, &mut rng);
-        let t_sample = time("sample", 2, 10, || {
+        let t_sample = time(&format!("{variant}_sample"), 2, 10, || {
             sampler.next_block(&mut rng);
         });
         let block = sampler.next_block(&mut rng).unwrap().clone();
-        let t_step = time("train_step", 1, 5, || {
+        let t_step = time(&format!("{variant}_train_step"), 1, 5, || {
             engine.train_step(&mut state, &block).unwrap();
         });
-        let t_enc = time("encode", 1, 5, || {
+        let t_enc = time(&format!("{variant}_encode"), 1, 5, || {
             engine.encode(&state.params, &block).unwrap();
         });
         println!(
-            "{variant:10} {impl_name:6} compile {:6.1}s  sample {}  step {}  encode {}",
-            compile_s,
+            "{variant:10} native load {:6.3}s  sample {}  step {}  encode {}",
+            load_s,
             fmt_secs(t_sample.median_s()),
             fmt_secs(t_step.median_s()),
             fmt_secs(t_enc.median_s()),
         );
+        bench.push_timing(&t_sample);
+        bench.push_timing(&t_step);
+        bench.push_timing(&t_enc);
     }
+    let path = bench.write().expect("write engine bench baseline");
+    let back = BenchBaseline::read("engine").expect("read engine baseline");
+    assert!(back == bench, "engine baseline failed schema round-trip");
+    println!("engine bench baseline -> {}", path.display());
 }

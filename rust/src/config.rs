@@ -86,8 +86,15 @@ pub struct RunConfig {
     pub quick: bool,
     /// Model variant from the AOT manifest, e.g. "gcn_mlp".
     pub variant: String,
-    /// Kernel implementation: "pallas" (default) or "jnp".
+    /// Kernel implementation: "pallas" (default) or "jnp". Only
+    /// meaningful on the PJRT backend (picks the artifact flavour).
     pub impl_name: String,
+    /// Compute backend override: "" keeps the manifest/env selection
+    /// (`runtime::manifest::resolve_backend`), "native" or "pjrt"
+    /// force one. This is the `--backend` CLI flag's landing spot and
+    /// the top of the precedence chain (manifest < RTMA_BACKEND <
+    /// --backend) — see docs/ENGINE.md.
+    pub backend: String,
     pub approach: Approach,
     /// Number of trainers M.
     pub trainers: usize,
@@ -121,6 +128,7 @@ impl Default for RunConfig {
             quick: false,
             variant: "gcn_mlp".into(),
             impl_name: "pallas".into(),
+            backend: String::new(),
             approach: Approach::RandomTma,
             trainers: 3,
             train_secs: 30.0,
@@ -165,6 +173,7 @@ impl RunConfig {
             ("quick", Json::Bool(self.quick)),
             ("variant", Json::str(self.variant.clone())),
             ("impl", Json::str(self.impl_name.clone())),
+            ("backend", Json::str(self.backend.clone())),
             ("approach", Json::str(self.approach.name())),
             (
                 "num_clusters",

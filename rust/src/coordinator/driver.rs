@@ -11,6 +11,8 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::runtime::load_backend;
+
 use crate::config::{Approach, RunConfig};
 use crate::gen::{load_preset, Preset};
 use crate::graph::induce_all_except;
@@ -50,8 +52,14 @@ pub fn run_experiment(cfg: &RunConfig) -> Result<RunResult> {
 /// Run on an already-generated dataset (benches reuse one preset
 /// across approaches so every approach sees identical data).
 pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
-    let manifest = Manifest::load(&Manifest::default_dir())
-        .context("artifacts missing — run `make artifacts`")?;
+    // The builtin manifest mirrors `python/compile/model.py`'s layout,
+    // so a bare checkout trains on the native backend with no
+    // artifacts; an `artifacts/manifest.json` (run `make artifacts`)
+    // only matters for the optional PJRT fast path.
+    let mut manifest = Manifest::load_or_builtin();
+    if !cfg.backend.is_empty() {
+        manifest.backend = cfg.backend.clone();
+    }
     let variant = manifest.variant(&cfg.variant)?.clone();
     let dims = manifest.dims;
     let train_graph = &preset.split.train;
@@ -260,11 +268,11 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
     let init = ModelState::init(&variant, &mut Rng::new(cfg.seed ^ 0x1417))
         .params;
 
-    // LLCG corrector (engine compiled on the server thread).
+    // LLCG corrector (backend loaded on the server thread).
     let llcg = match llcg_steps(&cfg.approach) {
         Some(steps) => {
             let engine =
-                crate::runtime::Engine::load(&manifest, &cfg.variant, &cfg.impl_name)?;
+                load_backend(&manifest, &cfg.variant, &cfg.impl_name, "driver")?;
             let globals: Vec<u32> =
                 (0..train_graph.num_nodes() as u32).collect();
             let sampler = TrainSampler::new(

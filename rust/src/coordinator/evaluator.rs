@@ -7,7 +7,7 @@ use std::sync::mpsc;
 
 use anyhow::Result;
 
-use crate::runtime::Engine;
+use crate::runtime::{load_backend, ComputeBackend};
 use crate::sampler::{EvalPlan, Mrr};
 use crate::telemetry::{self, metrics};
 
@@ -18,8 +18,12 @@ use super::kv::GlobalWeights;
 /// Encodes every plan block, gathers target embeddings, scores the
 /// (positive + negatives) candidate schedule in fixed `score_batch`
 /// chunks, and folds ranks into the MRR.
-pub fn evaluate_mrr(engine: &Engine, plan: &EvalPlan, params: &[f32]) -> Result<f64> {
-    let h = engine.dims.hidden;
+pub fn evaluate_mrr(
+    engine: &dyn ComputeBackend,
+    plan: &EvalPlan,
+    params: &[f32],
+) -> Result<f64> {
+    let h = engine.dims().hidden;
     // 1: target embeddings
     let mut table: HashMap<u32, Vec<f32>> =
         HashMap::with_capacity(plan.slot_of.len());
@@ -32,7 +36,7 @@ pub fn evaluate_mrr(engine: &Engine, plan: &EvalPlan, params: &[f32]) -> Result<
     }
 
     // 2: score the pair schedule in S-sized chunks
-    let s_len = engine.dims.score_batch;
+    let s_len = engine.dims().score_batch;
     let mut emb_u = vec![0f32; s_len * h];
     let mut emb_v = vec![0f32; s_len * h];
     let mut rel = vec![0i32; s_len];
@@ -181,17 +185,10 @@ pub fn evaluator_thread(
     rx: mpsc::Receiver<EvalReq>,
     tx: mpsc::Sender<EvalDone>,
 ) {
-    let engine = match Engine::load(&manifest, &variant, &impl_name) {
+    let engine = match load_backend(&manifest, &variant, &impl_name, "evaluator")
+    {
         Ok(e) => e,
-        Err(e) => {
-            telemetry::info(
-                "evaluator",
-                "engine_load_failed",
-                &[],
-                format_args!("engine load failed: {e}"),
-            );
-            return;
-        }
+        Err(_) => return,
     };
     if let Err(e) = engine.prepare(&["encode", "score"]) {
         telemetry::info(
@@ -205,7 +202,7 @@ pub fn evaluator_thread(
     while let Ok(req) = rx.recv() {
         match req {
             EvalReq::Periodic { round, t, params } => {
-                match evaluate_mrr(&engine, &val_plan, &params) {
+                match evaluate_mrr(&*engine, &val_plan, &params) {
                     Ok(mrr) => {
                         metrics().evals_done.inc();
                         let _ = tx.send(EvalDone {
@@ -224,7 +221,7 @@ pub fn evaluator_thread(
                 }
             }
             EvalReq::Final { params } => {
-                match evaluate_mrr(&engine, &test_plan, &params) {
+                match evaluate_mrr(&*engine, &test_plan, &params) {
                     Ok(mrr) => {
                         metrics().evals_done.inc();
                         let _ = tx.send(EvalDone {

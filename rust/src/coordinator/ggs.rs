@@ -21,7 +21,7 @@ use anyhow::Result;
 use crate::config::RunConfig;
 use crate::metrics::{EvalPoint, LossPoint};
 use crate::model::{Adam, MeanAccum};
-use crate::runtime::{Engine, Manifest};
+use crate::runtime::{load_backend, ComputeBackend, Manifest};
 use crate::sampler::TrainSampler;
 use crate::telemetry::{self, metrics, Span};
 use crate::util::rng::Rng;
@@ -59,15 +59,10 @@ pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
     } = spec;
     // Startup failures mark_dead so the server's ready barrier (which
     // counts ready + dead) releases instead of hanging forever.
-    let engine = match Engine::load(&manifest, &variant, &impl_name) {
+    // `load_backend` owns the failure telemetry.
+    let engine = match load_backend(&manifest, &variant, &impl_name, "ggs") {
         Ok(e) => e,
-        Err(e) => {
-            telemetry::info(
-                "ggs",
-                "engine_load_failed",
-                &[("trainer", id as f64)],
-                format_args!("trainer {id}: engine load failed: {e}"),
-            );
+        Err(_) => {
             control.mark_dead();
             return TrainerReport { id, steps: 0, timeline: Vec::new() };
         }
@@ -113,6 +108,21 @@ pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
             }
         };
         match engine.grad_step(&params, block) {
+            // A non-finite loss/gradient poisons the allreduce mean;
+            // drop out instead of shipping it (cf. tma_trainer).
+            Ok((_, loss)) if !loss.is_finite() => {
+                telemetry::info(
+                    "ggs",
+                    "nonfinite_loss",
+                    &[("trainer", id as f64), ("step", steps as f64)],
+                    format_args!(
+                        "trainer {id}: non-finite loss {loss} at step \
+                         {steps}; marking dead"
+                    ),
+                );
+                control.mark_dead();
+                break;
+            }
             Ok((grad, loss)) => {
                 steps += 1;
                 metrics().train_steps.inc();

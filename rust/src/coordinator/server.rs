@@ -40,7 +40,7 @@ use anyhow::Result;
 use crate::config::{Approach, RunConfig};
 use crate::metrics::EvalPoint;
 use crate::model::{aggregate, AggregateOp, MeanAccum, ModelState};
-use crate::runtime::Engine;
+use crate::runtime::{Backend, ComputeBackend};
 use crate::sampler::TrainSampler;
 use crate::telemetry::{self, metrics, Span};
 use crate::util::rng::Rng;
@@ -51,7 +51,7 @@ use super::kv::{Control, GlobalWeights, TrainerMsg};
 /// LLCG's server-side global correction state: an engine + sampler
 /// over the *full* training graph and a persistent optimizer state.
 pub struct LlcgCorrector {
-    pub engine: Engine,
+    pub engine: Backend,
     pub sampler: TrainSampler,
     pub state: ModelState,
     pub steps_per_round: usize,

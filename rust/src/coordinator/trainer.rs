@@ -1,7 +1,8 @@
 //! The TMA trainer loop — Algorithm 2.
 //!
-//! Each trainer thread: loads its own PJRT engine, waits for the
-//! server's initial broadcast, then loops {sample local mini-batch →
+//! Each trainer thread: loads its own compute backend (native by
+//! default; see `runtime::load_backend`), waits for the server's
+//! initial broadcast, then loops {sample local mini-batch →
 //! fused Adam step}. When the server opens an aggregation round it
 //! ships its weights and blocks until the new global weights arrive
 //! (local Adam moments are kept — only weights are synchronised).
@@ -17,7 +18,7 @@ use std::time::Instant;
 
 use crate::metrics::LossPoint;
 use crate::model::ModelState;
-use crate::runtime::{Engine, Manifest};
+use crate::runtime::{load_backend, ComputeBackend, Manifest};
 use crate::sampler::TrainSampler;
 use crate::telemetry::{self, metrics};
 use crate::util::rng::Rng;
@@ -63,21 +64,17 @@ pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
     // Startup failures MUST mark_dead before returning: the server's
     // ready barrier counts ready + dead, so a trainer that can't come
     // up releases the barrier instead of hanging it forever.
-    let engine = match Engine::load(&manifest, &variant, &impl_name) {
+    // `load_backend` owns the failure telemetry (one event + the
+    // `engine_load_fail` counter) for every component.
+    let engine = match load_backend(&manifest, &variant, &impl_name, "trainer") {
         Ok(e) => e,
-        Err(e) => {
-            telemetry::info(
-                "trainer",
-                "engine_load_failed",
-                &[("trainer", id as f64)],
-                format_args!("trainer {id}: engine load failed: {e}"),
-            );
+        Err(_) => {
             control.mark_dead();
             return TrainerReport { id, steps: 0, timeline: Vec::new() };
         }
     };
     let mut rng = Rng::new(seed).fork(id as u64 + 1);
-    let mut state = ModelState::init(&engine.variant, &mut rng); // placeholder
+    let mut state = ModelState::init(engine.variant(), &mut rng);
     // Compile this role's entry point BEFORE signalling ready — the
     // server's training window opens at the ready barrier.
     if let Err(e) = engine.prepare(&["train"]) {
@@ -148,6 +145,24 @@ pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
                 std::thread::sleep(std::time::Duration::from_millis(5));
             }
             Some(block) => match engine.train_step(&mut state, block) {
+                // A non-finite loss means the optimisation diverged
+                // (or the batch is corrupt): stop this trainer instead
+                // of shipping NaN weights into aggregation, where one
+                // bad trainer would poison the global average and the
+                // run's reported metrics.
+                Ok(loss) if !loss.is_finite() => {
+                    telemetry::info(
+                        "trainer",
+                        "nonfinite_loss",
+                        &[("trainer", id as f64), ("step", steps as f64)],
+                        format_args!(
+                            "trainer {id}: non-finite loss {loss} at step \
+                             {steps}; marking dead"
+                        ),
+                    );
+                    control.mark_dead();
+                    break;
+                }
                 Ok(loss) => {
                     last_loss = loss;
                     steps += 1;

@@ -1,7 +1,7 @@
 //! `rtma` — the RandomTMA/SuperTMA distributed GNN training CLI.
 //!
 //! Subcommands:
-//!   doctor                 verify artifacts + PJRT + one smoke step
+//!   doctor                 verify manifest + backend + one smoke step
 //!   datasets               generate/print dataset statistics (Table 1)
 //!   partition              compare partition schemes on one dataset
 //!   train                  run one full experiment (any approach)
@@ -67,12 +67,17 @@ fn print_usage() {
          \x20 --m <trainers>  --train-secs <s>  --agg-secs <ρ>\n\
          \x20 --seed <u64>  --quick  --jnp (use XLA-dot artifacts)\n\
          \n\
+         backend selection (precedence low to high):\n\
+         \x20 manifest `backend` field (default \"native\")\n\
+         \x20 RTMA_BACKEND=native|pjrt  env override\n\
+         \x20 --backend native|pjrt     CLI override (see docs/ENGINE.md)\n\
+         \n\
          telemetry (all subcommands):\n\
          \x20 RTMA_LOG=off|info|debug   stderr event level\n\
          \x20 RTMA_TRACE=<path>         append a JSONL trace\n\
          \x20 rtma trace-report --trace <path>   fold it into tables\n\
          \x20 rtma worker --no-train    protocol-only worker (no \
-         artifacts needed)"
+         engine)"
     );
 }
 
@@ -86,6 +91,7 @@ fn run_config(args: &Args) -> RunConfig {
         } else {
             args.str_or("impl", "pallas")
         },
+        backend: args.str_or("backend", ""),
         trainers: args.usize_or("m", 3),
         train_secs: args.f64_or("train-secs", 30.0),
         agg_secs: args.f64_or("agg-secs", 2.0),
@@ -112,19 +118,25 @@ fn run_config(args: &Args) -> RunConfig {
 
 fn doctor(args: &Args) -> Result<()> {
     use random_tma::model::ModelState;
-    use random_tma::runtime::{Engine, Manifest};
+    use random_tma::runtime::{load_backend, ComputeBackend, Manifest};
     println!("rtma doctor");
-    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let mut manifest = Manifest::load_or_builtin();
+    let backend_flag = args.str_or("backend", "");
+    if !backend_flag.is_empty() {
+        manifest.backend = backend_flag;
+    }
     println!(
-        "  manifest: {} variants, Bn={}, Be={}, H={}",
+        "  manifest: {} variants, Bn={}, Be={}, H={} ({})",
         manifest.variants.len(),
         manifest.dims.block_nodes,
         manifest.dims.block_edges,
-        manifest.dims.hidden
+        manifest.dims.hidden,
+        manifest.dir.display(),
     );
     let variant = args.str_or("variant", "gcn_mlp");
-    let engine = Engine::load(&manifest, &variant, "pallas")?;
-    println!("  engine:   {} compiled (pallas)", engine.describe());
+    let engine = load_backend(&manifest, &variant, "pallas", "doctor")?;
+    engine.prepare(&["train"])?;
+    println!("  engine:   {} ready", engine.describe());
     let preset = load_preset("citation-sim", true, 16, 8, 1)?;
     let s = graph_stats(&preset.graph);
     println!(
@@ -144,7 +156,7 @@ fn doctor(args: &Args) -> Result<()> {
             random_tma::sampler::AdjMode::SelfLoop,
         ),
     );
-    let mut state = ModelState::init(&engine.variant, &mut rng);
+    let mut state = ModelState::init(engine.variant(), &mut rng);
     let block = sampler.next_block(&mut rng).unwrap();
     let loss = engine.train_step(&mut state, block)?;
     println!("  smoke:    one train step OK, loss={loss:.4}");
@@ -287,16 +299,17 @@ fn trace_report(args: &Args) -> Result<()> {
 /// trains on its partition between broadcasts, ships weights back.
 /// Driven by examples/distributed_tcp.rs.
 ///
-/// With `--no-train` — or when the AOT artifacts are absent (CI) — it
-/// degrades to a *protocol-only* worker: it holds the last broadcast
-/// weights and answers every collection with them (NaN loss, 0
-/// steps), exercising the full wire protocol with no engine.
+/// With `--no-train` it degrades to a *protocol-only* worker: it
+/// holds the last broadcast weights and answers every collection with
+/// them (NaN loss, 0 steps), exercising the full wire protocol with
+/// no engine. Real training needs no artifacts either — the native
+/// backend runs on the builtin manifest.
 fn worker(args: &Args) -> Result<()> {
     use random_tma::comm::{
         recv, send, send_wire, train_until_pending, Message, WireMsg,
     };
     use random_tma::model::ModelState;
-    use random_tma::runtime::{Engine, Manifest};
+    use random_tma::runtime::{load_backend, ComputeBackend, Manifest};
     use random_tma::sampler::{AdjMode, TrainSampler, TrainSamplerConfig};
     use std::net::TcpStream;
 
@@ -307,9 +320,7 @@ fn worker(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 17);
     let variant = args.str_or("variant", "gcn_mlp");
 
-    if args.flag("no-train")
-        || Manifest::load(&Manifest::default_dir()).is_err()
-    {
+    if args.flag("no-train") {
         telemetry::info(
             "worker",
             "protocol_only",
@@ -326,7 +337,11 @@ fn worker(args: &Args) -> Result<()> {
 
     // Load local data exactly as the in-process driver would: same
     // seed -> same partition -> this worker takes part `id`.
-    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let mut manifest = Manifest::load_or_builtin();
+    let backend_flag = args.str_or("backend", "");
+    if !backend_flag.is_empty() {
+        manifest.backend = backend_flag;
+    }
     let preset = load_preset(&dataset, true, 16, 8, seed)?;
     let g = &preset.split.train;
     let mut rng = Rng::new(seed ^ 0xC0FFEE);
@@ -346,8 +361,9 @@ fn worker(args: &Args) -> Result<()> {
             AdjMode::SelfLoop,
         ),
     );
-    let engine = Engine::load(&manifest, &variant, "pallas")?;
-    let mut state = ModelState::init(&engine.variant, &mut rng);
+    let engine = load_backend(&manifest, &variant, "pallas", "worker")?;
+    engine.prepare(&["train"])?;
+    let mut state = ModelState::init(engine.variant(), &mut rng);
 
     let mut stream = TcpStream::connect(&addr)?;
     send(&mut stream, &Message::Hello { id: id as u32 })?;

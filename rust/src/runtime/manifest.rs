@@ -109,6 +109,20 @@ pub struct Manifest {
     pub adam: AdamHp,
     pub dims: ModelDims,
     pub variants: BTreeMap<String, VariantSpec>,
+    /// Compute backend this manifest selects ("native" | "pjrt").
+    /// Resolution precedence: manifest JSON field (default "native")
+    /// < `RTMA_BACKEND` env var < `--backend` CLI flag (the CLI layer
+    /// overwrites this field; see `runtime::load_backend`).
+    pub backend: String,
+}
+
+/// Apply the manifest-field < `RTMA_BACKEND` half of the backend
+/// precedence chain (the CLI flag overwrites the result later).
+fn resolve_backend(from_manifest: Option<&str>) -> String {
+    match std::env::var("RTMA_BACKEND") {
+        Ok(v) if !v.is_empty() => v,
+        _ => from_manifest.unwrap_or("native").to_string(),
+    }
 }
 
 fn parse_dtype(s: &str) -> Result<Dtype> {
@@ -223,13 +237,238 @@ impl Manifest {
                 },
             );
         }
-        Ok(Manifest { dir: dir.to_path_buf(), adam, dims, variants })
+        let backend = resolve_backend(j.get("backend").as_str());
+        Ok(Manifest { dir: dir.to_path_buf(), adam, dims, variants, backend })
+    }
+
+    /// The real artifact manifest when one is built, else the
+    /// [`Self::builtin`] layout — every binary entry point uses this,
+    /// so a bare checkout trains on the native backend instead of
+    /// dying on "artifacts missing".
+    pub fn load_or_builtin() -> Manifest {
+        match Manifest::load(&Manifest::default_dir()) {
+            Ok(m) => m,
+            Err(_) => Manifest::builtin(),
+        }
+    }
+
+    /// Synthetic manifest with the paper's default shapes (F=64 H=64
+    /// Bn=256 Be=128 S=2048 R=4, 2 encoder + 2 decoder layers, 4 rgcn
+    /// bases) — byte-for-byte the layout `python/compile/model.py::
+    /// build_layout` emits, minus the HLO artifact files. The native
+    /// backend needs nothing else.
+    pub fn builtin() -> Manifest {
+        Manifest::builtin_sized(
+            ModelDims {
+                feat_dim: 64,
+                hidden: 64,
+                block_nodes: 256,
+                block_edges: 128,
+                score_batch: 2048,
+                relations: 4,
+            },
+            2,
+            2,
+            4,
+        )
+    }
+
+    /// [`Self::builtin`] with explicit dimensions — the unit tests use
+    /// tiny shapes so finite-difference gradient checks stay cheap.
+    pub fn builtin_sized(
+        dims: ModelDims,
+        layers: usize,
+        dec_layers: usize,
+        bases: usize,
+    ) -> Manifest {
+        let adam = AdamHp { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        let mut variants = BTreeMap::new();
+        for (enc, dec) in [
+            ("gcn", "mlp"),
+            ("sage", "mlp"),
+            ("mlp", "mlp"),
+            ("gcn", "distmult"),
+            ("rgcn", "mlp"),
+            ("rgcn", "distmult"),
+        ] {
+            let v = builtin_variant(&dims, enc, dec, layers, dec_layers, bases);
+            variants.insert(v.name.clone(), v);
+        }
+        Manifest {
+            dir: PathBuf::from("builtin"),
+            adam,
+            dims,
+            variants,
+            backend: resolve_backend(None),
+        }
     }
 
     pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
         self.variants
             .get(name)
             .with_context(|| format!("variant {name:?} not in manifest"))
+    }
+}
+
+/// One variant of the builtin layout, mirroring `build_layout` +
+/// `make_entry_points` in `python/compile/model.py` (same tensor
+/// order/naming/init and the same entry argument order — the
+/// cross-language contract, now testable without artifacts).
+fn builtin_variant(
+    dims: &ModelDims,
+    enc: &str,
+    dec: &str,
+    layers: usize,
+    dec_layers: usize,
+    bases: usize,
+) -> VariantSpec {
+    let (f, h, r) = (dims.feat_dim, dims.hidden, dims.relations);
+    let hetero = enc == "rgcn" || dec == "distmult";
+
+    fn push(
+        tensors: &mut Vec<TensorSpec>,
+        off: &mut usize,
+        name: String,
+        shape: Vec<usize>,
+        init: InitKind,
+    ) {
+        let size: usize = shape.iter().product();
+        tensors.push(TensorSpec { name, shape, init, offset: *off });
+        *off += size;
+    }
+
+    let mut tensors = Vec::new();
+    let mut off = 0usize;
+    for l in 0..layers {
+        let d_in = if l == 0 { f } else { h };
+        let p = format!("enc{l}");
+        match enc {
+            "gcn" | "mlp" => {
+                push(&mut tensors, &mut off, format!("{p}.w"), vec![d_in, h], InitKind::Glorot);
+            }
+            "sage" => {
+                push(&mut tensors, &mut off, format!("{p}.w_self"), vec![d_in, h], InitKind::Glorot);
+                push(&mut tensors, &mut off, format!("{p}.w_nbr"), vec![d_in, h], InitKind::Glorot);
+            }
+            "rgcn" => {
+                push(&mut tensors, &mut off, format!("{p}.w_self"), vec![d_in, h], InitKind::Glorot);
+                push(&mut tensors, &mut off, format!("{p}.basis"), vec![bases, d_in, h], InitKind::Glorot);
+                push(&mut tensors, &mut off, format!("{p}.coeff"), vec![r, bases], InitKind::Glorot);
+            }
+            other => unreachable!("builtin encoder {other}"),
+        }
+        push(&mut tensors, &mut off, format!("{p}.b"), vec![h], InitKind::Zeros);
+        push(&mut tensors, &mut off, format!("{p}.ln_scale"), vec![h], InitKind::Ones);
+        push(&mut tensors, &mut off, format!("{p}.ln_bias"), vec![h], InitKind::Zeros);
+        push(&mut tensors, &mut off, format!("{p}.prelu"), vec![1], InitKind::Prelu);
+    }
+    if dec == "mlp" {
+        for l in 0..dec_layers {
+            let d_out = if l == dec_layers - 1 { 1 } else { h };
+            let p = format!("dec{l}");
+            push(&mut tensors, &mut off, format!("{p}.w"), vec![h, d_out], InitKind::Glorot);
+            push(&mut tensors, &mut off, format!("{p}.b"), vec![d_out], InitKind::Zeros);
+            if l != dec_layers - 1 {
+                push(&mut tensors, &mut off, format!("{p}.prelu"), vec![1], InitKind::Prelu);
+            }
+        }
+    } else {
+        push(&mut tensors, &mut off, "dec.rel".to_string(), vec![r, h], InitKind::Normal);
+    }
+    let param_total = off;
+
+    let farg = |name: &str, shape: Vec<usize>| ArgSpec {
+        name: name.to_string(),
+        dtype: Dtype::F32,
+        shape,
+    };
+    let iarg = |name: &str, shape: Vec<usize>| ArgSpec {
+        name: name.to_string(),
+        dtype: Dtype::I32,
+        shape,
+    };
+    let (bn, be, sb) = (dims.block_nodes, dims.block_edges, dims.score_batch);
+    let adj_shape = if enc == "rgcn" { vec![r, bn, bn] } else { vec![bn, bn] };
+    let mut batch = vec![
+        farg("feats", vec![bn, f]),
+        farg("adj", adj_shape.clone()),
+        iarg("pos_u", vec![be]),
+        iarg("pos_v", vec![be]),
+    ];
+    if hetero {
+        batch.push(iarg("rel", vec![be]));
+    }
+    batch.push(iarg("neg_v", vec![be]));
+    batch.push(farg("mask", vec![be]));
+
+    let opt = vec![
+        farg("params", vec![param_total]),
+        farg("adam_m", vec![param_total]),
+        farg("adam_v", vec![param_total]),
+        farg("adam_t", vec![1]),
+    ];
+    let mut entries = BTreeMap::new();
+    entries.insert(
+        "train".to_string(),
+        EntrySpec {
+            args: opt.iter().cloned().chain(batch.iter().cloned()).collect(),
+            outputs: vec![
+                farg("params", vec![param_total]),
+                farg("adam_m", vec![param_total]),
+                farg("adam_v", vec![param_total]),
+                farg("adam_t", vec![1]),
+                farg("loss", vec![]),
+            ],
+            artifacts: BTreeMap::new(),
+        },
+    );
+    entries.insert(
+        "grad".to_string(),
+        EntrySpec {
+            args: std::iter::once(farg("params", vec![param_total]))
+                .chain(batch.iter().cloned())
+                .collect(),
+            outputs: vec![farg("grad", vec![param_total]), farg("loss", vec![])],
+            artifacts: BTreeMap::new(),
+        },
+    );
+    entries.insert(
+        "encode".to_string(),
+        EntrySpec {
+            args: vec![
+                farg("params", vec![param_total]),
+                farg("feats", vec![bn, f]),
+                farg("adj", adj_shape),
+            ],
+            outputs: vec![farg("emb", vec![bn, h])],
+            artifacts: BTreeMap::new(),
+        },
+    );
+    let mut score_args = vec![
+        farg("params", vec![param_total]),
+        farg("emb_u", vec![sb, h]),
+        farg("emb_v", vec![sb, h]),
+    ];
+    if dec == "distmult" {
+        score_args.push(iarg("rel", vec![sb]));
+    }
+    entries.insert(
+        "score".to_string(),
+        EntrySpec {
+            args: score_args,
+            outputs: vec![farg("scores", vec![sb])],
+            artifacts: BTreeMap::new(),
+        },
+    );
+
+    VariantSpec {
+        name: format!("{enc}_{dec}"),
+        encoder: enc.to_string(),
+        decoder: dec.to_string(),
+        hetero,
+        param_total,
+        tensors,
+        entries,
     }
 }
 
@@ -348,6 +587,94 @@ mod tests {
                 .map(|a| a.name.as_str())
                 .collect();
             assert!(names.contains(&"rel"), "{vname}: {names:?}");
+        }
+    }
+
+    // ---- builtin manifest (always-on: no artifacts involved) ----
+
+    #[test]
+    fn builtin_has_all_six_variants_packed() {
+        let m = Manifest::builtin();
+        assert_eq!(m.variants.len(), 6);
+        for v in m.variants.values() {
+            let mut off = 0;
+            for t in &v.tensors {
+                assert_eq!(t.offset, off, "{}.{}", v.name, t.name);
+                off += t.size();
+            }
+            assert_eq!(off, v.param_total, "{}", v.name);
+        }
+        // Hand-summed paper-default gcn_mlp layout: 2 × (64·64 W +
+        // 64 b + 64 ln_scale + 64 ln_bias + 1 prelu) + dec0 (64·64 +
+        // 64 + 1) + dec1 (64 + 1).
+        assert_eq!(m.variant("gcn_mlp").unwrap().param_total, 12804);
+    }
+
+    #[test]
+    fn builtin_entry_args_match_model_py_order() {
+        let m = Manifest::builtin();
+        for v in m.variants.values() {
+            for (ename, e) in &v.entries {
+                assert_eq!(e.args[0].name, "params", "{}/{}", v.name, ename);
+                assert_eq!(e.args[0].shape, vec![v.param_total]);
+            }
+            let train: Vec<_> = v
+                .entry("train")
+                .unwrap()
+                .args
+                .iter()
+                .map(|a| a.name.as_str())
+                .collect();
+            assert_eq!(&train[..4], &["params", "adam_m", "adam_v", "adam_t"]);
+            assert_eq!(
+                train.contains(&"rel"),
+                v.hetero,
+                "{}: {train:?}",
+                v.name
+            );
+            // grad = train minus the Adam state.
+            let grad: Vec<_> = v
+                .entry("grad")
+                .unwrap()
+                .args
+                .iter()
+                .map(|a| a.name.as_str())
+                .collect();
+            assert_eq!(&train[3 + 1..], &grad[1..]);
+        }
+        // rgcn adjacency is per-relation.
+        let v = m.variant("rgcn_distmult").unwrap();
+        let adj = v
+            .entry("train")
+            .unwrap()
+            .args
+            .iter()
+            .find(|a| a.name == "adj")
+            .unwrap();
+        assert_eq!(adj.shape, vec![4, 256, 256]);
+    }
+
+    #[test]
+    fn builtin_defaults_to_native_backend() {
+        if std::env::var("RTMA_BACKEND").is_ok() {
+            return; // respect an explicit override in the environment
+        }
+        assert_eq!(Manifest::builtin().backend, "native");
+        assert_eq!(Manifest::load_or_builtin().backend, "native");
+    }
+
+    #[test]
+    fn builtin_hetero_flags_match_model_py() {
+        let m = Manifest::builtin();
+        for (name, hetero) in [
+            ("gcn_mlp", false),
+            ("sage_mlp", false),
+            ("mlp_mlp", false),
+            ("gcn_distmult", true),
+            ("rgcn_mlp", true),
+            ("rgcn_distmult", true),
+        ] {
+            assert_eq!(m.variant(name).unwrap().hetero, hetero, "{name}");
         }
     }
 }

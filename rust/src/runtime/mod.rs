@@ -1,19 +1,245 @@
-//! PJRT runtime: load AOT artifacts and execute them on the hot path.
+//! The compute runtime: manifest-driven model variants behind a
+//! backend abstraction.
 //!
-//! This is the only boundary to the Python-built world: it reads
-//! `artifacts/manifest.json` ([`manifest`]) and compiles the referenced
-//! HLO-text modules on a PJRT CPU client ([`engine`]). After `Engine`
-//! construction, training/evaluation is pure rust + XLA — Python never
-//! runs on the request path.
+//! [`ComputeBackend`] covers the manifest's entry points (`train` /
+//! `grad` / `encode` / `score`) plus the metadata call sites need
+//! (variant, dims, `hetero`, `param_total`). Two implementations:
 //!
-//! Thread model: the `xla` crate's client/executable types wrap raw
-//! pointers and are not `Send`, so **each trainer thread owns its own
-//! [`engine::Engine`]** (its own client + compiled executables). That
-//! mirrors the paper's per-trainer process model and makes trainers
-//! fully independent between aggregations.
+//! - [`native::NativeEngine`] — the **default**: pure-Rust kernels
+//!   (cache-blocked parallel matmul, CSR aggregation, fused Adam)
+//!   mirroring `python/compile/kernels/ref.py`. Needs no artifacts,
+//!   so every training path runs on a bare checkout.
+//! - `pjrt::Engine` (feature `pjrt`) — the AOT fast path: compiles
+//!   HLO text from `artifacts/` on a PJRT CPU client. Kept as an
+//!   optional differential reference; building it requires the `xla`
+//!   crate toolchain, hence the feature gate.
+//!
+//! Backend selection is one path for the whole binary:
+//! `manifest.backend` (JSON field, default `"native"`) <
+//! `RTMA_BACKEND` env var < `--backend` CLI flag — see
+//! `docs/ENGINE.md`. Every call site goes through [`load_backend`],
+//! which owns the failure telemetry (`engine_load_fail` counter +
+//! one `engine_load_failed` event) so a bad manifest surfaces once
+//! instead of as silent dead trainers.
+//!
+//! Thread model: [`Backend`] is deliberately **not** `Send` — the
+//! PJRT client wraps raw pointers, and the native engine's scratch is
+//! single-threaded by design (its matmuls parallelize internally).
+//! Each trainer thread constructs its own backend, mirroring the
+//! paper's per-trainer process model.
 
-pub mod engine;
+use anyhow::Result;
+
+use crate::model::ModelState;
+use crate::sampler::Block;
+use crate::telemetry;
+
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-pub use engine::Engine;
 pub use manifest::{ArgSpec, EntrySpec, Manifest, ModelDims, TensorSpec, VariantSpec};
+pub use native::NativeEngine;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Engine;
+
+/// The manifest's entry points plus the metadata the coordinator
+/// needs. Implementations must mirror `python/compile/model.py`
+/// exactly — the differential suite (`tests/native_engine.rs`,
+/// `tests/integration.rs`) holds them to it.
+pub trait ComputeBackend {
+    /// Short backend tag for logs/doctor ("native" | "pjrt").
+    fn backend_name(&self) -> &'static str;
+
+    fn variant(&self) -> &VariantSpec;
+
+    fn dims(&self) -> &ModelDims;
+
+    fn hetero(&self) -> bool {
+        self.variant().hetero
+    }
+
+    fn param_total(&self) -> usize {
+        self.variant().param_total
+    }
+
+    /// Role warmup (compiles entries on PJRT; validates them on
+    /// native). Trainers call this before marking ready so the
+    /// server's ΔT_train clock never overlaps startup work.
+    fn prepare(&self, entries: &[&'static str]) -> Result<()>;
+
+    /// One fused Adam step on `state` from `block`; returns the loss
+    /// computed at the pre-step parameters.
+    fn train_step(&self, state: &mut ModelState, block: &Block) -> Result<f32>;
+
+    /// Loss + gradient w.r.t. the flat params (GGS / LLCG correction).
+    fn grad_step(&self, params: &[f32], block: &Block) -> Result<(Vec<f32>, f32)>;
+
+    /// Node embeddings `[Bn, H]` (row-major) for one eval block.
+    fn encode(&self, params: &[f32], block: &Block) -> Result<Vec<f32>>;
+
+    /// Decoder scores for `S` (emb_u, emb_v[, rel]) pairs.
+    fn score(
+        &self,
+        params: &[f32],
+        emb_u: &[f32],
+        emb_v: &[f32],
+        rel: &[i32],
+    ) -> Result<Vec<f32>>;
+
+    /// Quick smoke summary used by `rtma doctor`.
+    fn describe(&self) -> String;
+}
+
+/// A loaded backend. Boxed (not `Send`): one per thread.
+pub type Backend = Box<dyn ComputeBackend>;
+
+impl ComputeBackend for NativeEngine {
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+    fn variant(&self) -> &VariantSpec {
+        &self.variant
+    }
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+    fn prepare(&self, entries: &[&'static str]) -> Result<()> {
+        NativeEngine::prepare(self, entries)
+    }
+    fn train_step(&self, state: &mut ModelState, block: &Block) -> Result<f32> {
+        NativeEngine::train_step(self, state, block)
+    }
+    fn grad_step(&self, params: &[f32], block: &Block) -> Result<(Vec<f32>, f32)> {
+        NativeEngine::grad_step(self, params, block)
+    }
+    fn encode(&self, params: &[f32], block: &Block) -> Result<Vec<f32>> {
+        NativeEngine::encode(self, params, block)
+    }
+    fn score(
+        &self,
+        params: &[f32],
+        emb_u: &[f32],
+        emb_v: &[f32],
+        rel: &[i32],
+    ) -> Result<Vec<f32>> {
+        NativeEngine::score(self, params, emb_u, emb_v, rel)
+    }
+    fn describe(&self) -> String {
+        NativeEngine::describe(self)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl ComputeBackend for pjrt::Engine {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+    fn variant(&self) -> &VariantSpec {
+        &self.variant
+    }
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+    fn prepare(&self, entries: &[&'static str]) -> Result<()> {
+        pjrt::Engine::prepare(self, entries)
+    }
+    fn train_step(&self, state: &mut ModelState, block: &Block) -> Result<f32> {
+        pjrt::Engine::train_step(self, state, block)
+    }
+    fn grad_step(&self, params: &[f32], block: &Block) -> Result<(Vec<f32>, f32)> {
+        pjrt::Engine::grad_step(self, params, block)
+    }
+    fn encode(&self, params: &[f32], block: &Block) -> Result<Vec<f32>> {
+        pjrt::Engine::encode(self, params, block)
+    }
+    fn score(
+        &self,
+        params: &[f32],
+        emb_u: &[f32],
+        emb_v: &[f32],
+        rel: &[i32],
+    ) -> Result<Vec<f32>> {
+        pjrt::Engine::score(self, params, emb_u, emb_v, rel)
+    }
+    fn describe(&self) -> String {
+        pjrt::Engine::describe(self)
+    }
+}
+
+/// Load the backend `manifest.backend` selects, with unified failure
+/// telemetry: every former `match Engine::load { Err => degrade }`
+/// block now calls this, so a bad manifest logs one
+/// `engine_load_failed` event (and bumps `engine_load_fail`) per
+/// component instead of dying silently.
+///
+/// `impl_name` ("pallas" | "jnp") picks the artifact flavour on the
+/// PJRT backend and is ignored by the native one.
+pub fn load_backend(
+    manifest: &Manifest,
+    variant: &str,
+    impl_name: &str,
+    comp: &'static str,
+) -> Result<Backend> {
+    match load_backend_inner(manifest, variant, impl_name) {
+        Ok(engine) => {
+            telemetry::debug(
+                comp,
+                "engine_loaded",
+                &[],
+                format_args!("{}", engine.describe()),
+            );
+            Ok(engine)
+        }
+        Err(e) => {
+            telemetry::metrics().engine_load_fail.inc();
+            telemetry::info(
+                comp,
+                "engine_load_failed",
+                &[],
+                format_args!("backend {:?}: {e:#}", manifest.backend),
+            );
+            Err(e)
+        }
+    }
+}
+
+fn load_backend_inner(
+    manifest: &Manifest,
+    variant: &str,
+    impl_name: &str,
+) -> Result<Backend> {
+    match manifest.backend.as_str() {
+        "native" => {
+            let _ = impl_name;
+            let e = native::NativeEngine::new(manifest, variant)?;
+            telemetry::metrics().engine_native_loads.inc();
+            Ok(Box::new(e))
+        }
+        "pjrt" => {
+            #[cfg(feature = "pjrt")]
+            {
+                let e = pjrt::Engine::load(manifest, variant, impl_name)?;
+                telemetry::metrics().engine_pjrt_loads.inc();
+                Ok(Box::new(e))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let _ = impl_name;
+                anyhow::bail!(
+                    "backend \"pjrt\" requested but this build has no `pjrt` \
+                     feature (rebuild with `--features pjrt`)"
+                )
+            }
+        }
+        other => anyhow::bail!(
+            "unknown backend {other:?} (expected \"native\" or \"pjrt\")"
+        ),
+    }
+}
+
+/// Convenience: mean absolute value (used in tests/diagnostics).
+pub fn mean_abs(xs: &[f32]) -> f64 {
+    crate::util::stats::mean(&xs.iter().map(|x| x.abs() as f64).collect::<Vec<_>>())
+}

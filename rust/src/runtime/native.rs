@@ -1,0 +1,1447 @@
+//! The pure-Rust native backend: the manifest's four entry points
+//! (`train`/`grad`/`encode`/`score`) implemented directly on the flat
+//! parameter vector, with no PJRT artifacts and no external deps.
+//!
+//! The kernels mirror `python/compile/kernels/ref.py` and the model
+//! math in `python/compile/model.py` exactly (same summation order,
+//! same LayerNorm eps, same fused-Adam bias correction), so the
+//! differential suite can compare against both hand-checked golden
+//! values (always-on, `tests/native_engine.rs`) and the PJRT
+//! artifacts within tolerance (artifact-gated, `tests/integration.rs`).
+//!
+//! Design notes:
+//! - **Alloc-free hot loop**: every buffer the forward/backward pass
+//!   touches lives in a per-engine [`Scratch`] sized once at
+//!   construction; `train_step`/`grad_step`/`encode`/`score` allocate
+//!   nothing after warmup except the output vectors their signatures
+//!   return.
+//! - **Cache-blocked parallel matmul**: [`mm`] splits output rows
+//!   across [`crate::util::threadpool::parallel_fill`] windows and
+//!   k-tiles the inner kernel; per output element the adds happen in
+//!   ascending-k order regardless of worker count or tile size, so
+//!   results are bit-deterministic on any machine.
+//! - **CSR aggregation**: dense block adjacency is compacted to CSR
+//!   once per call ([`Csr::from_dense`], reusing its buffers), then
+//!   `adj @ x` and the backward `adjᵀ @ d` are sparse row sweeps —
+//!   sampled blocks are >90% zeros at the paper's fanouts.
+//! - Entry points are wrapped in telemetry spans feeding the
+//!   `engine_*` histograms (see `docs/TELEMETRY.md`).
+
+use std::cell::RefCell;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::model::ModelState;
+use crate::sampler::Block;
+use crate::telemetry::{metrics, Span};
+use crate::util::threadpool;
+
+use super::manifest::{AdamHp, Manifest, ModelDims, TensorSpec, VariantSpec};
+
+// ------------------------------------------------------------------
+// Scalar kernels
+// ------------------------------------------------------------------
+
+/// LayerNorm epsilon (mirrors `model.py::layer_norm`).
+pub const LN_EPS: f32 = 1e-5;
+
+/// Numerically stable `log(1 + e^x)` (mirrors `jax.nn.softplus`).
+pub fn softplus(x: f32) -> f32 {
+    x.max(0.0) + (-x.abs()).exp().ln_1p()
+}
+
+/// Logistic sigmoid.
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+// ------------------------------------------------------------------
+// Dense matmul kernels (ref.py: mm / mm_nt / mm_tn)
+// ------------------------------------------------------------------
+
+/// Below this many multiply-adds a serial pass beats spawning scoped
+/// threads (same budget reasoning as `MeanAccum::PAR_MIN`).
+const MM_PAR_MIN: usize = 1 << 20;
+
+/// k-tile width for the inner kernel: one `b` panel of 64 rows stays
+/// resident in L1/L2 while a row chunk streams over it.
+const MM_KB: usize = 64;
+
+/// `out[m,n] = a[m,k] @ b[k,n]` (row-major). Large products split
+/// output rows across threadpool workers; a dot product is never
+/// split, so any worker count produces identical bits.
+pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "mm: a shape");
+    assert_eq!(b.len(), k * n, "mm: b shape");
+    assert_eq!(out.len(), m * n, "mm: out shape");
+    let workers = threadpool::default_workers();
+    if workers > 1 && m > 1 && m * k * n >= MM_PAR_MIN {
+        let parts = workers.min(m);
+        let rows = threadpool::even_chunks(m, parts);
+        let sizes: Vec<usize> = rows.iter().map(|&r| r * n).collect();
+        let mut starts = Vec::with_capacity(parts);
+        let mut next = 0usize;
+        for &r in &rows {
+            starts.push(next);
+            next += r;
+        }
+        threadpool::parallel_fill(out, &sizes, parts, |i, win| {
+            let r0 = starts[i];
+            let nr = rows[i];
+            mm_rows(&a[r0 * k..(r0 + nr) * k], b, nr, k, n, win);
+        });
+    } else {
+        mm_rows(a, b, m, k, n, out);
+    }
+}
+
+/// Serial k-tiled kernel for a window of output rows. Zero `a`
+/// entries are skipped (sampled blocks are mostly padding), which
+/// never changes the result: per output element the non-skipped adds
+/// still happen in ascending-k order.
+fn mm_rows(a: &[f32], b: &[f32], rows: usize, k: usize, n: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + MM_KB).min(k);
+        for i in 0..rows {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for c in 0..n {
+                    orow[c] += av * brow[c];
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// `out[m,n] = a[m,k] @ bᵀ` with `b` stored `[n,k]` (ref.py `mm_nt`).
+pub fn mm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    mm_nt_acc(a, b, m, k, n, out);
+}
+
+/// Accumulating variant of [`mm_nt`]: `out += a @ bᵀ`.
+pub fn mm_nt_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "mm_nt: a shape");
+    assert_eq!(b.len(), n * k, "mm_nt: b shape");
+    assert_eq!(out.len(), m * n, "mm_nt: out shape");
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for t in 0..k {
+                acc += arow[t] * brow[t];
+            }
+            orow[j] += acc;
+        }
+    }
+}
+
+/// `out[m,n] = aᵀ @ b` with `a` stored `[k,m]` (ref.py `mm_tn`).
+pub fn mm_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    mm_tn_acc(a, b, k, m, n, out);
+}
+
+/// Accumulating variant of [`mm_tn`]: `out += aᵀ @ b`. This is the
+/// weight-gradient kernel (`xᵀ @ d`), so it accumulates into the flat
+/// gradient slice directly.
+pub fn mm_tn_acc(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), k * m, "mm_tn: a shape");
+    assert_eq!(b.len(), k * n, "mm_tn: b shape");
+    assert_eq!(out.len(), m * n, "mm_tn: out shape");
+    for t in 0..k {
+        let arow = &a[t * m..(t + 1) * m];
+        let brow = &b[t * n..(t + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Sparse block adjacency
+// ------------------------------------------------------------------
+
+/// CSR view of one dense block adjacency, rebuilt in place each call
+/// (the index/value buffers are reused, so steady-state rebuilds
+/// allocate nothing).
+#[derive(Default)]
+pub struct Csr {
+    rows: usize,
+    row_ptr: Vec<usize>,
+    cols: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl Csr {
+    pub fn new() -> Csr {
+        Csr::default()
+    }
+
+    /// Number of stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Compact a row-major dense `[rows, cols]` matrix, keeping the
+    /// existing buffers.
+    pub fn from_dense(&mut self, dense: &[f32], rows: usize, cols: usize) {
+        assert_eq!(dense.len(), rows * cols, "csr: dense shape");
+        self.rows = rows;
+        self.row_ptr.clear();
+        self.cols.clear();
+        self.vals.clear();
+        self.row_ptr.push(0);
+        for i in 0..rows {
+            let drow = &dense[i * cols..(i + 1) * cols];
+            for (j, &v) in drow.iter().enumerate() {
+                if v != 0.0 {
+                    self.cols.push(j as u32);
+                    self.vals.push(v);
+                }
+            }
+            self.row_ptr.push(self.vals.len());
+        }
+    }
+
+    /// `out = A @ x` where `x`/`out` are `[rows, h]` row-major.
+    pub fn apply(&self, x: &[f32], h: usize, out: &mut [f32]) {
+        out[..self.rows * h].fill(0.0);
+        self.apply_acc(x, h, out);
+    }
+
+    /// `out += A @ x`.
+    pub fn apply_acc(&self, x: &[f32], h: usize, out: &mut [f32]) {
+        assert!(out.len() >= self.rows * h, "csr: out shape");
+        for i in 0..self.rows {
+            let orow = &mut out[i * h..(i + 1) * h];
+            for e in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let c = self.cols[e] as usize;
+                let v = self.vals[e];
+                let xrow = &x[c * h..(c + 1) * h];
+                for t in 0..h {
+                    orow[t] += v * xrow[t];
+                }
+            }
+        }
+    }
+
+    /// `out += Aᵀ @ d` — the backward scatter, using the same CSR (no
+    /// transposed copy is ever built).
+    pub fn apply_t_acc(&self, d: &[f32], h: usize, out: &mut [f32]) {
+        for i in 0..self.rows {
+            let drow = &d[i * h..(i + 1) * h];
+            for e in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let c = self.cols[e] as usize;
+                let v = self.vals[e];
+                let orow = &mut out[c * h..(c + 1) * h];
+                for t in 0..h {
+                    orow[t] += v * drow[t];
+                }
+            }
+        }
+    }
+}
+
+/// `adj[bn,bn] @ (x[bn,d] @ w[d,h])` — ref.py `gcn_agg`. Allocating
+/// reference form for the golden tests; the engine's forward runs the
+/// same math through its reusable scratch instead.
+pub fn gcn_agg(adj: &[f32], x: &[f32], w: &[f32], bn: usize, d: usize, h: usize) -> Vec<f32> {
+    let mut z = vec![0f32; bn * h];
+    mm(x, w, bn, d, h, &mut z);
+    let mut csr = Csr::new();
+    csr.from_dense(adj, bn, bn);
+    let mut out = vec![0f32; bn * h];
+    csr.apply(&z, h, &mut out);
+    out
+}
+
+/// `(u ⊙ v)[s,h] @ w[h,d]` — ref.py `had_mm` (fused decoder first
+/// layer). Allocating reference form for the golden tests.
+pub fn had_mm(u: &[f32], v: &[f32], w: &[f32], s: usize, h: usize, d: usize) -> Vec<f32> {
+    assert_eq!(u.len(), s * h, "had_mm: u shape");
+    assert_eq!(v.len(), s * h, "had_mm: v shape");
+    let had: Vec<f32> = u.iter().zip(v).map(|(a, b)| a * b).collect();
+    let mut out = vec![0f32; s * d];
+    mm(&had, w, s, h, d, &mut out);
+    out
+}
+
+/// Row-wise LayerNorm over the feature axis (population variance,
+/// `LN_EPS`), also emitting the normalized rows (`xhat`) and the
+/// reciprocal std per row — the backward pass needs both.
+pub fn layer_norm_rows(
+    x: &[f32],
+    rows: usize,
+    h: usize,
+    scale: &[f32],
+    bias: &[f32],
+    xhat: &mut [f32],
+    rstd: &mut [f32],
+    out: &mut [f32],
+) {
+    for i in 0..rows {
+        let row = &x[i * h..(i + 1) * h];
+        let mu = row.iter().sum::<f32>() / h as f32;
+        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / h as f32;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        rstd[i] = rs;
+        for c in 0..h {
+            let xh = (row[c] - mu) * rs;
+            xhat[i * h + c] = xh;
+            out[i * h + c] = xh * scale[c] + bias[c];
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Flat-parameter layout views
+// ------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Enc {
+    Gcn,
+    Sage,
+    Mlp,
+    Rgcn,
+}
+
+/// Offsets of one encoder layer's tensors inside the flat vector
+/// (resolved by name against the manifest layout at construction).
+struct EncLayer {
+    d_in: usize,
+    /// gcn / mlp weight.
+    w: usize,
+    /// sage / rgcn self path (aliases `w` slot usage per encoder).
+    w_self: usize,
+    w_nbr: usize,
+    basis: usize,
+    coeff: usize,
+    bases: usize,
+    b: usize,
+    ln_scale: usize,
+    ln_bias: usize,
+    prelu: usize,
+}
+
+struct DecLayer {
+    w: usize,
+    b: usize,
+    prelu: Option<usize>,
+    d_in: usize,
+    d_out: usize,
+}
+
+enum Dec {
+    Mlp(Vec<DecLayer>),
+    DistMult { rel: usize },
+}
+
+fn tensor<'a>(v: &'a VariantSpec, name: &str) -> Result<&'a TensorSpec> {
+    v.tensors
+        .iter()
+        .find(|t| t.name == name)
+        .with_context(|| format!("layout of {:?} has no tensor {name:?}", v.name))
+}
+
+fn tensor_opt<'a>(v: &'a VariantSpec, name: &str) -> Option<&'a TensorSpec> {
+    v.tensors.iter().find(|t| t.name == name)
+}
+
+// ------------------------------------------------------------------
+// Reusable scratch
+// ------------------------------------------------------------------
+
+/// Per-encoder-layer forward state kept for the backward pass.
+struct LayerScratch {
+    /// `x @ w` staging (pre-aggregation).
+    z: Vec<f32>,
+    /// Pre-LayerNorm activations.
+    pre: Vec<f32>,
+    /// Normalized rows and reciprocal std (LayerNorm backward).
+    xhat: Vec<f32>,
+    rstd: Vec<f32>,
+    /// Post-LayerNorm (pre-PReLU) and post-activation rows.
+    ln_out: Vec<f32>,
+    act: Vec<f32>,
+    /// Materialized per-relation weights `W_r = Σ_b coeff·basis`
+    /// (rgcn only; `[R, d_in, H]` flattened).
+    rgcn_w: Vec<f32>,
+}
+
+/// Per-layer activations of one decoder evaluation (pos pass, neg
+/// pass, or a score batch).
+struct DecPass {
+    e: Vec<Vec<f32>>,
+    a: Vec<Vec<f32>>,
+}
+
+struct Scratch {
+    csr: Vec<Csr>,
+    lay: Vec<LayerScratch>,
+    // Decoder (train/grad): hadamard inputs, activations, logits,
+    // logit grads, hadamard grads for the pos and neg passes.
+    h_pos: Vec<f32>,
+    h_neg: Vec<f32>,
+    pos_pass: DecPass,
+    neg_pass: DecPass,
+    pos_logit: Vec<f32>,
+    neg_logit: Vec<f32>,
+    d_pos: Vec<f32>,
+    d_neg: Vec<f32>,
+    d_hp: Vec<f32>,
+    d_hn: Vec<f32>,
+    // Backward buffers.
+    grad: Vec<f32>,
+    d_emb: Vec<f32>,
+    d_cur: Vec<f32>,
+    d_nxt: Vec<f32>,
+    d_act: Vec<f32>,
+    d_x: Vec<f32>,
+    d_pre: Vec<f32>,
+    d_ln: Vec<f32>,
+    d_xhat: Vec<f32>,
+    d_z: Vec<f32>,
+    dwr: Vec<f32>,
+    // Score entry.
+    score_h: Vec<f32>,
+    score_pass: DecPass,
+}
+
+impl Scratch {
+    fn new(
+        dims: &ModelDims,
+        enc: Enc,
+        enc_layers: &[EncLayer],
+        dec: &Dec,
+        param_total: usize,
+    ) -> Scratch {
+        let (bn, h, be, sb) = (
+            dims.block_nodes,
+            dims.hidden,
+            dims.block_edges,
+            dims.score_batch,
+        );
+        let maxd = enc_layers.iter().map(|l| l.d_in).max().unwrap_or(h).max(h);
+        let n_csr = match enc {
+            Enc::Mlp => 0,
+            Enc::Rgcn => dims.relations,
+            _ => 1,
+        };
+        let lay = enc_layers
+            .iter()
+            .map(|el| LayerScratch {
+                z: vec![0.0; bn * h],
+                pre: vec![0.0; bn * h],
+                xhat: vec![0.0; bn * h],
+                rstd: vec![0.0; bn],
+                ln_out: vec![0.0; bn * h],
+                act: vec![0.0; bn * h],
+                rgcn_w: if enc == Enc::Rgcn {
+                    vec![0.0; dims.relations * el.d_in * h]
+                } else {
+                    Vec::new()
+                },
+            })
+            .collect();
+        let dec_pass = |n: usize| match dec {
+            Dec::Mlp(ls) => DecPass {
+                e: ls.iter().map(|dl| vec![0.0; n * dl.d_out]).collect(),
+                a: ls.iter().map(|dl| vec![0.0; n * dl.d_out]).collect(),
+            },
+            Dec::DistMult { .. } => DecPass { e: Vec::new(), a: Vec::new() },
+        };
+        Scratch {
+            csr: (0..n_csr).map(|_| Csr::new()).collect(),
+            lay,
+            h_pos: vec![0.0; be * h],
+            h_neg: vec![0.0; be * h],
+            pos_pass: dec_pass(be),
+            neg_pass: dec_pass(be),
+            pos_logit: vec![0.0; be],
+            neg_logit: vec![0.0; be],
+            d_pos: vec![0.0; be],
+            d_neg: vec![0.0; be],
+            d_hp: vec![0.0; be * h],
+            d_hn: vec![0.0; be * h],
+            grad: vec![0.0; param_total],
+            d_emb: vec![0.0; bn * h],
+            d_cur: vec![0.0; be * h],
+            d_nxt: vec![0.0; be * h],
+            d_act: vec![0.0; bn * maxd],
+            d_x: vec![0.0; bn * maxd],
+            d_pre: vec![0.0; bn * h],
+            d_ln: vec![0.0; bn * h],
+            d_xhat: vec![0.0; bn * h],
+            d_z: vec![0.0; bn * h],
+            dwr: vec![0.0; maxd * h],
+            score_h: vec![0.0; sb * h],
+            score_pass: dec_pass(sb),
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// The engine
+// ------------------------------------------------------------------
+
+/// One model variant executing natively. Construction resolves every
+/// tensor offset by name against the manifest layout and pre-sizes
+/// the scratch; after that the four entry points are alloc-free
+/// except for their returned vectors.
+pub struct NativeEngine {
+    pub variant: VariantSpec,
+    pub dims: ModelDims,
+    adam: AdamHp,
+    enc: Enc,
+    enc_layers: Vec<EncLayer>,
+    dec: Dec,
+    scratch: RefCell<Scratch>,
+}
+
+impl NativeEngine {
+    pub fn new(manifest: &Manifest, variant: &str) -> Result<NativeEngine> {
+        let v = manifest.variant(variant)?.clone();
+        let dims = manifest.dims;
+        let enc = match v.encoder.as_str() {
+            "gcn" => Enc::Gcn,
+            "sage" => Enc::Sage,
+            "mlp" => Enc::Mlp,
+            "rgcn" => Enc::Rgcn,
+            other => bail!("native backend: unknown encoder {other:?}"),
+        };
+
+        let mut enc_layers = Vec::new();
+        let mut l = 0usize;
+        while let Some(b) = tensor_opt(&v, &format!("enc{l}.b")) {
+            let p = format!("enc{l}");
+            let (d_in, w, w_self, w_nbr, basis, coeff, bases) = match enc {
+                Enc::Gcn | Enc::Mlp => {
+                    let t = tensor(&v, &format!("{p}.w"))?;
+                    (t.shape[0], t.offset, 0, 0, 0, 0, 0)
+                }
+                Enc::Sage => {
+                    let ts = tensor(&v, &format!("{p}.w_self"))?;
+                    let tn = tensor(&v, &format!("{p}.w_nbr"))?;
+                    (ts.shape[0], 0, ts.offset, tn.offset, 0, 0, 0)
+                }
+                Enc::Rgcn => {
+                    let ts = tensor(&v, &format!("{p}.w_self"))?;
+                    let tb = tensor(&v, &format!("{p}.basis"))?;
+                    let tc = tensor(&v, &format!("{p}.coeff"))?;
+                    ensure!(
+                        tc.shape == vec![dims.relations, tb.shape[0]],
+                        "rgcn coeff shape {:?}",
+                        tc.shape
+                    );
+                    (ts.shape[0], 0, ts.offset, 0, tb.offset, tc.offset, tb.shape[0])
+                }
+            };
+            enc_layers.push(EncLayer {
+                d_in,
+                w,
+                w_self,
+                w_nbr,
+                basis,
+                coeff,
+                bases,
+                b: b.offset,
+                ln_scale: tensor(&v, &format!("{p}.ln_scale"))?.offset,
+                ln_bias: tensor(&v, &format!("{p}.ln_bias"))?.offset,
+                prelu: tensor(&v, &format!("{p}.prelu"))?.offset,
+            });
+            l += 1;
+        }
+        ensure!(!enc_layers.is_empty(), "layout of {variant:?} has no encoder layers");
+
+        let dec = match v.decoder.as_str() {
+            "distmult" => {
+                let t = tensor(&v, "dec.rel")?;
+                ensure!(
+                    t.shape == vec![dims.relations, dims.hidden],
+                    "dec.rel shape {:?}",
+                    t.shape
+                );
+                Dec::DistMult { rel: t.offset }
+            }
+            "mlp" => {
+                let mut layers = Vec::new();
+                let mut dl = 0usize;
+                while let Some(w) = tensor_opt(&v, &format!("dec{dl}.w")) {
+                    layers.push(DecLayer {
+                        w: w.offset,
+                        b: tensor(&v, &format!("dec{dl}.b"))?.offset,
+                        prelu: tensor_opt(&v, &format!("dec{dl}.prelu")).map(|t| t.offset),
+                        d_in: w.shape[0],
+                        d_out: w.shape[1],
+                    });
+                    dl += 1;
+                }
+                ensure!(!layers.is_empty(), "layout of {variant:?} has no decoder layers");
+                ensure!(
+                    layers.last().unwrap().d_out == 1,
+                    "mlp decoder must end in a single logit"
+                );
+                ensure!(
+                    layers.last().unwrap().prelu.is_none(),
+                    "mlp decoder last layer must be linear"
+                );
+                Dec::Mlp(layers)
+            }
+            other => bail!("native backend: unknown decoder {other:?}"),
+        };
+
+        let scratch = Scratch::new(&dims, enc, &enc_layers, &dec, v.param_total);
+        Ok(NativeEngine {
+            variant: v,
+            dims,
+            adam: manifest.adam,
+            enc,
+            enc_layers,
+            dec,
+            scratch: RefCell::new(scratch),
+        })
+    }
+
+    /// Entry-point warmup parity with the PJRT engine: nothing to
+    /// compile here, the call just validates the entry names exist.
+    pub fn prepare(&self, entries: &[&'static str]) -> Result<()> {
+        for e in entries {
+            self.variant.entry(e)?;
+        }
+        Ok(())
+    }
+
+    pub fn hetero(&self) -> bool {
+        self.variant.hetero
+    }
+
+    pub fn param_total(&self) -> usize {
+        self.variant.param_total
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{} (native) P={} enc_layers={}",
+            self.variant.name,
+            self.variant.param_total,
+            self.enc_layers.len()
+        )
+    }
+
+    // --------------------------------------------------------------
+    // Forward
+    // --------------------------------------------------------------
+
+    /// Encoder forward over one padded block, filling each layer's
+    /// scratch (kept for the backward pass).
+    fn forward(&self, s: &mut Scratch, params: &[f32], feats: &[f32], adj: &[f32]) -> Result<()> {
+        let (bn, h, r_cnt) = (self.dims.block_nodes, self.dims.hidden, self.dims.relations);
+        ensure!(
+            params.len() == self.variant.param_total,
+            "params len {} != {}",
+            params.len(),
+            self.variant.param_total
+        );
+        ensure!(
+            feats.len() == bn * self.enc_layers[0].d_in,
+            "feats len {} != {}x{}",
+            feats.len(),
+            bn,
+            self.enc_layers[0].d_in
+        );
+        match self.enc {
+            Enc::Mlp => {}
+            Enc::Rgcn => {
+                ensure!(adj.len() == r_cnt * bn * bn, "adjr len {}", adj.len());
+                for r in 0..r_cnt {
+                    s.csr[r].from_dense(&adj[r * bn * bn..(r + 1) * bn * bn], bn, bn);
+                }
+            }
+            _ => {
+                ensure!(adj.len() == bn * bn, "adj len {}", adj.len());
+                s.csr[0].from_dense(&adj[..bn * bn], bn, bn);
+            }
+        }
+
+        for l in 0..self.enc_layers.len() {
+            let spec = &self.enc_layers[l];
+            let d_in = spec.d_in;
+            let (done, rest) = s.lay.split_at_mut(l);
+            let lay = &mut rest[0];
+            let x: &[f32] = if l == 0 { feats } else { &done[l - 1].act };
+            match self.enc {
+                Enc::Gcn => {
+                    mm(x, &params[spec.w..spec.w + d_in * h], bn, d_in, h, &mut lay.z);
+                    s.csr[0].apply(&lay.z, h, &mut lay.pre);
+                }
+                Enc::Sage => {
+                    mm(
+                        x,
+                        &params[spec.w_self..spec.w_self + d_in * h],
+                        bn,
+                        d_in,
+                        h,
+                        &mut lay.pre,
+                    );
+                    mm(
+                        x,
+                        &params[spec.w_nbr..spec.w_nbr + d_in * h],
+                        bn,
+                        d_in,
+                        h,
+                        &mut lay.z,
+                    );
+                    s.csr[0].apply_acc(&lay.z, h, &mut lay.pre);
+                }
+                Enc::Mlp => {
+                    mm(x, &params[spec.w..spec.w + d_in * h], bn, d_in, h, &mut lay.pre);
+                }
+                Enc::Rgcn => {
+                    mm(
+                        x,
+                        &params[spec.w_self..spec.w_self + d_in * h],
+                        bn,
+                        d_in,
+                        h,
+                        &mut lay.pre,
+                    );
+                    // W_r = Σ_b coeff[r,b] · basis[b], materialized once
+                    // per layer and kept for the backward pass.
+                    for r in 0..r_cnt {
+                        let wr = &mut lay.rgcn_w[r * d_in * h..(r + 1) * d_in * h];
+                        wr.fill(0.0);
+                        for bi in 0..spec.bases {
+                            let c = params[spec.coeff + r * spec.bases + bi];
+                            if c == 0.0 {
+                                continue;
+                            }
+                            let basis =
+                                &params[spec.basis + bi * d_in * h..spec.basis + (bi + 1) * d_in * h];
+                            for (o, &bv) in wr.iter_mut().zip(basis) {
+                                *o += c * bv;
+                            }
+                        }
+                    }
+                    for r in 0..r_cnt {
+                        mm(
+                            x,
+                            &lay.rgcn_w[r * d_in * h..(r + 1) * d_in * h],
+                            bn,
+                            d_in,
+                            h,
+                            &mut lay.z,
+                        );
+                        s.csr[r].apply_acc(&lay.z, h, &mut lay.pre);
+                    }
+                }
+            }
+            for i in 0..bn {
+                for c in 0..h {
+                    lay.pre[i * h + c] += params[spec.b + c];
+                }
+            }
+            layer_norm_rows(
+                &lay.pre,
+                bn,
+                h,
+                &params[spec.ln_scale..spec.ln_scale + h],
+                &params[spec.ln_bias..spec.ln_bias + h],
+                &mut lay.xhat,
+                &mut lay.rstd,
+                &mut lay.ln_out,
+            );
+            let a = params[spec.prelu];
+            for t in 0..bn * h {
+                let v = lay.ln_out[t];
+                lay.act[t] = if v >= 0.0 { v } else { a * v };
+            }
+        }
+        Ok(())
+    }
+
+    /// MLP-decoder forward for `n` pre-gathered hadamard rows,
+    /// keeping each layer's pre/post activations in `pass`.
+    fn decode_mlp_forward(
+        &self,
+        params: &[f32],
+        h_in: &[f32],
+        n: usize,
+        pass: &mut DecPass,
+        logit: &mut [f32],
+    ) {
+        let layers = match &self.dec {
+            Dec::Mlp(ls) => ls,
+            Dec::DistMult { .. } => unreachable!("mlp forward on distmult"),
+        };
+        for (li, dl) in layers.iter().enumerate() {
+            {
+                let x: &[f32] = if li == 0 { h_in } else { &pass.a[li - 1] };
+                let e = &mut pass.e[li];
+                mm(x, &params[dl.w..dl.w + dl.d_in * dl.d_out], n, dl.d_in, dl.d_out, e);
+                for t in 0..n {
+                    for c in 0..dl.d_out {
+                        e[t * dl.d_out + c] += params[dl.b + c];
+                    }
+                }
+            }
+            let e = &pass.e[li];
+            let a = &mut pass.a[li];
+            if let Some(p) = dl.prelu {
+                let slope = params[p];
+                for (av, &ev) in a.iter_mut().zip(e.iter()) {
+                    *av = if ev >= 0.0 { ev } else { slope * ev };
+                }
+            } else {
+                a.copy_from_slice(e);
+            }
+        }
+        // Last layer is [n, 1]: the logit column.
+        logit[..n].copy_from_slice(&pass.a[layers.len() - 1][..n]);
+    }
+
+    /// MLP-decoder backward for one pass: given `d logit`, accumulate
+    /// decoder weight grads into `grad` and emit the gradient w.r.t.
+    /// the hadamard input rows into `d_h_out`.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_mlp_backward(
+        &self,
+        params: &[f32],
+        h_in: &[f32],
+        n: usize,
+        pass: &DecPass,
+        dlogit: &[f32],
+        grad: &mut [f32],
+        d_cur: &mut [f32],
+        d_nxt: &mut [f32],
+        d_h_out: &mut [f32],
+    ) {
+        let layers = match &self.dec {
+            Dec::Mlp(ls) => ls,
+            Dec::DistMult { .. } => unreachable!("mlp backward on distmult"),
+        };
+        let nl = layers.len();
+        d_cur[..n].copy_from_slice(&dlogit[..n]);
+        for li in (0..nl).rev() {
+            let dl = &layers[li];
+            let (din, dout) = (dl.d_in, dl.d_out);
+            // d_cur holds d(post-activation) for this layer.
+            if let Some(p) = dl.prelu {
+                let slope = params[p];
+                let e = &pass.e[li];
+                let mut da = 0f32;
+                for t in 0..n * dout {
+                    let ev = e[t];
+                    if ev < 0.0 {
+                        da += d_cur[t] * ev;
+                        d_cur[t] *= slope;
+                    }
+                }
+                grad[p] += da;
+            }
+            // d_cur now holds d(pre-activation) = d_e.
+            let a_prev: &[f32] = if li == 0 { h_in } else { &pass.a[li - 1] };
+            mm_tn_acc(
+                &a_prev[..n * din],
+                &d_cur[..n * dout],
+                n,
+                din,
+                dout,
+                &mut grad[dl.w..dl.w + din * dout],
+            );
+            for t in 0..n {
+                for c in 0..dout {
+                    grad[dl.b + c] += d_cur[t * dout + c];
+                }
+            }
+            mm_nt(
+                &d_cur[..n * dout],
+                &params[dl.w..dl.w + din * dout],
+                n,
+                dout,
+                din,
+                &mut d_nxt[..n * din],
+            );
+            if li > 0 {
+                d_cur[..n * din].copy_from_slice(&d_nxt[..n * din]);
+            } else {
+                d_h_out[..n * din].copy_from_slice(&d_nxt[..n * din]);
+            }
+        }
+    }
+
+    // --------------------------------------------------------------
+    // Loss + gradient
+    // --------------------------------------------------------------
+
+    /// Forward + backward over one training block; leaves dL/dparams
+    /// in `s.grad` and returns the masked BCE loss (mirrors
+    /// `model.py::link_loss` exactly).
+    fn grad_into(&self, s: &mut Scratch, params: &[f32], block: &Block) -> Result<f32> {
+        let (bn, h, be) = (self.dims.block_nodes, self.dims.hidden, self.dims.block_edges);
+        let nl = self.enc_layers.len();
+        ensure!(block.pos_u.len() == be, "pos_u len {}", block.pos_u.len());
+        ensure!(block.pos_v.len() == be, "pos_v len {}", block.pos_v.len());
+        ensure!(block.neg_v.len() == be, "neg_v len {}", block.neg_v.len());
+        ensure!(block.mask.len() == be, "mask len {}", block.mask.len());
+        for j in 0..be {
+            for (name, v) in [
+                ("pos_u", block.pos_u[j]),
+                ("pos_v", block.pos_v[j]),
+                ("neg_v", block.neg_v[j]),
+            ] {
+                ensure!(
+                    v >= 0 && (v as usize) < bn,
+                    "{name}[{j}] = {v} out of block range {bn}"
+                );
+            }
+        }
+        let rel_off = match &self.dec {
+            Dec::DistMult { rel } => {
+                ensure!(block.rel.len() == be, "rel len {}", block.rel.len());
+                for (j, &r) in block.rel.iter().enumerate() {
+                    ensure!(
+                        r >= 0 && (r as usize) < self.dims.relations,
+                        "rel[{j}] = {r} out of range"
+                    );
+                }
+                Some(*rel)
+            }
+            Dec::Mlp(_) => None,
+        };
+
+        self.forward(s, params, &block.feats, &block.adj)?;
+
+        // Decoder forward: pos pair (u, v) and neg pair (u, neg_v).
+        match rel_off {
+            None => {
+                {
+                    let emb = &s.lay[nl - 1].act;
+                    for j in 0..be {
+                        let u = block.pos_u[j] as usize * h;
+                        let v = block.pos_v[j] as usize * h;
+                        let nv = block.neg_v[j] as usize * h;
+                        for c in 0..h {
+                            s.h_pos[j * h + c] = emb[u + c] * emb[v + c];
+                            s.h_neg[j * h + c] = emb[u + c] * emb[nv + c];
+                        }
+                    }
+                }
+                self.decode_mlp_forward(params, &s.h_pos, be, &mut s.pos_pass, &mut s.pos_logit);
+                self.decode_mlp_forward(params, &s.h_neg, be, &mut s.neg_pass, &mut s.neg_logit);
+            }
+            Some(rel) => {
+                let emb = &s.lay[nl - 1].act;
+                for j in 0..be {
+                    let u = block.pos_u[j] as usize * h;
+                    let v = block.pos_v[j] as usize * h;
+                    let nv = block.neg_v[j] as usize * h;
+                    let re = rel + block.rel[j] as usize * h;
+                    let mut p = 0f32;
+                    let mut n = 0f32;
+                    for c in 0..h {
+                        let ur = emb[u + c] * params[re + c];
+                        p += ur * emb[v + c];
+                        n += ur * emb[nv + c];
+                    }
+                    s.pos_logit[j] = p;
+                    s.neg_logit[j] = n;
+                }
+            }
+        }
+
+        // Masked BCE loss and logit gradients.
+        let msum: f32 = block.mask.iter().sum();
+        let denom = msum.max(1.0);
+        let mut loss = 0f32;
+        for j in 0..be {
+            let (p, n) = (s.pos_logit[j], s.neg_logit[j]);
+            loss += (softplus(-p) + softplus(n)) * block.mask[j];
+            s.d_pos[j] = -sigmoid(-p) * block.mask[j] / denom;
+            s.d_neg[j] = sigmoid(n) * block.mask[j] / denom;
+        }
+        loss /= denom;
+
+        s.grad.fill(0.0);
+        s.d_emb.fill(0.0);
+
+        // Decoder backward -> d_emb scatter.
+        match rel_off {
+            None => {
+                self.decode_mlp_backward(
+                    params, &s.h_pos, be, &s.pos_pass, &s.d_pos, &mut s.grad, &mut s.d_cur,
+                    &mut s.d_nxt, &mut s.d_hp,
+                );
+                self.decode_mlp_backward(
+                    params, &s.h_neg, be, &s.neg_pass, &s.d_neg, &mut s.grad, &mut s.d_cur,
+                    &mut s.d_nxt, &mut s.d_hn,
+                );
+                let emb = &s.lay[nl - 1].act;
+                for j in 0..be {
+                    let u = block.pos_u[j] as usize * h;
+                    let v = block.pos_v[j] as usize * h;
+                    let nv = block.neg_v[j] as usize * h;
+                    for c in 0..h {
+                        // d(hadamard) flows to both endpoints of each pair.
+                        s.d_emb[u + c] +=
+                            s.d_hp[j * h + c] * emb[v + c] + s.d_hn[j * h + c] * emb[nv + c];
+                        s.d_emb[v + c] += s.d_hp[j * h + c] * emb[u + c];
+                        s.d_emb[nv + c] += s.d_hn[j * h + c] * emb[u + c];
+                    }
+                }
+            }
+            Some(rel) => {
+                let emb = &s.lay[nl - 1].act;
+                for j in 0..be {
+                    let u = block.pos_u[j] as usize * h;
+                    let v = block.pos_v[j] as usize * h;
+                    let nv = block.neg_v[j] as usize * h;
+                    let re = rel + block.rel[j] as usize * h;
+                    let (dp, dn) = (s.d_pos[j], s.d_neg[j]);
+                    for c in 0..h {
+                        let rw = params[re + c];
+                        let (eu, ev, en) = (emb[u + c], emb[v + c], emb[nv + c]);
+                        s.d_emb[u + c] += rw * (dp * ev + dn * en);
+                        s.d_emb[v + c] += dp * rw * eu;
+                        s.d_emb[nv + c] += dn * rw * eu;
+                        s.grad[re + c] += eu * (dp * ev + dn * en);
+                    }
+                }
+            }
+        }
+
+        // Encoder backward, layer by layer.
+        s.d_act[..bn * h].copy_from_slice(&s.d_emb);
+        for l in (0..nl).rev() {
+            let spec = &self.enc_layers[l];
+            let d_in = spec.d_in;
+            {
+                let lay = &s.lay[l];
+                // PReLU backward.
+                let a = params[spec.prelu];
+                let mut da = 0f32;
+                for t in 0..bn * h {
+                    let lo = lay.ln_out[t];
+                    let d = s.d_act[t];
+                    if lo >= 0.0 {
+                        s.d_ln[t] = d;
+                    } else {
+                        s.d_ln[t] = d * a;
+                        da += d * lo;
+                    }
+                }
+                s.grad[spec.prelu] += da;
+                // LayerNorm backward (per row, population variance).
+                for i in 0..bn {
+                    let rs = lay.rstd[i];
+                    let xh = &lay.xhat[i * h..(i + 1) * h];
+                    let mut sum1 = 0f32;
+                    let mut sum2 = 0f32;
+                    for c in 0..h {
+                        let dln = s.d_ln[i * h + c];
+                        let dxh = dln * params[spec.ln_scale + c];
+                        s.d_xhat[i * h + c] = dxh;
+                        sum1 += dxh;
+                        sum2 += dxh * xh[c];
+                        s.grad[spec.ln_scale + c] += dln * xh[c];
+                        s.grad[spec.ln_bias + c] += dln;
+                    }
+                    let hf = h as f32;
+                    for c in 0..h {
+                        s.d_pre[i * h + c] =
+                            rs / hf * (hf * s.d_xhat[i * h + c] - sum1 - xh[c] * sum2);
+                    }
+                }
+                // Bias gradient.
+                for t in 0..bn {
+                    for c in 0..h {
+                        s.grad[spec.b + c] += s.d_pre[t * h + c];
+                    }
+                }
+            }
+            let x: &[f32] = if l == 0 { &block.feats } else { &s.lay[l - 1].act };
+            match self.enc {
+                Enc::Gcn => {
+                    s.d_z[..bn * h].fill(0.0);
+                    s.csr[0].apply_t_acc(&s.d_pre, h, &mut s.d_z);
+                    mm_tn_acc(x, &s.d_z, bn, d_in, h, &mut s.grad[spec.w..spec.w + d_in * h]);
+                    if l > 0 {
+                        mm_nt(
+                            &s.d_z,
+                            &params[spec.w..spec.w + d_in * h],
+                            bn,
+                            h,
+                            d_in,
+                            &mut s.d_x[..bn * d_in],
+                        );
+                    }
+                }
+                Enc::Sage => {
+                    mm_tn_acc(
+                        x,
+                        &s.d_pre,
+                        bn,
+                        d_in,
+                        h,
+                        &mut s.grad[spec.w_self..spec.w_self + d_in * h],
+                    );
+                    s.d_z[..bn * h].fill(0.0);
+                    s.csr[0].apply_t_acc(&s.d_pre, h, &mut s.d_z);
+                    mm_tn_acc(
+                        x,
+                        &s.d_z,
+                        bn,
+                        d_in,
+                        h,
+                        &mut s.grad[spec.w_nbr..spec.w_nbr + d_in * h],
+                    );
+                    if l > 0 {
+                        mm_nt(
+                            &s.d_pre,
+                            &params[spec.w_self..spec.w_self + d_in * h],
+                            bn,
+                            h,
+                            d_in,
+                            &mut s.d_x[..bn * d_in],
+                        );
+                        mm_nt_acc(
+                            &s.d_z,
+                            &params[spec.w_nbr..spec.w_nbr + d_in * h],
+                            bn,
+                            h,
+                            d_in,
+                            &mut s.d_x[..bn * d_in],
+                        );
+                    }
+                }
+                Enc::Mlp => {
+                    mm_tn_acc(x, &s.d_pre, bn, d_in, h, &mut s.grad[spec.w..spec.w + d_in * h]);
+                    if l > 0 {
+                        mm_nt(
+                            &s.d_pre,
+                            &params[spec.w..spec.w + d_in * h],
+                            bn,
+                            h,
+                            d_in,
+                            &mut s.d_x[..bn * d_in],
+                        );
+                    }
+                }
+                Enc::Rgcn => {
+                    mm_tn_acc(
+                        x,
+                        &s.d_pre,
+                        bn,
+                        d_in,
+                        h,
+                        &mut s.grad[spec.w_self..spec.w_self + d_in * h],
+                    );
+                    if l > 0 {
+                        mm_nt(
+                            &s.d_pre,
+                            &params[spec.w_self..spec.w_self + d_in * h],
+                            bn,
+                            h,
+                            d_in,
+                            &mut s.d_x[..bn * d_in],
+                        );
+                    }
+                    for r in 0..self.dims.relations {
+                        s.d_z[..bn * h].fill(0.0);
+                        s.csr[r].apply_t_acc(&s.d_pre, h, &mut s.d_z);
+                        s.dwr[..d_in * h].fill(0.0);
+                        mm_tn_acc(x, &s.d_z, bn, d_in, h, &mut s.dwr[..d_in * h]);
+                        if l > 0 {
+                            mm_nt_acc(
+                                &s.d_z,
+                                &s.lay[l].rgcn_w[r * d_in * h..(r + 1) * d_in * h],
+                                bn,
+                                h,
+                                d_in,
+                                &mut s.d_x[..bn * d_in],
+                            );
+                        }
+                        // dW_r distributes over the basis decomposition:
+                        // d_coeff[r,b] = <dW_r, basis_b>,
+                        // d_basis_b += coeff[r,b] · dW_r.
+                        for bi in 0..spec.bases {
+                            let c = params[spec.coeff + r * spec.bases + bi];
+                            let b0 = spec.basis + bi * d_in * h;
+                            let mut dot = 0f32;
+                            for t in 0..d_in * h {
+                                let dw = s.dwr[t];
+                                dot += dw * params[b0 + t];
+                                s.grad[b0 + t] += c * dw;
+                            }
+                            s.grad[spec.coeff + r * spec.bases + bi] += dot;
+                        }
+                    }
+                }
+            }
+            if l > 0 {
+                s.d_act[..bn * d_in].copy_from_slice(&s.d_x[..bn * d_in]);
+            }
+        }
+        Ok(loss)
+    }
+
+    // --------------------------------------------------------------
+    // Entry points
+    // --------------------------------------------------------------
+
+    /// One fused Adam step on `state` from `block`. Returns the loss
+    /// (computed at the pre-step parameters, like the artifact).
+    pub fn train_step(&self, state: &mut ModelState, block: &Block) -> Result<f32> {
+        let _sp = Span::start("engine", "train").hist(&metrics().engine_train_us);
+        let s = &mut *self.scratch.borrow_mut();
+        let loss = self.grad_into(s, &state.params, block)?;
+        let hp = self.adam;
+        let t1 = state.adam_t[0] + 1.0;
+        let bc1 = 1.0 - hp.beta1.powf(t1);
+        let bc2 = 1.0 - hp.beta2.powf(t1);
+        for i in 0..state.params.len() {
+            let g = s.grad[i];
+            let m1 = hp.beta1 * state.adam_m[i] + (1.0 - hp.beta1) * g;
+            let v1 = hp.beta2 * state.adam_v[i] + (1.0 - hp.beta2) * g * g;
+            state.adam_m[i] = m1;
+            state.adam_v[i] = v1;
+            state.params[i] -= hp.lr * (m1 / bc1) / ((v1 / bc2).sqrt() + hp.eps);
+        }
+        state.adam_t[0] = t1;
+        Ok(loss)
+    }
+
+    /// Loss + gradient w.r.t. the flat params (GGS / LLCG correction).
+    pub fn grad_step(&self, params: &[f32], block: &Block) -> Result<(Vec<f32>, f32)> {
+        let _sp = Span::start("engine", "grad").hist(&metrics().engine_grad_us);
+        let s = &mut *self.scratch.borrow_mut();
+        let loss = self.grad_into(s, params, block)?;
+        Ok((s.grad.clone(), loss))
+    }
+
+    /// Node embeddings `[Bn, H]` (row-major) for one eval block.
+    pub fn encode(&self, params: &[f32], block: &Block) -> Result<Vec<f32>> {
+        let _sp = Span::start("engine", "encode").hist(&metrics().engine_encode_us);
+        let s = &mut *self.scratch.borrow_mut();
+        self.forward(s, params, &block.feats, &block.adj)?;
+        Ok(s.lay[self.enc_layers.len() - 1].act.clone())
+    }
+
+    /// Decoder scores for `S` (emb_u, emb_v[, rel]) pairs.
+    pub fn score(
+        &self,
+        params: &[f32],
+        emb_u: &[f32],
+        emb_v: &[f32],
+        rel: &[i32],
+    ) -> Result<Vec<f32>> {
+        let _sp = Span::start("engine", "score").hist(&metrics().engine_score_us);
+        let (sb, h) = (self.dims.score_batch, self.dims.hidden);
+        ensure!(
+            params.len() == self.variant.param_total,
+            "params len {}",
+            params.len()
+        );
+        ensure!(emb_u.len() == sb * h, "emb_u len {}", emb_u.len());
+        ensure!(emb_v.len() == sb * h, "emb_v len {}", emb_v.len());
+        let mut out = vec![0f32; sb];
+        match &self.dec {
+            Dec::Mlp(_) => {
+                let s = &mut *self.scratch.borrow_mut();
+                for (o, (&a, &b)) in s.score_h.iter_mut().zip(emb_u.iter().zip(emb_v)) {
+                    *o = a * b;
+                }
+                self.decode_mlp_forward(params, &s.score_h, sb, &mut s.score_pass, &mut out);
+            }
+            Dec::DistMult { rel: roff } => {
+                ensure!(rel.len() == sb, "rel len {}", rel.len());
+                for j in 0..sb {
+                    let r = rel[j];
+                    ensure!(
+                        r >= 0 && (r as usize) < self.dims.relations,
+                        "rel[{j}] = {r} out of range"
+                    );
+                    let re = roff + r as usize * h;
+                    let mut acc = 0f32;
+                    for c in 0..h {
+                        acc += emb_u[j * h + c] * params[re + c] * emb_v[j * h + c];
+                    }
+                    out[j] = acc;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ------------------------------------------------------------------
+// Golden-value kernel tests (always-on; mirror ref.py by hand)
+// ------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn approx(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn mm_golden_2x3_3x2() {
+        // [[1,2,3],[4,5,6]] @ [[7,8],[9,10],[11,12]]
+        let a = [1., 2., 3., 4., 5., 6.];
+        let b = [7., 8., 9., 10., 11., 12.];
+        let mut out = [0f32; 4];
+        mm(&a, &b, 2, 3, 2, &mut out);
+        assert_eq!(out, [58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn mm_nt_golden() {
+        // a @ bᵀ with b stored [n, k]: rows of b are dotted with rows of a.
+        let a = [1., 2., 3., 4.]; // [2,2]
+        let b = [5., 6., 7., 8.]; // [2,2] -> bᵀ = [[5,7],[6,8]]
+        let mut out = [0f32; 4];
+        mm_nt(&a, &b, 2, 2, 2, &mut out);
+        assert_eq!(out, [17., 23., 39., 53.]);
+    }
+
+    #[test]
+    fn mm_tn_golden() {
+        // aᵀ @ b with a stored [k, m].
+        let a = [1., 2., 3., 4.]; // aᵀ = [[1,3],[2,4]]
+        let b = [5., 6., 7., 8.];
+        let mut out = [0f32; 4];
+        mm_tn(&a, &b, 2, 2, 2, &mut out);
+        assert_eq!(out, [26., 30., 38., 44.]);
+    }
+
+    #[test]
+    fn mm_matches_naive_reference_bitwise() {
+        // Tiling and zero-skip must not change the per-element add
+        // order; the padded (zero-row) region must stay exactly zero.
+        let (m, k, n) = (37, 129, 19);
+        let mut rng = Rng::new(31);
+        let a: Vec<f32> = (0..m * k)
+            .map(|i| if i % 7 == 0 { 0.0 } else { rng.gaussian() as f32 })
+            .collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gaussian() as f32).collect();
+        let mut fast = vec![0f32; m * n];
+        mm(&a, &b, m, k, n, &mut fast);
+        let mut naive = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for t in 0..k {
+                    acc += a[i * k + t] * b[t * n + j];
+                }
+                naive[i * n + j] = acc;
+            }
+        }
+        assert!(
+            fast.iter().zip(&naive).all(|(x, y)| x.to_bits() == y.to_bits()
+                || (*x == 0.0 && *y == 0.0)),
+            "tiled matmul diverged from naive reference"
+        );
+    }
+
+    #[test]
+    fn csr_matches_dense_products() {
+        let mut rng = Rng::new(5);
+        let (bn, h) = (13, 6);
+        let dense: Vec<f32> = (0..bn * bn)
+            .map(|_| if rng.f64() < 0.3 { rng.gaussian() as f32 } else { 0.0 })
+            .collect();
+        let x: Vec<f32> = (0..bn * h).map(|_| rng.gaussian() as f32).collect();
+        let mut csr = Csr::new();
+        csr.from_dense(&dense, bn, bn);
+        assert_eq!(csr.nnz(), dense.iter().filter(|&&v| v != 0.0).count());
+
+        // A @ x vs dense mm.
+        let mut sparse = vec![0f32; bn * h];
+        csr.apply(&x, h, &mut sparse);
+        let mut want = vec![0f32; bn * h];
+        mm(&dense, &x, bn, bn, h, &mut want);
+        for (s, w) in sparse.iter().zip(&want) {
+            assert!(approx(*s, *w, 1e-6), "{s} vs {w}");
+        }
+
+        // Aᵀ @ x vs dense mm_tn.
+        let mut sparse_t = vec![0f32; bn * h];
+        csr.apply_t_acc(&x, h, &mut sparse_t);
+        let mut want_t = vec![0f32; bn * h];
+        mm_tn(&dense, &x, bn, bn, h, &mut want_t);
+        for (s, w) in sparse_t.iter().zip(&want_t) {
+            assert!(approx(*s, *w, 1e-6), "{s} vs {w}");
+        }
+    }
+
+    #[test]
+    fn gcn_agg_golden() {
+        // adj = [[0,1],[1,0]], x = [[1,2],[3,4]], w = I
+        // x@w = x; adj@(x@w) swaps the rows.
+        let adj = [0., 1., 1., 0.];
+        let x = [1., 2., 3., 4.];
+        let w = [1., 0., 0., 1.];
+        let out = gcn_agg(&adj, &x, &w, 2, 2, 2);
+        assert_eq!(out, vec![3., 4., 1., 2.]);
+    }
+
+    #[test]
+    fn had_mm_golden() {
+        // u⊙v = [[2,6]]; [[2,6]] @ [[1],[1]] = [[8]]
+        let u = [1., 2.];
+        let v = [2., 3.];
+        let w = [1., 1.];
+        assert_eq!(had_mm(&u, &v, &w, 1, 2, 1), vec![8.]);
+    }
+
+    #[test]
+    fn softplus_sigmoid_golden() {
+        assert!(approx(softplus(0.0), std::f32::consts::LN_2, 1e-6));
+        assert!(approx(softplus(10.0), 10.000046, 1e-5));
+        assert!(approx(softplus(-20.0), 2.06e-9, 0.1));
+        assert!(softplus(-200.0) >= 0.0, "stable for large negatives");
+        assert!(approx(sigmoid(0.0), 0.5, 1e-7));
+        assert!(approx(sigmoid(2.0), 0.880797, 1e-5));
+    }
+
+    #[test]
+    fn layer_norm_golden() {
+        // Row [1, 3]: mu = 2, var = 1 -> xhat = [-1, 1] (up to eps).
+        let x = [1f32, 3.0];
+        let scale = [2f32, 2.0];
+        let bias = [0.5f32, 0.5];
+        let mut xhat = [0f32; 2];
+        let mut rstd = [0f32; 1];
+        let mut out = [0f32; 2];
+        layer_norm_rows(&x, 1, 2, &scale, &bias, &mut xhat, &mut rstd, &mut out);
+        assert!(approx(out[0], -1.5, 1e-4), "{}", out[0]);
+        assert!(approx(out[1], 2.5, 1e-4), "{}", out[1]);
+        assert!(approx(rstd[0], 1.0, 1e-4));
+
+        // All-equal row: variance 0 degrades to bias (xhat = 0).
+        let x = [5f32, 5.0];
+        layer_norm_rows(&x, 1, 2, &scale, &bias, &mut xhat, &mut rstd, &mut out);
+        assert_eq!(out, [0.5, 0.5]);
+    }
+}

@@ -1,5 +1,7 @@
-//! The execution engine: one PJRT client + the four compiled entry
-//! points of one model variant.
+//! The PJRT backend (feature `pjrt`): one PJRT client + the four
+//! compiled entry points of one model variant. The optional AOT fast
+//! path behind the [`super::ComputeBackend`] abstraction — the
+//! default backend is [`super::native`].
 //!
 //! Follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
 //! → `XlaComputation::from_proto` → `client.compile` → `execute`.
@@ -15,7 +17,6 @@ use anyhow::{bail, Context, Result};
 
 use crate::model::ModelState;
 use crate::sampler::Block;
-use crate::util::stats;
 
 use super::manifest::{Dtype, EntrySpec, Manifest, ModelDims, VariantSpec};
 
@@ -315,9 +316,4 @@ impl Engine {
             self.variant.name, self.impl_name, self.variant.param_total
         )
     }
-}
-
-/// Convenience: mean absolute value (used in tests/diagnostics).
-pub fn mean_abs(xs: &[f32]) -> f64 {
-    stats::mean(&xs.iter().map(|x| x.abs() as f64).collect::<Vec<_>>())
 }

@@ -187,6 +187,14 @@ pub struct Metrics {
     pub train_steps: Counter,
     pub step_us: Histogram,
     pub last_loss_bits: Gauge,
+    // ---- compute engine (backend loads + per-entry durations) ----
+    pub engine_load_fail: Counter,
+    pub engine_native_loads: Counter,
+    pub engine_pjrt_loads: Counter,
+    pub engine_train_us: Histogram,
+    pub engine_grad_us: Histogram,
+    pub engine_encode_us: Histogram,
+    pub engine_score_us: Histogram,
     // ---- evaluator ----
     pub evals_dispatched: Counter,
     pub evals_done: Counter,
@@ -220,6 +228,13 @@ impl Metrics {
             train_steps: Counter::new(),
             step_us: Histogram::new(),
             last_loss_bits: Gauge::new(),
+            engine_load_fail: Counter::new(),
+            engine_native_loads: Counter::new(),
+            engine_pjrt_loads: Counter::new(),
+            engine_train_us: Histogram::new(),
+            engine_grad_us: Histogram::new(),
+            engine_encode_us: Histogram::new(),
+            engine_score_us: Histogram::new(),
             evals_dispatched: Counter::new(),
             evals_done: Counter::new(),
             eval_inflight: Gauge::new(),
@@ -245,6 +260,9 @@ impl Metrics {
             ("trainer_ready_marks", self.trainer_ready_marks.get()),
             ("trainer_dead_marks", self.trainer_dead_marks.get()),
             ("train_steps", self.train_steps.get()),
+            ("engine_load_fail", self.engine_load_fail.get()),
+            ("engine_native_loads", self.engine_native_loads.get()),
+            ("engine_pjrt_loads", self.engine_pjrt_loads.get()),
             ("evals_dispatched", self.evals_dispatched.get()),
             ("evals_done", self.evals_done.get()),
             ("comm_bytes_out", self.comm_bytes_out.get()),
@@ -277,6 +295,10 @@ impl Metrics {
             ("broadcast", self.phase_broadcast.snap()),
             ("eval_dispatch", self.phase_eval_dispatch.snap()),
             ("train_step", self.step_us.snap()),
+            ("engine_train", self.engine_train_us.snap()),
+            ("engine_grad", self.engine_grad_us.snap()),
+            ("engine_encode", self.engine_encode_us.snap()),
+            ("engine_score", self.engine_score_us.snap()),
         ]
     }
 }

@@ -1,12 +1,11 @@
 //! End-to-end coordinator tests: full distributed runs on quick data.
-//! Requires artifacts (skips gracefully otherwise). Time-boxed short.
+//! Always-on: the native backend needs no artifacts, so these run on
+//! a bare checkout (forced via `backend: "native"` so an
+//! `RTMA_BACKEND=pjrt` environment can't break `cargo test`).
+//! Time-boxed short.
 
 use random_tma::config::{Approach, RunConfig};
 use random_tma::coordinator::run_experiment;
-
-fn have_artifacts() -> bool {
-    std::path::Path::new("artifacts/manifest.json").exists()
-}
 
 fn quick_cfg(approach: Approach) -> RunConfig {
     RunConfig {
@@ -20,16 +19,13 @@ fn quick_cfg(approach: Approach) -> RunConfig {
         negatives: 16,
         eval_sample: 16,
         seed: 23,
+        backend: "native".into(),
         ..RunConfig::default()
     }
 }
 
 #[test]
 fn tma_run_produces_learning_and_metrics() {
-    if !have_artifacts() {
-        eprintln!("skip: artifacts missing");
-        return;
-    }
     let r = run_experiment(&quick_cfg(Approach::RandomTma)).expect("run");
     assert_eq!(r.steps.len(), 2);
     assert!(r.steps.iter().all(|&s| s > 10), "steps {:?}", r.steps);
@@ -46,10 +42,6 @@ fn tma_run_produces_learning_and_metrics() {
 
 #[test]
 fn ggs_run_is_synchronous() {
-    if !have_artifacts() {
-        eprintln!("skip: artifacts missing");
-        return;
-    }
     let r = run_experiment(&quick_cfg(Approach::Ggs)).expect("run");
     // lock-step: all trainers do the same number of steps (±1 on stop)
     let (min, max, _) = r.step_spread();
@@ -59,10 +51,6 @@ fn ggs_run_is_synchronous() {
 
 #[test]
 fn failure_run_drops_partition_but_completes() {
-    if !have_artifacts() {
-        eprintln!("skip: artifacts missing");
-        return;
-    }
     let mut cfg = quick_cfg(Approach::RandomTma);
     cfg.trainers = 3;
     cfg.failures = 1;
@@ -74,10 +62,6 @@ fn failure_run_drops_partition_but_completes() {
 
 #[test]
 fn supertma_and_psgd_have_higher_r_than_random() {
-    if !have_artifacts() {
-        eprintln!("skip: artifacts missing");
-        return;
-    }
     let rnd = run_experiment(&quick_cfg(Approach::RandomTma)).unwrap();
     let sup = run_experiment(&quick_cfg(Approach::SuperTma {
         num_clusters: 256,

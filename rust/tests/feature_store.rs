@@ -252,17 +252,17 @@ fn eval_blocks_bit_identical_across_backends() {
 /// End-to-end round metrics: a deterministic miniature of the TMA loop
 /// (fixed steps per round, mean aggregation — no wall clocks) must
 /// produce bit-identical losses and aggregated parameters on every
-/// backend. Needs compiled artifacts; skips gracefully without them.
+/// FeatureStore backend. Always-on: the native engine runs on the
+/// builtin manifest, and its kernels' fixed accumulation order makes
+/// the bitwise comparison exact on any machine.
 #[test]
 fn round_metrics_bit_identical_across_backends() {
     use random_tma::model::ModelState;
-    use random_tma::runtime::{Engine, Manifest};
+    use random_tma::runtime::{Manifest, NativeEngine};
 
-    let Ok(manifest) = Manifest::load(&Manifest::default_dir()) else {
-        eprintln!("skip: artifacts missing");
-        return;
-    };
-    let engine = Engine::load(&manifest, "gcn_mlp", "pallas").expect("engine");
+    let manifest = Manifest::builtin();
+    let engine =
+        NativeEngine::new(&manifest, "gcn_mlp").expect("native engine");
     let dims = manifest.dims;
     let g = seeded_graph(dims.feat_dim);
     let k = 2;

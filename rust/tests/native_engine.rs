@@ -1,0 +1,220 @@
+//! Gradient-correctness suite for the native backend.
+//!
+//! Always-on and artifact-free: every test runs on a tiny
+//! `Manifest::builtin_sized` layout (F=3, H=4, Bn=6, Be=5) with a
+//! hand-built block, so a central-difference sweep over **all six**
+//! variants stays fast. The analytic gradients from `grad_step` are
+//! the ground truth the distributed modes (GGS allreduce, LLCG
+//! correction) train on — a silently wrong backward term would still
+//! "learn", just worse, which is exactly the failure mode plain
+//! loss-goes-down tests cannot catch.
+
+use random_tma::model::{Adam, ModelState};
+use random_tma::runtime::{Manifest, ModelDims, NativeEngine};
+use random_tma::sampler::Block;
+use random_tma::util::rng::Rng;
+
+const VARIANTS: [&str; 6] = [
+    "gcn_mlp",
+    "sage_mlp",
+    "mlp_mlp",
+    "gcn_distmult",
+    "rgcn_mlp",
+    "rgcn_distmult",
+];
+
+/// Small enough that a full finite-difference probe per variant is
+/// cheap, large enough that every tensor kind (weights, biases,
+/// LayerNorm, PReLU, relation bases) is exercised.
+fn tiny() -> Manifest {
+    Manifest::builtin_sized(
+        ModelDims {
+            feat_dim: 3,
+            hidden: 4,
+            block_nodes: 6,
+            block_edges: 5,
+            score_batch: 8,
+            relations: 2,
+        },
+        2,
+        2,
+        2,
+    )
+}
+
+/// Hand-built block: 5 used nodes, one padding row, one masked edge
+/// slot. `relational` switches the adjacency to `R x Bn x Bn` planes
+/// (rgcn encoders); `rel` ids are always valid so the same block
+/// drives every decoder.
+fn tiny_block(m: &Manifest, relational: bool, seed: u64) -> Block {
+    let d = m.dims;
+    let (bn, be, f) = (d.block_nodes, d.block_edges, d.feat_dim);
+    let n_used = bn - 1;
+    let mut rng = Rng::new(seed);
+    let mut feats = vec![0f32; bn * f];
+    for x in feats.iter_mut().take(n_used * f) {
+        *x = 0.5 * rng.gaussian() as f32;
+    }
+    let planes = if relational { d.relations } else { 1 };
+    let mut adj = vec![0f32; planes * bn * bn];
+    for r in 0..planes {
+        for i in 0..n_used {
+            adj[r * bn * bn + i * bn + i] = 0.5;
+            adj[r * bn * bn + i * bn + (i + 1 + r) % n_used] = 0.5;
+        }
+    }
+    let mut mask = vec![1.0f32; be];
+    mask[be - 1] = 0.0;
+    Block {
+        feats,
+        adj,
+        pos_u: (0..be).map(|e| (e % n_used) as i32).collect(),
+        pos_v: (0..be).map(|e| ((e + 1) % n_used) as i32).collect(),
+        rel: (0..be).map(|e| (e % d.relations) as i32).collect(),
+        neg_v: (0..be).map(|e| ((e + 2) % n_used) as i32).collect(),
+        mask,
+        n_used,
+        globals: (0..n_used as u32).collect(),
+    }
+}
+
+fn engine_and_block(m: &Manifest, variant: &str, seed: u64) -> (NativeEngine, Block) {
+    let engine = NativeEngine::new(m, variant).expect(variant);
+    let block = tiny_block(m, engine.variant.encoder == "rgcn", seed);
+    (engine, block)
+}
+
+/// Central differences vs `grad_step` for every variant. Per-probe
+/// tolerance absorbs f32 forward noise and the PReLU kink; the
+/// aggregate relative-L2 bound catches a systematically wrong term
+/// even if each probe squeaks under the pointwise bound.
+#[test]
+fn grad_matches_central_difference_on_all_variants() {
+    let m = tiny();
+    for variant in VARIANTS {
+        let (engine, block) = engine_and_block(&m, variant, 0xC0FFEE);
+        let mut rng = Rng::new(21);
+        let state = ModelState::init(&engine.variant, &mut rng);
+        let p0 = state.params.clone();
+        let (grad, loss) = engine.grad_step(&p0, &block).unwrap();
+        assert!(
+            loss.is_finite() && loss > 0.0,
+            "{variant}: loss {loss}"
+        );
+        assert_eq!(grad.len(), p0.len(), "{variant}: grad length");
+        assert!(
+            grad.iter().any(|&g| g != 0.0),
+            "{variant}: all-zero gradient"
+        );
+
+        let n = p0.len();
+        let h = 1e-3f32;
+        let stride = n.div_ceil(48).max(1);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        let mut i = 0;
+        while i < n {
+            let mut p = p0.clone();
+            p[i] = p0[i] + h;
+            let (_, lp) = engine.grad_step(&p, &block).unwrap();
+            p[i] = p0[i] - h;
+            let (_, lm) = engine.grad_step(&p, &block).unwrap();
+            let fd = (lp - lm) / (2.0 * h);
+            let g = grad[i];
+            let diff = (fd - g).abs();
+            assert!(
+                diff < 1e-2 + 0.05 * fd.abs().max(g.abs()),
+                "{variant}: param {i} analytic {g} vs central-diff {fd}"
+            );
+            num += (diff * diff) as f64;
+            den += (fd * fd + g * g) as f64;
+            i += stride;
+        }
+        assert!(
+            num <= 1e-3 * den.max(1e-6),
+            "{variant}: relative grad error {} over probed set",
+            (num / den.max(1e-6)).sqrt()
+        );
+    }
+}
+
+/// `train_step`'s fused Adam must reproduce `grad_step` followed by
+/// the rust-side `model::Adam` — the GGS baseline and the TMA trainers
+/// are the same update rule, only the aggregation schedule differs.
+#[test]
+fn train_step_matches_grad_step_plus_rust_adam() {
+    let m = tiny();
+    for variant in VARIANTS {
+        let (engine, block) = engine_and_block(&m, variant, 7);
+        let mut rng = Rng::new(33);
+        let mut state = ModelState::init(&engine.variant, &mut rng);
+        let mut reference = state.params.clone();
+        let mut adam = Adam::new(m.adam, reference.len());
+        for step in 0..3 {
+            let (grad, loss_g) =
+                engine.grad_step(&reference, &block).unwrap();
+            adam.step(&mut reference, &grad);
+            let loss_t = engine.train_step(&mut state, &block).unwrap();
+            assert!(
+                (loss_g - loss_t).abs() < 1e-6,
+                "{variant} step {step}: losses {loss_g} vs {loss_t}"
+            );
+            for (i, (a, b)) in
+                state.params.iter().zip(&reference).enumerate()
+            {
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "{variant} step {step} param {i}: {a} vs {b}"
+                );
+            }
+        }
+        assert_eq!(state.step_count(), 3, "{variant}");
+    }
+}
+
+/// Padded edge slots (mask 0) must be inert: scrambling their indices
+/// changes neither the loss nor a single gradient element.
+#[test]
+fn masked_edge_slots_do_not_affect_loss_or_grad() {
+    let m = tiny();
+    for variant in ["gcn_mlp", "rgcn_distmult"] {
+        let (engine, block) = engine_and_block(&m, variant, 11);
+        let mut scrambled = block.clone();
+        let last = scrambled.mask.len() - 1;
+        assert_eq!(scrambled.mask[last], 0.0);
+        scrambled.pos_u[last] = 0;
+        scrambled.pos_v[last] = 0;
+        scrambled.neg_v[last] = 0;
+        scrambled.rel[last] = 0;
+
+        let mut rng = Rng::new(5);
+        let state = ModelState::init(&engine.variant, &mut rng);
+        let (ga, la) = engine.grad_step(&state.params, &block).unwrap();
+        let (gb, lb) =
+            engine.grad_step(&state.params, &scrambled).unwrap();
+        assert_eq!(la, lb, "{variant}: masked slot leaked into loss");
+        assert_eq!(ga, gb, "{variant}: masked slot leaked into grad");
+    }
+}
+
+/// Every variant optimises its own tiny problem: repeated steps on a
+/// fixed block lower the loss and keep it finite.
+#[test]
+fn all_variants_learn_on_fixed_block() {
+    let m = tiny();
+    for variant in VARIANTS {
+        let (engine, block) = engine_and_block(&m, variant, 19);
+        let mut rng = Rng::new(23);
+        let mut state = ModelState::init(&engine.variant, &mut rng);
+        let first = engine.train_step(&mut state, &block).unwrap();
+        let mut last = first;
+        for _ in 0..40 {
+            last = engine.train_step(&mut state, &block).unwrap();
+        }
+        assert!(last.is_finite(), "{variant}: diverged to {last}");
+        assert!(
+            last < first,
+            "{variant}: no progress ({first} -> {last})"
+        );
+    }
+}
