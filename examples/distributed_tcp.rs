@@ -37,7 +37,10 @@ use std::process::{Child, Command};
 use std::time::{Duration, Instant};
 
 use random_tma::benchkit::BenchBaseline;
-use random_tma::comm::{recv, send, send_wire, Message, WireMsg};
+use random_tma::comm::codec;
+use random_tma::comm::{
+    recv_into, send, send_wire, server_handshake, Message, WireMsg,
+};
 use random_tma::coordinator::evaluate_mrr;
 use random_tma::gen::load_preset;
 use random_tma::model::{MeanAccum, ModelState};
@@ -58,6 +61,14 @@ fn main() -> anyhow::Result<()> {
     let dataset = args.str_or("dataset", "citation-sim");
     let variant = args.str_or("variant", "gcn_mlp");
     let backend_flag = args.str_or("backend", "");
+    // identity < --codec < RTMA_CODEC. The resolved choice is passed
+    // to every worker on its command line AND re-verified by the
+    // Hello/Ready codec negotiation, so a mismatched peer fails loudly
+    // instead of mis-decoding frames.
+    let codec_kind = codec::resolve(&args.str_or("codec", ""))?;
+    if !codec_kind.is_identity() {
+        println!("[leader] round codec: {}", codec_kind.name());
+    }
 
     // `--no-train` isolates the wire protocol: workers echo weights
     // instead of training. The default is a real training run — the
@@ -103,6 +114,8 @@ fn main() -> anyhow::Result<()> {
             &seed.to_string(),
             "--variant",
             &variant,
+            "--codec",
+            codec_kind.name().as_str(),
         ]);
         if manifest.is_none() {
             cmd.arg("--no-train");
@@ -115,17 +128,17 @@ fn main() -> anyhow::Result<()> {
         children.push(cmd.spawn()?);
     }
 
-    // Accept M workers (Hello + Ready).
+    // Accept M workers (Hello + Codec + Ready): the handshake bails
+    // on any worker negotiating a different codec family.
     let mut streams = Vec::new();
     for _ in 0..m {
         let (mut s, peer) = listener.accept()?;
-        let hello = recv(&mut s)?;
-        let ready = recv(&mut s)?;
+        let id = server_handshake(&mut s, codec_kind)?;
         telemetry::info(
             "leader",
             "worker_joined",
-            &[],
-            format_args!("{peer} -> {hello:?} {ready:?}"),
+            &[("worker", id as f64)],
+            format_args!("{peer} -> worker {id} ({})", codec_kind.name()),
         );
         streams.push(s);
     }
@@ -141,12 +154,36 @@ fn main() -> anyhow::Result<()> {
         None => vec![0.1f32; 4096],
     };
     let mut scratch = Vec::new();
-    for s in &mut streams {
-        send_wire(
-            s,
-            &WireMsg::Broadcast { round: 0, data: &w_global },
-            &mut scratch,
-        )?;
+    let mut rbuf = Vec::new();
+    let mut body: Vec<u8> = Vec::new();
+    let mut down_enc = (!codec_kind.is_identity())
+        .then(|| codec::RoundEncoder::new(codec_kind, seed ^ 0xb07a_dc0d));
+    // Non-identity: the initial broadcast encodes against the empty
+    // (= zero) base the workers start with, then w_global becomes the
+    // decode so both ends hold bit-identical bases from round 0 on.
+    if let Some(enc) = down_enc.as_mut() {
+        let cid = enc.encode_down(&w_global, &[], &mut body);
+        w_global = codec::decode_dense(cid, w_global.len(), &body, &[])?;
+        for s in &mut streams {
+            send_wire(
+                s,
+                &WireMsg::BroadcastEnc {
+                    round: 0,
+                    codec: cid,
+                    n: w_global.len() as u64,
+                    body: &body,
+                },
+                &mut scratch,
+            )?;
+        }
+    } else {
+        for s in &mut streams {
+            send_wire(
+                s,
+                &WireMsg::Broadcast { round: 0, data: &w_global },
+                &mut scratch,
+            )?;
+        }
     }
 
     // Time-based aggregation rounds with a streaming allreduce. Each
@@ -171,7 +208,7 @@ fn main() -> anyhow::Result<()> {
             }
             acc.reset();
             for s in &mut streams {
-                match recv(s)? {
+                match recv_into(s, &mut rbuf)? {
                     Message::Weights { data, steps, loss, .. } => {
                         // A NaN loss is the protocol-only "no batch
                         // yet" sentinel (steps = 0). A worker that DID
@@ -186,27 +223,73 @@ fn main() -> anyhow::Result<()> {
                         total_steps += steps;
                         acc.add(&data);
                     }
+                    Message::WeightsEnc {
+                        loss,
+                        steps,
+                        codec: cid,
+                        n,
+                        body: eb,
+                        ..
+                    } => {
+                        anyhow::ensure!(
+                            steps == 0 || loss.is_finite(),
+                            "worker reported {steps} steps with \
+                             non-finite loss {loss}"
+                        );
+                        total_steps += steps;
+                        // Fold base-relative against the last
+                        // broadcast (the base every worker encoded
+                        // against), no dense materialisation.
+                        codec::decode_fold(
+                            cid,
+                            n as usize,
+                            &eb,
+                            &w_global,
+                            &mut acc,
+                        )?;
+                    }
                     other => anyhow::bail!("unexpected {other:?}"),
                 }
             }
         }
         grand_steps = grand_steps.max(total_steps);
-        {
+        let bcast = {
             let _sp = Span::start("leader", "aggregate")
                 .round(round)
                 .hist(&metrics().phase_aggregate);
-            w_global = acc.mean();
-        }
+            let mut next = acc.mean_with(Some(&w_global));
+            let mut cid_opt = None;
+            if let Some(enc) = down_enc.as_mut() {
+                let cid = enc.encode_down(&next, &w_global, &mut body);
+                next =
+                    codec::decode_dense(cid, next.len(), &body, &w_global)?;
+                cid_opt = Some(cid);
+            }
+            w_global = next;
+            cid_opt
+        };
         {
             let _sp = Span::start("leader", "broadcast")
                 .round(round)
                 .hist(&metrics().phase_broadcast);
             for s in &mut streams {
-                send_wire(
-                    s,
-                    &WireMsg::Broadcast { round, data: &w_global },
-                    &mut scratch,
-                )?;
+                match bcast {
+                    Some(cid) => send_wire(
+                        s,
+                        &WireMsg::BroadcastEnc {
+                            round,
+                            codec: cid,
+                            n: w_global.len() as u64,
+                            body: &body,
+                        },
+                        &mut scratch,
+                    )?,
+                    None => send_wire(
+                        s,
+                        &WireMsg::Broadcast { round, data: &w_global },
+                        &mut scratch,
+                    )?,
+                }
             }
         }
         round_samples.push(t_round.elapsed().as_secs_f64());
@@ -243,6 +326,10 @@ fn main() -> anyhow::Result<()> {
         "comm_frames_out",
         "comm_frames_in",
         "comm_scratch_reuse",
+        "comm_frames_rejected",
+        "codec_frames",
+        "codec_bytes_raw",
+        "codec_bytes_encoded",
     ] {
         bench.push_counter(key, delta.counter(key) as f64);
     }

@@ -1,0 +1,942 @@
+//! Round codecs — the compression layer between the aggregation data
+//! plane and the TCP wire (ROADMAP item 3: Grappa ships gradients
+//! only, ABC reduces before communicating; both attack the P·4-bytes
+//! per trainer per round traffic that dominates at scale).
+//!
+//! Four encodings behind one [`CodecKind`]:
+//!
+//! - `identity` — the reference. Callers skip the codec entirely and
+//!   ship today's raw `Weights`/`Broadcast` frames, so the wire stays
+//!   bit-for-bit identical to the pre-codec protocol (pinned by
+//!   `tests/codec.rs`).
+//! - `delta` — XOR of the f32 bit patterns against the last broadcast
+//!   base, run-length encoded over zero words. XOR (not f32
+//!   subtraction) because it is *exactly* invertible: decode
+//!   reproduces the input bit-for-bit, so server and trainers keep
+//!   bit-synced bases for free.
+//! - `f16` / `i8` — stochastic-rounding quantization (unbiased: the
+//!   expected decode equals the input), 2x / ~4x smaller bodies.
+//! - `topk` — top-k-by-magnitude sparsification of the base-relative
+//!   change with per-sender error feedback: unsent coordinates
+//!   accumulate in a residual and are shipped once they grow, so the
+//!   cumulative decoded stream converges to the cumulative input
+//!   (`tests/codec.rs` drains the residual to exactly zero).
+//!
+//! Encoded bodies travel in `WeightsEnc`/`BroadcastEnc` frames that
+//! carry the *actual* encoding id byte — a `topk` session broadcasts
+//! downstream as `delta` (sparsifying the one authoritative global
+//! model would desync the fleet; sparsification is for the many
+//! upstream trainer→server legs).
+//!
+//! Decode offers two shapes: [`decode_dense`] materialises the vector
+//! (workers applying a broadcast), while [`decode_fold`] streams
+//! straight into the server's [`MeanAccum`] without ever building the
+//! dense vector for sparse codecs (`fold_sparse` + a base-count so
+//! `mean_with` can add the shared base back once).
+
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::model::MeanAccum;
+use crate::telemetry::metrics;
+use crate::util::rng::Rng;
+
+/// Wire encoding ids (the byte carried in `WeightsEnc`/`BroadcastEnc`
+/// frames and in the `Codec` negotiation message).
+pub const CODEC_IDENTITY: u8 = 0;
+pub const CODEC_DELTA: u8 = 1;
+pub const CODEC_F16: u8 = 2;
+pub const CODEC_I8: u8 = 3;
+pub const CODEC_TOPK: u8 = 4;
+
+/// Elements per i8 quantization chunk (one f32 scale per chunk).
+const I8_CHUNK: usize = 4096;
+
+/// A configured round codec. `TopK` carries its sparsity denominator
+/// (k = max(1, n/denom)); the wire/negotiation id is the family only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecKind {
+    Identity,
+    Delta,
+    F16,
+    I8,
+    TopK { denom: u32 },
+}
+
+impl CodecKind {
+    /// Parse a codec spec: `identity` (or empty), `delta`, `f16`,
+    /// `i8`, `topk`, `topk:<denom>`.
+    pub fn parse(s: &str) -> Result<CodecKind> {
+        let s = s.trim();
+        Ok(match s {
+            "" | "identity" => CodecKind::Identity,
+            "delta" => CodecKind::Delta,
+            "f16" => CodecKind::F16,
+            "i8" | "int8" => CodecKind::I8,
+            "topk" => CodecKind::TopK { denom: 64 },
+            _ => {
+                if let Some(d) = s.strip_prefix("topk:") {
+                    let denom: u32 = d.parse().map_err(|_| {
+                        anyhow::anyhow!("bad topk denominator: {d:?}")
+                    })?;
+                    ensure!(denom >= 1, "topk denominator must be >= 1");
+                    CodecKind::TopK { denom }
+                } else {
+                    bail!(
+                        "unknown codec {s:?} (expected identity | delta | \
+                         f16 | i8 | topk | topk:<denom>)"
+                    );
+                }
+            }
+        })
+    }
+
+    /// Canonical spec string (round-trips through [`CodecKind::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            CodecKind::Identity => "identity".into(),
+            CodecKind::Delta => "delta".into(),
+            CodecKind::F16 => "f16".into(),
+            CodecKind::I8 => "i8".into(),
+            CodecKind::TopK { denom } => format!("topk:{denom}"),
+        }
+    }
+
+    /// Wire family id (what the `Codec` handshake compares).
+    pub fn id(&self) -> u8 {
+        match self {
+            CodecKind::Identity => CODEC_IDENTITY,
+            CodecKind::Delta => CODEC_DELTA,
+            CodecKind::F16 => CODEC_F16,
+            CodecKind::I8 => CODEC_I8,
+            CodecKind::TopK { .. } => CODEC_TOPK,
+        }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        matches!(self, CodecKind::Identity)
+    }
+}
+
+/// Resolve the effective codec: a non-empty `RTMA_CODEC` env var wins
+/// over the config field, which wins over the `identity` default
+/// (mirroring the PR 7 backend chain; see docs/COMM.md).
+pub fn resolve(field: &str) -> Result<CodecKind> {
+    let env = std::env::var("RTMA_CODEC").unwrap_or_default();
+    let pick = if env.trim().is_empty() { field } else { env.as_str() };
+    CodecKind::parse(pick)
+}
+
+// ---------------------------------------------------------------------------
+// Encoder
+
+/// Per-sender encoder state: the top-k error-feedback residual and
+/// the stochastic-rounding RNG stream live here, one per trainer (or
+/// one on the server for the downstream leg).
+pub struct RoundEncoder {
+    kind: CodecKind,
+    residual: Vec<f32>,
+    rng: Rng,
+}
+
+impl RoundEncoder {
+    pub fn new(kind: CodecKind, seed: u64) -> RoundEncoder {
+        RoundEncoder { kind, residual: Vec::new(), rng: Rng::new(seed) }
+    }
+
+    pub fn kind(&self) -> CodecKind {
+        self.kind
+    }
+
+    /// L2 norm of the error-feedback residual (0 for non-topk kinds);
+    /// the drain test in `tests/codec.rs` watches this reach zero.
+    pub fn residual_norm(&self) -> f64 {
+        self.residual.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Encode the trainer→server leg of `w` against `base` (the last
+    /// broadcast; empty slice = all zeros, e.g. GGS gradients).
+    /// Returns the wire encoding id actually used.
+    pub fn encode_up(
+        &mut self,
+        w: &[f32],
+        base: &[f32],
+        out: &mut Vec<u8>,
+    ) -> u8 {
+        debug_assert!(base.is_empty() || base.len() == w.len());
+        let t0 = Instant::now();
+        out.clear();
+        let id = match self.kind {
+            CodecKind::Identity => {
+                raw_encode(w, out);
+                CODEC_IDENTITY
+            }
+            CodecKind::Delta => {
+                xor_rle_encode(w, base, out);
+                CODEC_DELTA
+            }
+            CodecKind::F16 => {
+                f16_encode_all(w, &mut self.rng, out);
+                CODEC_F16
+            }
+            CodecKind::I8 => {
+                i8_encode_all(w, &mut self.rng, out);
+                CODEC_I8
+            }
+            CodecKind::TopK { denom } => {
+                self.topk_encode(w, base, denom, out);
+                CODEC_TOPK
+            }
+        };
+        bump_encode(w.len(), out.len(), t0);
+        id
+    }
+
+    /// Encode the server→trainers leg (the broadcast). Top-k sessions
+    /// use exact XOR-RLE here — the one global model is never
+    /// sparsified — so the returned id can differ from the session
+    /// codec's family id.
+    pub fn encode_down(
+        &mut self,
+        w: &[f32],
+        base: &[f32],
+        out: &mut Vec<u8>,
+    ) -> u8 {
+        debug_assert!(base.is_empty() || base.len() == w.len());
+        let t0 = Instant::now();
+        out.clear();
+        let id = match self.kind {
+            CodecKind::Identity => {
+                raw_encode(w, out);
+                CODEC_IDENTITY
+            }
+            CodecKind::Delta | CodecKind::TopK { .. } => {
+                xor_rle_encode(w, base, out);
+                CODEC_DELTA
+            }
+            CodecKind::F16 => {
+                f16_encode_all(w, &mut self.rng, out);
+                CODEC_F16
+            }
+            CodecKind::I8 => {
+                i8_encode_all(w, &mut self.rng, out);
+                CODEC_I8
+            }
+        };
+        bump_encode(w.len(), out.len(), t0);
+        id
+    }
+
+    /// Top-k with error feedback: rank `c = w - base + residual` by
+    /// magnitude, ship the k largest coordinates of `c` exactly, keep
+    /// the rest in the residual for later rounds.
+    fn topk_encode(
+        &mut self,
+        w: &[f32],
+        base: &[f32],
+        denom: u32,
+        out: &mut Vec<u8>,
+    ) {
+        let n = w.len();
+        if self.residual.len() != n {
+            self.residual = vec![0.0; n];
+        }
+        let k = ((n as u64 / denom.max(1) as u64).max(1) as usize).min(n);
+        let bv = |i: usize| if base.is_empty() { 0.0 } else { base[i] };
+        let c: Vec<f32> = (0..n)
+            .map(|i| w[i] - bv(i) + self.residual[i])
+            .collect();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        if k < n {
+            order.select_nth_unstable_by(k - 1, |&a, &b| {
+                c[b as usize].abs().total_cmp(&c[a as usize].abs())
+            });
+        }
+        let mut sel = order[..k].to_vec();
+        sel.sort_unstable();
+        out.extend_from_slice(&(k as u32).to_le_bytes());
+        for &i in &sel {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        for &i in &sel {
+            out.extend_from_slice(&c[i as usize].to_le_bytes());
+        }
+        self.residual.copy_from_slice(&c);
+        for &i in &sel {
+            self.residual[i as usize] = 0.0;
+        }
+    }
+}
+
+fn bump_encode(n: usize, encoded: usize, t0: Instant) {
+    let m = metrics();
+    m.codec_frames.inc();
+    m.codec_bytes_raw.add((n * 4) as u64);
+    m.codec_bytes_encoded.add(encoded as u64);
+    m.codec_encode_us.observe(t0.elapsed().as_micros() as u64);
+}
+
+// ---------------------------------------------------------------------------
+// Decode
+
+/// Decode an encoded body into a dense vector (workers applying a
+/// broadcast, the staged InverseLoss path, tests). `base` is the
+/// receiver's copy of the sender's base; empty = all zeros.
+pub fn decode_dense(
+    codec: u8,
+    n: usize,
+    body: &[u8],
+    base: &[f32],
+) -> Result<Vec<f32>> {
+    ensure!(
+        base.is_empty() || base.len() == n,
+        "codec base length {} != element count {n}",
+        base.len()
+    );
+    let t0 = Instant::now();
+    let mut out = Vec::with_capacity(n);
+    match codec {
+        CODEC_IDENTITY => raw_decode(n, body, &mut out)?,
+        CODEC_DELTA => xor_rle_decode(n, body, base, &mut out)?,
+        CODEC_F16 => f16_decode_all(n, body, &mut out)?,
+        CODEC_I8 => i8_decode_all(n, body, &mut out)?,
+        CODEC_TOPK => {
+            if base.is_empty() {
+                out.resize(n, 0.0);
+            } else {
+                out.extend_from_slice(base);
+            }
+            topk_walk(n, body, |i, v| out[i as usize] += v)?;
+        }
+        other => bail!("unknown codec id {other}"),
+    }
+    metrics().codec_decode_us.observe(t0.elapsed().as_micros() as u64);
+    Ok(out)
+}
+
+/// Decode an encoded body straight into the streaming mean fold.
+/// Sparse codecs (`delta`, `topk`) fold only the base-relative
+/// changes plus one `mark_base` tick — the dense vector is never
+/// materialised; [`MeanAccum::mean_with`] adds the shared base back.
+pub fn decode_fold(
+    codec: u8,
+    n: usize,
+    body: &[u8],
+    base: &[f32],
+    acc: &mut MeanAccum,
+) -> Result<()> {
+    ensure!(
+        acc.len() == n,
+        "codec element count {n} != accumulator length {}",
+        acc.len()
+    );
+    ensure!(
+        base.is_empty() || base.len() == n,
+        "codec base length {} != element count {n}",
+        base.len()
+    );
+    let t0 = Instant::now();
+    match codec {
+        CODEC_IDENTITY => {
+            ensure_body_len(body, n * 4, "identity")?;
+            acc.begin();
+            let mut scratch = [0f32; 1024];
+            let mut off = 0usize;
+            while off < n {
+                let take = (n - off).min(scratch.len());
+                for (j, s) in scratch[..take].iter_mut().enumerate() {
+                    let p = (off + j) * 4;
+                    *s = f32::from_le_bytes(
+                        body[p..p + 4].try_into().unwrap(),
+                    );
+                }
+                acc.fold_at(off, &scratch[..take]);
+                off += take;
+            }
+        }
+        CODEC_F16 => {
+            ensure_body_len(body, n * 2, "f16")?;
+            acc.begin();
+            let mut scratch = [0f32; 1024];
+            let mut off = 0usize;
+            while off < n {
+                let take = (n - off).min(scratch.len());
+                for (j, s) in scratch[..take].iter_mut().enumerate() {
+                    let p = (off + j) * 2;
+                    *s = f16_decode(u16::from_le_bytes(
+                        body[p..p + 2].try_into().unwrap(),
+                    ));
+                }
+                acc.fold_at(off, &scratch[..take]);
+                off += take;
+            }
+        }
+        CODEC_I8 => {
+            acc.begin();
+            i8_walk(n, body, &mut |off, chunk: &[f32]| {
+                acc.fold_at(off, chunk);
+            })?;
+        }
+        CODEC_DELTA => {
+            acc.begin();
+            acc.mark_base();
+            xor_rle_walk(n, body, &mut |pos, xor| {
+                let b = if base.is_empty() { 0.0 } else { base[pos] };
+                let w = f32::from_bits(b.to_bits() ^ xor);
+                acc.fold_sparse(&[pos as u32], &[w - b]);
+            })?;
+        }
+        CODEC_TOPK => {
+            acc.begin();
+            acc.mark_base();
+            topk_walk(n, body, |i, v| {
+                acc.fold_sparse(&[i], &[v]);
+            })?;
+        }
+        other => bail!("unknown codec id {other}"),
+    }
+    metrics().codec_decode_us.observe(t0.elapsed().as_micros() as u64);
+    Ok(())
+}
+
+fn ensure_body_len(body: &[u8], want: usize, what: &str) -> Result<()> {
+    ensure!(
+        body.len() == want,
+        "{what} body length {} != expected {want}",
+        body.len()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Raw (identity) body
+
+fn raw_encode(w: &[f32], out: &mut Vec<u8>) {
+    out.reserve(w.len() * 4);
+    for x in w {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn raw_decode(n: usize, body: &[u8], out: &mut Vec<f32>) -> Result<()> {
+    ensure_body_len(body, n * 4, "identity")?;
+    for i in 0..n {
+        out.push(f32::from_le_bytes(body[i * 4..i * 4 + 4].try_into().unwrap()));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// XOR-RLE (delta) body: records of (u32 skip, u32 run, run × u32 xor
+// words). `skip` counts words whose xor against the base is zero;
+// short (< 3-word) zero gaps are absorbed into the surrounding run
+// because two extra xor words are cheaper than an 8-byte header.
+
+fn xor_word(w: &[f32], base: &[f32], i: usize) -> u32 {
+    let b = if base.is_empty() { 0 } else { base[i].to_bits() };
+    w[i].to_bits() ^ b
+}
+
+fn xor_rle_encode(w: &[f32], base: &[f32], out: &mut Vec<u8>) {
+    let n = w.len();
+    let mut i = 0usize;
+    while i < n {
+        let mut skip = 0usize;
+        while i < n && xor_word(w, base, i) == 0 {
+            skip += 1;
+            i += 1;
+        }
+        if i == n {
+            break;
+        }
+        let start = i;
+        let mut end = i; // one past the last nonzero xor in this run
+        let mut gap = 0usize;
+        let mut j = i;
+        while j < n {
+            if xor_word(w, base, j) != 0 {
+                end = j + 1;
+                gap = 0;
+            } else {
+                gap += 1;
+                if gap >= 3 {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        out.extend_from_slice(&(skip as u32).to_le_bytes());
+        out.extend_from_slice(&((end - start) as u32).to_le_bytes());
+        for k in start..end {
+            out.extend_from_slice(&xor_word(w, base, k).to_le_bytes());
+        }
+        i = end;
+    }
+}
+
+/// Validated walk over an XOR-RLE body: calls `f(pos, xor)` for every
+/// *nonzero* xor word (zero words inside a run change nothing).
+fn xor_rle_walk(
+    n: usize,
+    body: &[u8],
+    f: &mut dyn FnMut(usize, u32),
+) -> Result<()> {
+    let mut c = Bc::new(body);
+    let mut pos = 0usize;
+    while !c.done() {
+        let skip = c.u32()? as usize;
+        let run = c.u32()? as usize;
+        pos = pos
+            .checked_add(skip)
+            .ok_or_else(|| anyhow::anyhow!("delta skip overflow"))?;
+        ensure!(
+            pos.checked_add(run).is_some_and(|e| e <= n),
+            "delta run [{pos}, {pos}+{run}) exceeds element count {n}"
+        );
+        for _ in 0..run {
+            let x = c.u32()?;
+            if x != 0 {
+                f(pos, x);
+            }
+            pos += 1;
+        }
+    }
+    Ok(())
+}
+
+fn xor_rle_decode(
+    n: usize,
+    body: &[u8],
+    base: &[f32],
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    if base.is_empty() {
+        out.resize(n, 0.0);
+    } else {
+        out.extend_from_slice(base);
+    }
+    let o: &mut Vec<f32> = out;
+    xor_rle_walk(n, body, &mut |pos, xor| {
+        o[pos] = f32::from_bits(o[pos].to_bits() ^ xor);
+    })
+}
+
+// ---------------------------------------------------------------------------
+// f16 body: n × 2 bytes, stochastic rounding. Overflow clamps to the
+// max finite half (0x7bff); |x| below the normal-half threshold
+// (2^-14) flushes to zero; inf/nan pass through.
+
+fn f16_encode_one(x: f32, rand13: u32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        return sign | 0x7c00 | if man != 0 { 0x200 } else { 0 };
+    }
+    let he = exp - 127 + 15;
+    if he >= 0x1f {
+        return sign | 0x7bff;
+    }
+    if he <= 0 {
+        return sign;
+    }
+    let mut h = sign | ((he as u16) << 10) | (man >> 13) as u16;
+    let rem = man & 0x1fff;
+    if (rand13 & 0x1fff) < rem {
+        h = h.wrapping_add(1);
+        if (h & 0x7c00) == 0x7c00 {
+            h = sign | 0x7bff; // mantissa carry crossed into inf
+        }
+    }
+    h
+}
+
+fn f16_decode(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = match (exp, man) {
+        (0, 0) => sign,
+        (0, m) => {
+            // Subnormal half: renormalise into an f32 exponent.
+            let mut e: i32 = 113;
+            let mut mm = m;
+            while mm & 0x400 == 0 {
+                mm <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((mm & 0x3ff) << 13)
+        }
+        (0x1f, 0) => sign | 0x7f80_0000,
+        (0x1f, m) => sign | 0x7fc0_0000 | (m << 13),
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+fn f16_encode_all(w: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
+    out.reserve(w.len() * 2);
+    for x in w {
+        let h = f16_encode_one(*x, rng.next_u64() as u32);
+        out.extend_from_slice(&h.to_le_bytes());
+    }
+}
+
+fn f16_decode_all(n: usize, body: &[u8], out: &mut Vec<f32>) -> Result<()> {
+    ensure_body_len(body, n * 2, "f16")?;
+    for i in 0..n {
+        out.push(f16_decode(u16::from_le_bytes(
+            body[i * 2..i * 2 + 2].try_into().unwrap(),
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// i8 body: chunks of up to I8_CHUNK elements, each [f32 scale][len ×
+// i8]. scale = maxabs/127 (an all-zero chunk stores scale 0 and a
+// zero payload); values stochastically round to q = x/scale.
+
+fn i8_encode_all(w: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
+    out.reserve(w.len() + (w.len() / I8_CHUNK + 1) * 4);
+    for chunk in w.chunks(I8_CHUNK) {
+        let maxabs = chunk.iter().fold(0f32, |a, x| a.max(x.abs()));
+        let scale = maxabs / 127.0;
+        out.extend_from_slice(&scale.to_le_bytes());
+        if scale == 0.0 || !scale.is_finite() {
+            // All-zero (or degenerate non-finite) chunk: zero payload.
+            out.extend(std::iter::repeat(0u8).take(chunk.len()));
+            continue;
+        }
+        for x in chunk {
+            let q = (*x / scale) as f64;
+            let lo = q.floor();
+            let up = rng.f64() < (q - lo);
+            let v = (lo as i64 + i64::from(up)).clamp(-127, 127);
+            out.push(v as i8 as u8);
+        }
+    }
+}
+
+/// Validated walk over an i8 body: calls `f(offset, decoded_chunk)`.
+fn i8_walk(
+    n: usize,
+    body: &[u8],
+    f: &mut dyn FnMut(usize, &[f32]),
+) -> Result<()> {
+    let mut c = Bc::new(body);
+    let mut off = 0usize;
+    let mut scratch = [0f32; I8_CHUNK];
+    while off < n {
+        let take = (n - off).min(I8_CHUNK);
+        let scale = c.f32()?;
+        ensure!(scale.is_finite(), "i8 chunk scale is not finite");
+        let q = c.bytes(take)?;
+        for (s, b) in scratch[..take].iter_mut().zip(q) {
+            *s = (*b as i8) as f32 * scale;
+        }
+        f(off, &scratch[..take]);
+        off += take;
+    }
+    ensure!(c.done(), "i8 body has trailing bytes");
+    Ok(())
+}
+
+fn i8_decode_all(n: usize, body: &[u8], out: &mut Vec<f32>) -> Result<()> {
+    i8_walk(n, body, &mut |_, chunk| out.extend_from_slice(chunk))
+}
+
+// ---------------------------------------------------------------------------
+// top-k body: u32 k, k × u32 ascending indices, k × f32 values
+// (base-relative changes, exact f32).
+
+fn topk_walk(
+    n: usize,
+    body: &[u8],
+    mut f: impl FnMut(u32, f32),
+) -> Result<()> {
+    let mut c = Bc::new(body);
+    let k = c.u32()? as usize;
+    ensure!(k <= n, "topk k={k} exceeds element count {n}");
+    ensure_body_len(body, 4 + k * 8, "topk")?;
+    let mut idx = Vec::with_capacity(k);
+    for _ in 0..k {
+        let i = c.u32()?;
+        ensure!((i as usize) < n, "topk index {i} out of range (n={n})");
+        idx.push(i);
+    }
+    for i in idx {
+        f(i, c.f32()?);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Minimal validated byte cursor for codec bodies (the wire-level
+// cursor in `comm` owns the frame headers; bodies are opaque there).
+
+struct Bc<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Bc<'a> {
+    fn new(b: &'a [u8]) -> Bc<'a> {
+        Bc { b, i: 0 }
+    }
+    fn done(&self) -> bool {
+        self.i >= self.b.len()
+    }
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.i + n <= self.b.len(),
+            "codec body truncated at byte {} (want {n} more of {})",
+            self.i,
+            self.b.len()
+        );
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(seed: u64, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let base: Vec<f32> =
+            (0..n).map(|_| rng.gaussian() as f32).collect();
+        let w: Vec<f32> = base
+            .iter()
+            .map(|x| x + 0.01 * rng.gaussian() as f32)
+            .collect();
+        (w, base)
+    }
+
+    #[test]
+    fn parse_roundtrips_and_rejects() {
+        for s in ["identity", "delta", "f16", "i8", "topk:64", "topk:8"] {
+            let k = CodecKind::parse(s).unwrap();
+            assert_eq!(CodecKind::parse(&k.name()).unwrap(), k);
+        }
+        assert_eq!(
+            CodecKind::parse("").unwrap(),
+            CodecKind::Identity
+        );
+        assert_eq!(
+            CodecKind::parse("topk").unwrap(),
+            CodecKind::TopK { denom: 64 }
+        );
+        assert!(CodecKind::parse("gzip").is_err());
+        assert!(CodecKind::parse("topk:0").is_err());
+        assert!(CodecKind::parse("topk:x").is_err());
+    }
+
+    #[test]
+    fn resolve_env_beats_config_field() {
+        // Serialised inside one test: RTMA_CODEC is process-global.
+        std::env::remove_var("RTMA_CODEC");
+        assert!(resolve("").unwrap().is_identity());
+        assert_eq!(resolve("delta").unwrap(), CodecKind::Delta);
+        std::env::set_var("RTMA_CODEC", "f16");
+        assert_eq!(resolve("delta").unwrap(), CodecKind::F16);
+        std::env::set_var("RTMA_CODEC", "nonsense");
+        assert!(resolve("delta").is_err());
+        std::env::remove_var("RTMA_CODEC");
+        assert_eq!(resolve("delta").unwrap(), CodecKind::Delta);
+    }
+
+    #[test]
+    fn delta_roundtrip_is_bit_exact() {
+        for (seed, n) in [(1u64, 1usize), (2, 257), (3, 4096)] {
+            let (w, base) = vecs(seed, n);
+            let mut enc = RoundEncoder::new(CodecKind::Delta, 7);
+            let mut body = Vec::new();
+            let id = enc.encode_up(&w, &base, &mut body);
+            assert_eq!(id, CODEC_DELTA);
+            let back = decode_dense(id, n, &body, &base).unwrap();
+            assert_eq!(
+                w.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                back.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            );
+        }
+    }
+
+    #[test]
+    fn delta_sparse_change_compresses() {
+        let n = 8192;
+        let (base, _) = vecs(4, n);
+        let mut w = base.clone();
+        for i in (0..n).step_by(512) {
+            w[i] += 1.0;
+        }
+        let mut enc = RoundEncoder::new(CodecKind::Delta, 7);
+        let mut body = Vec::new();
+        enc.encode_up(&w, &base, &mut body);
+        assert!(
+            body.len() < n, // 16 changed words ≪ 4n raw bytes
+            "sparse delta body {} should be far under raw {}",
+            body.len(),
+            n * 4
+        );
+        let back = decode_dense(CODEC_DELTA, n, &body, &base).unwrap();
+        assert_eq!(
+            w.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            back.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn delta_empty_base_means_zeros() {
+        let (w, _) = vecs(5, 300);
+        let mut enc = RoundEncoder::new(CodecKind::Delta, 7);
+        let mut body = Vec::new();
+        enc.encode_up(&w, &[], &mut body);
+        let back = decode_dense(CODEC_DELTA, w.len(), &body, &[]).unwrap();
+        assert_eq!(
+            w.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            back.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn f16_error_bounded_and_exact_on_representables() {
+        let (w, _) = vecs(6, 4096);
+        let mut enc = RoundEncoder::new(CodecKind::F16, 9);
+        let mut body = Vec::new();
+        enc.encode_up(&w, &[], &mut body);
+        let back = decode_dense(CODEC_F16, w.len(), &body, &[]).unwrap();
+        for (x, y) in w.iter().zip(&back) {
+            let bound = x.abs() as f64 / 512.0 + 6.2e-5;
+            assert!(
+                ((x - y).abs() as f64) <= bound,
+                "f16 error {x} -> {y} exceeds bound {bound}"
+            );
+        }
+        // Exactly representable halves survive any rounding bits.
+        let exact = [0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 1024.0];
+        for bits in [0u32, 0x1fff, 0x1000] {
+            for x in exact {
+                assert_eq!(f16_decode(f16_encode_one(x, bits)), x);
+            }
+        }
+        // Overflow clamps finite; inf/nan pass through.
+        assert!(f16_decode(f16_encode_one(1e30, 0)).is_finite());
+        assert!(f16_decode(f16_encode_one(f32::INFINITY, 0)).is_infinite());
+        assert!(f16_decode(f16_encode_one(f32::NAN, 0)).is_nan());
+    }
+
+    #[test]
+    fn i8_error_bounded_by_chunk_scale() {
+        let (w, _) = vecs(8, 2 * I8_CHUNK + 100);
+        let mut enc = RoundEncoder::new(CodecKind::I8, 9);
+        let mut body = Vec::new();
+        enc.encode_up(&w, &[], &mut body);
+        let back = decode_dense(CODEC_I8, w.len(), &body, &[]).unwrap();
+        for (ci, chunk) in w.chunks(I8_CHUNK).enumerate() {
+            let scale = chunk.iter().fold(0f32, |a, x| a.max(x.abs())) / 127.0;
+            for (j, x) in chunk.iter().enumerate() {
+                let y = back[ci * I8_CHUNK + j];
+                assert!(
+                    (x - y).abs() <= scale * 1.0001 + 1e-12,
+                    "i8 error {x} -> {y} exceeds scale {scale}"
+                );
+            }
+        }
+        assert!(body.len() * 3 < w.len() * 4 && body.len() > w.len());
+    }
+
+    #[test]
+    fn i8_all_zero_chunk_roundtrips() {
+        let w = vec![0.0f32; I8_CHUNK + 3];
+        let mut enc = RoundEncoder::new(CodecKind::I8, 9);
+        let mut body = Vec::new();
+        enc.encode_up(&w, &[], &mut body);
+        let back = decode_dense(CODEC_I8, w.len(), &body, &[]).unwrap();
+        assert!(back.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn topk_ships_largest_changes_exactly() {
+        let n = 1024;
+        let (base, _) = vecs(10, n);
+        let mut w = base.clone();
+        w[17] += 5.0;
+        w[600] -= 4.0;
+        let mut enc = RoundEncoder::new(CodecKind::TopK { denom: 512 }, 3);
+        let mut body = Vec::new();
+        let id = enc.encode_up(&w, &base, &mut body);
+        assert_eq!(id, CODEC_TOPK);
+        let back = decode_dense(id, n, &body, &base).unwrap();
+        // k = 2: exactly the two injected coordinates move.
+        assert_eq!(back[17].to_bits(), w[17].to_bits());
+        assert_eq!(back[600].to_bits(), w[600].to_bits());
+        let moved = (0..n)
+            .filter(|&i| back[i].to_bits() != base[i].to_bits())
+            .count();
+        assert_eq!(moved, 2);
+    }
+
+    #[test]
+    fn fold_matches_dense_decode() {
+        let n = 3000;
+        let (w, base) = vecs(11, n);
+        for kind in [
+            CodecKind::Delta,
+            CodecKind::F16,
+            CodecKind::I8,
+            CodecKind::TopK { denom: 16 },
+        ] {
+            let mut enc = RoundEncoder::new(kind, 21);
+            let mut body = Vec::new();
+            let id = enc.encode_up(&w, &base, &mut body);
+            let dense = decode_dense(id, n, &body, &base).unwrap();
+            let mut acc = MeanAccum::new(n);
+            decode_fold(id, n, &body, &base, &mut acc).unwrap();
+            let mean = acc.mean_with(Some(&base));
+            for (a, b) in dense.iter().zip(&mean) {
+                assert!(
+                    (a - b).abs() <= 1e-5 * a.abs().max(1.0),
+                    "{kind:?}: fold {b} != dense {a}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_malformed_bodies() {
+        // Truncated / oversized structural fields in every codec.
+        assert!(decode_dense(CODEC_IDENTITY, 4, &[0u8; 15], &[]).is_err());
+        assert!(decode_dense(CODEC_F16, 4, &[0u8; 7], &[]).is_err());
+        assert!(decode_dense(CODEC_I8, 4, &[0u8; 2], &[]).is_err());
+        // delta run past the end.
+        let mut body = Vec::new();
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&9u32.to_le_bytes());
+        body.extend_from_slice(&[0u8; 36]);
+        assert!(decode_dense(CODEC_DELTA, 4, &body, &[]).is_err());
+        // topk k > n and index out of range.
+        let mut body = Vec::new();
+        body.extend_from_slice(&9u32.to_le_bytes());
+        assert!(decode_dense(CODEC_TOPK, 4, &body, &[]).is_err());
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&7u32.to_le_bytes());
+        body.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(decode_dense(CODEC_TOPK, 4, &body, &[]).is_err());
+        // Unknown codec id.
+        assert!(decode_dense(99, 4, &[], &[]).is_err());
+        let mut acc = MeanAccum::new(4);
+        assert!(decode_fold(99, 4, &[], &[], &mut acc).is_err());
+    }
+}

@@ -7,7 +7,23 @@
 //! over TCP. `examples/distributed_tcp.rs` drives it end to end.
 //!
 //! Framing: 4-byte LE length prefix + 1 tag byte + fixed header +
-//! payload (f32 weights as raw LE bytes). No serde dependency.
+//! payload (f32 weights as raw LE bytes). No serde dependency. Both
+//! sides enforce one shared [`MAX_FRAME`] cap: the sender bails
+//! before writing a frame the receiver would refuse (an unguarded
+//! `len as u32` used to silently wrap past 4 GiB and desync the
+//! stream), and the receiver reads accepted bodies in bounded chunks
+//! instead of allocating the announced length up front.
+//!
+//! Round payloads can travel compressed: `WeightsEnc`/`BroadcastEnc`
+//! frames carry a codec id plus an opaque encoded body (see
+//! [`codec`]), and the `Codec` message negotiates the session codec
+//! during the `Hello`/`Ready` handshake so mismatched peers fail
+//! loudly instead of mis-decoding each other's bodies. With the
+//! default `identity` codec the data plane uses the plain
+//! `Weights`/`Broadcast` frames — bit-for-bit the pre-codec wire
+//! (pinned by `tests/codec.rs`).
+
+pub mod codec;
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -15,6 +31,12 @@ use std::net::TcpStream;
 use anyhow::{bail, Result};
 
 use crate::telemetry::metrics;
+
+/// Hard cap on one frame's encoded length (bytes, excluding the
+/// 4-byte prefix). Shared by [`send_wire`] (bail before writing) and
+/// [`recv_into`] (refuse the prefix before reading the body); fits a
+/// 256M-parameter dense weight vector.
+pub const MAX_FRAME: usize = 1 << 30;
 
 /// Protocol messages between leader and workers.
 #[derive(Debug, Clone, PartialEq)]
@@ -32,6 +54,23 @@ pub enum Message {
     Collect { round: u64 },
     /// Leader -> worker: stop training and report.
     Stop,
+    /// Both directions during the handshake: the sender's round codec
+    /// family id (`codec::CODEC_*`). Workers announce theirs after
+    /// `Hello`; the leader acks with its own after `Ready`.
+    Codec { codec: u8 },
+    /// Worker -> leader: codec-encoded local weights. `codec` is the
+    /// *actual* encoding id of `body`; `n` is the decoded element
+    /// count.
+    WeightsEnc {
+        round: u64,
+        loss: f32,
+        steps: u64,
+        codec: u8,
+        n: u64,
+        body: Vec<u8>,
+    },
+    /// Leader -> worker: codec-encoded global weights.
+    BroadcastEnc { round: u64, codec: u8, n: u64, body: Vec<u8> },
 }
 
 /// Borrowed view of a [`Message`] for zero-clone sends: the weight
@@ -48,6 +87,16 @@ pub enum WireMsg<'a> {
     Broadcast { round: u64, data: &'a [f32] },
     Collect { round: u64 },
     Stop,
+    Codec { codec: u8 },
+    WeightsEnc {
+        round: u64,
+        loss: f32,
+        steps: u64,
+        codec: u8,
+        n: u64,
+        body: &'a [u8],
+    },
+    BroadcastEnc { round: u64, codec: u8, n: u64, body: &'a [u8] },
 }
 
 const TAG_HELLO: u8 = 1;
@@ -56,6 +105,9 @@ const TAG_WEIGHTS: u8 = 3;
 const TAG_BROADCAST: u8 = 4;
 const TAG_STOP: u8 = 5;
 const TAG_COLLECT: u8 = 6;
+const TAG_CODEC: u8 = 7;
+const TAG_WEIGHTS_ENC: u8 = 8;
+const TAG_BROADCAST_ENC: u8 = 9;
 
 impl WireMsg<'_> {
     /// Encode into `out`, clearing it first. Callers keep one scratch
@@ -91,6 +143,26 @@ impl WireMsg<'_> {
                 out.extend_from_slice(&round.to_le_bytes());
             }
             WireMsg::Stop => out.push(TAG_STOP),
+            WireMsg::Codec { codec } => {
+                out.push(TAG_CODEC);
+                out.push(codec);
+            }
+            WireMsg::WeightsEnc { round, loss, steps, codec, n, body } => {
+                out.push(TAG_WEIGHTS_ENC);
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&loss.to_le_bytes());
+                out.extend_from_slice(&steps.to_le_bytes());
+                out.push(codec);
+                out.extend_from_slice(&n.to_le_bytes());
+                out.extend_from_slice(body);
+            }
+            WireMsg::BroadcastEnc { round, codec, n, body } => {
+                out.push(TAG_BROADCAST_ENC);
+                out.extend_from_slice(&round.to_le_bytes());
+                out.push(codec);
+                out.extend_from_slice(&n.to_le_bytes());
+                out.extend_from_slice(body);
+            }
         }
     }
 }
@@ -116,6 +188,25 @@ impl Message {
                 WireMsg::Collect { round: *round }
             }
             Message::Stop => WireMsg::Stop,
+            Message::Codec { codec } => WireMsg::Codec { codec: *codec },
+            Message::WeightsEnc { round, loss, steps, codec, n, body } => {
+                WireMsg::WeightsEnc {
+                    round: *round,
+                    loss: *loss,
+                    steps: *steps,
+                    codec: *codec,
+                    n: *n,
+                    body,
+                }
+            }
+            Message::BroadcastEnc { round, codec, n, body } => {
+                WireMsg::BroadcastEnc {
+                    round: *round,
+                    codec: *codec,
+                    n: *n,
+                    body,
+                }
+            }
         }
     }
 
@@ -145,6 +236,33 @@ impl Message {
             }
             TAG_COLLECT => Message::Collect { round: cur.u64()? },
             TAG_STOP => Message::Stop,
+            TAG_CODEC => Message::Codec { codec: cur.u8()? },
+            TAG_WEIGHTS_ENC => {
+                let round = cur.u64()?;
+                let loss = cur.f32()?;
+                let steps = cur.u64()?;
+                let codec = cur.u8()?;
+                let n = cur.u64()?;
+                Message::WeightsEnc {
+                    round,
+                    loss,
+                    steps,
+                    codec,
+                    n,
+                    body: cur.rest().to_vec(),
+                }
+            }
+            TAG_BROADCAST_ENC => {
+                let round = cur.u64()?;
+                let codec = cur.u8()?;
+                let n = cur.u64()?;
+                Message::BroadcastEnc {
+                    round,
+                    codec,
+                    n,
+                    body: cur.rest().to_vec(),
+                }
+            }
             other => bail!("bad message tag {other}"),
         })
     }
@@ -204,6 +322,13 @@ impl<'a> Cursor<'a> {
     fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
+    /// All remaining bytes (encoded codec bodies run to the end of
+    /// the frame — the outer length prefix already bounds them).
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.b[self.i..];
+        self.i = self.b.len();
+        s
+    }
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
         // A hostile element count must not wrap the byte length into a
         // small (and then "successful") read.
@@ -222,14 +347,37 @@ impl<'a> Cursor<'a> {
 /// the caller's reused per-connection buffer. `Weights`/`Broadcast`
 /// payloads are written straight from the borrowed slab, so the
 /// steady-state round path neither clones the weight vector nor
-/// allocates the frame.
+/// allocates the frame. Frames over [`MAX_FRAME`] bail *before any
+/// byte is written*: the old code framed with an unguarded
+/// `len as u32`, so an oversized payload was only caught by the
+/// receiver (and one over 4 GiB wrapped the prefix and desynced the
+/// stream).
 pub fn send_wire(
     stream: &mut TcpStream,
     msg: &WireMsg<'_>,
     scratch: &mut Vec<u8>,
 ) -> Result<()> {
+    send_wire_capped(stream, msg, scratch, MAX_FRAME)
+}
+
+/// [`send_wire`] with an explicit cap — generic over the sink so the
+/// sender-side bail is testable without a 1 GiB payload.
+fn send_wire_capped<W: Write>(
+    stream: &mut W,
+    msg: &WireMsg<'_>,
+    scratch: &mut Vec<u8>,
+    cap: usize,
+) -> Result<()> {
     let cap_before = scratch.capacity();
     msg.encode_into(scratch);
+    if scratch.len() > cap {
+        metrics().comm_frames_rejected.inc();
+        bail!(
+            "refusing to send {}-byte frame: exceeds the {cap}-byte \
+             frame cap (the receiver would reject it)",
+            scratch.len()
+        );
+    }
     // Wire counters: did this encode reuse the scratch allocation
     // (steady state) or grow it (first frame of a new high-water
     // mark)? Plus raw frame/byte totals for `trace-report`.
@@ -288,19 +436,111 @@ pub fn train_until_pending(
     outcome
 }
 
-/// Read one length-prefixed message (blocking).
-pub fn recv(stream: &mut TcpStream) -> Result<Message> {
+/// Body bytes pulled per `read_exact` call in [`recv_into`]: bounds
+/// how much memory a garbage length prefix can commit before the
+/// stream runs dry.
+const RECV_CHUNK: usize = 64 * 1024;
+
+/// Read one length-prefixed message into the caller's reused scratch
+/// buffer (blocking) — the receive-side mirror of [`send_wire`]'s
+/// scratch discipline. The body is read in [`RECV_CHUNK`]-bounded
+/// slices, so an accepted-but-bogus prefix (the old code did
+/// `vec![0u8; n]` for anything under the cap before reading a single
+/// body byte) grows the buffer only as far as the peer actually
+/// delivers. Rejected prefixes and undecodable frames bump the
+/// `comm_frames_rejected` counter.
+pub fn recv_into<R: Read>(
+    stream: &mut R,
+    scratch: &mut Vec<u8>,
+) -> Result<Message> {
     let mut len = [0u8; 4];
     stream.read_exact(&mut len)?;
     let n = u32::from_le_bytes(len) as usize;
-    if n > 1 << 30 {
+    if n > MAX_FRAME {
+        metrics().comm_frames_rejected.inc();
         bail!("message too large: {n}");
     }
-    let mut body = vec![0u8; n];
-    stream.read_exact(&mut body)?;
+    scratch.clear();
+    let mut got = 0usize;
+    while got < n {
+        let take = (n - got).min(RECV_CHUNK);
+        scratch.resize(got + take, 0);
+        stream.read_exact(&mut scratch[got..got + take])?;
+        got += take;
+    }
     metrics().comm_frames_in.inc();
     metrics().comm_bytes_in.add(4 + n as u64);
-    Message::decode(&body)
+    match Message::decode(scratch) {
+        Ok(m) => Ok(m),
+        Err(e) => {
+            metrics().comm_frames_rejected.inc();
+            Err(e)
+        }
+    }
+}
+
+/// Read one length-prefixed message (allocating convenience wrapper
+/// over [`recv_into`] for handshake and control paths).
+pub fn recv(stream: &mut TcpStream) -> Result<Message> {
+    let mut scratch = Vec::new();
+    recv_into(stream, &mut scratch)
+}
+
+/// Worker side of the connection handshake: announce `id` and the
+/// configured codec, signal ready, then check the leader's codec ack.
+/// A family mismatch fails loudly here — before any round frame could
+/// be mis-decoded.
+pub fn client_handshake(
+    stream: &mut TcpStream,
+    id: u32,
+    codec: codec::CodecKind,
+) -> Result<()> {
+    send(stream, &Message::Hello { id })?;
+    send(stream, &Message::Codec { codec: codec.id() })?;
+    send(stream, &Message::Ready { id })?;
+    match recv(stream)? {
+        Message::Codec { codec: leader } if leader == codec.id() => Ok(()),
+        Message::Codec { codec: leader } => bail!(
+            "codec mismatch: leader runs codec id {leader}, this worker \
+             is configured for {} (id {})",
+            codec.name(),
+            codec.id()
+        ),
+        other => bail!("expected leader codec ack, got {other:?}"),
+    }
+}
+
+/// Leader side of the connection handshake: expect `Hello`, `Codec`,
+/// `Ready` in order, verify the codec family matches, and ack with
+/// ours. Returns the worker id. A worker that skips the `Codec`
+/// announcement (a pre-codec build) fails loudly too.
+pub fn server_handshake(
+    stream: &mut TcpStream,
+    codec: codec::CodecKind,
+) -> Result<u32> {
+    let id = match recv(stream)? {
+        Message::Hello { id } => id,
+        other => bail!("expected Hello, got {other:?}"),
+    };
+    match recv(stream)? {
+        Message::Codec { codec: worker } if worker == codec.id() => {}
+        Message::Codec { codec: worker } => bail!(
+            "codec mismatch: worker {id} runs codec id {worker}, leader \
+             is configured for {} (id {})",
+            codec.name(),
+            codec.id()
+        ),
+        other => bail!(
+            "worker {id} did not negotiate a codec (got {other:?}) — \
+             peer predates codec negotiation"
+        ),
+    }
+    match recv(stream)? {
+        Message::Ready { .. } => {}
+        other => bail!("expected Ready from worker {id}, got {other:?}"),
+    }
+    send(stream, &Message::Codec { codec: codec.id() })?;
+    Ok(id)
 }
 
 #[cfg(test)]
@@ -550,6 +790,178 @@ mod tests {
             &mut scratch,
         )
         .unwrap();
+    }
+
+    #[test]
+    fn send_wire_bails_before_writing_oversized_frame() {
+        // Failing-before test for the framing bug: the old send path
+        // wrote `len as u32` unguarded, so an oversized frame hit the
+        // wire and desynced the receiver. Now the sender errors and
+        // the sink stays empty.
+        let data: Vec<f32> = vec![1.0; 64];
+        let mut sink: Vec<u8> = Vec::new();
+        let mut scratch = Vec::new();
+        let err = send_wire_capped(
+            &mut sink,
+            &WireMsg::Broadcast { round: 1, data: &data },
+            &mut scratch,
+            100, // tiny cap: the 273-byte frame must be refused
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("frame cap"), "{err}");
+        assert!(
+            sink.is_empty(),
+            "no bytes may reach the wire once the cap check fails"
+        );
+        // Same frame under the real cap goes through.
+        send_wire_capped(
+            &mut sink,
+            &WireMsg::Broadcast { round: 1, data: &data },
+            &mut scratch,
+            MAX_FRAME,
+        )
+        .unwrap();
+        assert_eq!(sink.len(), 4 + scratch.len());
+    }
+
+    #[test]
+    fn recv_into_reads_garbage_prefix_in_bounded_chunks() {
+        // A peer that announces a huge (but under-cap) body and then
+        // hangs up must not cost the receiver the announced
+        // allocation: the chunked read grows the scratch by at most
+        // RECV_CHUNK before the dry stream errors out.
+        let announced = 512 * 1024 * 1024u32; // 512 MiB, under MAX_FRAME
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&announced.to_le_bytes());
+        wire.extend_from_slice(&[7u8; 100]); // then silence
+        let mut stream = std::io::Cursor::new(wire);
+        let mut scratch = Vec::new();
+        assert!(recv_into(&mut stream, &mut scratch).is_err());
+        assert!(
+            scratch.capacity() <= 2 * RECV_CHUNK,
+            "scratch grew to {} for an undelivered body",
+            scratch.capacity()
+        );
+    }
+
+    #[test]
+    fn recv_into_reuses_scratch_and_rejects_bump_counter() {
+        let msg = Message::Weights {
+            round: 1,
+            loss: 0.5,
+            steps: 3,
+            data: vec![2.0; 300],
+        };
+        let body = msg.encode();
+        let mut wire = Vec::new();
+        for _ in 0..2 {
+            wire.extend_from_slice(&(body.len() as u32).to_le_bytes());
+            wire.extend_from_slice(&body);
+        }
+        // Third frame: well-formed length, undecodable payload.
+        wire.extend_from_slice(&3u32.to_le_bytes());
+        wire.extend_from_slice(&[99, 99, 99]);
+        let mut stream = std::io::Cursor::new(wire);
+        let mut scratch = Vec::new();
+        let rejected_before =
+            crate::telemetry::snapshot().counter("comm_frames_rejected");
+        assert_eq!(recv_into(&mut stream, &mut scratch).unwrap(), msg);
+        let cap = scratch.capacity();
+        let ptr = scratch.as_ptr();
+        assert_eq!(recv_into(&mut stream, &mut scratch).unwrap(), msg);
+        assert_eq!(scratch.capacity(), cap, "second frame reallocated");
+        assert_eq!(scratch.as_ptr(), ptr);
+        assert!(recv_into(&mut stream, &mut scratch).is_err());
+        let rejected_after =
+            crate::telemetry::snapshot().counter("comm_frames_rejected");
+        assert!(
+            rejected_after > rejected_before,
+            "undecodable frame must bump comm_frames_rejected"
+        );
+    }
+
+    #[test]
+    fn codec_and_encoded_frames_roundtrip() {
+        let msgs = vec![
+            Message::Codec { codec: 4 },
+            Message::WeightsEnc {
+                round: 6,
+                loss: 0.75,
+                steps: 11,
+                codec: 1,
+                n: 1000,
+                body: vec![1, 2, 3, 4, 5],
+            },
+            Message::BroadcastEnc {
+                round: 7,
+                codec: 2,
+                n: 64,
+                body: vec![9; 128],
+            },
+        ];
+        let mut scratch = Vec::new();
+        for m in &msgs {
+            assert_eq!(&Message::decode(&m.encode()).unwrap(), m);
+            m.wire().encode_into(&mut scratch);
+            assert_eq!(scratch, m.encode(), "{m:?}");
+        }
+        // Truncated encoded-frame headers error instead of panicking.
+        let b = msgs[1].encode();
+        for cut in [1, 8, 20, 29] {
+            assert!(Message::decode(&b[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn handshake_negotiates_and_rejects_mismatch() {
+        use super::codec::CodecKind;
+        // Matching codecs: handshake completes, id survives.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            server_handshake(&mut s, CodecKind::TopK { denom: 64 })
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        client_handshake(&mut client, 5, CodecKind::TopK { denom: 32 })
+            .unwrap(); // same family, different denom: negotiates
+        assert_eq!(h.join().unwrap().unwrap(), 5);
+
+        // Mismatched families: both sides fail loudly.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            server_handshake(&mut s, CodecKind::Identity)
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        // The leader drops the connection on mismatch without acking,
+        // so the client fails too — either with the explicit mismatch
+        // or the dead socket; both are loud.
+        assert!(
+            client_handshake(&mut client, 2, CodecKind::Delta).is_err()
+        );
+        let server_err = h.join().unwrap().unwrap_err();
+        assert!(
+            server_err.to_string().contains("codec mismatch"),
+            "{server_err}"
+        );
+
+        // A pre-codec peer (Hello then Ready, no Codec frame).
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            server_handshake(&mut s, CodecKind::Identity)
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        send(&mut client, &Message::Hello { id: 1 }).unwrap();
+        send(&mut client, &Message::Ready { id: 1 }).unwrap();
+        let err = h.join().unwrap().unwrap_err();
+        assert!(
+            err.to_string().contains("did not negotiate"),
+            "{err}"
+        );
     }
 
     #[test]

@@ -118,6 +118,11 @@ pub struct RunConfig {
     /// Deterministic per-trainer slowdown factors (cycled; 1.0 = full
     /// speed) emulating heterogeneous instances (§4.3.2).
     pub slowdown: Vec<f64>,
+    /// Round codec: "" keeps the default (identity unless `RTMA_CODEC`
+    /// is set — the env var wins over this field; see
+    /// `comm::codec::resolve` and docs/COMM.md). "delta", "f16", "i8"
+    /// and "topk[:denom]" select compressed round payloads.
+    pub codec: String,
     pub seed: u64,
 }
 
@@ -140,6 +145,7 @@ impl Default for RunConfig {
             failures: 0,
             failed_ids: Vec::new(),
             slowdown: Vec::new(),
+            codec: String::new(),
             seed: 17,
         }
     }
@@ -191,6 +197,7 @@ impl RunConfig {
             ("negatives", Json::num(self.negatives as f64)),
             ("eval_sample", Json::num(self.eval_sample as f64)),
             ("failures", Json::num(self.failures as f64)),
+            ("codec", Json::str(self.codec.clone())),
             ("seed", Json::num(self.seed as f64)),
         ])
     }

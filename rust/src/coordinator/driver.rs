@@ -13,6 +13,7 @@ use anyhow::{Context, Result};
 
 use crate::runtime::load_backend;
 
+use crate::comm::codec;
 use crate::config::{Approach, RunConfig};
 use crate::gen::{load_preset, Preset};
 use crate::graph::induce_all_except;
@@ -65,6 +66,18 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
     let train_graph = &preset.split.train;
     let m = cfg.trainers;
     let mut rng = Rng::new(cfg.seed ^ 0xC0FFEE);
+    // Round codec: identity default < `cfg.codec` < `RTMA_CODEC` env.
+    // Resolved once here so trainers and server agree by construction
+    // (the TCP path negotiates the same choice in its handshake).
+    let codec_kind = codec::resolve(&cfg.codec)?;
+    if !codec_kind.is_identity() {
+        telemetry::info(
+            "driver",
+            "codec",
+            &[("codec", codec_kind.id() as f64)],
+            format_args!("round codec: {}", codec_kind.name()),
+        );
+    }
 
     // ---- Partition + subgraph extraction (R1) ----------------------------
     // The timed prep step now covers the *whole* data-preparation cost
@@ -243,6 +256,7 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
                     tx,
                     slowdown,
                     seed,
+                    codec: codec_kind,
                 })
             }));
         } else {
@@ -258,6 +272,7 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
                     tx,
                     slowdown,
                     seed,
+                    codec: codec_kind,
                 })
             }));
         }
@@ -316,6 +331,7 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
             &eval_req_tx,
             &eval_done_rx,
             llcg,
+            codec_kind,
         )?
     };
     drop(global_txs); // unblock any trainer waiting on a broadcast

@@ -18,6 +18,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::comm::codec::{self, CodecKind, RoundEncoder};
 use crate::config::RunConfig;
 use crate::metrics::{EvalPoint, LossPoint};
 use crate::model::{Adam, MeanAccum};
@@ -27,7 +28,9 @@ use crate::telemetry::{self, metrics, Span};
 use crate::util::rng::Rng;
 
 use super::evaluator::{BestTracker, EvalDone, EvalReq};
-use super::kv::{Control, GlobalWeights, TrainerMsg, TrainerReport};
+use super::kv::{
+    Control, GlobalWeights, RoundPayload, TrainerMsg, TrainerReport,
+};
 use super::server::ServerOutcome;
 
 /// GGS trainer thread: gradient worker over the full graph.
@@ -42,6 +45,11 @@ pub struct GgsTrainerSpec {
     pub tx: mpsc::Sender<TrainerMsg>,
     pub slowdown: f64,
     pub seed: u64,
+    /// Round codec for shipped gradients. Gradients encode against a
+    /// zero base ([`codec`]'s "empty base = zeros" convention): a
+    /// top-k codec then ships the k largest gradient entries with
+    /// error feedback, delta RLE-compresses gradient sparsity.
+    pub codec: CodecKind,
 }
 
 pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
@@ -56,7 +64,14 @@ pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
         tx,
         slowdown,
         seed,
+        codec: codec_kind,
     } = spec;
+    let mut up_enc = (!codec_kind.is_identity()).then(|| {
+        RoundEncoder::new(
+            codec_kind,
+            seed ^ (id as u64).wrapping_mul(0x9e37_79b9),
+        )
+    });
     // Startup failures mark_dead so the server's ready barrier (which
     // counts ready + dead) releases instead of hanging forever.
     // `load_backend` owns the failure telemetry.
@@ -138,10 +153,22 @@ pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
                 if slowdown > 1.0 {
                     std::thread::sleep(t0.elapsed().mul_f64(slowdown - 1.0));
                 }
+                let payload = match up_enc.as_mut() {
+                    None => RoundPayload::Dense(grad),
+                    Some(enc) => {
+                        let mut body = Vec::new();
+                        let cid = enc.encode_up(&grad, &[], &mut body);
+                        RoundPayload::Encoded {
+                            codec: cid,
+                            n: grad.len(),
+                            body,
+                        }
+                    }
+                };
                 let msg = TrainerMsg {
                     id,
                     round: steps,
-                    weights: grad,
+                    payload,
                     loss,
                     steps,
                 };
@@ -255,7 +282,30 @@ pub fn ggs_server(
                 match rx.recv_timeout(Duration::from_millis(200)) {
                     Ok(msg) => {
                         metrics().round_msgs.inc();
-                        acc.add(&msg.weights)
+                        match msg.payload {
+                            RoundPayload::Dense(g) => acc.add(&g),
+                            RoundPayload::Encoded { codec: cid, n, body } => {
+                                // Gradients encode against a zero base.
+                                // Undecodable bodies can't happen (our
+                                // own encoder); drop the message so the
+                                // step completes with the others.
+                                if let Err(e) = codec::decode_fold(
+                                    cid, n, &body, &[], &mut acc,
+                                ) {
+                                    metrics().comm_frames_rejected.inc();
+                                    telemetry::info(
+                                        "ggs",
+                                        "codec_drop",
+                                        &[("trainer", msg.id as f64)],
+                                        format_args!(
+                                            "undecodable codec body from \
+                                             trainer {}: {e}",
+                                            msg.id
+                                        ),
+                                    );
+                                }
+                            }
+                        }
                     }
                     Err(_) => {
                         // Poll wakeup: a grad failure marks the trainer
@@ -290,7 +340,10 @@ pub fn ggs_server(
             let _sp = Span::start("ggs", "aggregate")
                 .round(rounds + 1)
                 .hist(&metrics().phase_aggregate);
-            acc.mean_into(&mut grad_mean);
+            // `None` base = zeros: sparse codec folds contribute their
+            // base-relative values directly (identity path is bitwise
+            // `mean_into`).
+            acc.mean_with_into(None, &mut grad_mean);
             adam.step(&mut w, &grad_mean);
         }
         rounds += 1;

@@ -167,13 +167,49 @@ pub enum TrainerAction {
     Train,
 }
 
+/// A round message's weight (or gradient) payload. `Dense` is the
+/// pre-codec path — the raw vector, folded bit-identically to the
+/// staged reference. Non-identity codecs ship `Encoded`: the compact
+/// body plus the *actual* wire encoding id
+/// ([`crate::comm::codec::CODEC_DELTA`] etc.) and the decoded element
+/// count, exactly what a `WeightsEnc` TCP frame carries — the
+/// in-process channels and the wire stay one protocol.
+#[derive(Debug, Clone)]
+pub enum RoundPayload {
+    Dense(Vec<f32>),
+    Encoded { codec: u8, n: usize, body: Vec<u8> },
+}
+
+impl RoundPayload {
+    /// Decoded element count.
+    pub fn len(&self) -> usize {
+        match self {
+            RoundPayload::Dense(w) => w.len(),
+            RoundPayload::Encoded { n, .. } => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes this payload would occupy on the wire (the compression
+    /// the codec bought, for telemetry/debugging).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            RoundPayload::Dense(w) => w.len() * 4,
+            RoundPayload::Encoded { body, .. } => body.len(),
+        }
+    }
+}
+
 /// Message a trainer ships to the server at an aggregation round (or
-/// every step, for GGS where `weights` carries the gradient).
+/// every step, for GGS where the payload carries the gradient).
 #[derive(Debug, Clone)]
 pub struct TrainerMsg {
     pub id: usize,
     pub round: u64,
-    pub weights: Vec<f32>,
+    pub payload: RoundPayload,
     pub loss: f32,
     pub steps: u64,
 }

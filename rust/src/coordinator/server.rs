@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::comm::codec::{self, CodecKind, RoundEncoder};
 use crate::config::{Approach, RunConfig};
 use crate::metrics::EvalPoint;
 use crate::model::{aggregate, AggregateOp, MeanAccum, ModelState};
@@ -46,7 +47,7 @@ use crate::telemetry::{self, metrics, Span};
 use crate::util::rng::Rng;
 
 use super::evaluator::{BestTracker, EvalDone, EvalReq};
-use super::kv::{Control, GlobalWeights, TrainerMsg};
+use super::kv::{Control, GlobalWeights, RoundPayload, TrainerMsg};
 
 /// LLCG's server-side global correction state: an engine + sampler
 /// over the *full* training graph and a persistent optimizer state.
@@ -87,6 +88,15 @@ pub struct ServerOutcome {
 
 /// Run Algorithm 1 until ΔT_train elapses. `txs` holds one broadcast
 /// channel per registered trainer (M - F under failure drills).
+///
+/// With a non-identity `codec_kind`, trainer payloads arrive
+/// [`RoundPayload::Encoded`] and are folded against the current
+/// `w_global` base without materialising the dense vectors
+/// ([`codec::decode_fold`]); broadcasts take a codec round-trip
+/// (encode against the outgoing base, decode, broadcast the decode)
+/// so the server and every trainer hold bit-identical bases *and* the
+/// quantization a lossy codec would apply on the wire is applied
+/// honestly in-process too.
 #[allow(clippy::too_many_arguments)]
 pub fn tma_server(
     cfg: &RunConfig,
@@ -97,7 +107,13 @@ pub fn tma_server(
     eval_tx: &mpsc::Sender<EvalReq>,
     eval_rx: &mpsc::Receiver<EvalDone>,
     mut llcg: Option<LlcgCorrector>,
+    codec_kind: CodecKind,
 ) -> Result<ServerOutcome> {
+    // Downstream (broadcast) encoder: one per server, seeded off the
+    // run seed so quantizing codecs are reproducible.
+    let mut down_enc = (!codec_kind.is_identity())
+        .then(|| RoundEncoder::new(codec_kind, cfg.seed ^ 0xb07a_dc0d));
+    let mut codec_body: Vec<u8> = Vec::new();
     let registered = txs.len();
     // Ready barrier (Alg 1 l. 3-5): wait until every trainer either
     // compiled its engine and marked ready or died trying — a trainer
@@ -194,6 +210,7 @@ pub fn tma_server(
                     rounds,
                     Duration::from_secs(60),
                     cfg.aggregate_op,
+                    Some(&w_global),
                 )
             };
             if collected.reporters < expect {
@@ -235,6 +252,20 @@ pub fn tma_server(
                     collected.global.expect("non-empty round collection");
                 if let Some(corr) = llcg.as_mut() {
                     next = corr.correct(&next)?;
+                }
+                // Codec round-trip against the outgoing base: the
+                // broadcast carries exactly what a lossy codec would
+                // deliver over the wire, so server and trainers hold
+                // bit-identical bases for the next round's encode.
+                if let Some(enc) = down_enc.as_mut() {
+                    let id =
+                        enc.encode_down(&next, &w_global, &mut codec_body);
+                    next = codec::decode_dense(
+                        id,
+                        next.len(),
+                        &codec_body,
+                        &w_global,
+                    )?;
                 }
                 next.into()
             };
@@ -286,6 +317,7 @@ pub fn tma_server(
             rounds,
             Duration::from_secs(60),
             cfg.aggregate_op,
+            Some(&w_global),
         )
     };
     if collected.reporters < expect {
@@ -304,11 +336,21 @@ pub fn tma_server(
             ),
         );
     }
-    if let Some(next) = collected.global {
+    if let Some(mut next) = collected.global {
         w_global = {
             let _sp = Span::start("server", "aggregate")
                 .round(rounds)
                 .hist(&metrics().phase_aggregate);
+            if let Some(enc) = down_enc.as_mut() {
+                let id =
+                    enc.encode_down(&next, &w_global, &mut codec_body);
+                next = codec::decode_dense(
+                    id,
+                    next.len(),
+                    &codec_body,
+                    &w_global,
+                )?;
+            }
             next.into()
         };
         let _sp = Span::start("server", "eval_dispatch")
@@ -367,7 +409,7 @@ pub fn collect_round(
     deadline: Duration,
     op: AggregateOp,
 ) -> RoundOutcome {
-    collect_round_with(rx, &|| expect, round, deadline, op)
+    collect_round_with(rx, &|| expect, round, deadline, op, None)
 }
 
 /// Streaming round collection with a live-target callback.
@@ -393,6 +435,11 @@ pub fn collect_round(
 ///   (O(P) bytes per round, bit-identical to the staged reference —
 ///   see [`MeanAccum`]); `InverseLoss` stages, since no vector can be
 ///   scaled before every loss is known.
+/// - [`RoundPayload::Encoded`] messages decode against `base` (the
+///   broadcast the trainers encoded against); sparse codecs fold
+///   base-relative ([`MeanAccum::fold_sparse`]) without materialising
+///   a dense vector. `Dense` payloads never touch `base`, keeping the
+///   pre-codec path bitwise intact.
 ///
 /// Public so the shutdown-protocol regression tests and the
 /// differential suite drive the exact collection path the server uses.
@@ -402,6 +449,7 @@ pub fn collect_round_with(
     round: u64,
     deadline: Duration,
     op: AggregateOp,
+    base: Option<&[f32]>,
 ) -> RoundOutcome {
     const POLL: Duration = Duration::from_millis(200);
     let t0 = Instant::now();
@@ -458,14 +506,79 @@ pub fn collect_round_with(
             msg.loss
         });
         match op {
-            AggregateOp::Mean => acc
-                .get_or_insert_with(|| MeanAccum::new(msg.weights.len()))
-                .add(&msg.weights),
-            AggregateOp::InverseLoss => staged.push(msg.weights),
+            AggregateOp::Mean => {
+                let accum = acc
+                    .get_or_insert_with(|| MeanAccum::new(msg.payload.len()));
+                match msg.payload {
+                    RoundPayload::Dense(w) => accum.add(&w),
+                    RoundPayload::Encoded { codec: cid, n, body } => {
+                        if let Err(e) = codec::decode_fold(
+                            cid,
+                            n,
+                            &body,
+                            base.unwrap_or(&[]),
+                            accum,
+                        ) {
+                            // Can't-happen path: our own encoder
+                            // produced the body. A partially-applied
+                            // fold can leak into the aggregate here;
+                            // drop the reporter so at least the round
+                            // target and loss bookkeeping stay honest.
+                            metrics().comm_frames_rejected.inc();
+                            telemetry::info(
+                                "server",
+                                "codec_drop",
+                                &[
+                                    ("round", round as f64),
+                                    ("trainer", msg.id as f64),
+                                ],
+                                format_args!(
+                                    "round {round}: undecodable codec \
+                                     body from trainer {}: {e}",
+                                    msg.id
+                                ),
+                            );
+                            seen.pop();
+                            losses.pop();
+                        }
+                    }
+                }
+            }
+            AggregateOp::InverseLoss => match msg.payload {
+                RoundPayload::Dense(w) => staged.push(w),
+                RoundPayload::Encoded { codec: cid, n, body } => {
+                    match codec::decode_dense(
+                        cid,
+                        n,
+                        &body,
+                        base.unwrap_or(&[]),
+                    ) {
+                        Ok(w) => staged.push(w),
+                        Err(e) => {
+                            metrics().comm_frames_rejected.inc();
+                            telemetry::info(
+                                "server",
+                                "codec_drop",
+                                &[
+                                    ("round", round as f64),
+                                    ("trainer", msg.id as f64),
+                                ],
+                                format_args!(
+                                    "round {round}: undecodable codec \
+                                     body from trainer {}: {e}",
+                                    msg.id
+                                ),
+                            );
+                            seen.pop();
+                            losses.pop();
+                        }
+                    }
+                }
+            },
         }
     }
     let global = match op {
-        AggregateOp::Mean => acc.map(|a| a.mean()),
+        AggregateOp::Mean => acc.map(|a| a.mean_with(base)),
         AggregateOp::InverseLoss => {
             if staged.is_empty() {
                 None
@@ -489,6 +602,7 @@ pub fn collect_round_staged(
     expect: usize,
     round: u64,
     deadline: Duration,
+    base: Option<&[f32]>,
 ) -> (Vec<Vec<f32>>, Vec<f32>) {
     let t0 = Instant::now();
     let mut ids: Vec<usize> = Vec::with_capacity(expect);
@@ -504,7 +618,23 @@ pub fn collect_round_staged(
                 } else {
                     msg.loss
                 });
-                weights.push(msg.weights);
+                match msg.payload {
+                    RoundPayload::Dense(w) => weights.push(w),
+                    RoundPayload::Encoded { codec: cid, n, body } => {
+                        match codec::decode_dense(
+                            cid,
+                            n,
+                            &body,
+                            base.unwrap_or(&[]),
+                        ) {
+                            Ok(w) => weights.push(w),
+                            Err(_) => {
+                                ids.pop();
+                                losses.pop();
+                            }
+                        }
+                    }
+                }
             }
             Ok(msg) => telemetry::info(
                 "server",

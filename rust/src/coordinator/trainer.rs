@@ -16,6 +16,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::comm::codec::{CodecKind, RoundEncoder};
 use crate::metrics::LossPoint;
 use crate::model::ModelState;
 use crate::runtime::{load_backend, ComputeBackend, Manifest};
@@ -24,7 +25,8 @@ use crate::telemetry::{self, metrics};
 use crate::util::rng::Rng;
 
 use super::kv::{
-    Control, GlobalWeights, TrainerAction, TrainerMsg, TrainerReport,
+    Control, GlobalWeights, RoundPayload, TrainerAction, TrainerMsg,
+    TrainerReport,
 };
 
 /// Everything a TMA trainer thread needs (moved into the thread).
@@ -44,6 +46,12 @@ pub struct TrainerSpec {
     /// Speed factor >= 1.0 (1.0 = full speed).
     pub slowdown: f64,
     pub seed: u64,
+    /// Round codec for shipped weights. Identity ships
+    /// [`RoundPayload::Dense`] (the pre-codec wire, bit-for-bit);
+    /// anything else encodes against the last broadcast — which the
+    /// server holds bit-identically, having taken the same codec
+    /// round-trip before broadcasting.
+    pub codec: CodecKind,
 }
 
 /// Run Algorithm 2 to completion; returns the trainer's report.
@@ -59,7 +67,14 @@ pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
         tx,
         slowdown,
         seed,
+        codec,
     } = spec;
+    // Upstream encoder + last-broadcast base (codec reference point).
+    // Seed forked per trainer so stochastic-rounding codecs decorrelate
+    // across trainers while staying run-reproducible.
+    let mut up_enc = (!codec.is_identity())
+        .then(|| RoundEncoder::new(codec, seed ^ (id as u64).wrapping_mul(0x9e37_79b9)));
+    let mut base: GlobalWeights = Vec::new().into();
 
     // Startup failures MUST mark_dead before returning: the server's
     // ready barrier counts ready + dead, so a trainer that can't come
@@ -95,7 +110,10 @@ pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
     // one clock (`Control::since_epoch`), so per-trainer curves and
     // the server's eval curve share an origin.
     match rx_global.recv() {
-        Ok(w) => state.set_params(&w),
+        Ok(w) => {
+            state.set_params(&w);
+            base = w;
+        }
         Err(_) => return TrainerReport { id, steps: 0, timeline: Vec::new() },
     }
 
@@ -113,10 +131,23 @@ pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
         // the server blocks on its collection timeout.
         match control.next_action(last_round) {
             TrainerAction::Ship { round } => {
+                let payload = match up_enc.as_mut() {
+                    None => RoundPayload::Dense(state.params.clone()),
+                    Some(enc) => {
+                        let mut body = Vec::new();
+                        let cid =
+                            enc.encode_up(&state.params, &base, &mut body);
+                        RoundPayload::Encoded {
+                            codec: cid,
+                            n: state.params.len(),
+                            body,
+                        }
+                    }
+                };
                 let msg = TrainerMsg {
                     id,
                     round,
-                    weights: state.params.clone(),
+                    payload,
                     loss: last_loss,
                     steps,
                 };
@@ -126,7 +157,10 @@ pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
                 // The server broadcasts once per opened round — the
                 // final one included — so this never deadlocks.
                 match rx_global.recv() {
-                    Ok(w) => state.set_params(&w),
+                    Ok(w) => {
+                        state.set_params(&w);
+                        base = w;
+                    }
                     Err(_) => break, // server gone
                 }
                 last_round = round;

@@ -72,6 +72,10 @@ fn print_usage() {
          \x20 RTMA_BACKEND=native|pjrt  env override\n\
          \x20 --backend native|pjrt     CLI override (see docs/ENGINE.md)\n\
          \n\
+         round codec (precedence low to high; see docs/COMM.md):\n\
+         \x20 --codec identity|delta|f16|i8|topk[:denom]\n\
+         \x20 RTMA_CODEC=...            env override (wins)\n\
+         \n\
          telemetry (all subcommands):\n\
          \x20 RTMA_LOG=off|info|debug   stderr event level\n\
          \x20 RTMA_TRACE=<path>         append a JSONL trace\n\
@@ -99,6 +103,7 @@ fn run_config(args: &Args) -> RunConfig {
         negatives: args.usize_or("negatives", 64),
         eval_sample: args.usize_or("eval-sample", 64),
         failures: args.usize_or("failures", 0),
+        codec: args.str_or("codec", ""),
         seed: args.u64_or("seed", 17),
         aggregate_op: if args.str_or("agg-op", "mean") == "inverse-loss" {
             AggregateOp::InverseLoss
@@ -305,8 +310,10 @@ fn trace_report(args: &Args) -> Result<()> {
 /// no engine. Real training needs no artifacts either — the native
 /// backend runs on the builtin manifest.
 fn worker(args: &Args) -> Result<()> {
+    use random_tma::comm::codec;
     use random_tma::comm::{
-        recv, send, send_wire, train_until_pending, Message, WireMsg,
+        client_handshake, recv_into, send_wire, train_until_pending,
+        Message, WireMsg,
     };
     use random_tma::model::ModelState;
     use random_tma::runtime::{load_backend, ComputeBackend, Manifest};
@@ -319,6 +326,9 @@ fn worker(args: &Args) -> Result<()> {
     let dataset = args.str_or("dataset", "citation-sim");
     let seed = args.u64_or("seed", 17);
     let variant = args.str_or("variant", "gcn_mlp");
+    // Same precedence as the leader (identity < --codec < RTMA_CODEC);
+    // the Hello/Ready handshake verifies both ends actually agree.
+    let codec_kind = codec::resolve(&args.str_or("codec", ""))?;
 
     if args.flag("no-train") {
         telemetry::info(
@@ -329,7 +339,7 @@ fn worker(args: &Args) -> Result<()> {
                 "worker {id}: protocol-only mode (no engine)"
             ),
         );
-        let r = worker_protocol_only(&addr, id);
+        let r = worker_protocol_only(&addr, id, codec_kind);
         telemetry::trace_counters("worker");
         telemetry::flush();
         return r;
@@ -366,8 +376,7 @@ fn worker(args: &Args) -> Result<()> {
     let mut state = ModelState::init(engine.variant(), &mut rng);
 
     let mut stream = TcpStream::connect(&addr)?;
-    send(&mut stream, &Message::Hello { id: id as u32 })?;
-    send(&mut stream, &Message::Ready { id: id as u32 })?;
+    client_handshake(&mut stream, id as u32, codec_kind)?;
 
     let mut steps = 0u64;
     let mut last_loss = f32::NAN;
@@ -375,10 +384,23 @@ fn worker(args: &Args) -> Result<()> {
     // One reused frame buffer: round shipping encodes straight from
     // the live parameter slab into this scratch, no per-round clones.
     let mut scratch = Vec::new();
+    // Reused receive buffer (frames are read into it in bounded
+    // chunks — comm::recv_into) and the codec state: the last decoded
+    // broadcast is the base the next upstream encode is relative to.
+    let mut rbuf = Vec::new();
+    let mut up_enc = (!codec_kind.is_identity()).then(|| {
+        codec::RoundEncoder::new(
+            codec_kind,
+            seed ^ (id as u64).wrapping_mul(0x9e37_79b9),
+        )
+    });
+    let mut base: Vec<f32> = Vec::new();
+    let mut body: Vec<u8> = Vec::new();
     loop {
-        match recv(&mut stream)? {
+        match recv_into(&mut stream, &mut rbuf)? {
             Message::Broadcast { round: _, data } => {
                 state.set_params(&data);
+                base = data;
                 // Train until the leader opens the next round
                 // (non-blocking peek between steps). An empty
                 // partition sleeps 5 ms per poll instead of
@@ -395,8 +417,28 @@ fn worker(args: &Args) -> Result<()> {
                     }
                 })?;
             }
-            Message::Collect { round } => {
-                send_wire(
+            Message::BroadcastEnc { round: _, codec: cid, n, body: eb } => {
+                // First broadcast decodes against the empty (= zero)
+                // base, later ones against the previous broadcast —
+                // mirroring the leader's encode.
+                let w =
+                    codec::decode_dense(cid, n as usize, &eb, &base)?;
+                state.set_params(&w);
+                base = w;
+                train_until_pending(&mut stream, || {
+                    match sampler.next_block(&mut trng) {
+                        Some(block) => {
+                            last_loss =
+                                engine.train_step(&mut state, block)?;
+                            steps += 1;
+                            Ok(true)
+                        }
+                        None => Ok(false),
+                    }
+                })?;
+            }
+            Message::Collect { round } => match up_enc.as_mut() {
+                None => send_wire(
                     &mut stream,
                     &WireMsg::Weights {
                         round,
@@ -405,8 +447,24 @@ fn worker(args: &Args) -> Result<()> {
                         data: &state.params,
                     },
                     &mut scratch,
-                )?;
-            }
+                )?,
+                Some(enc) => {
+                    let cid =
+                        enc.encode_up(&state.params, &base, &mut body);
+                    send_wire(
+                        &mut stream,
+                        &WireMsg::WeightsEnc {
+                            round,
+                            loss: last_loss,
+                            steps,
+                            codec: cid,
+                            n: state.params.len() as u64,
+                            body: &body,
+                        },
+                        &mut scratch,
+                    )?;
+                }
+            },
             Message::Stop => {
                 telemetry::info(
                     "worker",
@@ -439,28 +497,64 @@ fn worker(args: &Args) -> Result<()> {
 /// broadcast, so a leader averaging them gets its own weights back —
 /// a pure round-protocol + wire-counter exercise that runs on any
 /// machine (the distributed-smoke CI job has no AOT artifacts).
-fn worker_protocol_only(addr: &str, id: usize) -> Result<()> {
-    use random_tma::comm::{recv, send, send_wire, Message, WireMsg};
+fn worker_protocol_only(
+    addr: &str,
+    id: usize,
+    codec_kind: random_tma::comm::codec::CodecKind,
+) -> Result<()> {
+    use random_tma::comm::codec;
+    use random_tma::comm::{
+        client_handshake, recv_into, send_wire, Message, WireMsg,
+    };
     use std::net::TcpStream;
 
     let mut stream = TcpStream::connect(addr)?;
-    send(&mut stream, &Message::Hello { id: id as u32 })?;
-    send(&mut stream, &Message::Ready { id: id as u32 })?;
+    client_handshake(&mut stream, id as u32, codec_kind)?;
     let mut params: Vec<f32> = Vec::new();
     let mut scratch = Vec::new();
+    let mut rbuf = Vec::new();
+    let mut body: Vec<u8> = Vec::new();
+    let mut up_enc = (!codec_kind.is_identity()).then(|| {
+        codec::RoundEncoder::new(
+            codec_kind,
+            0x1d1e ^ (id as u64).wrapping_mul(0x9e37_79b9),
+        )
+    });
     loop {
-        match recv(&mut stream)? {
+        match recv_into(&mut stream, &mut rbuf)? {
             Message::Broadcast { round: _, data } => params = data,
-            Message::Collect { round } => send_wire(
-                &mut stream,
-                &WireMsg::Weights {
-                    round,
-                    loss: f32::NAN, // "no batch yet" sentinel
-                    steps: 0,
-                    data: &params,
-                },
-                &mut scratch,
-            )?,
+            Message::BroadcastEnc { round: _, codec: cid, n, body: eb } => {
+                params = codec::decode_dense(cid, n as usize, &eb, &params)?;
+            }
+            Message::Collect { round } => match up_enc.as_mut() {
+                None => send_wire(
+                    &mut stream,
+                    &WireMsg::Weights {
+                        round,
+                        loss: f32::NAN, // "no batch yet" sentinel
+                        steps: 0,
+                        data: &params,
+                    },
+                    &mut scratch,
+                )?,
+                Some(enc) => {
+                    // An idle worker's weights ARE its base (the last
+                    // broadcast): sparse codecs ship near-empty bodies.
+                    let cid = enc.encode_up(&params, &params, &mut body);
+                    send_wire(
+                        &mut stream,
+                        &WireMsg::WeightsEnc {
+                            round,
+                            loss: f32::NAN,
+                            steps: 0,
+                            codec: cid,
+                            n: params.len() as u64,
+                            body: &body,
+                        },
+                        &mut scratch,
+                    )?;
+                }
+            },
             Message::Stop => {
                 telemetry::info(
                     "worker",

@@ -150,6 +150,12 @@ pub fn aggregate(
 pub struct MeanAccum {
     sum: Vec<f32>,
     count: usize,
+    /// Vectors folded in *base-relative* (sparse codec) form: their
+    /// fold contributed `w - base` rather than `w`, so the mean must
+    /// add `base_folds * base[j]` back ([`Self::mean_with`]). Zero on
+    /// the dense path, where `mean`/`mean_into` stay bit-identical to
+    /// the pre-codec behaviour.
+    base_folds: usize,
     /// Per-worker fold window sizes and start offsets, planned once at
     /// construction (P and the worker count are fixed for the
     /// accumulator's lifetime) so [`Self::add`] plans nothing per
@@ -195,7 +201,13 @@ impl MeanAccum {
                     .collect();
                 (sizes, starts)
             };
-        MeanAccum { sum: vec![0.0; n], count: 0, chunk_sizes, chunk_starts }
+        MeanAccum {
+            sum: vec![0.0; n],
+            count: 0,
+            base_folds: 0,
+            chunk_sizes,
+            chunk_starts,
+        }
     }
 
     /// Parameter count P this accumulator was sized for.
@@ -216,6 +228,52 @@ impl MeanAccum {
     pub fn reset(&mut self) {
         self.sum.iter_mut().for_each(|x| *x = 0.0);
         self.count = 0;
+        self.base_folds = 0;
+    }
+
+    /// Open one incoming vector's fold (`count += 1`) without folding
+    /// any data yet — the streaming codec decode
+    /// ([`crate::comm::codec::decode_fold`]) then lands the vector in
+    /// pieces via [`Self::fold_at`] / [`Self::fold_sparse`].
+    pub fn begin(&mut self) {
+        self.count += 1;
+    }
+
+    /// Mark the vector opened by the last [`Self::begin`] as
+    /// base-relative: its folds carry `w - base`, and
+    /// [`Self::mean_with`] adds the shared base back once per marked
+    /// vector.
+    pub fn mark_base(&mut self) {
+        self.base_folds += 1;
+    }
+
+    /// Base-relative vectors folded since construction/reset.
+    pub fn base_folds(&self) -> usize {
+        self.base_folds
+    }
+
+    /// Fold a contiguous chunk of the current vector at `offset`:
+    /// `sum[offset + j] += chunk[j]`. Serial — decode chunks are small
+    /// (≤ a few KiB); the dense [`Self::add`] path keeps the parallel
+    /// fold.
+    pub fn fold_at(&mut self, offset: usize, chunk: &[f32]) {
+        assert!(offset + chunk.len() <= self.sum.len());
+        for (o, &x) in self.sum[offset..offset + chunk.len()]
+            .iter_mut()
+            .zip(chunk)
+        {
+            *o += x;
+        }
+    }
+
+    /// Fold sparse coordinates of the current vector:
+    /// `sum[idx[t]] += vals[t]`. Callers guarantee `idx` is in range
+    /// (the codec layer validates indices before folding).
+    pub fn fold_sparse(&mut self, idx: &[u32], vals: &[f32]) {
+        debug_assert_eq!(idx.len(), vals.len());
+        for (&i, &x) in idx.iter().zip(vals) {
+            self.sum[i as usize] += x;
+        }
     }
 
     /// Fold one trainer's vector in: `sum[j] += w[j]`.
@@ -258,9 +316,51 @@ impl MeanAccum {
     /// allreduce calls this every global step with the same `dst`).
     pub fn mean_into(&self, dst: &mut Vec<f32>) {
         assert!(self.count > 0, "mean of zero folded vectors");
+        assert_eq!(
+            self.base_folds, 0,
+            "base-relative folds need mean_with(Some(base))"
+        );
         let scale = 1.0 / self.count as f32;
         dst.clear();
         dst.extend(self.sum.iter().map(|&x| x * scale));
+    }
+
+    /// Mean when some folds were base-relative:
+    /// `(sum[j] + base_folds·base[j]) * (1/count)`. `None` means an
+    /// all-zero base — the codec module's "empty base = zeros"
+    /// convention, which is exactly a gradient allreduce. With zero
+    /// base-relative folds this takes the [`Self::mean_into`] path and
+    /// is bit-identical to [`Self::mean`] — the identity-codec and
+    /// in-process dense rounds keep their pre-codec bits.
+    pub fn mean_with(&self, base: Option<&[f32]>) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.sum.len());
+        self.mean_with_into(base, &mut out);
+        out
+    }
+
+    /// As [`Self::mean_with`], writing into a reused buffer (the GGS
+    /// allreduce under a codec).
+    pub fn mean_with_into(&self, base: Option<&[f32]>, dst: &mut Vec<f32>) {
+        if self.base_folds == 0 {
+            self.mean_into(dst);
+            return;
+        }
+        assert!(self.count > 0, "mean of zero folded vectors");
+        let k = self.base_folds as f32;
+        let scale = 1.0 / self.count as f32;
+        dst.clear();
+        match base {
+            Some(base) => {
+                assert_eq!(base.len(), self.sum.len());
+                dst.extend(
+                    self.sum
+                        .iter()
+                        .zip(base)
+                        .map(|(&s, &b)| (s + k * b) * scale),
+                );
+            }
+            None => dst.extend(self.sum.iter().map(|&s| s * scale)),
+        }
     }
 }
 
@@ -540,6 +640,74 @@ mod tests {
         let mut dst = Vec::new();
         acc.mean_into(&mut dst);
         assert_eq!(dst, vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn mean_accum_chunked_fold_matches_add_bitwise() {
+        // begin() + fold_at chunks must reproduce add() exactly: same
+        // per-element order, just landed in pieces.
+        let p = 1000;
+        let mut rng = Rng::new(13);
+        let w: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+        let mut a = MeanAccum::with_workers(p, 1);
+        a.add(&w);
+        let mut b = MeanAccum::with_workers(p, 1);
+        b.begin();
+        for off in (0..p).step_by(64) {
+            b.fold_at(off, &w[off..(off + 64).min(p)]);
+        }
+        assert_eq!(b.count(), 1);
+        assert!(a
+            .mean()
+            .iter()
+            .zip(&b.mean())
+            .all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn mean_accum_base_relative_fold_recovers_mean() {
+        // Two dense vectors plus one shipped as (w - base) sparse
+        // coordinates: mean_with(base) must match the staged mean of
+        // the three dense vectors.
+        let base = vec![1.0f32, -2.0, 3.0, 0.5];
+        let dense1 = vec![1.5f32, -2.0, 3.0, 0.5];
+        let dense2 = vec![1.0f32, -1.0, 3.0, 0.5];
+        let sparse_w = vec![1.0f32, -2.0, 5.0, 0.5]; // differs at j=2
+        let mut acc = MeanAccum::with_workers(4, 1);
+        acc.add(&dense1);
+        acc.add(&dense2);
+        acc.begin();
+        acc.mark_base();
+        acc.fold_sparse(&[2], &[sparse_w[2] - base[2]]);
+        assert_eq!(acc.base_folds(), 1);
+        let got = acc.mean_with(Some(&base));
+        let want =
+            aggregate(AggregateOp::Mean, &[dense1, dense2, sparse_w], &[]);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-6, "{got:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn mean_with_no_base_folds_is_bitwise_mean() {
+        let mut rng = Rng::new(17);
+        let p = 257;
+        let mut acc = MeanAccum::with_workers(p, 1);
+        for _ in 0..3 {
+            let w: Vec<f32> =
+                (0..p).map(|_| rng.gaussian() as f32).collect();
+            acc.add(&w);
+        }
+        let a = acc.mean();
+        let b = acc.mean_with(Some(&vec![9.0; p]));
+        let c = acc.mean_with(None);
+        assert!(a
+            .iter()
+            .zip(&b)
+            .zip(&c)
+            .all(|((x, y), z)| {
+                x.to_bits() == y.to_bits() && x.to_bits() == z.to_bits()
+            }));
     }
 
     #[test]

@@ -206,6 +206,19 @@ pub struct Metrics {
     pub comm_frames_in: Counter,
     pub comm_scratch_reuse: Counter,
     pub comm_scratch_grow: Counter,
+    /// Frames refused at either end of the wire: oversized sends
+    /// (> [`crate::comm::MAX_FRAME`]), oversized announced lengths on
+    /// receive, and undecodable frame/codec bodies.
+    pub comm_frames_rejected: Counter,
+    // ---- round codecs ----
+    pub codec_frames: Counter,
+    /// Raw (pre-codec, 4·P) vs encoded body bytes across every encode:
+    /// `codec_bytes_raw / codec_bytes_encoded` is the compression
+    /// ratio `BENCH_codec.json` persists.
+    pub codec_bytes_raw: Counter,
+    pub codec_bytes_encoded: Counter,
+    pub codec_encode_us: Histogram,
+    pub codec_decode_us: Histogram,
     // ---- threadpool ----
     pub pool_sections: Counter,
     pub pool_tasks: Counter,
@@ -244,6 +257,12 @@ impl Metrics {
             comm_frames_in: Counter::new(),
             comm_scratch_reuse: Counter::new(),
             comm_scratch_grow: Counter::new(),
+            comm_frames_rejected: Counter::new(),
+            codec_frames: Counter::new(),
+            codec_bytes_raw: Counter::new(),
+            codec_bytes_encoded: Counter::new(),
+            codec_encode_us: Histogram::new(),
+            codec_decode_us: Histogram::new(),
             pool_sections: Counter::new(),
             pool_tasks: Counter::new(),
             pool_workers: Counter::new(),
@@ -271,6 +290,10 @@ impl Metrics {
             ("comm_frames_in", self.comm_frames_in.get()),
             ("comm_scratch_reuse", self.comm_scratch_reuse.get()),
             ("comm_scratch_grow", self.comm_scratch_grow.get()),
+            ("comm_frames_rejected", self.comm_frames_rejected.get()),
+            ("codec_frames", self.codec_frames.get()),
+            ("codec_bytes_raw", self.codec_bytes_raw.get()),
+            ("codec_bytes_encoded", self.codec_bytes_encoded.get()),
             ("pool_sections", self.pool_sections.get()),
             ("pool_tasks", self.pool_tasks.get()),
             ("pool_workers", self.pool_workers.get()),
@@ -299,6 +322,8 @@ impl Metrics {
             ("engine_grad", self.engine_grad_us.snap()),
             ("engine_encode", self.engine_encode_us.snap()),
             ("engine_score", self.engine_score_us.snap()),
+            ("codec_encode", self.codec_encode_us.snap()),
+            ("codec_decode", self.codec_decode_us.snap()),
         ]
     }
 }

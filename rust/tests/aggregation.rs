@@ -12,7 +12,7 @@
 use std::sync::mpsc;
 use std::time::Duration;
 
-use random_tma::coordinator::kv::TrainerMsg;
+use random_tma::coordinator::kv::{RoundPayload, TrainerMsg};
 use random_tma::coordinator::server::{collect_round, collect_round_staged};
 use random_tma::model::{aggregate, AggregateOp, MeanAccum};
 use random_tma::util::rng::Rng;
@@ -27,9 +27,9 @@ fn random_round(
         .map(|id| TrainerMsg {
             id,
             round,
-            weights: (0..p)
-                .map(|_| (rng.gaussian() * 2.0) as f32)
-                .collect(),
+            payload: RoundPayload::Dense(
+                (0..p).map(|_| (rng.gaussian() * 2.0) as f32).collect(),
+            ),
             loss: if rng.chance(0.15) {
                 f32::NAN // trainer with no batch yet
             } else {
@@ -57,7 +57,7 @@ fn both_paths(
     let (tx, rx) = mpsc::channel();
     send_all(&tx, msgs);
     let (weights, losses) =
-        collect_round_staged(&rx, m, round, Duration::from_secs(5));
+        collect_round_staged(&rx, m, round, Duration::from_secs(5), None);
     assert_eq!(weights.len(), m, "staged reference lost messages");
     let reference = aggregate(op, &weights, &losses);
 
@@ -157,7 +157,7 @@ fn inverse_loss_all_inf_losses_stay_finite_end_to_end() {
         tx.send(TrainerMsg {
             id,
             round: 1,
-            weights: vec![1.0 + id as f32; 3],
+            payload: RoundPayload::Dense(vec![1.0 + id as f32; 3]),
             loss: f32::INFINITY,
             steps: 1,
         })

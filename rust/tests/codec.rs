@@ -1,0 +1,368 @@
+//! Round-codec integration tests (PR: pluggable round codecs).
+//!
+//! 1. The identity session's data-plane frames are pinned bit-for-bit
+//!    against hand-written golden bytes of the *pre-codec* wire
+//!    layout: adding the codec layer must not move a single byte for
+//!    anyone who never opts in.
+//! 2. Top-k error feedback drains: every unsent coordinate is
+//!    eventually shipped, the cumulative decoded stream equals the
+//!    cumulative input exactly, and the residual reaches exactly zero.
+//! 3. End-to-end: `collect_round_with` folding `Encoded` payloads
+//!    agrees with the dense (pre-codec) collection path.
+//! 4. Quantization round-trip error bounds through the public
+//!    encoder/decoder API.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use random_tma::comm::codec::{self, CodecKind, RoundEncoder};
+use random_tma::comm::{Message, WireMsg};
+use random_tma::coordinator::kv::{RoundPayload, TrainerMsg};
+use random_tma::coordinator::server::{collect_round, collect_round_with};
+use random_tma::model::AggregateOp;
+use random_tma::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// 1. identity == pre-codec wire, bit for bit
+
+/// The pre-codec `Weights` frame, written out by hand from the frozen
+/// wire spec (docs/COMM.md): tag 3, round u64, loss f32, steps u64,
+/// count u64, count × f32 — all little-endian.
+fn golden_weights(round: u64, loss: f32, steps: u64, data: &[f32]) -> Vec<u8> {
+    let mut b = vec![3u8];
+    b.extend_from_slice(&round.to_le_bytes());
+    b.extend_from_slice(&loss.to_le_bytes());
+    b.extend_from_slice(&steps.to_le_bytes());
+    b.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    for x in data {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+    b
+}
+
+/// The pre-codec `Broadcast` frame: tag 4, round u64, count u64,
+/// count × f32.
+fn golden_broadcast(round: u64, data: &[f32]) -> Vec<u8> {
+    let mut b = vec![4u8];
+    b.extend_from_slice(&round.to_le_bytes());
+    b.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    for x in data {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+    b
+}
+
+#[test]
+fn identity_wire_is_bit_identical_to_pre_codec_protocol() {
+    // An identity session never wraps payloads in WeightsEnc /
+    // BroadcastEnc — it ships the same Weights/Broadcast frames as the
+    // pre-codec build. Pin their encodings to golden bytes so a codec
+    // refactor cannot silently shift the default wire.
+    let mut rng = Rng::new(42);
+    let data: Vec<f32> = (0..257).map(|_| rng.gaussian() as f32).collect();
+
+    let w = Message::Weights {
+        round: 9,
+        loss: 0.625,
+        steps: 1234,
+        data: data.clone(),
+    };
+    assert_eq!(w.encode(), golden_weights(9, 0.625, 1234, &data));
+
+    let b = Message::Broadcast { round: 3, data: data.clone() };
+    assert_eq!(b.encode(), golden_broadcast(3, &data));
+
+    // The borrowed (zero-clone) encode path produces the same bytes.
+    let mut scratch = Vec::new();
+    WireMsg::Weights { round: 9, loss: 0.625, steps: 1234, data: &data }
+        .encode_into(&mut scratch);
+    assert_eq!(scratch, golden_weights(9, 0.625, 1234, &data));
+    WireMsg::Broadcast { round: 3, data: &data }.encode_into(&mut scratch);
+    assert_eq!(scratch, golden_broadcast(3, &data));
+
+    // Control frames are frozen too: Hello=1/Ready=2/Stop=5/Collect=6
+    // with their pre-codec field layout.
+    assert_eq!(
+        Message::Hello { id: 7 }.encode(),
+        [&[1u8][..], &7u32.to_le_bytes()[..]].concat()
+    );
+    assert_eq!(
+        Message::Ready { id: 7 }.encode(),
+        [&[2u8][..], &7u32.to_le_bytes()[..]].concat()
+    );
+    assert_eq!(Message::Stop.encode(), vec![5u8]);
+    assert_eq!(
+        Message::Collect { round: 11 }.encode(),
+        [&[6u8][..], &11u64.to_le_bytes()[..]].concat()
+    );
+}
+
+#[test]
+fn identity_codec_body_is_raw_le_f32() {
+    // Even when an identity body does go through the codec API (the
+    // bench harness does this for ratio accounting), the body is the
+    // raw LE f32 payload — the same bytes a Weights frame carries.
+    let data: Vec<f32> = (0..100).map(|i| i as f32 * 0.5 - 3.0).collect();
+    let mut enc = RoundEncoder::new(CodecKind::Identity, 1);
+    let mut body = Vec::new();
+    let id = enc.encode_up(&data, &[], &mut body);
+    assert_eq!(id, codec::CODEC_IDENTITY);
+    let raw: Vec<u8> =
+        data.iter().flat_map(|x| x.to_le_bytes()).collect();
+    assert_eq!(body, raw);
+    let back = codec::decode_dense(id, data.len(), &body, &[]).unwrap();
+    assert_eq!(
+        back.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        data.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. top-k error feedback drains the residual to exactly zero
+
+#[test]
+fn topk_error_feedback_residual_drains_to_zero() {
+    // Integer-valued gradients: every add below is exact in f32, so
+    // the error-feedback invariant (cumulative shipped + residual =
+    // cumulative input) holds bit-exactly, not just approximately.
+    let n = 256usize;
+    let denom = 32u32; // k = n/denom = 8 coordinates per round
+    let k = n / denom as usize;
+    let g: Vec<f32> = (0..n).map(|i| ((i % 5) as f32) - 2.0).collect();
+
+    let mut enc = RoundEncoder::new(CodecKind::TopK { denom }, 77);
+    let mut body = Vec::new();
+    let mut cum = vec![0.0f32; n];
+
+    // Ship the same gradient for a few rounds; k ≪ n, so most
+    // coordinates land in the residual instead of on the wire.
+    let rounds = 3;
+    for _ in 0..rounds {
+        let id = enc.encode_up(&g, &[], &mut body);
+        assert_eq!(id, codec::CODEC_TOPK);
+        let dec = codec::decode_dense(id, n, &body, &[]).unwrap();
+        for (c, d) in cum.iter_mut().zip(&dec) {
+            *c += d;
+        }
+    }
+    assert!(
+        enc.residual_norm() > 0.0,
+        "with k={k} of n={n} shipped per round the residual must hold \
+         unsent mass"
+    );
+
+    // Now feed zero input: each round ships the k largest leftover
+    // residual coordinates exactly. Every coordinate is shipped at
+    // least once within ceil(n/k) rounds, so the residual hits
+    // *exactly* zero — error feedback loses nothing.
+    let zeros = vec![0.0f32; n];
+    let mut drained = None;
+    for r in 0..n.div_ceil(k) {
+        if enc.residual_norm() == 0.0 {
+            drained = Some(r);
+            break;
+        }
+        let id = enc.encode_up(&zeros, &[], &mut body);
+        let dec = codec::decode_dense(id, n, &body, &[]).unwrap();
+        for (c, d) in cum.iter_mut().zip(&dec) {
+            *c += d;
+        }
+    }
+    if enc.residual_norm() == 0.0 && drained.is_none() {
+        drained = Some(n.div_ceil(k));
+    }
+    assert!(
+        drained.is_some(),
+        "residual norm {} after {} drain rounds — error feedback leaks",
+        enc.residual_norm(),
+        n.div_ceil(k)
+    );
+
+    // Cumulative decoded == cumulative input, exactly.
+    for (i, (c, gi)) in cum.iter().zip(&g).enumerate() {
+        assert!(
+            *c == rounds as f32 * gi,
+            "coordinate {i}: cumulative decode {c} != {}",
+            rounds as f32 * gi
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. encoded collection agrees with the dense path end to end
+
+fn mk_weights(m: usize, base: &[f32]) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(99);
+    (0..m)
+        .map(|_| {
+            base.iter()
+                .map(|b| b + 0.05 * rng.gaussian() as f32)
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn encoded_collect_round_matches_dense_collect_round() {
+    let (m, p) = (3usize, 400usize);
+    let mut rng = Rng::new(7);
+    let base: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+    let weights = mk_weights(m, &base);
+
+    // Reference: the dense (pre-codec) collection path.
+    let (tx, rx) = mpsc::channel::<TrainerMsg>();
+    for (id, w) in weights.iter().enumerate() {
+        tx.send(TrainerMsg {
+            id,
+            round: 1,
+            payload: RoundPayload::Dense(w.clone()),
+            loss: 0.5,
+            steps: 10,
+        })
+        .unwrap();
+    }
+    let dense = collect_round(
+        &rx,
+        m,
+        1,
+        Duration::from_secs(5),
+        AggregateOp::Mean,
+    );
+    let dense_mean = dense.global.expect("dense round produced no mean");
+    assert_eq!(dense.reporters, m);
+
+    // delta decodes bit-exactly; topk:1 ships every coordinate (k=n)
+    // so its first round is exact too. Both must land on the dense
+    // mean up to fold-order rounding.
+    for kind in [CodecKind::Delta, CodecKind::TopK { denom: 1 }] {
+        let (tx, rx) = mpsc::channel::<TrainerMsg>();
+        for (id, w) in weights.iter().enumerate() {
+            let mut enc = RoundEncoder::new(kind, id as u64);
+            let mut body = Vec::new();
+            let cid = enc.encode_up(w, &base, &mut body);
+            tx.send(TrainerMsg {
+                id,
+                round: 1,
+                payload: RoundPayload::Encoded { codec: cid, n: p, body },
+                loss: 0.5,
+                steps: 10,
+            })
+            .unwrap();
+        }
+        let out = collect_round_with(
+            &rx,
+            &|| m,
+            1,
+            Duration::from_secs(5),
+            AggregateOp::Mean,
+            Some(&base),
+        );
+        assert_eq!(out.reporters, m, "{kind:?}");
+        let mean = out.global.expect("encoded round produced no mean");
+        for (i, (a, b)) in dense_mean.iter().zip(&mean).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 * a.abs().max(1.0),
+                "{kind:?} coordinate {i}: encoded mean {b} != dense {a}"
+            );
+        }
+    }
+}
+
+#[test]
+fn encoded_collect_drops_undecodable_body_but_keeps_round_alive() {
+    // A corrupt body must not kill the round: the reporter is dropped
+    // from the count/loss bookkeeping, `comm_frames_rejected` bumps,
+    // and the survivors still produce a finite aggregate. (The exact
+    // mean is deliberately not pinned: a partially-applied fold can
+    // leak into the sum on this can't-happen path — see the comment
+    // in `collect_round_with`.)
+    let (m, p) = (2usize, 50usize);
+    let base = vec![0.0f32; p];
+    let good = vec![1.0f32; p];
+    let rejected_before = random_tma::telemetry::snapshot()
+        .counter("comm_frames_rejected");
+    let (tx, rx) = mpsc::channel::<TrainerMsg>();
+    let mut enc = RoundEncoder::new(CodecKind::Delta, 5);
+    let mut body = Vec::new();
+    let cid = enc.encode_up(&good, &base, &mut body);
+    tx.send(TrainerMsg {
+        id: 0,
+        round: 1,
+        payload: RoundPayload::Encoded { codec: cid, n: p, body },
+        loss: 0.5,
+        steps: 1,
+    })
+    .unwrap();
+    tx.send(TrainerMsg {
+        id: 1,
+        round: 1,
+        // Garbage topk body: k far beyond n.
+        payload: RoundPayload::Encoded {
+            codec: codec::CODEC_TOPK,
+            n: p,
+            body: 999u32.to_le_bytes().to_vec(),
+        },
+        loss: 0.5,
+        steps: 1,
+    })
+    .unwrap();
+    drop(tx);
+    let out = collect_round_with(
+        &rx,
+        &|| m,
+        1,
+        Duration::from_millis(300),
+        AggregateOp::Mean,
+        Some(&base),
+    );
+    assert_eq!(out.reporters, 1, "corrupt reporter must be dropped");
+    let mean = out.global.expect("surviving reporter still aggregates");
+    assert!(mean.iter().all(|x| x.is_finite()));
+    let rejected_after = random_tma::telemetry::snapshot()
+        .counter("comm_frames_rejected");
+    assert!(
+        rejected_after > rejected_before,
+        "undecodable round body must bump comm_frames_rejected"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 4. quantization bounds through the public API
+
+#[test]
+fn quantization_roundtrip_error_is_bounded() {
+    let n = 4096usize;
+    let mut rng = Rng::new(13);
+    let w: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+
+    // f16: relative error ≤ 2^-9 of |x| plus the subnormal flush.
+    let mut enc = RoundEncoder::new(CodecKind::F16, 3);
+    let mut body = Vec::new();
+    let id = enc.encode_up(&w, &[], &mut body);
+    assert_eq!(body.len(), n * 2, "f16 body is 2 bytes per element");
+    let back = codec::decode_dense(id, n, &body, &[]).unwrap();
+    for (x, y) in w.iter().zip(&back) {
+        let bound = x.abs() as f64 / 512.0 + 6.2e-5;
+        assert!(
+            ((x - y).abs() as f64) <= bound,
+            "f16 {x} -> {y} exceeds {bound}"
+        );
+    }
+
+    // i8: absolute error ≤ one quantization step (chunk maxabs / 127).
+    let mut enc = RoundEncoder::new(CodecKind::I8, 3);
+    let id = enc.encode_up(&w, &[], &mut body);
+    assert!(
+        body.len() < n + 8,
+        "i8 body {} should be ~1 byte per element",
+        body.len()
+    );
+    let back = codec::decode_dense(id, n, &body, &[]).unwrap();
+    let step = w.iter().fold(0f32, |a, x| a.max(x.abs())) / 127.0;
+    for (x, y) in w.iter().zip(&back) {
+        assert!(
+            (x - y).abs() <= step * 1.0001 + 1e-12,
+            "i8 {x} -> {y} exceeds step {step}"
+        );
+    }
+}

@@ -30,7 +30,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use random_tma::coordinator::kv::{
-    Control, GlobalWeights, TrainerAction, TrainerMsg,
+    Control, GlobalWeights, RoundPayload, TrainerAction, TrainerMsg,
 };
 use random_tma::coordinator::server::{
     collect_round, collect_round_staged, collect_round_with,
@@ -55,7 +55,7 @@ fn mock_trainer(
                     let msg = TrainerMsg {
                         id,
                         round,
-                        weights: vec![id as f32],
+                        payload: RoundPayload::Dense(vec![id as f32]),
                         loss: 0.5,
                         steps: shipped.len() as u64,
                     };
@@ -215,7 +215,7 @@ fn duplicate_trainer_message_does_not_displace_another() {
     let dup = TrainerMsg {
         id: 0,
         round: 1,
-        weights: vec![10.0],
+        payload: RoundPayload::Dense(vec![10.0]),
         loss: 1.0,
         steps: 4,
     };
@@ -224,7 +224,7 @@ fn duplicate_trainer_message_does_not_displace_another() {
     tx.send(TrainerMsg {
         id: 1,
         round: 1,
-        weights: vec![2.0],
+        payload: RoundPayload::Dense(vec![2.0]),
         loss: 1.0,
         steps: 4,
     })
@@ -245,14 +245,14 @@ fn duplicate_trainer_message_does_not_displace_another() {
         tx.send(TrainerMsg {
             id,
             round: 1,
-            weights: vec![w],
+            payload: RoundPayload::Dense(vec![w]),
             loss: 1.0,
             steps: 0,
         })
         .unwrap();
     }
     let (weights, _) =
-        collect_round_staged(&rx, 2, 1, Duration::from_secs(5));
+        collect_round_staged(&rx, 2, 1, Duration::from_secs(5), None);
     assert_eq!(weights, vec![vec![10.0], vec![2.0]]);
 }
 
@@ -270,7 +270,7 @@ fn collection_shrinks_to_survivors_when_target_drops_mid_round() {
         tx.send(TrainerMsg {
             id,
             round: 1,
-            weights: vec![id as f32],
+            payload: RoundPayload::Dense(vec![id as f32]),
             loss: 0.1,
             steps: 1,
         })
@@ -290,6 +290,7 @@ fn collection_shrinks_to_survivors_when_target_drops_mid_round() {
         1,
         Duration::from_secs(30),
         AggregateOp::Mean,
+        None,
     );
     h.join().unwrap();
     assert_eq!(out.reporters, 2);
@@ -309,14 +310,14 @@ fn collection_drops_stale_round_messages() {
     let stale = TrainerMsg {
         id: 7,
         round: 1,
-        weights: vec![7.0],
+        payload: RoundPayload::Dense(vec![7.0]),
         loss: 9.9,
         steps: 0,
     };
     let fresh = TrainerMsg {
         id: 1,
         round: 2,
-        weights: vec![1.0],
+        payload: RoundPayload::Dense(vec![1.0]),
         loss: 0.1,
         steps: 3,
     };
@@ -362,13 +363,13 @@ fn nan_losses_are_sanitised_during_collection() {
     tx.send(TrainerMsg {
         id: 0,
         round: 1,
-        weights: vec![0.0],
+        payload: RoundPayload::Dense(vec![0.0]),
         loss: f32::NAN,
         steps: 0,
     })
     .unwrap();
     let (_, losses) =
-        collect_round_staged(&rx, 1, 1, Duration::from_secs(5));
+        collect_round_staged(&rx, 1, 1, Duration::from_secs(5), None);
     assert_eq!(losses, vec![f32::MAX]);
 
     // Streaming InverseLoss on a NaN-loss trainer: the sanitised
@@ -377,7 +378,7 @@ fn nan_losses_are_sanitised_during_collection() {
     tx.send(TrainerMsg {
         id: 0,
         round: 1,
-        weights: vec![4.0],
+        payload: RoundPayload::Dense(vec![4.0]),
         loss: f32::NAN,
         steps: 0,
     })

@@ -23,8 +23,9 @@ use std::time::Duration;
 use random_tma::comm::{recv, send_wire, Message, WireMsg};
 use random_tma::config::RunConfig;
 use random_tma::coordinator::evaluator::{EvalDone, EvalReq};
+use random_tma::comm::codec::CodecKind;
 use random_tma::coordinator::kv::{
-    Control, GlobalWeights, TrainerAction, TrainerMsg,
+    Control, GlobalWeights, RoundPayload, TrainerAction, TrainerMsg,
 };
 use random_tma::coordinator::server::tma_server;
 use random_tma::telemetry::{self, report, Level};
@@ -63,7 +64,7 @@ fn mock_trainer(
                 tx.send(TrainerMsg {
                     id,
                     round,
-                    weights: w.clone(),
+                    payload: RoundPayload::Dense(w.clone()),
                     loss: 0.5,
                     steps,
                 })
@@ -131,6 +132,7 @@ fn traced_server_run_produces_foldable_jsonl() {
         &eval_tx,
         &eval_done_rx,
         None,
+        CodecKind::Identity,
     )
     .expect("server run");
 
