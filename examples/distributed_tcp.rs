@@ -375,11 +375,13 @@ fn main() -> anyhow::Result<()> {
                 &eval_cfg,
             );
             let mrr = evaluate_mrr(&*engine, &plan, &w_global)?;
-            println!("[leader] final val MRR {mrr:.4}");
+            // Validate BEFORE printing: CI greps the line below as its
+            // success signal, so a NaN/zero MRR must never emit it.
             anyhow::ensure!(
                 mrr.is_finite() && mrr > 0.0,
                 "distributed run produced unusable weights (MRR {mrr})"
             );
+            println!("[leader] final val MRR {mrr:.4}");
         }
         None => {
             // Protocol-only: the workers echoed the broadcast slab, so

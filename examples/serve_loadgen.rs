@@ -1,0 +1,218 @@
+//! Load generator for the online inference server (docs/SERVING.md):
+//! the "query" leg of the train → deploy → query smoke.
+//!
+//! Spawns `rtma serve` as a real OS process on an ephemeral port,
+//! parses the bound address off its stdout, then drives it from
+//! concurrent client threads issuing link-score batches (val-split
+//! edges plus random in-graph pairs — every score must come back
+//! finite) and a few top-k-neighbour queries (must come back sorted).
+//! Reports throughput and latency and persists them as the
+//! `BENCH_serving.json` baseline for the CI regression gate
+//! (`rtma bench-compare`).
+//!
+//! ```text
+//! cargo build --release
+//! target/release/rtma train --quick --train-secs 4 --agg-secs 1 \
+//!     --save-model results/model.bin
+//! cargo run --release --example serve_loadgen -- \
+//!     --model results/model.bin --quick
+//! ```
+
+use std::io::BufRead;
+use std::process::{Child, Command, Stdio};
+use std::time::Instant;
+
+use anyhow::{ensure, Context};
+use random_tma::benchkit::BenchBaseline;
+use random_tma::gen::load_preset;
+use random_tma::serve::ServeClient;
+use random_tma::util::bench::Timing;
+use random_tma::util::cli::Args;
+use random_tma::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&["quick"]);
+    let model = args.str_or("model", "results/model.bin");
+    let dataset = args.str_or("dataset", "citation-sim");
+    let quick = args.flag("quick");
+    let variant = args.str_or("variant", "gcn_mlp");
+    let seed = args.u64_or("seed", 17);
+    let clients = args.usize_or("clients", 4);
+    let requests = args.usize_or("requests", 100);
+    let pairs_per_req = args.usize_or("pairs", 8);
+    ensure!(
+        std::path::Path::new(&model).exists(),
+        "{model} missing — train one first: rtma train --save-model {model}"
+    );
+
+    // The query workload: the preset's held-out val edges (realistic
+    // link queries the model was validated on) plus random in-graph
+    // pairs. Same preset args as the server, so ids always resolve.
+    let preset = load_preset(&dataset, quick, 16, 8, seed)?;
+    let num_nodes = preset.split.train.num_nodes() as u32;
+    let val_edges: Vec<(u32, u32, i32)> = preset
+        .split
+        .val
+        .iter()
+        .map(|&(u, v)| (u, v, -1))
+        .collect();
+    ensure!(!val_edges.is_empty(), "preset has no val edges");
+
+    // ---- deploy: rtma serve as a child process ------------------------------
+    let exe = rtma_binary()?;
+    let mut cmd = Command::new(&exe);
+    cmd.args(["serve", "--model", &model, "--dataset", &dataset]);
+    cmd.args(["--variant", &variant, "--seed", &seed.to_string()]);
+    cmd.args(["--addr", "127.0.0.1:0"]);
+    if quick {
+        cmd.arg("--quick");
+    }
+    cmd.stdout(Stdio::piped());
+    let mut child = cmd.spawn().context("spawning rtma serve")?;
+    let addr = wait_for_listening(&mut child)?;
+    println!("[loadgen] server up on {addr}");
+
+    // ---- query: concurrent clients, every request timed ---------------------
+    let t_start = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        let edges = val_edges.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<u64>> {
+            let mut client = ServeClient::connect(&addr, c as u32)?;
+            let mut rng = Rng::new(0x10AD ^ c as u64);
+            let mut lat_us = Vec::with_capacity(requests);
+            let mut batch = Vec::with_capacity(pairs_per_req);
+            for r in 0..requests {
+                batch.clear();
+                for p in 0..pairs_per_req {
+                    // Alternate val edges with random pairs.
+                    if (r + p) % 2 == 0 {
+                        let e = edges
+                            [rng.next_u64() as usize % edges.len()];
+                        batch.push(e);
+                    } else {
+                        batch.push((
+                            rng.next_u64() as u32 % num_nodes,
+                            rng.next_u64() as u32 % num_nodes,
+                            -1,
+                        ));
+                    }
+                }
+                let t0 = Instant::now();
+                let scores = client.score(&batch)?;
+                lat_us.push(t0.elapsed().as_micros() as u64);
+                for (i, s) in scores.iter().enumerate() {
+                    ensure!(
+                        s.is_finite(),
+                        "client {c} request {r}: non-finite score {s} \
+                         for pair {:?}",
+                        batch[i]
+                    );
+                }
+            }
+            // A couple of top-k queries: sorted, finite, k-bounded.
+            for _ in 0..2 {
+                let node = rng.next_u64() as u32 % num_nodes;
+                let items = client.topk(node, 5)?;
+                ensure!(items.len() <= 5, "topk returned {}", items.len());
+                for w in items.windows(2) {
+                    ensure!(
+                        w[0].1 >= w[1].1,
+                        "topk not sorted: {:?}",
+                        items
+                    );
+                }
+                for &(_, s) in &items {
+                    ensure!(s.is_finite(), "topk score {s} for {node}");
+                }
+            }
+            Ok(lat_us)
+        }));
+    }
+    let mut lat_us: Vec<u64> = Vec::new();
+    for h in handles {
+        lat_us.extend(h.join().expect("client thread panicked")?);
+    }
+    let wall = t_start.elapsed().as_secs_f64();
+
+    // ---- report + baseline --------------------------------------------------
+    lat_us.sort_unstable();
+    let n = lat_us.len();
+    ensure!(n == clients * requests, "lost requests: {n}");
+    let pick = |p: f64| lat_us[((n as f64 * p) as usize).min(n - 1)];
+    let (p50, p99) = (pick(0.50), pick(0.99));
+    let qps = n as f64 / wall;
+    // CI greps this exact line — keep the format stable.
+    println!(
+        "[loadgen] qps {qps:.0} p50 {p50}us p99 {p99}us \
+         ({n} requests x {pairs_per_req} pairs, {clients} clients)"
+    );
+
+    let mut bench = BenchBaseline::new("serving");
+    bench.push_timing(&Timing {
+        label: "request".into(),
+        samples: lat_us.iter().map(|&u| u as f64 / 1e6).collect(),
+    });
+    bench.push_counter("loadgen_qps", qps);
+    bench.push_counter("loadgen_p50_us", p50 as f64);
+    bench.push_counter("loadgen_p99_us", p99 as f64);
+    let path = bench.write()?;
+    let back = BenchBaseline::read("serving")?;
+    ensure!(back == bench, "bench baseline failed schema round-trip");
+    println!("[loadgen] bench baseline -> {}", path.display());
+
+    // ---- teardown: ask the server to stop, reap the child -------------------
+    ServeClient::connect(&addr, 999)?.stop()?;
+    let status = child.wait()?;
+    ensure!(status.success(), "rtma serve exited with {status}");
+    println!("serve_loadgen OK");
+    Ok(())
+}
+
+/// Read the child's stdout until the `[serve] listening on <addr>`
+/// line, then keep draining it on a background thread (so the server
+/// never blocks on a full pipe).
+fn wait_for_listening(child: &mut Child) -> anyhow::Result<String> {
+    let stdout = child.stdout.take().context("no child stdout")?;
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let read = reader.read_line(&mut line)?;
+        ensure!(read > 0, "rtma serve exited before listening");
+        print!("[serve-child] {line}");
+        if let Some(addr) = line.trim().strip_prefix("[serve] listening on ")
+        {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut sink = String::new();
+                loop {
+                    sink.clear();
+                    match reader.read_line(&mut sink) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => print!("[serve-child] {sink}"),
+                    }
+                }
+            });
+            return Ok(addr);
+        }
+    }
+}
+
+/// Locate the `rtma` binary next to this example's executable.
+fn rtma_binary() -> anyhow::Result<std::path::PathBuf> {
+    let me = std::env::current_exe()?;
+    // target/release/examples/serve_loadgen -> target/release/rtma
+    let dir = me
+        .parent()
+        .and_then(|p| p.parent())
+        .ok_or_else(|| anyhow::anyhow!("no target dir"))?;
+    let cand = dir.join("rtma");
+    ensure!(
+        cand.exists(),
+        "{} missing — run `cargo build --release` first",
+        cand.display()
+    );
+    Ok(cand)
+}

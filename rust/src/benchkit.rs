@@ -321,6 +321,80 @@ impl BenchBaseline {
     }
 }
 
+/// Tolerance-gated diff of two persisted baselines — the engine of
+/// the `rtma bench-compare` CI regression gate. Returns
+/// human-readable regression descriptions; empty means "within
+/// tolerance". Rules:
+///
+/// - timings are matched by label; `median_s`/`p95_s` are
+///   lower-better (a new median beyond `old * (1 + tolerance)` gates).
+/// - counters are matched by name with the direction inferred from
+///   the suffix: `*_qps` / `*_per_sec` are higher-better throughputs,
+///   `*_us` / `*_ms` / `*_secs` are lower-better latencies. Anything
+///   else (byte totals, round counts, …) is informational and never
+///   gates.
+/// - entries present on only one side are skipped: new benches appear
+///   and old ones retire without tripping the gate.
+pub fn compare(
+    old: &BenchBaseline,
+    new: &BenchBaseline,
+    tolerance: f64,
+) -> Vec<String> {
+    let mut out = Vec::new();
+    let worse = 1.0 + tolerance;
+    let pct = tolerance * 100.0;
+    for nt in &new.timings {
+        let Some(ot) = old.timings.iter().find(|t| t.label == nt.label)
+        else {
+            continue;
+        };
+        for (what, o, n) in [
+            ("median", ot.median_s, nt.median_s),
+            ("p95", ot.p95_s, nt.p95_s),
+        ] {
+            if o > 0.0 && n > o * worse {
+                out.push(format!(
+                    "{}/{} {what}: {o:.4}s -> {n:.4}s \
+                     (+{:.0}% > {pct:.0}% tolerance)",
+                    new.section,
+                    nt.label,
+                    (n / o - 1.0) * 100.0,
+                ));
+            }
+        }
+    }
+    for (name, nv) in &new.counters {
+        let Some((_, ov)) = old.counters.iter().find(|(k, _)| k == name)
+        else {
+            continue;
+        };
+        if *ov <= 0.0 {
+            continue;
+        }
+        let higher_better =
+            name.ends_with("_qps") || name.ends_with("_per_sec");
+        let lower_better = name.ends_with("_us")
+            || name.ends_with("_ms")
+            || name.ends_with("_secs");
+        if higher_better && *nv < ov * (1.0 - tolerance) {
+            out.push(format!(
+                "{}/{name}: {ov:.1} -> {nv:.1} \
+                 (-{:.0}% throughput > {pct:.0}% tolerance)",
+                new.section,
+                (1.0 - nv / ov) * 100.0,
+            ));
+        } else if lower_better && *nv > ov * worse {
+            out.push(format!(
+                "{}/{name}: {ov:.1} -> {nv:.1} \
+                 (+{:.0}% latency > {pct:.0}% tolerance)",
+                new.section,
+                (nv / ov - 1.0) * 100.0,
+            ));
+        }
+    }
+    out
+}
+
 /// Average ranks across datasets (Table 2's final columns): for each
 /// dataset, rank approaches by MRR (higher better) and conv time
 /// (lower better), then average each approach's ranks.
@@ -405,6 +479,71 @@ mod tests {
         // in parallel and RTMA_BENCH_DIR would race across threads.
         let p = BenchBaseline::path("smoke");
         assert!(p.ends_with("BENCH_smoke.json"), "{p:?}");
+    }
+
+    fn baseline_with(
+        timings: &[(&str, f64, f64)],
+        counters: &[(&str, f64)],
+    ) -> BenchBaseline {
+        let mut b = BenchBaseline::new("serving");
+        for (label, med, p95) in timings {
+            b.timings.push(BenchTiming {
+                label: label.to_string(),
+                median_s: *med,
+                p95_s: *p95,
+                n: 10,
+            });
+        }
+        for (k, v) in counters {
+            b.push_counter(k, *v);
+        }
+        b
+    }
+
+    #[test]
+    fn compare_passes_within_tolerance() {
+        let old = baseline_with(
+            &[("score", 0.010, 0.020)],
+            &[("loadgen_qps", 1000.0), ("loadgen_p99_us", 900.0)],
+        );
+        let new = baseline_with(
+            &[("score", 0.011, 0.021)],
+            &[("loadgen_qps", 950.0), ("loadgen_p99_us", 1000.0)],
+        );
+        assert!(compare(&old, &new, 0.2).is_empty());
+    }
+
+    #[test]
+    fn compare_flags_latency_and_throughput_regressions() {
+        let old = baseline_with(
+            &[("score", 0.010, 0.020)],
+            &[("loadgen_qps", 1000.0), ("loadgen_p99_us", 900.0)],
+        );
+        // median +50%, qps -40%, p99 +100%: three regressions.
+        let new = baseline_with(
+            &[("score", 0.015, 0.020)],
+            &[("loadgen_qps", 600.0), ("loadgen_p99_us", 1800.0)],
+        );
+        let regs = compare(&old, &new, 0.2);
+        assert_eq!(regs.len(), 3, "{regs:?}");
+        assert!(regs.iter().any(|r| r.contains("score median")));
+        assert!(regs.iter().any(|r| r.contains("loadgen_qps")));
+        assert!(regs.iter().any(|r| r.contains("loadgen_p99_us")));
+    }
+
+    #[test]
+    fn compare_skips_unmatched_and_directionless_entries() {
+        let old = baseline_with(
+            &[("gone", 1.0, 1.0)],
+            &[("comm_bytes_out", 10.0)],
+        );
+        // "new" label and a 100x informational counter: no gate. An
+        // improvement (faster timing) never gates either.
+        let new = baseline_with(
+            &[("fresh", 99.0, 99.0)],
+            &[("comm_bytes_out", 1000.0)],
+        );
+        assert!(compare(&old, &new, 0.2).is_empty());
     }
 
     #[test]

@@ -22,6 +22,13 @@
 //! default `identity` codec the data plane uses the plain
 //! `Weights`/`Broadcast` frames — bit-for-bit the pre-codec wire
 //! (pinned by `tests/codec.rs`).
+//!
+//! The serving plane (`rtma serve`, docs/SERVING.md) rides the same
+//! framing: `QueryScore`/`QueryTopK` requests and their
+//! `ReplyScore`/`ReplyTopK` responses (tags 10–13) obey the identical
+//! `MAX_FRAME` cap and length-prefix discipline, with a codec-free
+//! `Hello`/`Ready` handshake ([`serve_client_handshake`] /
+//! [`serve_server_handshake`]) because query bodies are tiny.
 
 pub mod codec;
 
@@ -71,6 +78,17 @@ pub enum Message {
     },
     /// Leader -> worker: codec-encoded global weights.
     BroadcastEnc { round: u64, codec: u8, n: u64, body: Vec<u8> },
+    /// Client -> server: score `(u, v, rel)` link candidates. `rel`
+    /// is the decoder relation id, or `-1` to let the server derive
+    /// it from the graph's boundary (docs/SERVING.md).
+    QueryScore { id: u64, pairs: Vec<(u32, u32, i32)> },
+    /// Client -> server: the `k` highest-scoring CSR neighbours of
+    /// `node`.
+    QueryTopK { id: u64, node: u32, k: u32 },
+    /// Server -> client: one score per queried pair, in order.
+    ReplyScore { id: u64, scores: Vec<f32> },
+    /// Server -> client: `(neighbour, score)` descending by score.
+    ReplyTopK { id: u64, items: Vec<(u32, f32)> },
 }
 
 /// Borrowed view of a [`Message`] for zero-clone sends: the weight
@@ -97,6 +115,10 @@ pub enum WireMsg<'a> {
         body: &'a [u8],
     },
     BroadcastEnc { round: u64, codec: u8, n: u64, body: &'a [u8] },
+    QueryScore { id: u64, pairs: &'a [(u32, u32, i32)] },
+    QueryTopK { id: u64, node: u32, k: u32 },
+    ReplyScore { id: u64, scores: &'a [f32] },
+    ReplyTopK { id: u64, items: &'a [(u32, f32)] },
 }
 
 const TAG_HELLO: u8 = 1;
@@ -108,6 +130,13 @@ const TAG_COLLECT: u8 = 6;
 const TAG_CODEC: u8 = 7;
 const TAG_WEIGHTS_ENC: u8 = 8;
 const TAG_BROADCAST_ENC: u8 = 9;
+/// Serving-plane tags are `pub` (unlike the training tags) so the
+/// serve module's zero-alloc reader can dispatch on the raw frame
+/// byte before committing to an owned [`Message::decode`].
+pub const TAG_QUERY_SCORE: u8 = 10;
+pub const TAG_QUERY_TOPK: u8 = 11;
+pub const TAG_REPLY_SCORE: u8 = 12;
+pub const TAG_REPLY_TOPK: u8 = 13;
 
 impl WireMsg<'_> {
     /// Encode into `out`, clearing it first. Callers keep one scratch
@@ -163,6 +192,37 @@ impl WireMsg<'_> {
                 out.extend_from_slice(&n.to_le_bytes());
                 out.extend_from_slice(body);
             }
+            WireMsg::QueryScore { id, pairs } => {
+                out.push(TAG_QUERY_SCORE);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&(pairs.len() as u64).to_le_bytes());
+                for &(u, v, rel) in pairs {
+                    out.extend_from_slice(&u.to_le_bytes());
+                    out.extend_from_slice(&v.to_le_bytes());
+                    out.extend_from_slice(&rel.to_le_bytes());
+                }
+            }
+            WireMsg::QueryTopK { id, node, k } => {
+                out.push(TAG_QUERY_TOPK);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&node.to_le_bytes());
+                out.extend_from_slice(&k.to_le_bytes());
+            }
+            WireMsg::ReplyScore { id, scores } => {
+                out.push(TAG_REPLY_SCORE);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&(scores.len() as u64).to_le_bytes());
+                put_f32s(out, scores);
+            }
+            WireMsg::ReplyTopK { id, items } => {
+                out.push(TAG_REPLY_TOPK);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(&(items.len() as u64).to_le_bytes());
+                for &(node, score) in items {
+                    out.extend_from_slice(&node.to_le_bytes());
+                    out.extend_from_slice(&score.to_le_bytes());
+                }
+            }
         }
     }
 }
@@ -206,6 +266,18 @@ impl Message {
                     n: *n,
                     body,
                 }
+            }
+            Message::QueryScore { id, pairs } => {
+                WireMsg::QueryScore { id: *id, pairs }
+            }
+            Message::QueryTopK { id, node, k } => {
+                WireMsg::QueryTopK { id: *id, node: *node, k: *k }
+            }
+            Message::ReplyScore { id, scores } => {
+                WireMsg::ReplyScore { id: *id, scores }
+            }
+            Message::ReplyTopK { id, items } => {
+                WireMsg::ReplyTopK { id: *id, items }
             }
         }
     }
@@ -263,9 +335,84 @@ impl Message {
                     body: cur.rest().to_vec(),
                 }
             }
+            TAG_QUERY_SCORE => {
+                let id = cur.u64()?;
+                let mut pairs = Vec::new();
+                decode_pairs_into(&mut cur, &mut pairs)?;
+                Message::QueryScore { id, pairs }
+            }
+            TAG_QUERY_TOPK => Message::QueryTopK {
+                id: cur.u64()?,
+                node: cur.u32()?,
+                k: cur.u32()?,
+            },
+            TAG_REPLY_SCORE => {
+                let id = cur.u64()?;
+                let n = cur.u64()? as usize;
+                Message::ReplyScore { id, scores: cur.f32s(n)? }
+            }
+            TAG_REPLY_TOPK => {
+                let id = cur.u64()?;
+                let n = cur.u64()? as usize;
+                // Bound the reservation by what the frame can actually
+                // hold (8 bytes per item) before trusting the count.
+                if n > cur.remaining() / 8 {
+                    bail!("truncated message");
+                }
+                let mut items = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let node = cur.u32()?;
+                    let score = cur.f32()?;
+                    items.push((node, score));
+                }
+                Message::ReplyTopK { id, items }
+            }
             other => bail!("bad message tag {other}"),
         })
     }
+}
+
+/// Decode the `count + count×(u32,u32,i32)` tail of a score query
+/// into the caller's reused buffer (cleared first). Shared by the
+/// owned [`Message::decode`] path and the serve reader's zero-alloc
+/// [`decode_score_query_into`].
+fn decode_pairs_into(
+    cur: &mut Cursor<'_>,
+    pairs: &mut Vec<(u32, u32, i32)>,
+) -> Result<()> {
+    let n = cur.u64()? as usize;
+    // 12 bytes per pair: refuse a hostile count before reserving.
+    if n > cur.remaining() / 12 {
+        bail!("truncated message");
+    }
+    pairs.clear();
+    pairs.reserve(n);
+    for _ in 0..n {
+        let u = cur.u32()?;
+        let v = cur.u32()?;
+        let rel = cur.u32()? as i32;
+        pairs.push((u, v, rel));
+    }
+    Ok(())
+}
+
+/// Zero-alloc decode of a `QueryScore` frame into the caller's reused
+/// pair buffer: returns `Ok(Some(id))` and fills `pairs` when `b` is
+/// a score query, `Ok(None)` for any other tag (fall back to
+/// [`Message::decode`]), and an error for a malformed score query.
+/// Steady-state serving decodes every hot-path request through a
+/// recycled `Vec` with no per-request allocation.
+pub fn decode_score_query_into(
+    b: &[u8],
+    pairs: &mut Vec<(u32, u32, i32)>,
+) -> Result<Option<u64>> {
+    if b.first() != Some(&TAG_QUERY_SCORE) {
+        return Ok(None);
+    }
+    let mut cur = Cursor { b, i: 1 };
+    let id = cur.u64()?;
+    decode_pairs_into(&mut cur, pairs)?;
+    Ok(Some(id))
 }
 
 /// Append `data` as raw little-endian f32 bytes. Weight vectors run to
@@ -312,6 +459,9 @@ impl<'a> Cursor<'a> {
     }
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
+    }
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
     }
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
@@ -453,6 +603,27 @@ pub fn recv_into<R: Read>(
     stream: &mut R,
     scratch: &mut Vec<u8>,
 ) -> Result<Message> {
+    recv_frame_into(stream, scratch)?;
+    match Message::decode(scratch) {
+        Ok(m) => Ok(m),
+        Err(e) => {
+            metrics().comm_frames_rejected.inc();
+            Err(e)
+        }
+    }
+}
+
+/// The framing half of [`recv_into`]: read one length-prefixed frame
+/// body into `scratch` (cap check, chunked reads, wire counters)
+/// *without* decoding it. The serve reader uses this to dispatch on
+/// the raw tag byte and decode hot-path queries zero-alloc
+/// ([`decode_score_query_into`]); callers that take this path must
+/// bump `comm_frames_rejected` themselves on a decode failure, as
+/// [`recv_into`] does.
+pub fn recv_frame_into<R: Read>(
+    stream: &mut R,
+    scratch: &mut Vec<u8>,
+) -> Result<()> {
     let mut len = [0u8; 4];
     stream.read_exact(&mut len)?;
     let n = u32::from_le_bytes(len) as usize;
@@ -470,13 +641,7 @@ pub fn recv_into<R: Read>(
     }
     metrics().comm_frames_in.inc();
     metrics().comm_bytes_in.add(4 + n as u64);
-    match Message::decode(scratch) {
-        Ok(m) => Ok(m),
-        Err(e) => {
-            metrics().comm_frames_rejected.inc();
-            Err(e)
-        }
-    }
+    Ok(())
 }
 
 /// Read one length-prefixed message (allocating convenience wrapper
@@ -540,6 +705,29 @@ pub fn server_handshake(
         other => bail!("expected Ready from worker {id}, got {other:?}"),
     }
     send(stream, &Message::Codec { codec: codec.id() })?;
+    Ok(id)
+}
+
+/// Client side of the serving handshake: announce an id, expect the
+/// server's `Ready` ack. No codec negotiation — query frames are
+/// always plain (docs/SERVING.md).
+pub fn serve_client_handshake(stream: &mut TcpStream, id: u32) -> Result<()> {
+    send(stream, &Message::Hello { id })?;
+    match recv(stream)? {
+        Message::Ready { .. } => Ok(()),
+        other => bail!("expected serve Ready ack, got {other:?}"),
+    }
+}
+
+/// Server side of the serving handshake: expect `Hello`, ack `Ready`,
+/// return the client id. A training worker that opens with a `Codec`
+/// frame (or anything else) is refused loudly here.
+pub fn serve_server_handshake(stream: &mut TcpStream) -> Result<u32> {
+    let id = match recv(stream)? {
+        Message::Hello { id } => id,
+        other => bail!("expected Hello from serve client, got {other:?}"),
+    };
+    send(stream, &Message::Ready { id })?;
     Ok(id)
 }
 
@@ -910,6 +1098,93 @@ mod tests {
         for cut in [1, 8, 20, 29] {
             assert!(Message::decode(&b[..cut]).is_err(), "cut={cut}");
         }
+    }
+
+    #[test]
+    fn query_reply_frames_roundtrip() {
+        let msgs = vec![
+            Message::QueryScore {
+                id: 17,
+                pairs: vec![(1, 2, -1), (3, 4, 0), (5, 6, 3)],
+            },
+            Message::QueryTopK { id: 18, node: 42, k: 10 },
+            Message::ReplyScore {
+                id: 17,
+                scores: vec![0.5, -1.25, f32::NEG_INFINITY],
+            },
+            Message::ReplyTopK {
+                id: 18,
+                items: vec![(7, 0.9), (2, 0.1)],
+            },
+        ];
+        let mut scratch = Vec::new();
+        for m in &msgs {
+            assert_eq!(&Message::decode(&m.encode()).unwrap(), m);
+            m.wire().encode_into(&mut scratch);
+            assert_eq!(scratch, m.encode(), "{m:?}");
+        }
+        // Truncated bodies must error, not yield short vectors — a
+        // score query's 17-byte header promises 12 bytes per pair.
+        let b = msgs[0].encode();
+        assert_eq!(b.len(), 17 + 12 * 3);
+        for cut in [1, 8, 16, 17 + 5, b.len() - 1] {
+            assert!(Message::decode(&b[..cut]).is_err(), "cut={cut}");
+        }
+        // A hostile pair count larger than the frame can hold is
+        // refused before any reservation.
+        let mut hostile = vec![TAG_QUERY_SCORE];
+        hostile.extend_from_slice(&1u64.to_le_bytes());
+        hostile.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Message::decode(&hostile).is_err());
+    }
+
+    #[test]
+    fn zero_alloc_query_decode_matches_owned_path() {
+        let msg = Message::QueryScore {
+            id: 99,
+            pairs: vec![(10, 20, 1), (30, 40, -1)],
+        };
+        let frame = msg.encode();
+        let mut pairs = Vec::with_capacity(8);
+        pairs.push((0, 0, 0)); // stale entry: must be cleared
+        let cap = pairs.capacity();
+        let id = decode_score_query_into(&frame, &mut pairs).unwrap();
+        assert_eq!(id, Some(99));
+        assert_eq!(pairs, vec![(10, 20, 1), (30, 40, -1)]);
+        assert_eq!(pairs.capacity(), cap, "decode reallocated the pool buf");
+        // Non-query tags fall through untouched for Message::decode.
+        let other = Message::Stop.encode();
+        assert_eq!(
+            decode_score_query_into(&other, &mut pairs).unwrap(),
+            None
+        );
+        // Malformed score queries error rather than falling through.
+        assert!(decode_score_query_into(&frame[..9], &mut pairs).is_err());
+    }
+
+    #[test]
+    fn serve_handshake_roundtrip_and_rejects_codec_peer() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            serve_server_handshake(&mut s)
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        serve_client_handshake(&mut client, 12).unwrap();
+        assert_eq!(h.join().unwrap().unwrap(), 12);
+
+        // A peer that opens with anything but Hello is refused.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            serve_server_handshake(&mut s)
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        send(&mut client, &Message::Codec { codec: 1 }).unwrap();
+        let err = h.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("expected Hello"), "{err}");
     }
 
     #[test]

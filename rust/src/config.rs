@@ -123,6 +123,10 @@ pub struct RunConfig {
     /// `comm::codec::resolve` and docs/COMM.md). "delta", "f16", "i8"
     /// and "topk[:denom]" select compressed round payloads.
     pub codec: String,
+    /// Where to persist the best tracked parameters after training
+    /// (`serve::save_weights` format; `rtma serve --model` loads it).
+    /// Empty = don't save.
+    pub save_model: String,
     pub seed: u64,
 }
 
@@ -146,6 +150,7 @@ impl Default for RunConfig {
             failed_ids: Vec::new(),
             slowdown: Vec::new(),
             codec: String::new(),
+            save_model: String::new(),
             seed: 17,
         }
     }
@@ -198,6 +203,7 @@ impl RunConfig {
             ("eval_sample", Json::num(self.eval_sample as f64)),
             ("failures", Json::num(self.failures as f64)),
             ("codec", Json::str(self.codec.clone())),
+            ("save_model", Json::str(self.save_model.clone())),
             ("seed", Json::num(self.seed as f64)),
         ])
     }

@@ -378,6 +378,24 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
             "no finite validation MRR — every eval returned NaN, or \
              train_secs too short for a single evaluation",
         )?;
+    // Deploy hook: persist the champion parameters for `rtma serve`
+    // before the final test eval consumes them.
+    if !cfg.save_model.is_empty() {
+        let path = std::path::Path::new(&cfg.save_model);
+        crate::serve::save_weights(path, &best_params)
+            .with_context(|| format!("saving model to {}", path.display()))?;
+        telemetry::info(
+            "driver",
+            "model_saved",
+            &[("params", best_params.len() as f64)],
+            format_args!(
+                "saved best params ({} floats, val MRR {best_val_mrr:.4}) \
+                 to {}",
+                best_params.len(),
+                path.display()
+            ),
+        );
+    }
     eval_req_tx.send(EvalReq::Final { params: best_params }).ok();
     drop(eval_req_tx);
     let mut test_mrr = 0.0;

@@ -7,7 +7,9 @@ use std::sync::mpsc;
 
 use anyhow::Result;
 
-use crate::runtime::{load_backend, ComputeBackend};
+use crate::runtime::{
+    load_backend, score_batched, ComputeBackend, ScoreScratch,
+};
 use crate::sampler::{EvalPlan, Mrr};
 use crate::telemetry::{self, metrics};
 
@@ -35,38 +37,29 @@ pub fn evaluate_mrr(
         }
     }
 
-    // 2: score the pair schedule in S-sized chunks
-    let s_len = engine.dims().score_batch;
-    let mut emb_u = vec![0f32; s_len * h];
-    let mut emb_v = vec![0f32; s_len * h];
-    let mut rel = vec![0i32; s_len];
-    let mut all_scores: Vec<f32> = Vec::with_capacity(plan.num_pairs());
-    let mut fill = 0usize;
-    let flush = |emb_u: &[f32],
-                 emb_v: &[f32],
-                 rel: &[i32],
-                 fill: usize,
-                 out: &mut Vec<f32>|
-     -> Result<()> {
-        let scores = engine.score(params, emb_u, emb_v, rel)?;
-        out.extend_from_slice(&scores[..fill]);
-        Ok(())
-    };
+    // 2: score the pair schedule through the shared batched entry
+    // point (runtime::score_batched) — the same path the serve
+    // batcher folds queries through, so eval and serving stay
+    // bit-identical by construction.
+    let mut emb_u: Vec<f32> = Vec::with_capacity(plan.num_pairs() * h);
+    let mut emb_v: Vec<f32> = Vec::with_capacity(plan.num_pairs() * h);
+    let mut rel: Vec<i32> = Vec::with_capacity(plan.num_pairs());
     for (u, cand, r) in plan.pairs() {
-        let eu = &table[&u];
-        let ev = &table[&cand];
-        emb_u[fill * h..(fill + 1) * h].copy_from_slice(eu);
-        emb_v[fill * h..(fill + 1) * h].copy_from_slice(ev);
-        rel[fill] = r;
-        fill += 1;
-        if fill == s_len {
-            flush(&emb_u, &emb_v, &rel, fill, &mut all_scores)?;
-            fill = 0;
-        }
+        emb_u.extend_from_slice(&table[&u]);
+        emb_v.extend_from_slice(&table[&cand]);
+        rel.push(r);
     }
-    if fill > 0 {
-        flush(&emb_u, &emb_v, &rel, fill, &mut all_scores)?;
-    }
+    let mut all_scores: Vec<f32> = Vec::with_capacity(plan.num_pairs());
+    let mut scratch = ScoreScratch::default();
+    score_batched(
+        engine,
+        params,
+        &emb_u,
+        &emb_v,
+        &rel,
+        &mut scratch,
+        &mut all_scores,
+    )?;
 
     // 3: fold into MRR — pairs are grouped (pos, neg_1..neg_K) per edge
     let mut mrr = Mrr::default();

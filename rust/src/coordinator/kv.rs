@@ -10,7 +10,7 @@
 //! semantics as Alg 1/2 without a timing hole.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, OnceLock};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::telemetry::metrics;
@@ -41,6 +41,11 @@ pub struct Control {
     /// comparable — before, each producer re-anchored its own
     /// `Instant::now()`.
     epoch: OnceLock<Instant>,
+    /// Subscribers to each round's global-weight broadcast
+    /// ([`Self::watch_weights`]) — the train-and-serve deploy hook.
+    /// Cold path (touched once per aggregation round, not per step),
+    /// so a `Mutex` is fine.
+    weight_watchers: Mutex<Vec<mpsc::Sender<(u64, GlobalWeights)>>>,
 }
 
 impl Control {
@@ -125,6 +130,25 @@ impl Control {
             }
             std::thread::sleep(std::time::Duration::from_millis(2));
         }
+    }
+
+    /// Subscribe to global-weight broadcasts: every subsequent
+    /// [`Self::publish_weights`] delivers `(round, weights)` — an
+    /// `Arc` clone, never a parameter copy. A running `rtma serve`
+    /// instance follows one of these to swap weights live at round
+    /// boundaries (docs/SERVING.md).
+    pub fn watch_weights(&self) -> mpsc::Receiver<(u64, GlobalWeights)> {
+        let (tx, rx) = mpsc::channel();
+        self.weight_watchers.lock().unwrap().push(tx);
+        rx
+    }
+
+    /// Deliver one round's global weights to every watcher, dropping
+    /// the ones that hung up. Servers call this at each broadcast
+    /// point; with no watchers it is two atomic ops and an empty loop.
+    pub fn publish_weights(&self, round: u64, w: &GlobalWeights) {
+        let mut watchers = self.weight_watchers.lock().unwrap();
+        watchers.retain(|tx| tx.send((round, w.clone())).is_ok());
     }
 
     /// Decide a trainer's next move given the last round it served.
@@ -307,6 +331,26 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(2));
         let b = c.since_epoch();
         assert!(a >= 0.0 && b >= a, "epoch clock went backwards");
+    }
+
+    #[test]
+    fn weight_watchers_share_the_broadcast_allocation() {
+        let c = Control::new();
+        c.publish_weights(1, &Arc::from(vec![0.0f32; 2])); // no watchers: no-op
+        let rx_a = c.watch_weights();
+        let rx_b = c.watch_weights();
+        let w: GlobalWeights = Arc::from(vec![1.0f32, 2.0]);
+        c.publish_weights(2, &w);
+        let (ra, wa) = rx_a.try_recv().unwrap();
+        let (rb, wb) = rx_b.try_recv().unwrap();
+        assert_eq!((ra, rb), (2, 2));
+        // Arc clones of the same slab — never a parameter copy.
+        assert!(std::ptr::eq(wa.as_ptr(), w.as_ptr()));
+        assert!(std::ptr::eq(wb.as_ptr(), w.as_ptr()));
+        // A hung-up watcher is dropped, the live one keeps receiving.
+        drop(rx_a);
+        c.publish_weights(3, &w);
+        assert_eq!(rx_b.try_recv().unwrap().0, 3);
     }
 
     #[test]

@@ -133,11 +133,15 @@ pub fn tma_server(
             ),
         );
     }
-    // Broadcast W[0]: one shared allocation, M `Arc` clones.
+    // Broadcast W[0]: one shared allocation, M `Arc` clones. Weight
+    // watchers (a co-located `rtma serve`, docs/SERVING.md) get the
+    // same rounds the trainers do — deploy points are exactly the
+    // round boundaries.
     let mut w_global: GlobalWeights = init_weights.into();
     for tx in txs {
         tx.send(w_global.clone()).ok();
     }
+    control.publish_weights(0, &w_global);
     // T_start = now (Alg 1 l. 6): the budget starts after the ready
     // barrier + initial broadcast, excluding engine-compile startup.
     // This is also the shared run epoch every timeline stamp (trainer
@@ -276,6 +280,7 @@ pub fn tma_server(
                 for tx in txs {
                     tx.send(w_global.clone()).ok();
                 }
+                control.publish_weights(rounds, &w_global);
             }
             t_agg = Instant::now();
             // Async validation eval of the new global weights. Skip if
@@ -377,6 +382,7 @@ pub fn tma_server(
         for tx in txs {
             tx.send(w_global.clone()).ok();
         }
+        control.publish_weights(rounds, &w_global);
     }
     telemetry::trace_counters("server");
 

@@ -30,3 +30,4 @@ pub mod coordinator;
 pub mod comm;
 pub mod metrics;
 pub mod benchkit;
+pub mod serve;

@@ -6,11 +6,15 @@
 //!   partition              compare partition schemes on one dataset
 //!   train                  run one full experiment (any approach)
 //!   worker                 TCP worker process for distributed mode
+//!   serve                  online inference server (docs/SERVING.md)
+//!   bench-compare          regression-gate two bench baseline sets
 //!   trace-report           fold an RTMA_TRACE JSONL file into tables
 //!
 //! Examples:
 //!   rtma train --dataset citation-sim --approach RandomTMA --m 3 \
-//!       --train-secs 30 --agg-secs 2
+//!       --train-secs 30 --agg-secs 2 --save-model results/model.bin
+//!   rtma serve --model results/model.bin --dataset citation-sim --quick
+//!   rtma bench-compare baselines/prev baselines/current
 //!   rtma partition --dataset reddit-sim --m 3
 //!
 //! Everything the paper's tables need beyond single runs lives in the
@@ -38,6 +42,8 @@ fn main() {
         Some("partition") => partition(&rest),
         Some("train") => train(&rest),
         Some("worker") => worker(&rest),
+        Some("serve") => serve(&rest),
+        Some("bench-compare") => bench_compare(&rest),
         Some("trace-report") => trace_report(&rest),
         _ => {
             print_usage();
@@ -57,8 +63,8 @@ fn print_usage() {
     println!(
         "rtma — RandomTMA/SuperTMA distributed GNN training\n\
          \n\
-         usage: rtma <doctor|datasets|partition|train|worker|\
-         trace-report> [flags]\n\
+         usage: rtma <doctor|datasets|partition|train|worker|serve|\
+         bench-compare|trace-report> [flags]\n\
          \n\
          common flags:\n\
          \x20 --dataset <reddit-sim|citation-sim|mag-sim|ecomm-sim>\n\
@@ -75,6 +81,12 @@ fn print_usage() {
          round codec (precedence low to high; see docs/COMM.md):\n\
          \x20 --codec identity|delta|f16|i8|topk[:denom]\n\
          \x20 RTMA_CODEC=...            env override (wins)\n\
+         \n\
+         serving (see docs/SERVING.md):\n\
+         \x20 rtma train ... --save-model <path>   persist best params\n\
+         \x20 rtma serve --model <path> [--addr host:port]\n\
+         \x20 RTMA_SERVE_WINDOW_US / _MAX_BATCH / _CACHE / _TOPK_SCAN\n\
+         \x20 rtma bench-compare <old> <new> [--tolerance 0.2]\n\
          \n\
          telemetry (all subcommands):\n\
          \x20 RTMA_LOG=off|info|debug   stderr event level\n\
@@ -104,6 +116,7 @@ fn run_config(args: &Args) -> RunConfig {
         eval_sample: args.usize_or("eval-sample", 64),
         failures: args.usize_or("failures", 0),
         codec: args.str_or("codec", ""),
+        save_model: args.str_or("save-model", ""),
         seed: args.u64_or("seed", 17),
         aggregate_op: if args.str_or("agg-op", "mean") == "inverse-loss" {
             AggregateOp::InverseLoss
@@ -267,6 +280,174 @@ fn train(args: &Args) -> Result<()> {
     result.to_json().write_file(&out)?;
     println!("[rtma] wrote {}", out.display());
     Ok(())
+}
+
+/// Online inference server (docs/SERVING.md): load the persisted best
+/// parameters (`rtma train --save-model`), rebuild the preset's train
+/// graph (honours `RTMA_MMAP=1` exactly like training does) and answer
+/// `QueryScore`/`QueryTopK` frames until a client sends `Stop`.
+///
+/// Serves over the *train* split — the graph the deployed model was
+/// trained and validated on — so served scores line up with the
+/// evaluator's (the held-out val/test edges are what clients query).
+fn serve(args: &Args) -> Result<()> {
+    use anyhow::Context;
+    use random_tma::coordinator::kv::GlobalWeights;
+    use random_tma::runtime::Manifest;
+    use random_tma::serve::{load_weights, serve as start_server, ServeConfig};
+    use std::sync::Arc;
+
+    let model = args.get("model").context(
+        "--model <path> required (write one with rtma train --save-model)",
+    )?;
+    let params = load_weights(std::path::Path::new(model))?;
+    let mut manifest = Manifest::load_or_builtin();
+    let backend_flag = args.str_or("backend", "");
+    if !backend_flag.is_empty() {
+        manifest.backend = backend_flag;
+    }
+    let variant = args.str_or("variant", "gcn_mlp");
+    let impl_name = if args.flag("jnp") {
+        "jnp".to_string()
+    } else {
+        args.str_or("impl", "pallas")
+    };
+    let preset = load_preset(
+        &args.str_or("dataset", "citation-sim"),
+        args.flag("quick"),
+        args.usize_or("eval-edges", 16),
+        args.usize_or("negatives", 8),
+        args.u64_or("seed", 17),
+    )?;
+    let boundary = preset.boundary;
+    let graph = Arc::new(preset.split.train);
+    let mut cfg = ServeConfig::from_env();
+    if let Some(addr) = args.get("addr") {
+        cfg.addr = addr.to_string();
+    }
+    let init: GlobalWeights = Arc::from(params);
+    let handle = start_server(
+        &cfg, graph, boundary, manifest, variant, impl_name, init,
+    )?;
+    // The load generator and the CI smoke parse this exact line to
+    // discover the bound port — keep the format stable.
+    println!("[serve] listening on {}", handle.addr());
+    handle.join();
+    println!("[serve] stopped");
+    Ok(())
+}
+
+/// Regression gate over persisted bench baselines: compare every
+/// `BENCH_*.json` section present in both trees and fail on any
+/// timing/latency counter that got slower — or throughput counter
+/// that got smaller — by more than `--tolerance` (default 20%). An
+/// empty/missing *old* side soft-passes with a notice: the first run
+/// on a branch has no prior artifact to gate against.
+fn bench_compare(args: &Args) -> Result<()> {
+    use random_tma::benchkit::{compare, BenchBaseline};
+
+    let pos = args.positional();
+    anyhow::ensure!(
+        pos.len() == 2,
+        "usage: rtma bench-compare <old dir|file> <new dir|file> \
+         [--tolerance 0.2]"
+    );
+    let tolerance = args.f64_or("tolerance", 0.2);
+    let old = collect_baselines(std::path::Path::new(&pos[0]))?;
+    let new = collect_baselines(std::path::Path::new(&pos[1]))?;
+    if old.is_empty() {
+        println!(
+            "[bench-compare] no prior baselines under {} — nothing to \
+             gate against (soft pass)",
+            pos[0]
+        );
+        return Ok(());
+    }
+    anyhow::ensure!(!new.is_empty(), "no BENCH_*.json under {}", pos[1]);
+    let mut regressions: Vec<String> = Vec::new();
+    let mut compared = 0usize;
+    for (section, ob) in &old {
+        match new.get(section) {
+            Some(nb) => {
+                compared += 1;
+                let regs = compare(ob, nb, tolerance);
+                println!(
+                    "[bench-compare] {section}: {} timing(s), {} \
+                     counter(s), {} regression(s)",
+                    nb.timings.len(),
+                    nb.counters.len(),
+                    regs.len()
+                );
+                regressions.extend(regs);
+            }
+            None => println!(
+                "[bench-compare] {section}: only in old side — skipped"
+            ),
+        }
+    }
+    for section in new.keys().filter(|s| !old.contains_key(*s)) {
+        println!("[bench-compare] {section}: new section — no baseline");
+    }
+    if regressions.is_empty() {
+        println!(
+            "[bench-compare] OK: {compared} section(s) within \
+             {:.0}% tolerance",
+            tolerance * 100.0
+        );
+        return Ok(());
+    }
+    for r in &regressions {
+        println!("[bench-compare] REGRESSION {r}");
+    }
+    anyhow::bail!(
+        "{} bench regression(s) beyond the {:.0}% tolerance",
+        regressions.len(),
+        tolerance * 100.0
+    )
+}
+
+/// Gather `BENCH_*.json` baselines under a file or directory, keyed
+/// by section. Recurses a few levels because `gh run download` nests
+/// one directory per artifact. A missing root is an empty set (the
+/// soft-pass path), but a file that *is* there must parse.
+fn collect_baselines(
+    root: &std::path::Path,
+) -> Result<std::collections::BTreeMap<
+    String,
+    random_tma::benchkit::BenchBaseline,
+>> {
+    use anyhow::Context;
+    use random_tma::benchkit::BenchBaseline;
+    use random_tma::util::json::Json;
+
+    let mut out = std::collections::BTreeMap::new();
+    if !root.exists() {
+        return Ok(out);
+    }
+    let mut stack = vec![(root.to_path_buf(), 0usize)];
+    while let Some((p, depth)) = stack.pop() {
+        if p.is_dir() {
+            if depth > 3 {
+                continue;
+            }
+            for entry in std::fs::read_dir(&p)
+                .with_context(|| format!("reading {}", p.display()))?
+            {
+                stack.push((entry?.path(), depth + 1));
+            }
+            continue;
+        }
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if !(name.starts_with("BENCH_") && name.ends_with(".json")) {
+            continue;
+        }
+        let j = Json::read_file(&p)
+            .with_context(|| format!("parsing {}", p.display()))?;
+        let b = BenchBaseline::from_json(&j)
+            .with_context(|| format!("validating {}", p.display()))?;
+        out.insert(b.section.clone(), b);
+    }
+    Ok(out)
 }
 
 /// Fold a JSONL trace (`RTMA_TRACE`) into the per-round server phase

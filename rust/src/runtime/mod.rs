@@ -239,6 +239,76 @@ fn load_backend_inner(
     }
 }
 
+/// Reused buffers for [`score_batched`]: one fixed `score_batch`-sized
+/// set of padded inputs per caller, so steady-state batched scoring
+/// allocates only the output it returns into.
+#[derive(Debug, Default)]
+pub struct ScoreScratch {
+    emb_u: Vec<f32>,
+    emb_v: Vec<f32>,
+    rel: Vec<i32>,
+}
+
+/// Score an arbitrary number of `(emb_u, emb_v, rel)` rows through a
+/// backend whose `score` entry takes *exactly* `dims().score_batch`
+/// rows, chunking and zero-padding the tail. Scores append to `out`
+/// in input order.
+///
+/// Both the evaluator's MRR pass and the serve batcher fold through
+/// this one entry point. Because every backend scores rows
+/// independently (the decoder is a row-wise matmul; pinned by
+/// `tests/serve.rs`), the chunk boundaries and the zero padding are
+/// unobservable: batched output is bit-identical to scoring each row
+/// alone.
+pub fn score_batched(
+    engine: &dyn ComputeBackend,
+    params: &[f32],
+    emb_u: &[f32],
+    emb_v: &[f32],
+    rel: &[i32],
+    scratch: &mut ScoreScratch,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let h = engine.dims().hidden;
+    let s_len = engine.dims().score_batch;
+    anyhow::ensure!(
+        emb_u.len() == emb_v.len() && emb_u.len() % h == 0,
+        "score_batched: emb_u {} / emb_v {} bytes, hidden {h}",
+        emb_u.len(),
+        emb_v.len()
+    );
+    let n = emb_u.len() / h;
+    anyhow::ensure!(
+        rel.len() == n,
+        "score_batched: {n} rows but {} relation ids",
+        rel.len()
+    );
+    scratch.emb_u.resize(s_len * h, 0.0);
+    scratch.emb_v.resize(s_len * h, 0.0);
+    scratch.rel.resize(s_len, 0);
+    out.reserve(n);
+    let mut done = 0usize;
+    while done < n {
+        let take = (n - done).min(s_len);
+        scratch.emb_u[..take * h]
+            .copy_from_slice(&emb_u[done * h..(done + take) * h]);
+        scratch.emb_v[..take * h]
+            .copy_from_slice(&emb_v[done * h..(done + take) * h]);
+        scratch.rel[..take].copy_from_slice(&rel[done..done + take]);
+        // Zero the padded tail: stale rows from the previous chunk
+        // must not feed the decoder (harmless for correctness — rows
+        // are independent — but NaN-poisonable on exotic backends).
+        scratch.emb_u[take * h..].fill(0.0);
+        scratch.emb_v[take * h..].fill(0.0);
+        scratch.rel[take..].fill(0);
+        let scores =
+            engine.score(params, &scratch.emb_u, &scratch.emb_v, &scratch.rel)?;
+        out.extend_from_slice(&scores[..take]);
+        done += take;
+    }
+    Ok(())
+}
+
 /// Convenience: mean absolute value (used in tests/diagnostics).
 pub fn mean_abs(xs: &[f32]) -> f64 {
     crate::util::stats::mean(&xs.iter().map(|x| x.abs() as f64).collect::<Vec<_>>())

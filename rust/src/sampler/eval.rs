@@ -154,7 +154,18 @@ impl EvalPlan {
 
 /// Build one eval block: `targets` in the leading slots, deterministic
 /// neighbour context afterwards.
-fn build_block(graph: &Graph, targets: &[u32], cfg: &EvalBlockConfig) -> Block {
+///
+/// Public because the serving batcher (`serve`) reuses it to compute
+/// *canonical* per-node embeddings — one single-target block per node,
+/// so an embedding is a pure function of `(graph, node, weights)`,
+/// independent of which other nodes happen to share a batch. That
+/// invariance is what makes the serve LRU cache and the
+/// batch-vs-single bit-identity guarantee sound (`tests/serve.rs`).
+pub fn build_block(
+    graph: &Graph,
+    targets: &[u32],
+    cfg: &EvalBlockConfig,
+) -> Block {
     let bn = cfg.block_nodes;
     let planes = if cfg.adj_mode == AdjMode::Relational {
         cfg.relations

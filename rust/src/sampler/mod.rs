@@ -22,7 +22,7 @@
 pub mod eval;
 pub mod train;
 
-pub use eval::{EvalPlan, Mrr};
+pub use eval::{build_block, EvalBlockConfig, EvalPlan, Mrr};
 pub use train::{TrainSampler, TrainSamplerConfig};
 
 /// How the dense block adjacency is normalised for the encoder.

@@ -1,0 +1,1296 @@
+//! Online inference serving: the train → deploy → query loop
+//! (docs/SERVING.md).
+//!
+//! [`serve`] starts a TCP server answering link-scoring
+//! (`QueryScore`) and top-k-neighbour (`QueryTopK`) requests over the
+//! training wire protocol's framing (`comm`, tags 10–13, same
+//! `MAX_FRAME` cap). The hot path is a **batching loop**: one batcher
+//! thread accumulates requests for a small window
+//! (`RTMA_SERVE_WINDOW_US`), then amortises the embedding gather and
+//! one `ComputeBackend::score` matmul across every request in the
+//! batch, in front of an LRU hot-node embedding cache ([`EmbCache`])
+//! and a zero-alloc request decode into recycled scratch buffers
+//! (`comm::decode_score_query_into`).
+//!
+//! **Canonical embeddings.** A node's embedding is computed from its
+//! own single-target eval block (`sampler::build_block` with one
+//! target), never from a block shared with whatever else is in the
+//! batch — so it is a pure function of `(graph, node, weights)`.
+//! That invariance is what makes the cache sound and batched scoring
+//! bit-identical to single-request scoring (`tests/serve.rs`): the
+//! batch amortises the decoder matmul and the syscalls, not the
+//! block construction.
+//!
+//! **Live weight swap.** The paper's time-based aggregation makes
+//! round boundaries natural deploy points: a co-located coordinator
+//! pushes each round's new [`GlobalWeights`] (an `Arc` clone, never a
+//! copy) through [`ServeHandle::push_weights`] (or
+//! [`ServeHandle::follow`] on a `Control::watch_weights` channel).
+//! The batcher loads the weight slot once per batch, so an in-flight
+//! batch finishes entirely on the weights it started with and the
+//! next batch sees the new generation — no request is ever dropped
+//! or scored against a half-swapped state. A swap invalidates the
+//! embedding cache (embeddings depend on weights).
+
+use std::collections::{HashMap, HashSet};
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::comm::{self, Message, WireMsg};
+use crate::coordinator::kv::GlobalWeights;
+use crate::graph::Graph;
+use crate::runtime::{load_backend, score_batched, Manifest, ScoreScratch};
+use crate::sampler::{build_block, AdjMode, EvalBlockConfig};
+use crate::telemetry::{self, metrics, Span};
+
+/// Magic + version tag of the persisted-weights file format: 8-byte
+/// magic, u64 LE element count, raw f32 LE data. Written by
+/// `rtma train --save-model`, read by `rtma serve`.
+pub const WEIGHTS_MAGIC: &[u8; 8] = b"RTMAWTS1";
+
+/// Persist a flat parameter vector (atomic: temp file + rename, the
+/// same discipline as `graph::io`).
+pub fn save_weights(path: &Path, params: &[f32]) -> Result<()> {
+    let mut bytes =
+        Vec::with_capacity(16 + 4 * params.len());
+    bytes.extend_from_slice(WEIGHTS_MAGIC);
+    bytes.extend_from_slice(&(params.len() as u64).to_le_bytes());
+    for x in params {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &bytes)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load a parameter vector written by [`save_weights`], validating
+/// magic and length.
+pub fn load_weights(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading model {}", path.display()))?;
+    ensure!(
+        bytes.len() >= 16 && &bytes[..8] == WEIGHTS_MAGIC,
+        "{}: not a {} weights file",
+        path.display(),
+        std::str::from_utf8(WEIGHTS_MAGIC).unwrap(),
+    );
+    let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    ensure!(
+        bytes.len() == 16 + 4 * n,
+        "{}: truncated weights ({} bytes for {n} params)",
+        path.display(),
+        bytes.len()
+    );
+    Ok(bytes[16..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Serving knobs. Every field has an `RTMA_SERVE_*` env override so
+/// the CI smoke and the load generator can tune the window without
+/// new flags (docs/SERVING.md).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks a free port (the chosen address is
+    /// on [`ServeHandle::addr`] and printed by `rtma serve`).
+    pub addr: String,
+    /// Batching window: how long the batcher waits for more requests
+    /// after the first one arrives (`RTMA_SERVE_WINDOW_US`).
+    pub window: Duration,
+    /// Max requests folded into one batch (`RTMA_SERVE_MAX_BATCH`).
+    pub max_batch: usize,
+    /// LRU embedding-cache capacity in nodes (`RTMA_SERVE_CACHE`).
+    pub cache_cap: usize,
+    /// Max CSR neighbours scored per top-k query
+    /// (`RTMA_SERVE_TOPK_SCAN`).
+    pub topk_scan: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            window: Duration::from_micros(2000),
+            max_batch: 256,
+            cache_cap: 4096,
+            topk_scan: 512,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Defaults with `RTMA_SERVE_*` env overrides applied.
+    pub fn from_env() -> ServeConfig {
+        fn env_usize(key: &str, default: usize) -> usize {
+            std::env::var(key)
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(default)
+        }
+        let d = ServeConfig::default();
+        ServeConfig {
+            addr: std::env::var("RTMA_SERVE_ADDR")
+                .unwrap_or(d.addr),
+            window: Duration::from_micros(env_usize(
+                "RTMA_SERVE_WINDOW_US",
+                d.window.as_micros() as usize,
+            ) as u64),
+            max_batch: env_usize("RTMA_SERVE_MAX_BATCH", d.max_batch)
+                .max(1),
+            cache_cap: env_usize("RTMA_SERVE_CACHE", d.cache_cap).max(1),
+            topk_scan: env_usize("RTMA_SERVE_TOPK_SCAN", d.topk_scan)
+                .max(1),
+        }
+    }
+}
+
+const NO_SLOT: usize = usize::MAX;
+
+/// Fixed-capacity LRU cache of per-node embedding rows, index-linked
+/// (no per-entry allocation: one flat `f32` slab plus three `usize`
+/// vectors). Keyed by global node id; tagged with the weight
+/// generation that produced the rows — [`EmbCache::invalidate`]
+/// drops everything when the server swaps weights, since embeddings
+/// are a function of the parameters.
+#[derive(Debug)]
+pub struct EmbCache {
+    h: usize,
+    cap: usize,
+    map: HashMap<u32, usize>,
+    keys: Vec<u32>,
+    prev: Vec<usize>,
+    next: Vec<usize>,
+    data: Vec<f32>,
+    head: usize,
+    tail: usize,
+    generation: u64,
+}
+
+impl EmbCache {
+    pub fn new(cap: usize, h: usize) -> EmbCache {
+        let cap = cap.max(1);
+        EmbCache {
+            h,
+            cap,
+            map: HashMap::with_capacity(cap),
+            keys: Vec::new(),
+            prev: Vec::new(),
+            next: Vec::new(),
+            data: Vec::new(),
+            head: NO_SLOT,
+            tail: NO_SLOT,
+            generation: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Weight generation the cached rows were computed under.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Drop every entry and retag the cache with `generation` (weight
+    /// swap). Slot storage is kept for reuse.
+    pub fn invalidate(&mut self, generation: u64) {
+        self.map.clear();
+        self.keys.clear();
+        self.prev.clear();
+        self.next.clear();
+        self.head = NO_SLOT;
+        self.tail = NO_SLOT;
+        self.generation = generation;
+    }
+
+    /// Membership test with no LRU side effects (callers account
+    /// hit/miss metrics where a miss triggers a compute).
+    pub fn contains(&self, node: u32) -> bool {
+        self.map.contains_key(&node)
+    }
+
+    fn detach(&mut self, i: usize) {
+        let (p, n) = (self.prev[i], self.next[i]);
+        if p == NO_SLOT {
+            self.head = n;
+        } else {
+            self.next[p] = n;
+        }
+        if n == NO_SLOT {
+            self.tail = p;
+        } else {
+            self.prev[n] = p;
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.prev[i] = NO_SLOT;
+        self.next[i] = self.head;
+        if self.head != NO_SLOT {
+            self.prev[self.head] = i;
+        }
+        self.head = i;
+        if self.tail == NO_SLOT {
+            self.tail = i;
+        }
+    }
+
+    /// The embedding row for `node`, bumping it to most-recently-used.
+    pub fn get(&mut self, node: u32) -> Option<&[f32]> {
+        let i = *self.map.get(&node)?;
+        if self.head != i {
+            self.detach(i);
+            self.push_front(i);
+        }
+        Some(&self.data[i * self.h..(i + 1) * self.h])
+    }
+
+    /// Insert (or refresh) `node`'s embedding row, evicting the
+    /// least-recently-used entry when full.
+    pub fn insert(&mut self, node: u32, emb: &[f32]) {
+        assert_eq!(emb.len(), self.h, "embedding width mismatch");
+        if let Some(&i) = self.map.get(&node) {
+            self.data[i * self.h..(i + 1) * self.h].copy_from_slice(emb);
+            if self.head != i {
+                self.detach(i);
+                self.push_front(i);
+            }
+            return;
+        }
+        let i = if self.keys.len() < self.cap {
+            // Fresh slot: grow the slab.
+            let i = self.keys.len();
+            self.keys.push(node);
+            self.prev.push(NO_SLOT);
+            self.next.push(NO_SLOT);
+            self.data.extend_from_slice(emb);
+            i
+        } else {
+            // Full: evict the LRU tail and reuse its slot.
+            let i = self.tail;
+            debug_assert_ne!(i, NO_SLOT);
+            self.detach(i);
+            self.map.remove(&self.keys[i]);
+            self.keys[i] = node;
+            self.data[i * self.h..(i + 1) * self.h].copy_from_slice(emb);
+            i
+        };
+        self.map.insert(node, i);
+        self.push_front(i);
+    }
+}
+
+/// The swappable weight slot shared between the batcher and the
+/// trainer/coordinator side. One `Mutex<(generation, Arc)>`: the
+/// batcher takes one lock per *batch* (not per request) and every
+/// swap is a pointer store — in-flight batches keep their loaded
+/// `Arc` alive, so old weights retire only when the last batch using
+/// them completes.
+#[derive(Debug)]
+pub struct WeightSlot {
+    inner: Mutex<(u64, GlobalWeights)>,
+}
+
+impl WeightSlot {
+    pub fn new(init: GlobalWeights) -> WeightSlot {
+        WeightSlot { inner: Mutex::new((1, init)) }
+    }
+
+    /// Install new weights; returns the new generation.
+    pub fn swap(&self, w: GlobalWeights) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        g.0 += 1;
+        g.1 = w;
+        metrics().serve_weight_swaps.inc();
+        g.0
+    }
+
+    /// The current `(generation, weights)` — an `Arc` clone.
+    pub fn load(&self) -> (u64, GlobalWeights) {
+        let g = self.inner.lock().unwrap();
+        (g.0, g.1.clone())
+    }
+}
+
+/// Work items flowing reader → batcher.
+enum Work {
+    Open {
+        conn: u64,
+        writer: TcpStream,
+        spent_tx: mpsc::Sender<Vec<(u32, u32, i32)>>,
+    },
+    Score {
+        conn: u64,
+        id: u64,
+        pairs: Vec<(u32, u32, i32)>,
+        t0: Instant,
+    },
+    TopK { conn: u64, id: u64, node: u32, k: u32, t0: Instant },
+    Close { conn: u64 },
+}
+
+/// Handle to a running server: the bound address, the weight slot and
+/// the thread set. Dropping the handle does NOT stop the server; call
+/// [`ServeHandle::shutdown`] (or have a client send `Stop`).
+pub struct ServeHandle {
+    addr: SocketAddr,
+    slot: Arc<WeightSlot>,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ServeHandle {
+    /// The actually-bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once a stop was requested (client `Stop` frame or
+    /// [`ServeHandle::shutdown`]).
+    pub fn stopping(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Install new weights for the *next* batch; the in-flight batch
+    /// finishes on the generation it loaded. Returns the new
+    /// generation.
+    pub fn push_weights(&self, w: GlobalWeights) -> u64 {
+        self.slot.swap(w)
+    }
+
+    /// Follow a coordinator's round broadcasts
+    /// (`Control::watch_weights`): every `(round, weights)` the
+    /// channel delivers is swapped in. The forwarder thread exits
+    /// when the coordinator drops the channel (end of training).
+    pub fn follow(&self, rx: mpsc::Receiver<(u64, GlobalWeights)>) {
+        let slot = self.slot.clone();
+        let shutdown = self.shutdown.clone();
+        std::thread::spawn(move || {
+            while let Ok((round, w)) = rx.recv() {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let generation = slot.swap(w);
+                telemetry::debug(
+                    "serve",
+                    "weights_swapped",
+                    &[
+                        ("round", round as f64),
+                        ("generation", generation as f64),
+                    ],
+                    format_args!(
+                        "round {round} weights installed (gen {generation})"
+                    ),
+                );
+            }
+        });
+    }
+
+    /// Request shutdown and join every server thread.
+    pub fn shutdown(self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.join()
+    }
+
+    /// Join the server threads (blocks until a client `Stop` or a
+    /// prior [`ServeHandle::shutdown`] request lands).
+    pub fn join(self) {
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start serving `graph` with `init` weights; returns once the
+/// listener is bound. `boundary` is the preset's bipartite boundary
+/// (relation derivation for `rel = -1` queries); `manifest`/`variant`
+/// pick the backend, loaded *on the batcher thread* (backends are
+/// deliberately `!Send`).
+pub fn serve(
+    cfg: &ServeConfig,
+    graph: Arc<Graph>,
+    boundary: u32,
+    manifest: Manifest,
+    variant: String,
+    impl_name: String,
+    init: GlobalWeights,
+) -> Result<ServeHandle> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+
+    let slot = Arc::new(WeightSlot::new(init));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let (work_tx, work_rx) = mpsc::channel::<Work>();
+
+    let mut threads = Vec::new();
+    {
+        let (slot, shutdown, cfg) =
+            (slot.clone(), shutdown.clone(), cfg.clone());
+        threads.push(std::thread::spawn(move || {
+            batcher_loop(
+                &cfg, &graph, boundary, &manifest, &variant, &impl_name,
+                &slot, &shutdown, work_rx,
+            );
+        }));
+    }
+    {
+        let shutdown = shutdown.clone();
+        threads.push(std::thread::spawn(move || {
+            acceptor_loop(listener, work_tx, shutdown);
+        }));
+    }
+    telemetry::info(
+        "serve",
+        "listening",
+        &[],
+        format_args!("serving on {addr}"),
+    );
+    Ok(ServeHandle { addr, slot, shutdown, threads })
+}
+
+/// Accept loop: handshake each connection, register its writer half
+/// with the batcher, spawn a reader. Polls non-blocking so a shutdown
+/// request is honoured within ~20 ms.
+fn acceptor_loop(
+    listener: TcpListener,
+    work_tx: mpsc::Sender<Work>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let live = Arc::new(AtomicU64::new(0));
+    let mut next_conn = 0u64;
+    let mut readers: Vec<JoinHandle<()>> = Vec::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                if let Err(e) = comm::serve_server_handshake(&mut stream) {
+                    telemetry::debug(
+                        "serve",
+                        "handshake_failed",
+                        &[],
+                        format_args!("{e:#}"),
+                    );
+                    continue;
+                }
+                let conn = next_conn;
+                next_conn += 1;
+                let writer = match stream.try_clone() {
+                    Ok(w) => w,
+                    Err(_) => continue,
+                };
+                let (spent_tx, spent_rx) = mpsc::channel();
+                if work_tx
+                    .send(Work::Open { conn, writer, spent_tx })
+                    .is_err()
+                {
+                    break; // batcher gone
+                }
+                metrics()
+                    .serve_connections
+                    .set(live.fetch_add(1, Ordering::Relaxed) + 1);
+                let (tx, sd, lv) =
+                    (work_tx.clone(), shutdown.clone(), live.clone());
+                readers.push(std::thread::spawn(move || {
+                    reader_loop(conn, stream, spent_rx, &tx, &sd);
+                    metrics().serve_connections.set(
+                        lv.fetch_sub(1, Ordering::Relaxed)
+                            .saturating_sub(1),
+                    );
+                }));
+            }
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => break,
+        }
+    }
+    drop(work_tx); // lets the batcher's queue drain to Disconnected
+    for r in readers {
+        let _ = r.join();
+    }
+}
+
+/// Per-connection reader: peek-poll for pending bytes (so a blocking
+/// frame read never straddles a timeout and desyncs the stream),
+/// decode hot-path queries zero-alloc into recycled pair buffers, and
+/// forward work to the batcher. A `Stop` frame requests server-wide
+/// shutdown — the serving analogue of the training protocol's stop.
+fn reader_loop(
+    conn: u64,
+    mut stream: TcpStream,
+    spent_rx: mpsc::Receiver<Vec<(u32, u32, i32)>>,
+    work_tx: &mpsc::Sender<Work>,
+    shutdown: &AtomicBool,
+) {
+    let mut rbuf: Vec<u8> = Vec::new();
+    if stream.set_nonblocking(true).is_err() {
+        let _ = work_tx.send(Work::Close { conn });
+        return;
+    }
+    let mut peek = [0u8; 1];
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream.peek(&mut peek) {
+            Ok(0) => break, // EOF
+            Ok(_) => {}
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_micros(500));
+                continue;
+            }
+            Err(_) => break,
+        }
+        // Bytes pending: take the whole frame blocking.
+        if stream.set_nonblocking(false).is_err() {
+            break;
+        }
+        let got = comm::recv_frame_into(&mut stream, &mut rbuf);
+        if stream.set_nonblocking(true).is_err() {
+            break;
+        }
+        if got.is_err() {
+            break; // cap violation or mid-frame disconnect
+        }
+        let t0 = Instant::now();
+        // Hot path: score queries decode into a recycled buffer.
+        let mut pairs = spent_rx.try_recv().unwrap_or_default();
+        match comm::decode_score_query_into(&rbuf, &mut pairs) {
+            Ok(Some(id)) => {
+                if work_tx
+                    .send(Work::Score { conn, id, pairs, t0 })
+                    .is_err()
+                {
+                    break;
+                }
+                continue;
+            }
+            Ok(None) => {}
+            Err(_) => {
+                metrics().comm_frames_rejected.inc();
+                break;
+            }
+        }
+        match Message::decode(&rbuf) {
+            Ok(Message::QueryTopK { id, node, k }) => {
+                if work_tx
+                    .send(Work::TopK { conn, id, node, k, t0 })
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            Ok(Message::Stop) => {
+                telemetry::info(
+                    "serve",
+                    "stop_requested",
+                    &[("conn", conn as f64)],
+                    format_args!("client {conn} requested stop"),
+                );
+                shutdown.store(true, Ordering::SeqCst);
+                break;
+            }
+            Ok(other) => {
+                telemetry::debug(
+                    "serve",
+                    "unexpected_frame",
+                    &[("conn", conn as f64)],
+                    format_args!("ignoring {other:?}"),
+                );
+            }
+            Err(_) => {
+                metrics().comm_frames_rejected.inc();
+                break;
+            }
+        }
+    }
+    let _ = work_tx.send(Work::Close { conn });
+}
+
+/// A registered connection's write half plus its pair-buffer recycle
+/// channel.
+struct ConnState {
+    writer: TcpStream,
+    spent_tx: mpsc::Sender<Vec<(u32, u32, i32)>>,
+}
+
+/// One request awaiting its slice of the batch score vector.
+enum Pending {
+    Score {
+        conn: u64,
+        id: u64,
+        t0: Instant,
+        start: usize,
+        len: usize,
+        pairs: Vec<(u32, u32, i32)>,
+    },
+    TopK {
+        conn: u64,
+        id: u64,
+        t0: Instant,
+        k: u32,
+        start: usize,
+        len: usize,
+        cstart: usize,
+    },
+}
+
+/// The batcher: owns the engine (constructed here — backends are
+/// `!Send`), the embedding cache and every connection's write half.
+/// See the module docs for the batch pipeline.
+#[allow(clippy::too_many_arguments)]
+fn batcher_loop(
+    cfg: &ServeConfig,
+    graph: &Graph,
+    boundary: u32,
+    manifest: &Manifest,
+    variant: &str,
+    impl_name: &str,
+    slot: &WeightSlot,
+    shutdown: &AtomicBool,
+    work_rx: mpsc::Receiver<Work>,
+) {
+    let engine = match load_backend(manifest, variant, impl_name, "serve") {
+        Ok(e) => e,
+        Err(_) => {
+            shutdown.store(true, Ordering::SeqCst);
+            return;
+        }
+    };
+    if let Err(e) = engine.prepare(&["encode", "score"]) {
+        telemetry::info(
+            "serve",
+            "compile_failed",
+            &[],
+            format_args!("compile failed: {e}"),
+        );
+        shutdown.store(true, Ordering::SeqCst);
+        return;
+    }
+    let dims = engine.dims();
+    let h = dims.hidden;
+    let relations = dims.relations;
+    let block_cfg = EvalBlockConfig::new(
+        dims.block_nodes,
+        dims.feat_dim,
+        AdjMode::for_encoder(&engine.variant().encoder),
+        relations,
+        boundary,
+    );
+    let mut cache = EmbCache::new(cfg.cache_cap, h);
+    let mut conns: HashMap<u64, ConnState> = HashMap::new();
+
+    // Reused per-batch buffers: steady state allocates nothing but
+    // the fresh-embedding rows themselves.
+    let mut items: Vec<Work> = Vec::new();
+    let mut fresh: HashMap<u32, Vec<f32>> = HashMap::new();
+    let mut invalid: HashSet<u32> = HashSet::new();
+    let mut emb_u: Vec<f32> = Vec::new();
+    let mut emb_v: Vec<f32> = Vec::new();
+    let mut rels: Vec<i32> = Vec::new();
+    let mut nan_rows: Vec<usize> = Vec::new();
+    let mut cands: Vec<u32> = Vec::new();
+    let mut pending: Vec<Pending> = Vec::new();
+    let mut scores: Vec<f32> = Vec::new();
+    let mut scratch = ScoreScratch::default();
+    let mut wscratch: Vec<u8> = Vec::new();
+    let mut tk: Vec<(u32, f32)> = Vec::new();
+
+    'outer: loop {
+        let first = match work_rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(w) => w,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        match first {
+            Work::Open { conn, writer, spent_tx } => {
+                conns.insert(conn, ConnState { writer, spent_tx });
+                continue;
+            }
+            Work::Close { conn } => {
+                conns.remove(&conn);
+                continue;
+            }
+            w => items.push(w),
+        }
+        // Accumulate the window (control frames handled inline).
+        let deadline = Instant::now() + cfg.window;
+        while items.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match work_rx.recv_timeout(deadline - now) {
+                Ok(Work::Open { conn, writer, spent_tx }) => {
+                    conns.insert(conn, ConnState { writer, spent_tx });
+                }
+                Ok(Work::Close { conn }) => {
+                    conns.remove(&conn);
+                }
+                Ok(w) => items.push(w),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    process_batch(
+                        &*engine, graph, boundary, relations, &block_cfg,
+                        slot, &mut cache, &mut conns, cfg, &mut items,
+                        &mut fresh, &mut invalid, &mut emb_u, &mut emb_v,
+                        &mut rels, &mut nan_rows, &mut cands,
+                        &mut pending, &mut scores, &mut scratch,
+                        &mut wscratch, &mut tk,
+                    );
+                    break 'outer;
+                }
+            }
+        }
+        process_batch(
+            &*engine, graph, boundary, relations, &block_cfg, slot,
+            &mut cache, &mut conns, cfg, &mut items, &mut fresh,
+            &mut invalid, &mut emb_u, &mut emb_v, &mut rels,
+            &mut nan_rows, &mut cands, &mut pending, &mut scores,
+            &mut scratch, &mut wscratch, &mut tk,
+        );
+    }
+    telemetry::trace_counters("serve");
+    telemetry::flush();
+}
+
+/// Relation id for a `rel = -1` query: derived from the bipartite
+/// boundary exactly as the eval sampler derives edge relations
+/// (`sampler::directional_rel` base classes), clamped into the
+/// decoder's relation range.
+fn derive_rel(u: u32, v: u32, boundary: u32, relations: usize) -> i32 {
+    if boundary == 0 {
+        return 0;
+    }
+    let base = u8::from(u >= boundary && v >= boundary);
+    let r = crate::sampler::directional_rel(u, v, base, boundary);
+    (r as usize).min(relations.saturating_sub(1)) as i32
+}
+
+/// Score one collected batch and write every reply. See module docs:
+/// weights load once (swap boundary), canonical per-node embeddings
+/// (cache + fresh table), one batched score, per-request replies.
+#[allow(clippy::too_many_arguments)]
+fn process_batch(
+    engine: &dyn crate::runtime::ComputeBackend,
+    graph: &Graph,
+    boundary: u32,
+    relations: usize,
+    block_cfg: &EvalBlockConfig,
+    slot: &WeightSlot,
+    cache: &mut EmbCache,
+    conns: &mut HashMap<u64, ConnState>,
+    cfg: &ServeConfig,
+    items: &mut Vec<Work>,
+    fresh: &mut HashMap<u32, Vec<f32>>,
+    invalid: &mut HashSet<u32>,
+    emb_u: &mut Vec<f32>,
+    emb_v: &mut Vec<f32>,
+    rels: &mut Vec<i32>,
+    nan_rows: &mut Vec<usize>,
+    cands: &mut Vec<u32>,
+    pending: &mut Vec<Pending>,
+    scores: &mut Vec<f32>,
+    scratch: &mut ScoreScratch,
+    wscratch: &mut Vec<u8>,
+    tk: &mut Vec<(u32, f32)>,
+) {
+    if items.is_empty() {
+        return;
+    }
+    let span = Span::start("serve", "batch").hist(&metrics().serve_batch_us);
+    let m = metrics();
+    let h = engine.dims().hidden;
+    let n_nodes = graph.num_nodes() as u32;
+
+    // The swap boundary: this batch runs entirely on one generation.
+    let (generation, weights) = slot.load();
+    if generation != cache.generation() {
+        cache.invalidate(generation);
+    }
+
+    // Pass 1 — make every needed embedding available (cache hit or
+    // computed fresh from the node's canonical single-target block).
+    fresh.clear();
+    invalid.clear();
+    let mut need = |node: u32,
+                    fresh: &mut HashMap<u32, Vec<f32>>,
+                    invalid: &mut HashSet<u32>,
+                    cache: &mut EmbCache| {
+        if fresh.contains_key(&node) {
+            return;
+        }
+        if cache.contains(node) {
+            m.serve_cache_hits.inc();
+            return;
+        }
+        m.serve_cache_misses.inc();
+        if node >= n_nodes {
+            invalid.insert(node);
+            fresh.insert(node, vec![0.0; h]);
+            return;
+        }
+        let emb = build_block(graph, &[node], block_cfg);
+        match engine.encode(&weights, &emb) {
+            Ok(e) => {
+                fresh.insert(node, e[..h].to_vec());
+            }
+            Err(err) => {
+                telemetry::info(
+                    "serve",
+                    "encode_failed",
+                    &[("node", node as f64)],
+                    format_args!("node {node}: {err:#}"),
+                );
+                invalid.insert(node);
+                fresh.insert(node, vec![0.0; h]);
+            }
+        }
+    };
+    for item in items.iter() {
+        match item {
+            Work::Score { pairs, .. } => {
+                for &(u, v, _) in pairs {
+                    need(u, fresh, invalid, cache);
+                    need(v, fresh, invalid, cache);
+                }
+            }
+            Work::TopK { node, .. } => {
+                need(*node, fresh, invalid, cache);
+                if *node < n_nodes {
+                    for &nb in graph
+                        .neighbors_of(*node as usize)
+                        .iter()
+                        .take(cfg.topk_scan)
+                    {
+                        need(nb, fresh, invalid, cache);
+                    }
+                }
+            }
+            Work::Open { .. } | Work::Close { .. } => {}
+        }
+    }
+
+    // Pass 2 — assemble one flat (emb_u, emb_v, rel) schedule across
+    // the whole batch.
+    emb_u.clear();
+    emb_v.clear();
+    rels.clear();
+    nan_rows.clear();
+    cands.clear();
+    pending.clear();
+    let mut push_row = |u: u32,
+                        v: u32,
+                        r: i32,
+                        emb_u: &mut Vec<f32>,
+                        emb_v: &mut Vec<f32>,
+                        rels: &mut Vec<i32>,
+                        nan_rows: &mut Vec<usize>,
+                        cache: &mut EmbCache,
+                        fresh: &HashMap<u32, Vec<f32>>,
+                        invalid: &HashSet<u32>| {
+        let row = rels.len();
+        for (node, dst) in [(u, &mut *emb_u), (v, &mut *emb_v)] {
+            if let Some(e) = fresh.get(&node) {
+                dst.extend_from_slice(e);
+            } else {
+                dst.extend_from_slice(
+                    cache.get(node).expect("pass 1 populated every node"),
+                );
+            }
+        }
+        let rr = if r < 0 {
+            derive_rel(u, v, boundary, relations)
+        } else if (r as usize) < relations {
+            r
+        } else {
+            nan_rows.push(row);
+            0
+        };
+        rels.push(rr);
+        if invalid.contains(&u) || invalid.contains(&v) {
+            nan_rows.push(row);
+        }
+    };
+    for item in items.drain(..) {
+        match item {
+            Work::Score { conn, id, pairs, t0 } => {
+                let start = rels.len();
+                for &(u, v, r) in &pairs {
+                    push_row(
+                        u, v, r, emb_u, emb_v, rels, nan_rows, cache,
+                        fresh, invalid,
+                    );
+                }
+                pending.push(Pending::Score {
+                    conn,
+                    id,
+                    t0,
+                    start,
+                    len: rels.len() - start,
+                    pairs,
+                });
+            }
+            Work::TopK { conn, id, node, k, t0 } => {
+                let start = rels.len();
+                let cstart = cands.len();
+                if node < n_nodes {
+                    // Borrow dance: collect the capped neighbour list
+                    // first (cands doubles as the reply's node column).
+                    let clen = cands.len();
+                    cands.extend(
+                        graph
+                            .neighbors_of(node as usize)
+                            .iter()
+                            .take(cfg.topk_scan),
+                    );
+                    for ci in clen..cands.len() {
+                        let nb = cands[ci];
+                        push_row(
+                            node, nb, -1, emb_u, emb_v, rels, nan_rows,
+                            cache, fresh, invalid,
+                        );
+                    }
+                }
+                pending.push(Pending::TopK {
+                    conn,
+                    id,
+                    t0,
+                    k,
+                    start,
+                    len: rels.len() - start,
+                    cstart,
+                });
+            }
+            Work::Open { .. } | Work::Close { .. } => unreachable!(),
+        }
+    }
+
+    // Pass 3 — one batched score matmul for everything.
+    scores.clear();
+    if !rels.is_empty() {
+        if let Err(e) = score_batched(
+            engine, &weights, emb_u, emb_v, rels, scratch, scores,
+        ) {
+            telemetry::info(
+                "serve",
+                "score_failed",
+                &[("rows", rels.len() as f64)],
+                format_args!("batch score failed: {e:#}"),
+            );
+            scores.clear();
+            scores.resize(rels.len(), f32::NAN);
+        }
+        for &row in nan_rows.iter() {
+            scores[row] = f32::NAN;
+        }
+    }
+
+    // Pass 4 — per-request replies, in arrival order.
+    for p in pending.drain(..) {
+        let (conn, id, t0, reply_pairs) = match p {
+            Pending::Score { conn, id, t0, start, len, pairs } => {
+                if let Some(c) = conns.get_mut(&conn) {
+                    let msg = WireMsg::ReplyScore {
+                        id,
+                        scores: &scores[start..start + len],
+                    };
+                    if comm::send_wire(&mut c.writer, &msg, wscratch)
+                        .is_err()
+                    {
+                        conns.remove(&conn);
+                    }
+                }
+                m.serve_pairs.add(len as u64);
+                (conn, id, t0, Some(pairs))
+            }
+            Pending::TopK { conn, id, t0, k, start, len, cstart } => {
+                tk.clear();
+                for i in 0..len {
+                    tk.push((cands[cstart + i], scores[start + i]));
+                }
+                tk.sort_unstable_by(|a, b| {
+                    match (a.1.is_nan(), b.1.is_nan()) {
+                        (true, true) => a.0.cmp(&b.0),
+                        (true, false) => std::cmp::Ordering::Greater,
+                        (false, true) => std::cmp::Ordering::Less,
+                        // Descending score, node id as deterministic
+                        // tie-break.
+                        _ => b.1
+                            .partial_cmp(&a.1)
+                            .unwrap()
+                            .then(a.0.cmp(&b.0)),
+                    }
+                });
+                tk.truncate(k as usize);
+                if let Some(c) = conns.get_mut(&conn) {
+                    let msg = WireMsg::ReplyTopK { id, items: tk };
+                    if comm::send_wire(&mut c.writer, &msg, wscratch)
+                        .is_err()
+                    {
+                        conns.remove(&conn);
+                    }
+                }
+                m.serve_pairs.add(len as u64);
+                (conn, id, t0, None)
+            }
+        };
+        let _ = id;
+        m.serve_requests.inc();
+        m.serve_request_us.observe(t0.elapsed().as_micros() as u64);
+        // Recycle the request's pair buffer back to its reader.
+        if let (Some(pairs), Some(c)) = (reply_pairs, conns.get(&conn)) {
+            let _ = c.spent_tx.send(pairs);
+        }
+    }
+
+    // Pass 5 — promote this batch's fresh embeddings into the cache
+    // (after assembly, so an eviction can't starve the current batch;
+    // invalid nodes stay out).
+    for (node, emb) in fresh.drain() {
+        if !invalid.contains(&node) {
+            cache.insert(node, &emb);
+        }
+    }
+    m.serve_batches.inc();
+    drop(span);
+}
+
+/// Synchronous serving client: one connection, request/reply in
+/// lockstep with reused scratch buffers. Used by the load generator,
+/// the tests and anything embedding a query path.
+pub struct ServeClient {
+    stream: TcpStream,
+    scratch: Vec<u8>,
+    rbuf: Vec<u8>,
+    next_id: u64,
+}
+
+impl ServeClient {
+    pub fn connect(addr: &str, client_id: u32) -> Result<ServeClient> {
+        let mut stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        comm::serve_client_handshake(&mut stream, client_id)?;
+        Ok(ServeClient {
+            stream,
+            scratch: Vec::new(),
+            rbuf: Vec::new(),
+            next_id: 1,
+        })
+    }
+
+    /// Score `(u, v, rel)` candidates (`rel = -1` derives from the
+    /// graph boundary); one score per pair, in order.
+    pub fn score(&mut self, pairs: &[(u32, u32, i32)]) -> Result<Vec<f32>> {
+        let id = self.next_id;
+        self.next_id += 1;
+        comm::send_wire(
+            &mut self.stream,
+            &WireMsg::QueryScore { id, pairs },
+            &mut self.scratch,
+        )?;
+        match comm::recv_into(&mut self.stream, &mut self.rbuf)? {
+            Message::ReplyScore { id: rid, scores } if rid == id => {
+                ensure!(
+                    scores.len() == pairs.len(),
+                    "server returned {} scores for {} pairs",
+                    scores.len(),
+                    pairs.len()
+                );
+                Ok(scores)
+            }
+            other => bail!("expected ReplyScore #{id}, got {other:?}"),
+        }
+    }
+
+    /// The `k` highest-scoring CSR neighbours of `node`.
+    pub fn topk(&mut self, node: u32, k: u32) -> Result<Vec<(u32, f32)>> {
+        let id = self.next_id;
+        self.next_id += 1;
+        comm::send_wire(
+            &mut self.stream,
+            &WireMsg::QueryTopK { id, node, k },
+            &mut self.scratch,
+        )?;
+        match comm::recv_into(&mut self.stream, &mut self.rbuf)? {
+            Message::ReplyTopK { id: rid, items } if rid == id => Ok(items),
+            other => bail!("expected ReplyTopK #{id}, got {other:?}"),
+        }
+    }
+
+    /// Ask the server to shut down (all connections).
+    pub fn stop(mut self) -> Result<()> {
+        comm::send_wire(
+            &mut self.stream,
+            &WireMsg::Stop,
+            &mut self.scratch,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_file_roundtrip_and_rejects_corruption() {
+        let dir = std::env::temp_dir()
+            .join(format!("rtma-wts-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.bin");
+        let params: Vec<f32> =
+            (0..1000).map(|i| (i as f32) * 0.25 - 3.0).collect();
+        save_weights(&path, &params).unwrap();
+        let back = load_weights(&path).unwrap();
+        assert_eq!(back.len(), params.len());
+        assert!(back
+            .iter()
+            .zip(&params)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        // Truncation and bad magic are both refused.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(load_weights(&path).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        std::fs::write(&path, &bad).unwrap();
+        assert!(load_weights(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cache_lru_hit_and_evict() {
+        let mut c = EmbCache::new(2, 3);
+        assert!(c.is_empty());
+        c.insert(1, &[1.0; 3]);
+        c.insert(2, &[2.0; 3]);
+        assert_eq!(c.len(), 2);
+        assert!(c.contains(1) && c.contains(2));
+        // Touch 1 → 2 becomes the LRU tail; inserting 3 evicts 2.
+        assert_eq!(c.get(1).unwrap(), &[1.0; 3]);
+        c.insert(3, &[3.0; 3]);
+        assert_eq!(c.len(), 2);
+        assert!(c.contains(1) && c.contains(3));
+        assert!(!c.contains(2), "LRU entry must be the one evicted");
+        // Re-inserting refreshes in place (no growth, new row data).
+        c.insert(1, &[9.0; 3]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(1).unwrap(), &[9.0; 3]);
+        // Now 3 is the tail; 4 evicts it.
+        c.insert(4, &[4.0; 3]);
+        assert!(!c.contains(3));
+        assert!(c.contains(1) && c.contains(4));
+    }
+
+    #[test]
+    fn cache_get_bumps_recency() {
+        let mut c = EmbCache::new(3, 1);
+        c.insert(10, &[0.1]);
+        c.insert(20, &[0.2]);
+        c.insert(30, &[0.3]);
+        // Access order now 30, 20, 10; touching 10 makes 20 the LRU.
+        assert!(c.get(10).is_some());
+        c.insert(40, &[0.4]);
+        assert!(!c.contains(20), "20 was LRU after 10 was bumped");
+        assert!(c.contains(10) && c.contains(30) && c.contains(40));
+    }
+
+    #[test]
+    fn cache_invalidate_on_generation_swap() {
+        let mut c = EmbCache::new(4, 2);
+        assert_eq!(c.generation(), 0);
+        c.insert(1, &[1.0, 1.0]);
+        c.insert(2, &[2.0, 2.0]);
+        c.invalidate(7);
+        assert_eq!(c.generation(), 7);
+        assert!(c.is_empty(), "weight swap must drop every embedding");
+        assert!(c.get(1).is_none());
+        // Reusable after invalidation.
+        c.insert(1, &[3.0, 3.0]);
+        assert_eq!(c.get(1).unwrap(), &[3.0, 3.0]);
+    }
+
+    #[test]
+    fn cache_capacity_one_degenerate() {
+        let mut c = EmbCache::new(1, 2);
+        c.insert(5, &[5.0, 5.0]);
+        c.insert(6, &[6.0, 6.0]);
+        assert_eq!(c.len(), 1);
+        assert!(!c.contains(5));
+        assert_eq!(c.get(6).unwrap(), &[6.0, 6.0]);
+    }
+
+    #[test]
+    fn weight_slot_swap_bumps_generation_and_keeps_old_arcs() {
+        let w1: GlobalWeights = Arc::from(vec![1.0f32; 4]);
+        let slot = WeightSlot::new(w1.clone());
+        let (g1, loaded) = slot.load();
+        assert_eq!(g1, 1);
+        assert!(std::ptr::eq(loaded.as_ptr(), w1.as_ptr()));
+        let swaps_before =
+            telemetry::snapshot().counter("serve_weight_swaps");
+        let w2: GlobalWeights = Arc::from(vec![2.0f32; 4]);
+        let g2 = slot.swap(w2.clone());
+        assert_eq!(g2, 2);
+        // The batch that loaded before the swap still holds w1 alive.
+        assert_eq!(loaded[0], 1.0);
+        let (g, now) = slot.load();
+        assert_eq!(g, 2);
+        assert!(std::ptr::eq(now.as_ptr(), w2.as_ptr()));
+        let swaps_after =
+            telemetry::snapshot().counter("serve_weight_swaps");
+        assert_eq!(swaps_after, swaps_before + 1);
+    }
+
+    #[test]
+    fn derive_rel_respects_boundary() {
+        // Homogeneous graph: everything relation 0.
+        assert_eq!(derive_rel(1, 2, 0, 4), 0);
+        // Bipartite: query→item 0, item→query 1, item-item 2/3.
+        assert_eq!(derive_rel(3, 12, 10, 4), 0);
+        assert_eq!(derive_rel(12, 3, 10, 4), 1);
+        assert_eq!(derive_rel(11, 14, 10, 4), 2);
+        assert_eq!(derive_rel(14, 11, 10, 4), 3);
+        // Single-relation decoder clamps to 0.
+        assert_eq!(derive_rel(14, 11, 10, 1), 0);
+    }
+
+    #[test]
+    fn serve_config_env_overrides() {
+        // from_env with no vars set = defaults.
+        let d = ServeConfig::default();
+        assert_eq!(d.window, Duration::from_micros(2000));
+        assert!(d.max_batch >= 1 && d.cache_cap >= 1);
+    }
+}

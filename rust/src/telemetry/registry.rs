@@ -223,6 +223,20 @@ pub struct Metrics {
     pub pool_sections: Counter,
     pub pool_tasks: Counter,
     pub pool_workers: Counter,
+    // ---- serving plane (docs/SERVING.md) ----
+    pub serve_requests: Counter,
+    pub serve_pairs: Counter,
+    pub serve_batches: Counter,
+    pub serve_cache_hits: Counter,
+    pub serve_cache_misses: Counter,
+    /// Weight generations swapped into the running server (one per
+    /// aggregation-round push in train-and-serve mode).
+    pub serve_weight_swaps: Counter,
+    pub serve_connections: Gauge,
+    /// Whole-batch latency (gather + score + reply writes), µs.
+    pub serve_batch_us: Histogram,
+    /// Per-request latency from reader decode to reply write, µs.
+    pub serve_request_us: Histogram,
 }
 
 impl Metrics {
@@ -266,6 +280,15 @@ impl Metrics {
             pool_sections: Counter::new(),
             pool_tasks: Counter::new(),
             pool_workers: Counter::new(),
+            serve_requests: Counter::new(),
+            serve_pairs: Counter::new(),
+            serve_batches: Counter::new(),
+            serve_cache_hits: Counter::new(),
+            serve_cache_misses: Counter::new(),
+            serve_weight_swaps: Counter::new(),
+            serve_connections: Gauge::new(),
+            serve_batch_us: Histogram::new(),
+            serve_request_us: Histogram::new(),
         }
     }
 
@@ -297,6 +320,12 @@ impl Metrics {
             ("pool_sections", self.pool_sections.get()),
             ("pool_tasks", self.pool_tasks.get()),
             ("pool_workers", self.pool_workers.get()),
+            ("serve_requests", self.serve_requests.get()),
+            ("serve_pairs", self.serve_pairs.get()),
+            ("serve_batches", self.serve_batches.get()),
+            ("serve_cache_hits", self.serve_cache_hits.get()),
+            ("serve_cache_misses", self.serve_cache_misses.get()),
+            ("serve_weight_swaps", self.serve_weight_swaps.get()),
         ]
     }
 
@@ -305,6 +334,7 @@ impl Metrics {
         vec![
             ("eval_inflight", self.eval_inflight.get()),
             ("last_loss_bits", self.last_loss_bits.get()),
+            ("serve_connections", self.serve_connections.get()),
         ]
     }
 
@@ -324,6 +354,8 @@ impl Metrics {
             ("engine_score", self.engine_score_us.snap()),
             ("codec_encode", self.codec_encode_us.snap()),
             ("codec_decode", self.codec_decode_us.snap()),
+            ("serve_batch", self.serve_batch_us.snap()),
+            ("serve_request", self.serve_request_us.snap()),
         ]
     }
 }

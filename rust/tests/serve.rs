@@ -1,0 +1,335 @@
+//! Integration suite for the online inference server (`serve`,
+//! docs/SERVING.md): wire-format goldens over a real socket, the
+//! batch-vs-single bit-identity guarantee, live weight swaps, frame-cap
+//! hostility and the LRU embedding cache. Everything runs on the
+//! native backend over a tiny `Manifest::builtin_sized` layout — no
+//! artifacts, no network beyond loopback.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use random_tma::comm;
+use random_tma::coordinator::kv::GlobalWeights;
+use random_tma::graph::{Graph, GraphBuilder};
+use random_tma::model::ModelState;
+use random_tma::runtime::{Manifest, ModelDims, NativeEngine};
+use random_tma::serve::{
+    load_weights, save_weights, serve, EmbCache, ServeClient, ServeConfig,
+    ServeHandle,
+};
+use random_tma::util::rng::Rng;
+
+fn tiny_manifest() -> Manifest {
+    Manifest::builtin_sized(
+        ModelDims {
+            feat_dim: 3,
+            hidden: 4,
+            block_nodes: 6,
+            block_edges: 5,
+            score_batch: 8,
+            relations: 2,
+        },
+        2,
+        2,
+        2,
+    )
+}
+
+/// Ring graph with deterministic features — enough structure that
+/// different nodes get different embeddings.
+fn tiny_graph(n: usize, f: usize) -> Graph {
+    let mut b = GraphBuilder::new(n);
+    for i in 0..n as u32 {
+        b.add_edge(i, (i + 1) % n as u32);
+    }
+    let mut g = b.build();
+    g.feat_dim = f;
+    g.features = (0..n * f)
+        .map(|i| ((i as f32) * 0.37).sin())
+        .collect::<Vec<f32>>()
+        .into();
+    g
+}
+
+/// Deterministic parameter vector for the tiny gcn_mlp variant.
+fn params_for(manifest: &Manifest, seed: u64) -> GlobalWeights {
+    let engine = NativeEngine::new(manifest, "gcn_mlp").unwrap();
+    let mut rng = Rng::new(seed);
+    let state = ModelState::init(&engine.variant, &mut rng);
+    Arc::from(state.params)
+}
+
+fn start_server(weights: GlobalWeights) -> ServeHandle {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        window: Duration::from_micros(500),
+        max_batch: 64,
+        cache_cap: 64,
+        topk_scan: 16,
+    };
+    serve(
+        &cfg,
+        Arc::new(tiny_graph(12, 3)),
+        0,
+        tiny_manifest(),
+        "gcn_mlp".into(),
+        "pallas".into(),
+        weights,
+    )
+    .expect("server failed to start")
+}
+
+/// Batched scoring must be *bit-identical* to single-request scoring:
+/// the batcher amortises the matmul, not the math. One 5-pair request
+/// vs five 1-pair requests (which also crosses the warm-cache path —
+/// canonical per-node embeddings make that a no-op by construction).
+#[test]
+fn batched_scores_bit_identical_to_single() {
+    let m = tiny_manifest();
+    let handle = start_server(params_for(&m, 7));
+    let addr = handle.addr().to_string();
+    let mut c = ServeClient::connect(&addr, 1).unwrap();
+
+    let pairs: Vec<(u32, u32, i32)> =
+        vec![(0, 1, -1), (1, 2, 0), (3, 7, 1), (5, 5, -1), (11, 0, 0)];
+    let batched = c.score(&pairs).unwrap();
+    assert_eq!(batched.len(), pairs.len());
+    for (i, s) in batched.iter().enumerate() {
+        assert!(s.is_finite(), "pair {i} scored {s}");
+    }
+    for (i, &p) in pairs.iter().enumerate() {
+        let single = c.score(&[p]).unwrap();
+        assert_eq!(
+            single[0].to_bits(),
+            batched[i].to_bits(),
+            "pair {i}: single {} != batched {}",
+            single[0],
+            batched[i]
+        );
+    }
+    // Concurrent clients folded into shared batches agree too.
+    let mut c2 = ServeClient::connect(&addr, 2).unwrap();
+    let again = c2.score(&pairs).unwrap();
+    for (a, b) in again.iter().zip(&batched) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    c.stop().unwrap();
+    handle.join();
+}
+
+/// Degraded inputs must degrade per-row, not poison the batch: an
+/// out-of-graph node or an out-of-range relation scores NaN while
+/// every valid row in the same request keeps its exact value.
+#[test]
+fn invalid_rows_nan_without_poisoning_the_batch() {
+    let m = tiny_manifest();
+    let handle = start_server(params_for(&m, 7));
+    let addr = handle.addr().to_string();
+    let mut c = ServeClient::connect(&addr, 1).unwrap();
+
+    let clean = c.score(&[(0, 1, 0)]).unwrap()[0];
+    let mixed = c
+        .score(&[(0, 1, 0), (0, 999_999, 0), (2, 3, 57), (0, 1, 0)])
+        .unwrap();
+    assert_eq!(mixed[0].to_bits(), clean.to_bits());
+    assert!(mixed[1].is_nan(), "unknown node must score NaN");
+    assert!(mixed[2].is_nan(), "relation 57 of 2 must score NaN");
+    assert_eq!(mixed[3].to_bits(), clean.to_bits());
+
+    // Top-k: bounded by both k and the node's true degree (ring: 2),
+    // sorted descending, all finite.
+    let items = c.topk(4, 10).unwrap();
+    assert!(!items.is_empty() && items.len() <= 2, "{items:?}");
+    for w in items.windows(2) {
+        assert!(w[0].1 >= w[1].1, "unsorted: {items:?}");
+    }
+    for &(nb, s) in &items {
+        assert!(s.is_finite(), "neighbour {nb} scored {s}");
+        assert!(nb == 3 || nb == 5, "{nb} is not a ring neighbour of 4");
+    }
+    c.stop().unwrap();
+    handle.join();
+}
+
+/// Live weight swap: replies before the push use the old weights,
+/// replies after use the new — and the post-swap scores are
+/// bit-identical to a server *started* with the new weights (the swap
+/// also invalidated the embedding cache; stale embeddings would break
+/// this equality). No request is dropped across the boundary.
+#[test]
+fn weight_swap_is_atomic_per_batch_and_flushes_cache() {
+    let m = tiny_manifest();
+    let w_old = params_for(&m, 7);
+    let w_new = params_for(&m, 8);
+    let handle = start_server(w_old);
+    let addr = handle.addr().to_string();
+    let mut c = ServeClient::connect(&addr, 1).unwrap();
+
+    let pairs: Vec<(u32, u32, i32)> = vec![(0, 1, -1), (2, 9, 0), (4, 4, 1)];
+    let before = c.score(&pairs).unwrap();
+
+    handle.push_weights(w_new.clone());
+    let after = c.score(&pairs).unwrap();
+    assert!(
+        before
+            .iter()
+            .zip(&after)
+            .any(|(a, b)| a.to_bits() != b.to_bits()),
+        "swap had no effect: {before:?}"
+    );
+
+    let fresh_handle = start_server(w_new);
+    let fresh_addr = fresh_handle.addr().to_string();
+    let mut fc = ServeClient::connect(&fresh_addr, 9).unwrap();
+    let fresh = fc.score(&pairs).unwrap();
+    for (i, (a, b)) in after.iter().zip(&fresh).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "pair {i}: swapped server {a} != fresh server {b}"
+        );
+    }
+    fc.stop().unwrap();
+    fresh_handle.join();
+    c.stop().unwrap();
+    handle.join();
+}
+
+/// Wire-format golden, independent of `WireMsg`: hand-assembled
+/// QueryScore bytes in, hand-parsed ReplyScore bytes out. Locks the
+/// layout clients in other languages would implement against
+/// (docs/SERVING.md): LE length prefix, tag 10/12, u64 id, u64 count,
+/// 12-byte (u32,u32,i32) pairs / 4-byte f32 scores.
+#[test]
+fn raw_wire_golden_roundtrip() {
+    let m = tiny_manifest();
+    let handle = start_server(params_for(&m, 7));
+    let mut s = TcpStream::connect(handle.addr()).unwrap();
+    comm::serve_client_handshake(&mut s, 77).unwrap();
+
+    // QueryScore { id: 0xABCD, pairs: [(0,1,0), (2,3,1)] }
+    let mut frame = vec![10u8]; // TAG_QUERY_SCORE
+    frame.extend_from_slice(&0xABCDu64.to_le_bytes());
+    frame.extend_from_slice(&2u64.to_le_bytes());
+    for (u, v, r) in [(0u32, 1u32, 0u32), (2, 3, 1)] {
+        frame.extend_from_slice(&u.to_le_bytes());
+        frame.extend_from_slice(&v.to_le_bytes());
+        frame.extend_from_slice(&r.to_le_bytes());
+    }
+    assert_eq!(frame.len(), 1 + 8 + 8 + 2 * 12); // golden query length
+    s.write_all(&(frame.len() as u32).to_le_bytes()).unwrap();
+    s.write_all(&frame).unwrap();
+
+    // ReplyScore: 4-byte prefix, then tag 12 + id + count + 2 f32.
+    let mut prefix = [0u8; 4];
+    s.read_exact(&mut prefix).unwrap();
+    let len = u32::from_le_bytes(prefix) as usize;
+    assert_eq!(len, 1 + 8 + 8 + 2 * 4); // golden reply length
+    let mut body = vec![0u8; len];
+    s.read_exact(&mut body).unwrap();
+    assert_eq!(body[0], 12); // TAG_REPLY_SCORE
+    assert_eq!(u64::from_le_bytes(body[1..9].try_into().unwrap()), 0xABCD);
+    assert_eq!(u64::from_le_bytes(body[9..17].try_into().unwrap()), 2);
+    for i in 0..2 {
+        let off = 17 + 4 * i;
+        let score = f32::from_le_bytes(
+            body[off..off + 4].try_into().unwrap(),
+        );
+        assert!(score.is_finite(), "score {i} = {score}");
+    }
+
+    // Stop via the raw socket too: tag 5 (TAG_STOP), empty payload.
+    s.write_all(&1u32.to_le_bytes()).unwrap();
+    s.write_all(&[5u8]).unwrap();
+    handle.join();
+}
+
+/// Frame-cap hostility (the PR-8 cap idiom, now on the serving plane):
+/// a length prefix beyond MAX_FRAME drops that connection before any
+/// body byte is read — and the server keeps serving everyone else.
+#[test]
+fn oversized_frame_drops_connection_not_server() {
+    let m = tiny_manifest();
+    let handle = start_server(params_for(&m, 7));
+    let addr = handle.addr().to_string();
+
+    let mut evil = TcpStream::connect(&addr).unwrap();
+    comm::serve_client_handshake(&mut evil, 66).unwrap();
+    let huge = (comm::MAX_FRAME as u32) + 1;
+    evil.write_all(&huge.to_le_bytes()).unwrap();
+    evil.write_all(&[10u8; 64]).unwrap(); // a little "body" that must never be read as a frame
+    // The reader bails on the cap check and closes; we observe EOF.
+    evil.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut scratch = [0u8; 16];
+    match evil.read(&mut scratch) {
+        Ok(0) => {}                   // clean close
+        Ok(n) => panic!("server answered an oversized frame with {n} bytes"),
+        Err(_) => {}                  // reset — also fine
+    }
+
+    // A well-behaved client connected after the attack still works.
+    let mut c = ServeClient::connect(&addr, 1).unwrap();
+    let scores = c.score(&[(0, 1, 0)]).unwrap();
+    assert!(scores[0].is_finite());
+    c.stop().unwrap();
+    handle.join();
+}
+
+/// The LRU embedding cache, hammered through its public API: fill,
+/// hit-bump, evict, refresh, generation invalidation. (The in-module
+/// unit tests cover the basics; this is the churn test.)
+#[test]
+fn emb_cache_churn_keeps_lru_invariants() {
+    let h = 4;
+    let cap = 8;
+    let mut cache = EmbCache::new(cap, h);
+    let row = |node: u32| vec![node as f32; 4];
+    // Two full passes over 3*cap nodes: size never exceeds cap and
+    // the survivors are exactly the cap most-recently-inserted keys.
+    for pass in 0..2u32 {
+        for node in 0..(3 * cap as u32) {
+            cache.insert(node.wrapping_add(pass), &row(node));
+            assert!(cache.len() <= cap);
+        }
+    }
+    // Keep node A hot while inserting cap-1 fresh nodes: A survives.
+    let a = 1000u32;
+    cache.insert(a, &row(a));
+    for i in 0..(cap as u32 - 1) {
+        cache.insert(2000 + i, &row(i));
+        assert!(cache.get(a).is_some(), "hot entry evicted at {i}");
+    }
+    // One more insert without touching A first evicts the oldest
+    // *cold* entry, not A (A was bumped by the last get).
+    cache.insert(3000, &row(3));
+    assert!(cache.contains(a));
+    // Generation swap wipes everything.
+    cache.invalidate(42);
+    assert_eq!(cache.len(), 0);
+    assert_eq!(cache.generation(), 42);
+    assert!(!cache.contains(a));
+}
+
+/// Weights persistence round-trip through a real file plus the
+/// `rtma train --save-model` → `rtma serve --model` contract.
+#[test]
+fn weights_file_roundtrip_exact() {
+    let dir = std::env::temp_dir().join(format!(
+        "rtma-serve-test-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.bin");
+    let m = tiny_manifest();
+    let w = params_for(&m, 3);
+    save_weights(&path, &w).unwrap();
+    let back = load_weights(&path).unwrap();
+    assert_eq!(back.len(), w.len());
+    assert!(back
+        .iter()
+        .zip(w.iter())
+        .all(|(a, b)| a.to_bits() == b.to_bits()));
+    std::fs::remove_dir_all(&dir).ok();
+}
