@@ -39,7 +39,7 @@ use std::time::{Duration, Instant};
 use random_tma::benchkit::BenchBaseline;
 use random_tma::comm::codec;
 use random_tma::comm::{
-    recv_into, send, send_wire, server_handshake, Message, WireMsg,
+    recv_from, send, send_wire, server_handshake, Message, Peer, WireMsg,
 };
 use random_tma::coordinator::evaluate_mrr;
 use random_tma::gen::load_preset;
@@ -208,7 +208,7 @@ fn main() -> anyhow::Result<()> {
             }
             acc.reset();
             for s in &mut streams {
-                match recv_into(s, &mut rbuf)? {
+                match recv_from(s, &mut rbuf, Peer::Trainer)? {
                     Message::Weights { data, steps, loss, .. } => {
                         // A NaN loss is the protocol-only "no batch
                         // yet" sentinel (steps = 0). A worker that DID

@@ -38,6 +38,7 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
+use super::le_bytes;
 use crate::model::MeanAccum;
 use crate::telemetry::metrics;
 use crate::util::rng::Rng;
@@ -165,7 +166,7 @@ impl RoundEncoder {
         out: &mut Vec<u8>,
     ) -> u8 {
         debug_assert!(base.is_empty() || base.len() == w.len());
-        let t0 = Instant::now();
+        let t0 = crate::telemetry::now();
         out.clear();
         let id = match self.kind {
             CodecKind::Identity => {
@@ -204,7 +205,7 @@ impl RoundEncoder {
         out: &mut Vec<u8>,
     ) -> u8 {
         debug_assert!(base.is_empty() || base.len() == w.len());
-        let t0 = Instant::now();
+        let t0 = crate::telemetry::now();
         out.clear();
         let id = match self.kind {
             CodecKind::Identity => {
@@ -294,7 +295,7 @@ pub fn decode_dense(
         "codec base length {} != element count {n}",
         base.len()
     );
-    let t0 = Instant::now();
+    let t0 = crate::telemetry::now();
     let mut out = Vec::with_capacity(n);
     match codec {
         CODEC_IDENTITY => raw_decode(n, body, &mut out)?,
@@ -336,7 +337,7 @@ pub fn decode_fold(
         "codec base length {} != element count {n}",
         base.len()
     );
-    let t0 = Instant::now();
+    let t0 = crate::telemetry::now();
     match codec {
         CODEC_IDENTITY => {
             ensure_body_len(body, n * 4, "identity")?;
@@ -347,9 +348,7 @@ pub fn decode_fold(
                 let take = (n - off).min(scratch.len());
                 for (j, s) in scratch[..take].iter_mut().enumerate() {
                     let p = (off + j) * 4;
-                    *s = f32::from_le_bytes(
-                        body[p..p + 4].try_into().unwrap(),
-                    );
+                    *s = f32::from_le_bytes(le_bytes(&body[p..p + 4]));
                 }
                 acc.fold_at(off, &scratch[..take]);
                 off += take;
@@ -364,9 +363,9 @@ pub fn decode_fold(
                 let take = (n - off).min(scratch.len());
                 for (j, s) in scratch[..take].iter_mut().enumerate() {
                     let p = (off + j) * 2;
-                    *s = f16_decode(u16::from_le_bytes(
-                        body[p..p + 2].try_into().unwrap(),
-                    ));
+                    *s = f16_decode(u16::from_le_bytes(le_bytes(
+                        &body[p..p + 2],
+                    )));
                 }
                 acc.fold_at(off, &scratch[..take]);
                 off += take;
@@ -422,7 +421,7 @@ fn raw_encode(w: &[f32], out: &mut Vec<u8>) {
 fn raw_decode(n: usize, body: &[u8], out: &mut Vec<f32>) -> Result<()> {
     ensure_body_len(body, n * 4, "identity")?;
     for i in 0..n {
-        out.push(f32::from_le_bytes(body[i * 4..i * 4 + 4].try_into().unwrap()));
+        out.push(f32::from_le_bytes(le_bytes(&body[i * 4..i * 4 + 4])));
     }
     Ok(())
 }
@@ -587,9 +586,9 @@ fn f16_encode_all(w: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
 fn f16_decode_all(n: usize, body: &[u8], out: &mut Vec<f32>) -> Result<()> {
     ensure_body_len(body, n * 2, "f16")?;
     for i in 0..n {
-        out.push(f16_decode(u16::from_le_bytes(
-            body[i * 2..i * 2 + 2].try_into().unwrap(),
-        )));
+        out.push(f16_decode(u16::from_le_bytes(le_bytes(
+            &body[i * 2..i * 2 + 2],
+        ))));
     }
     Ok(())
 }
@@ -701,14 +700,16 @@ impl<'a> Bc<'a> {
         Ok(s)
     }
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(le_bytes(self.bytes(4)?)))
     }
     fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+        Ok(f32::from_le_bytes(le_bytes(self.bytes(4)?)))
     }
 }
 
 #[cfg(test)]
+// Tests assert through unwrap by design — a panic is the failure.
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

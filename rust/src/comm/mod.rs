@@ -30,7 +30,10 @@
 //! `Hello`/`Ready` handshake ([`serve_client_handshake`] /
 //! [`serve_server_handshake`]) because query bodies are tiny.
 
+#![deny(clippy::unwrap_used)]
+
 pub mod codec;
+pub mod tags;
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -38,6 +41,17 @@ use std::net::TcpStream;
 use anyhow::{bail, Result};
 
 use crate::telemetry::metrics;
+
+/// Infallible `&[u8] -> [u8; N]` for slices whose length the caller
+/// just checked or produced (`take(N)`, `chunks_exact(N)`) — the
+/// lint-clean spelling of `try_into().unwrap()` on the decode paths
+/// (`clippy::unwrap_used` is denied in `comm` and `serve`).
+#[inline]
+pub(crate) fn le_bytes<const N: usize>(b: &[u8]) -> [u8; N] {
+    let mut a = [0u8; N];
+    a.copy_from_slice(b);
+    a
+}
 
 /// Hard cap on one frame's encoded length (bytes, excluding the
 /// 4-byte prefix). Shared by [`send_wire`] (bail before writing) and
@@ -121,22 +135,14 @@ pub enum WireMsg<'a> {
     ReplyTopK { id: u64, items: &'a [(u32, f32)] },
 }
 
-const TAG_HELLO: u8 = 1;
-const TAG_READY: u8 = 2;
-const TAG_WEIGHTS: u8 = 3;
-const TAG_BROADCAST: u8 = 4;
-const TAG_STOP: u8 = 5;
-const TAG_COLLECT: u8 = 6;
-const TAG_CODEC: u8 = 7;
-const TAG_WEIGHTS_ENC: u8 = 8;
-const TAG_BROADCAST_ENC: u8 = 9;
-/// Serving-plane tags are `pub` (unlike the training tags) so the
-/// serve module's zero-alloc reader can dispatch on the raw frame
-/// byte before committing to an owned [`Message::decode`].
-pub const TAG_QUERY_SCORE: u8 = 10;
-pub const TAG_QUERY_TOPK: u8 = 11;
-pub const TAG_REPLY_SCORE: u8 = 12;
-pub const TAG_REPLY_TOPK: u8 = 13;
+// Wire tags live in one registry module ([`tags`]) so a new tag
+// cannot silently collide and docs/COMM.md stays machine-checked
+// against the constants (`rtma-check`'s wire-tags rule).
+use tags::{
+    TAG_BROADCAST, TAG_BROADCAST_ENC, TAG_CODEC, TAG_COLLECT, TAG_HELLO,
+    TAG_QUERY_SCORE, TAG_QUERY_TOPK, TAG_READY, TAG_REPLY_SCORE,
+    TAG_REPLY_TOPK, TAG_STOP, TAG_WEIGHTS, TAG_WEIGHTS_ENC,
+};
 
 impl WireMsg<'_> {
     /// Encode into `out`, clearing it first. Callers keep one scratch
@@ -289,6 +295,14 @@ impl Message {
     }
 
     pub fn decode(b: &[u8]) -> Result<Message> {
+        Message::decode_from(b, Peer::Unknown)
+    }
+
+    /// [`Message::decode`] with the sending peer's role threaded in:
+    /// a bad tag then reports *who* sent *how much*, so a
+    /// mis-negotiated codec or desynced stream is triaged from the
+    /// error line instead of a packet capture.
+    pub fn decode_from(b: &[u8], peer: Peer) -> Result<Message> {
         let mut cur = Cursor { b, i: 0 };
         let tag = cur.u8()?;
         Ok(match tag {
@@ -367,8 +381,41 @@ impl Message {
                 }
                 Message::ReplyTopK { id, items }
             }
-            other => bail!("bad message tag {other}"),
+            other => bail!(
+                "bad message tag {other} (frame len {} B, peer {})",
+                b.len(),
+                peer.as_str()
+            ),
         })
+    }
+}
+
+/// Which peer produced the frame being decoded — threaded into
+/// [`Message::decode_from`] / [`recv_from`] so wire errors name the
+/// sending side of the connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Peer {
+    /// The training-plane leader (TMA server).
+    Server,
+    /// A training-plane worker (`rtma worker`).
+    Trainer,
+    /// An inference server (`rtma serve`).
+    ServeServer,
+    /// A serving-plane query client.
+    ServeClient,
+    /// Role not threaded through this call path.
+    Unknown,
+}
+
+impl Peer {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Peer::Server => "server",
+            Peer::Trainer => "trainer",
+            Peer::ServeServer => "serve-server",
+            Peer::ServeClient => "serve-client",
+            Peer::Unknown => "unknown",
+        }
     }
 }
 
@@ -464,13 +511,13 @@ impl<'a> Cursor<'a> {
         self.b.len() - self.i
     }
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(le_bytes(self.take(4)?)))
     }
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(le_bytes(self.take(8)?)))
     }
     fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(f32::from_le_bytes(le_bytes(self.take(4)?)))
     }
     /// All remaining bytes (encoded codec bodies run to the end of
     /// the frame — the outer length prefix already bounds them).
@@ -488,7 +535,7 @@ impl<'a> Cursor<'a> {
         let raw = self.take(bytes)?;
         Ok(raw
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f32::from_le_bytes(le_bytes(c)))
             .collect())
     }
 }
@@ -603,8 +650,18 @@ pub fn recv_into<R: Read>(
     stream: &mut R,
     scratch: &mut Vec<u8>,
 ) -> Result<Message> {
+    recv_from(stream, scratch, Peer::Unknown)
+}
+
+/// [`recv_into`] with the sending peer's role threaded into decode
+/// errors (see [`Message::decode_from`]).
+pub fn recv_from<R: Read>(
+    stream: &mut R,
+    scratch: &mut Vec<u8>,
+    peer: Peer,
+) -> Result<Message> {
     recv_frame_into(stream, scratch)?;
-    match Message::decode(scratch) {
+    match Message::decode_from(scratch, peer) {
         Ok(m) => Ok(m),
         Err(e) => {
             metrics().comm_frames_rejected.inc();
@@ -647,8 +704,13 @@ pub fn recv_frame_into<R: Read>(
 /// Read one length-prefixed message (allocating convenience wrapper
 /// over [`recv_into`] for handshake and control paths).
 pub fn recv(stream: &mut TcpStream) -> Result<Message> {
+    recv_as(stream, Peer::Unknown)
+}
+
+/// [`recv`] with the sending peer's role threaded into decode errors.
+pub fn recv_as(stream: &mut TcpStream, peer: Peer) -> Result<Message> {
     let mut scratch = Vec::new();
-    recv_into(stream, &mut scratch)
+    recv_from(stream, &mut scratch, peer)
 }
 
 /// Worker side of the connection handshake: announce `id` and the
@@ -663,7 +725,7 @@ pub fn client_handshake(
     send(stream, &Message::Hello { id })?;
     send(stream, &Message::Codec { codec: codec.id() })?;
     send(stream, &Message::Ready { id })?;
-    match recv(stream)? {
+    match recv_as(stream, Peer::Server)? {
         Message::Codec { codec: leader } if leader == codec.id() => Ok(()),
         Message::Codec { codec: leader } => bail!(
             "codec mismatch: leader runs codec id {leader}, this worker \
@@ -683,11 +745,11 @@ pub fn server_handshake(
     stream: &mut TcpStream,
     codec: codec::CodecKind,
 ) -> Result<u32> {
-    let id = match recv(stream)? {
+    let id = match recv_as(stream, Peer::Trainer)? {
         Message::Hello { id } => id,
         other => bail!("expected Hello, got {other:?}"),
     };
-    match recv(stream)? {
+    match recv_as(stream, Peer::Trainer)? {
         Message::Codec { codec: worker } if worker == codec.id() => {}
         Message::Codec { codec: worker } => bail!(
             "codec mismatch: worker {id} runs codec id {worker}, leader \
@@ -700,7 +762,7 @@ pub fn server_handshake(
              peer predates codec negotiation"
         ),
     }
-    match recv(stream)? {
+    match recv_as(stream, Peer::Trainer)? {
         Message::Ready { .. } => {}
         other => bail!("expected Ready from worker {id}, got {other:?}"),
     }
@@ -713,7 +775,7 @@ pub fn server_handshake(
 /// always plain (docs/SERVING.md).
 pub fn serve_client_handshake(stream: &mut TcpStream, id: u32) -> Result<()> {
     send(stream, &Message::Hello { id })?;
-    match recv(stream)? {
+    match recv_as(stream, Peer::ServeServer)? {
         Message::Ready { .. } => Ok(()),
         other => bail!("expected serve Ready ack, got {other:?}"),
     }
@@ -723,7 +785,7 @@ pub fn serve_client_handshake(stream: &mut TcpStream, id: u32) -> Result<()> {
 /// return the client id. A training worker that opens with a `Codec`
 /// frame (or anything else) is refused loudly here.
 pub fn serve_server_handshake(stream: &mut TcpStream) -> Result<u32> {
-    let id = match recv(stream)? {
+    let id = match recv_as(stream, Peer::ServeClient)? {
         Message::Hello { id } => id,
         other => bail!("expected Hello from serve client, got {other:?}"),
     };
@@ -732,6 +794,8 @@ pub fn serve_server_handshake(stream: &mut TcpStream) -> Result<u32> {
 }
 
 #[cfg(test)]
+// Tests assert through unwrap by design — a panic is the failure.
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use std::net::TcpListener;
@@ -761,6 +825,23 @@ mod tests {
         assert!(Message::decode(&[]).is_err());
         assert!(Message::decode(&[99]).is_err());
         assert!(Message::decode(&[TAG_WEIGHTS, 1, 2]).is_err());
+    }
+
+    /// A bad tag names the tag, the frame length, and the sending
+    /// peer's role — triage without a packet capture. The generic
+    /// [`Message::decode`] path reports the role as "unknown".
+    #[test]
+    fn bad_tag_error_reports_frame_len_and_peer() {
+        let frame = [200u8, 1, 2, 3, 4];
+        let err = Message::decode_from(&frame, Peer::Trainer).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("bad message tag 200"), "{msg}");
+        assert!(msg.contains("frame len 5 B"), "{msg}");
+        assert!(msg.contains("peer trainer"), "{msg}");
+
+        let err = Message::decode(&frame).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("peer unknown"), "{msg}");
     }
 
     #[test]

@@ -1,0 +1,81 @@
+//! The wire-tag registry — the single place a frame tag may be born.
+//!
+//! Every message on the wire (training plane tags 1–9, serving plane
+//! tags 10–13, see docs/COMM.md) starts with one of these bytes.
+//! Declaring a tag anywhere else is a `rtma-check` violation: the
+//! `wire-tags` rule parses this file, cross-checks the constants and
+//! [`all`] against the tag table in docs/COMM.md, and denies stray
+//! `TAG_*` constants elsewhere in the tree — so a new tag cannot
+//! silently collide with an existing one or drift from the docs.
+//!
+//! The golden-byte tests (`tests/codec.rs`, `tests/serve.rs`) consume
+//! [`all`] too: they assert uniqueness/contiguity and that encoded
+//! frames lead with exactly these bytes, pinning the registry to the
+//! bytes real peers see.
+
+/// Training handshake: worker announces itself (`id: u32`).
+pub const TAG_HELLO: u8 = 1;
+/// Training handshake: worker is ready to take rounds (`id: u32`).
+pub const TAG_READY: u8 = 2;
+/// Dense upstream weights for a round (pre-codec path).
+pub const TAG_WEIGHTS: u8 = 3;
+/// Dense downstream broadcast of aggregated weights.
+pub const TAG_BROADCAST: u8 = 4;
+/// Stop: end of run (training) or end of connection (serving).
+pub const TAG_STOP: u8 = 5;
+/// Server opens collection round `round: u64`.
+pub const TAG_COLLECT: u8 = 6;
+/// Codec negotiation during the handshake (`codec: u8`).
+pub const TAG_CODEC: u8 = 7;
+/// Encoded upstream weights (codec id + opaque body).
+pub const TAG_WEIGHTS_ENC: u8 = 8;
+/// Encoded downstream broadcast (codec id + opaque body).
+pub const TAG_BROADCAST_ENC: u8 = 9;
+/// Serving plane: batch of `(u, v, rel)` link-score queries.
+pub const TAG_QUERY_SCORE: u8 = 10;
+/// Serving plane: top-k neighbours of one node.
+pub const TAG_QUERY_TOPK: u8 = 11;
+/// Serving plane: scores for a [`TAG_QUERY_SCORE`] batch.
+pub const TAG_REPLY_SCORE: u8 = 12;
+/// Serving plane: `(node, score)` items for a [`TAG_QUERY_TOPK`].
+pub const TAG_REPLY_TOPK: u8 = 13;
+
+/// Every wire tag with its canonical message name, in tag order —
+/// the machine-readable registry `rtma-check` and the golden-byte
+/// tests consume. The names match the `Message`/`WireMsg` variant
+/// names and the docs/COMM.md tag table verbatim.
+pub const fn all() -> &'static [(u8, &'static str)] {
+    &[
+        (TAG_HELLO, "Hello"),
+        (TAG_READY, "Ready"),
+        (TAG_WEIGHTS, "Weights"),
+        (TAG_BROADCAST, "Broadcast"),
+        (TAG_STOP, "Stop"),
+        (TAG_COLLECT, "Collect"),
+        (TAG_CODEC, "Codec"),
+        (TAG_WEIGHTS_ENC, "WeightsEnc"),
+        (TAG_BROADCAST_ENC, "BroadcastEnc"),
+        (TAG_QUERY_SCORE, "QueryScore"),
+        (TAG_QUERY_TOPK, "QueryTopK"),
+        (TAG_REPLY_SCORE, "ReplyScore"),
+        (TAG_REPLY_TOPK, "ReplyTopK"),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_unique_and_contiguous() {
+        let tags = all();
+        for (i, (tag, _)) in tags.iter().enumerate() {
+            assert_eq!(
+                *tag,
+                i as u8 + 1,
+                "tags must stay contiguous from 1 in declaration order"
+            );
+        }
+        assert_eq!(tags.len(), 13);
+    }
+}

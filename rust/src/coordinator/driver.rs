@@ -7,7 +7,6 @@
 
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -94,7 +93,7 @@ pub fn run_on_preset(cfg: &RunConfig, preset: &Preset) -> Result<RunResult> {
     // materialised, only cut-counted, so failure runs pay extraction
     // cost for survivors alone as before.
     let failed = cfg.failed_set();
-    let t_prep = Instant::now();
+    let t_prep = crate::telemetry::now();
     let (subgraphs, ratio_r) = match cfg.approach.scheme() {
         Some(scheme) => {
             let assignment = scheme.assign(train_graph, m, &mut rng);

@@ -14,7 +14,7 @@
 
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -104,7 +104,7 @@ pub fn ggs_trainer(spec: GgsTrainerSpec) -> TrainerReport {
         if control.stopped() {
             break;
         }
-        let t0 = Instant::now();
+        let t0 = crate::telemetry::now();
         let block = match sampler.next_block(&mut rng) {
             Some(b) => b,
             None => {
@@ -234,7 +234,7 @@ pub fn ggs_server(
     let mut val_curve = Vec::new();
     let mut best = BestTracker::new();
     let mut evals_sent = 0usize;
-    let mut t_eval = Instant::now();
+    let mut t_eval = crate::telemetry::now();
     let w0: GlobalWeights = w.as_slice().into();
     if eval_tx
         .send(EvalReq::Periodic { round: 0, t: 0.0, params: w0.clone() })
@@ -277,7 +277,7 @@ pub fn ggs_server(
                 .round(rounds + 1)
                 .hist(&metrics().phase_collect);
             acc.reset();
-            let deadline = Instant::now() + Duration::from_secs(60);
+            let deadline = crate::telemetry::now() + Duration::from_secs(60);
             while acc.count() < active {
                 match rx.recv_timeout(Duration::from_millis(200)) {
                     Ok(msg) => {
@@ -329,7 +329,7 @@ pub fn ggs_server(
                                      continuing with {active}"
                                 ),
                             );
-                        } else if Instant::now() >= deadline {
+                        } else if crate::telemetry::now() >= deadline {
                             anyhow::bail!("ggs: trainer unresponsive");
                         }
                     }
@@ -370,7 +370,7 @@ pub fn ggs_server(
                 evals_sent += 1;
                 metrics().evals_dispatched.inc();
             }
-            t_eval = Instant::now();
+            t_eval = crate::telemetry::now();
         }
     }
     // Final eval of the last weights.

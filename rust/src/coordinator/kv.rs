@@ -62,7 +62,7 @@ impl Control {
     /// return it. The server calls this once, after the ready barrier
     /// — ΔT_train and every timeline stamp measure from here.
     pub fn set_epoch(&self) -> Instant {
-        *self.epoch.get_or_init(Instant::now)
+        *self.epoch.get_or_init(crate::telemetry::now)
     }
 
     /// Seconds since the run epoch (0.0 before [`Self::set_epoch`]).

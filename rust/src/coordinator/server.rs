@@ -33,7 +33,7 @@
 
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -148,7 +148,7 @@ pub fn tma_server(
     // losses, eval points) measures from — see `Control::set_epoch`.
     let start = control.set_epoch();
 
-    let mut t_agg = Instant::now();
+    let mut t_agg = crate::telemetry::now();
     #[allow(unused_assignments)]
     let mut rounds = 0u64;
     let mut val_curve = Vec::new();
@@ -282,7 +282,7 @@ pub fn tma_server(
                 }
                 control.publish_weights(rounds, &w_global);
             }
-            t_agg = Instant::now();
+            t_agg = crate::telemetry::now();
             // Async validation eval of the new global weights. Skip if
             // the evaluator is >2 evals behind (bounds the post-run
             // drain on the shared core).
@@ -458,7 +458,7 @@ pub fn collect_round_with(
     base: Option<&[f32]>,
 ) -> RoundOutcome {
     const POLL: Duration = Duration::from_millis(200);
-    let t0 = Instant::now();
+    let t0 = crate::telemetry::now();
     let mut seen: Vec<usize> = Vec::new();
     let mut acc: Option<MeanAccum> = None;
     let mut staged: Vec<Vec<f32>> = Vec::new();
@@ -610,7 +610,7 @@ pub fn collect_round_staged(
     deadline: Duration,
     base: Option<&[f32]>,
 ) -> (Vec<Vec<f32>>, Vec<f32>) {
-    let t0 = Instant::now();
+    let t0 = crate::telemetry::now();
     let mut ids: Vec<usize> = Vec::with_capacity(expect);
     let mut weights = Vec::with_capacity(expect);
     let mut losses = Vec::with_capacity(expect);

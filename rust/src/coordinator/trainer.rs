@@ -14,7 +14,6 @@
 
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::comm::codec::{CodecKind, RoundEncoder};
 use crate::metrics::LossPoint;
@@ -171,7 +170,7 @@ pub fn tma_trainer(spec: TrainerSpec) -> TrainerReport {
         }
 
         // One local step.
-        let t0 = Instant::now();
+        let t0 = crate::telemetry::now();
         match sampler.next_block(&mut rng) {
             None => {
                 // Empty partition (e.g. after failures): stay alive to

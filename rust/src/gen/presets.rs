@@ -92,10 +92,15 @@ fn cached_graph(
                     // cannot help — mmap is unavailable in this
                     // environment (non-unix, filesystem without mmap).
                     // Heap-load the same cache, loudly.
-                    eprintln!(
-                        "RTMA_MMAP=1: cannot map {} ({e:#}); falling \
-                         back to the in-memory shared slab",
-                        path.display()
+                    crate::telemetry::info(
+                        "gen",
+                        "mmap_fallback",
+                        &[],
+                        format_args!(
+                            "RTMA_MMAP=1: cannot map {} ({e:#}); \
+                             falling back to the in-memory shared slab",
+                            path.display()
+                        ),
                     );
                     if let Ok(g) = crate::graph::io::load(&path) {
                         return Ok((g, boundary));
@@ -106,10 +111,15 @@ fn cached_graph(
                 // forever, the exact thing the opt-in avoids. Fall
                 // through to regenerate + re-save, which upgrades the
                 // cache to the mappable RTMAGRF2 layout.
-                Err(e) => eprintln!(
-                    "RTMA_MMAP=1: cannot map {}: {e:#}; regenerating \
-                     the cache in the mappable layout",
-                    path.display()
+                Err(e) => crate::telemetry::info(
+                    "gen",
+                    "mmap_regen",
+                    &[],
+                    format_args!(
+                        "RTMA_MMAP=1: cannot map {}: {e:#}; \
+                         regenerating the cache in the mappable layout",
+                        path.display()
+                    ),
                 ),
             }
         } else if let Ok(g) = crate::graph::io::load(&path) {
@@ -123,9 +133,14 @@ fn cached_graph(
         // actually maps the file it just wrote.
         match crate::graph::io::load_mapped(&path) {
             Ok(m) => return Ok((m, boundary)),
-            Err(e) => eprintln!(
-                "RTMA_MMAP=1: mmap failed after save ({e:#}); \
-                 continuing with the in-memory shared slab",
+            Err(e) => crate::telemetry::info(
+                "gen",
+                "mmap_fallback",
+                &[],
+                format_args!(
+                    "RTMA_MMAP=1: mmap failed after save ({e:#}); \
+                     continuing with the in-memory shared slab"
+                ),
             ),
         }
     }

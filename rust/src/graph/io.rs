@@ -50,6 +50,10 @@ macro_rules! bulk_le {
     ($read:ident, $write:ident, $t:ty, $size:expr) => {
         fn $read<R: Read>(r: &mut R, out: &mut [$t]) -> std::io::Result<()> {
             if cfg!(target_endian = "little") {
+                // SAFETY: `$t` is plain-old-data with no padding,
+                // `out` is fully initialized, and `u8` has the
+                // weakest alignment — the mutable byte view covers
+                // exactly the element buffer.
                 let bytes = unsafe {
                     std::slice::from_raw_parts_mut(
                         out.as_mut_ptr().cast::<u8>(),
@@ -69,6 +73,8 @@ macro_rules! bulk_le {
 
         fn $write<W: Write>(w: &mut W, xs: &[$t]) -> std::io::Result<()> {
             if cfg!(target_endian = "little") {
+                // SAFETY: same byte-view argument as the read side,
+                // shared (read-only) this time.
                 let bytes = unsafe {
                     std::slice::from_raw_parts(
                         xs.as_ptr().cast::<u8>(),

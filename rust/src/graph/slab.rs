@@ -48,6 +48,8 @@ pub struct MappedFile {
 // SAFETY: the mapping is PROT_READ/MAP_PRIVATE and never mutated after
 // construction, so concurrent reads from any thread are sound.
 unsafe impl Send for MappedFile {}
+// SAFETY: same argument as Send — the region is immutable for the
+// mapping's whole lifetime, so shared references race nothing.
 unsafe impl Sync for MappedFile {}
 
 impl std::fmt::Debug for MappedFile {

@@ -227,7 +227,7 @@ fn partition(args: &Args) -> Result<()> {
         Scheme::MinCut,
     ] {
         let mut rng = Rng::new(args.u64_or("seed", 17));
-        let t0 = std::time::Instant::now();
+        let t0 = telemetry::now();
         let assign = scheme.assign(g, m, &mut rng);
         let secs = t0.elapsed().as_secs_f64();
         let s = partition_stats(g, &assign, m);
@@ -493,7 +493,7 @@ fn trace_report(args: &Args) -> Result<()> {
 fn worker(args: &Args) -> Result<()> {
     use random_tma::comm::codec;
     use random_tma::comm::{
-        client_handshake, recv_into, send_wire, train_until_pending,
+        client_handshake, recv_from, send_wire, train_until_pending, Peer,
         Message, WireMsg,
     };
     use random_tma::model::ModelState;
@@ -578,7 +578,7 @@ fn worker(args: &Args) -> Result<()> {
     let mut base: Vec<f32> = Vec::new();
     let mut body: Vec<u8> = Vec::new();
     loop {
-        match recv_into(&mut stream, &mut rbuf)? {
+        match recv_from(&mut stream, &mut rbuf, Peer::Server)? {
             Message::Broadcast { round: _, data } => {
                 state.set_params(&data);
                 base = data;
@@ -685,7 +685,7 @@ fn worker_protocol_only(
 ) -> Result<()> {
     use random_tma::comm::codec;
     use random_tma::comm::{
-        client_handshake, recv_into, send_wire, Message, WireMsg,
+        client_handshake, recv_from, send_wire, Message, Peer, WireMsg,
     };
     use std::net::TcpStream;
 
@@ -702,7 +702,7 @@ fn worker_protocol_only(
         )
     });
     loop {
-        match recv_into(&mut stream, &mut rbuf)? {
+        match recv_from(&mut stream, &mut rbuf, Peer::Server)? {
             Message::Broadcast { round: _, data } => params = data,
             Message::BroadcastEnc { round: _, codec: cid, n, body: eb } => {
                 params = codec::decode_dense(cid, n as usize, &eb, &params)?;

@@ -22,12 +22,16 @@ use super::manifest::{Dtype, EntrySpec, Manifest, ModelDims, VariantSpec};
 
 /// f32 slice as raw little-endian bytes (x86-64 target).
 fn f32_bytes(xs: &[f32]) -> &[u8] {
+    // SAFETY: `f32` is 4-byte plain-old-data with no padding, the
+    // slice is fully initialized, and `u8` has the weakest
+    // alignment; the view borrows `xs` for its full length.
     unsafe {
         std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4)
     }
 }
 
 fn i32_bytes(xs: &[i32]) -> &[u8] {
+    // SAFETY: as `f32_bytes` — `i32` is 4-byte plain-old-data.
     unsafe {
         std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4)
     }

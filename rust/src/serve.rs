@@ -32,18 +32,20 @@
 //! or scored against a half-swapped state. A swap invalidates the
 //! embedding cache (embeddings depend on weights).
 
+#![deny(clippy::unwrap_used)]
+
 use std::collections::{HashMap, HashSet};
 use std::io::ErrorKind;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::comm::{self, Message, WireMsg};
+use crate::comm::{self, Message, Peer, WireMsg};
 use crate::coordinator::kv::GlobalWeights;
 use crate::graph::Graph;
 use crate::runtime::{load_backend, score_batched, Manifest, ScoreScratch};
@@ -86,9 +88,10 @@ pub fn load_weights(path: &Path) -> Result<Vec<f32>> {
         bytes.len() >= 16 && &bytes[..8] == WEIGHTS_MAGIC,
         "{}: not a {} weights file",
         path.display(),
-        std::str::from_utf8(WEIGHTS_MAGIC).unwrap(),
+        String::from_utf8_lossy(WEIGHTS_MAGIC),
     );
-    let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let n =
+        u64::from_le_bytes(crate::comm::le_bytes(&bytes[8..16])) as usize;
     ensure!(
         bytes.len() == 16 + 4 * n,
         "{}: truncated weights ({} bytes for {n} params)",
@@ -97,7 +100,7 @@ pub fn load_weights(path: &Path) -> Result<Vec<f32>> {
     );
     Ok(bytes[16..]
         .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .map(|c| f32::from_le_bytes(crate::comm::le_bytes(c)))
         .collect())
 }
 
@@ -322,7 +325,10 @@ impl WeightSlot {
 
     /// Install new weights; returns the new generation.
     pub fn swap(&self, w: GlobalWeights) -> u64 {
-        let mut g = self.inner.lock().unwrap();
+        // A poisoned lock means a panic mid-swap; the slot's pair is
+        // always internally consistent, so recover the guard.
+        let mut g =
+            self.inner.lock().unwrap_or_else(PoisonError::into_inner);
         g.0 += 1;
         g.1 = w;
         metrics().serve_weight_swaps.inc();
@@ -331,7 +337,7 @@ impl WeightSlot {
 
     /// The current `(generation, weights)` — an `Arc` clone.
     pub fn load(&self) -> (u64, GlobalWeights) {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
         (g.0, g.1.clone())
     }
 }
@@ -577,7 +583,7 @@ fn reader_loop(
         if got.is_err() {
             break; // cap violation or mid-frame disconnect
         }
-        let t0 = Instant::now();
+        let t0 = crate::telemetry::now();
         // Hot path: score queries decode into a recycled buffer.
         let mut pairs = spent_rx.try_recv().unwrap_or_default();
         match comm::decode_score_query_into(&rbuf, &mut pairs) {
@@ -596,7 +602,7 @@ fn reader_loop(
                 break;
             }
         }
-        match Message::decode(&rbuf) {
+        match Message::decode_from(&rbuf, Peer::ServeClient) {
             Ok(Message::QueryTopK { id, node, k }) => {
                 if work_tx
                     .send(Work::TopK { conn, id, node, k, t0 })
@@ -744,9 +750,9 @@ fn batcher_loop(
             w => items.push(w),
         }
         // Accumulate the window (control frames handled inline).
-        let deadline = Instant::now() + cfg.window;
+        let deadline = crate::telemetry::now() + cfg.window;
         while items.len() < cfg.max_batch {
-            let now = Instant::now();
+            let now = crate::telemetry::now();
             if now >= deadline {
                 break;
             }
@@ -1046,10 +1052,9 @@ fn process_batch(
                         (false, true) => std::cmp::Ordering::Less,
                         // Descending score, node id as deterministic
                         // tie-break.
-                        _ => b.1
-                            .partial_cmp(&a.1)
-                            .unwrap()
-                            .then(a.0.cmp(&b.0)),
+                        // total_cmp == partial_cmp on the non-NaN
+                        // floats this arm sees.
+                        _ => b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)),
                     }
                 });
                 tk.truncate(k as usize);
@@ -1120,7 +1125,11 @@ impl ServeClient {
             &WireMsg::QueryScore { id, pairs },
             &mut self.scratch,
         )?;
-        match comm::recv_into(&mut self.stream, &mut self.rbuf)? {
+        match comm::recv_from(
+            &mut self.stream,
+            &mut self.rbuf,
+            Peer::ServeServer,
+        )? {
             Message::ReplyScore { id: rid, scores } if rid == id => {
                 ensure!(
                     scores.len() == pairs.len(),
@@ -1143,7 +1152,11 @@ impl ServeClient {
             &WireMsg::QueryTopK { id, node, k },
             &mut self.scratch,
         )?;
-        match comm::recv_into(&mut self.stream, &mut self.rbuf)? {
+        match comm::recv_from(
+            &mut self.stream,
+            &mut self.rbuf,
+            Peer::ServeServer,
+        )? {
             Message::ReplyTopK { id: rid, items } if rid == id => Ok(items),
             other => bail!("expected ReplyTopK #{id}, got {other:?}"),
         }
@@ -1160,6 +1173,8 @@ impl ServeClient {
 }
 
 #[cfg(test)]
+// Tests assert through unwrap by design — a panic is the failure.
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

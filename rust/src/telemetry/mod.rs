@@ -156,6 +156,17 @@ pub fn ts() -> f64 {
     PROC_EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
+/// The project clock. Every wall-time read outside the telemetry
+/// plane and the bench harness goes through here — `rtma-check`'s
+/// determinism lint denies raw `Instant::now()`/`SystemTime::now()`
+/// elsewhere — so timing stays greppable and a future
+/// deterministic-replay harness can interpose one function instead
+/// of chasing call sites.
+#[inline]
+pub fn now() -> Instant {
+    Instant::now()
+}
+
 // ---- per-thread line buffer ------------------------------------------------
 
 const FLUSH_BYTES: usize = 8 * 1024;

@@ -15,9 +15,12 @@
 //! - [`bench`] — timing harness with warmup and robust statistics
 //!   (replaces `criterion`; every `[[bench]]` target uses it).
 //! - [`threadpool`] — scoped worker pool for parallel sections.
+//! - [`interleave`] — exhaustive schedule explorer for model-checking
+//!   the control plane (replaces `loom`; see `tests/loom_control.rs`).
 
 pub mod bench;
 pub mod cli;
+pub mod interleave;
 pub mod json;
 pub mod prop;
 pub mod rng;

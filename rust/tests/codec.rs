@@ -16,7 +16,7 @@ use std::sync::mpsc;
 use std::time::Duration;
 
 use random_tma::comm::codec::{self, CodecKind, RoundEncoder};
-use random_tma::comm::{Message, WireMsg};
+use random_tma::comm::{tags, Message, WireMsg};
 use random_tma::coordinator::kv::{RoundPayload, TrainerMsg};
 use random_tma::coordinator::server::{collect_round, collect_round_with};
 use random_tma::model::AggregateOp;
@@ -95,6 +95,71 @@ fn identity_wire_is_bit_identical_to_pre_codec_protocol() {
         Message::Collect { round: 11 }.encode(),
         [&[6u8][..], &11u64.to_le_bytes()[..]].concat()
     );
+}
+
+/// The tag registry (`comm::tags::all()`) is the machine-readable
+/// source of wire tags: unique, contiguous from 1, and bit-identical
+/// to the leading byte of every encoded frame. A new tag that
+/// collides or skips a slot fails here before it reaches the wire.
+#[test]
+fn tag_registry_matches_encoded_frames() {
+    let reg = tags::all();
+    for (i, (tag, name)) in reg.iter().enumerate() {
+        assert_eq!(*tag as usize, i + 1, "{name} breaks contiguity");
+    }
+
+    let by_name = |n: &str| -> u8 {
+        reg.iter().find(|(_, name)| *name == n).expect(n).0
+    };
+    let cases: Vec<(&str, Message)> = vec![
+        ("Hello", Message::Hello { id: 1 }),
+        ("Ready", Message::Ready { id: 1 }),
+        (
+            "Weights",
+            Message::Weights {
+                round: 1,
+                loss: 0.5,
+                steps: 2,
+                data: vec![1.0],
+            },
+        ),
+        ("Broadcast", Message::Broadcast { round: 1, data: vec![1.0] }),
+        ("Stop", Message::Stop),
+        ("Collect", Message::Collect { round: 1 }),
+        ("Codec", Message::Codec { codec: 0 }),
+        (
+            "WeightsEnc",
+            Message::WeightsEnc {
+                round: 1,
+                loss: 0.5,
+                steps: 2,
+                codec: 1,
+                n: 0,
+                body: vec![],
+            },
+        ),
+        (
+            "BroadcastEnc",
+            Message::BroadcastEnc { round: 1, codec: 1, n: 0, body: vec![] },
+        ),
+        (
+            "QueryScore",
+            Message::QueryScore { id: 1, pairs: vec![(0, 1, -1)] },
+        ),
+        ("QueryTopK", Message::QueryTopK { id: 1, node: 0, k: 1 }),
+        ("ReplyScore", Message::ReplyScore { id: 1, scores: vec![0.5] }),
+        (
+            "ReplyTopK",
+            Message::ReplyTopK { id: 1, items: vec![(0, 0.5)] },
+        ),
+    ];
+    assert_eq!(cases.len(), reg.len(), "registry entry without a frame");
+    for (name, msg) in cases {
+        let frame = msg.encode();
+        assert_eq!(frame[0], by_name(name), "{name} leads with its tag");
+        // And the frame round-trips under the tag it declares.
+        assert_eq!(Message::decode(&frame).unwrap(), msg);
+    }
 }
 
 #[test]

@@ -1,0 +1,233 @@
+//! Seeded byte-level fuzz of the wire decode surface
+//! (docs/ANALYSIS.md): thousands of mutated frames through
+//! `recv_into`, and mutated codec bodies through `decode_fold`.
+//!
+//! Properties under fuzz:
+//! - no panic, ever — corrupt input is an `Err`, not a crash;
+//! - no over-cap allocation: a hostile length prefix grows the
+//!   receive scratch only as far as bytes actually delivered
+//!   (chunked reads), never the announced length;
+//! - a corrupt codec body at worst drops that reporter — for the
+//!   length-prefix-validated codecs (`identity`, `f16`) the
+//!   accumulator is untouched, and for all codecs a subsequent good
+//!   report still folds and the round still produces a mean.
+//!
+//! Deterministic on purpose: every mutation comes from
+//! `Rng::stream`, so a failure replays from the iteration index.
+
+use random_tma::comm::codec::{
+    decode_fold, CodecKind, RoundEncoder, CODEC_F16, CODEC_IDENTITY,
+};
+use random_tma::comm::{recv_into, Message};
+use random_tma::model::MeanAccum;
+use random_tma::util::rng::Rng;
+
+/// One valid body per wire-message shape (no length prefix).
+fn corpus() -> Vec<Vec<u8>> {
+    let data = vec![0.5f32, -1.25, 3.0, 0.0];
+    let msgs = vec![
+        Message::Hello { id: 7 },
+        Message::Ready { id: 7 },
+        Message::Weights {
+            round: 3,
+            loss: 0.25,
+            steps: 40,
+            data: data.clone(),
+        },
+        Message::Broadcast { round: 3, data },
+        Message::Stop,
+        Message::Collect { round: 9 },
+        Message::Codec { codec: 1 },
+        Message::WeightsEnc {
+            round: 3,
+            loss: 0.25,
+            steps: 40,
+            codec: 1,
+            n: 4,
+            body: vec![1, 2, 3, 4],
+        },
+        Message::BroadcastEnc {
+            round: 3,
+            codec: 1,
+            n: 4,
+            body: vec![1, 2, 3, 4],
+        },
+        Message::QueryScore {
+            id: 11,
+            pairs: vec![(1, 2, 0), (3, 4, 1)],
+        },
+        Message::QueryTopK { id: 12, node: 5, k: 3 },
+        Message::ReplyScore { id: 11, scores: vec![0.5, -0.5] },
+        Message::ReplyTopK {
+            id: 12,
+            items: vec![(1, 0.9), (2, 0.1)],
+        },
+    ];
+    msgs.iter().map(Message::encode).collect()
+}
+
+/// Mutate `frame` (4-byte LE prefix + body) in place.
+fn mutate(rng: &mut Rng, frame: &mut Vec<u8>) {
+    match rng.below(4) {
+        // flip a handful of bytes anywhere (prefix included)
+        0 => {
+            for _ in 0..rng.range(1, 8) {
+                let i = rng.below(frame.len());
+                frame[i] ^= rng.next_u64() as u8;
+            }
+        }
+        // truncate
+        1 => {
+            let keep = rng.below(frame.len());
+            frame.truncate(keep);
+        }
+        // extend with garbage
+        2 => {
+            for _ in 0..rng.range(1, 64) {
+                frame.push(rng.next_u64() as u8);
+            }
+        }
+        // hostile prefix: announce an arbitrary (possibly huge)
+        // length over the same small body
+        _ => {
+            let lie = rng.next_u64() as u32;
+            frame[..4].copy_from_slice(&lie.to_le_bytes());
+        }
+    }
+}
+
+#[test]
+fn fuzzed_frames_never_panic_or_overallocate() {
+    let corpus = corpus();
+    let max_body = corpus.iter().map(Vec::len).max().unwrap();
+    let mut scratch = Vec::new();
+    let mut ok = 0u64;
+    let mut err = 0u64;
+    for i in 0..10_000u64 {
+        let mut rng = Rng::stream(0xFEED_FACE, 17, i);
+        let body = &corpus[rng.below(corpus.len())];
+        let mut frame =
+            Vec::with_capacity(4 + body.len() + 64);
+        frame.extend_from_slice(
+            &(body.len() as u32).to_le_bytes(),
+        );
+        frame.extend_from_slice(body);
+        mutate(&mut rng, &mut frame);
+        match recv_into(&mut &frame[..], &mut scratch) {
+            Ok(_) => ok += 1,
+            Err(_) => err += 1,
+        }
+        // The scratch buffer tracks delivered bytes (one 64 KiB
+        // read chunk of slack), never a hostile announced length.
+        assert!(
+            scratch.capacity() <= max_body + 64 + 2 * 64 * 1024,
+            "scratch over-allocated to {} at iteration {i}",
+            scratch.capacity()
+        );
+    }
+    // The mutator must exercise both sides to mean anything.
+    assert!(ok > 0, "no mutated frame survived decode");
+    assert!(err > 0, "no mutated frame was rejected");
+}
+
+#[test]
+fn unmutated_corpus_roundtrips() {
+    // Anchor for the fuzz loop: every corpus frame is valid as-is,
+    // so each Err above is the mutation's doing.
+    let mut scratch = Vec::new();
+    for body in corpus() {
+        let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&body);
+        let msg = recv_into(&mut &frame[..], &mut scratch)
+            .expect("corpus frame must decode");
+        assert_eq!(msg.encode(), body);
+    }
+}
+
+#[test]
+fn fuzzed_codec_bodies_never_panic_and_reports_still_land() {
+    const N: usize = 64;
+    let base: Vec<f32> = (0..N).map(|i| i as f32 * 0.5).collect();
+    let w: Vec<f32> = (0..N).map(|i| 1.0 + i as f32 * 0.25).collect();
+    let kinds = [
+        CodecKind::Identity,
+        CodecKind::Delta,
+        CodecKind::F16,
+        CodecKind::I8,
+        CodecKind::TopK { denom: 4 },
+    ];
+    // Valid encoded bodies, one per codec family.
+    let mut bodies: Vec<(u8, Vec<u8>)> = Vec::new();
+    for kind in kinds {
+        let mut enc = RoundEncoder::new(kind, 0xC0DEC);
+        let mut out = Vec::new();
+        let id = enc.encode_up(&w, &base, &mut out);
+        bodies.push((id, out));
+    }
+    let mut good = Vec::new();
+    for x in &w {
+        good.extend_from_slice(&x.to_le_bytes());
+    }
+
+    let mut dropped_clean = 0u64;
+    let mut errs = 0u64;
+    for i in 0..10_000u64 {
+        let mut rng = Rng::stream(0xDEAD_BEA7, 23, i);
+        let (id, valid) = &bodies[rng.below(bodies.len())];
+        let mut body = valid.clone();
+        // Reuse the frame mutator minus the prefix arm: flip,
+        // truncate or extend the raw body.
+        match rng.below(3) {
+            0 => {
+                for _ in 0..rng.range(1, 8) {
+                    if body.is_empty() {
+                        break;
+                    }
+                    let j = rng.below(body.len());
+                    body[j] ^= rng.next_u64() as u8;
+                }
+            }
+            1 => {
+                let keep = rng.below(body.len().max(1));
+                body.truncate(keep);
+            }
+            _ => {
+                for _ in 0..rng.range(1, 64) {
+                    body.push(rng.next_u64() as u8);
+                }
+            }
+        }
+        // Occasionally fuzz the codec id too (unknown ids must be
+        // a clean error).
+        let id = if rng.chance(0.05) {
+            rng.next_u64() as u8
+        } else {
+            *id
+        };
+
+        let mut acc = MeanAccum::with_workers(N, 1);
+        let before = acc.count();
+        let r = decode_fold(id, N, &body, &base, &mut acc);
+        if r.is_err() {
+            errs += 1;
+            // identity/f16 validate the body length before touching
+            // the accumulator: the corrupt reporter vanishes.
+            if (id == CODEC_IDENTITY || id == CODEC_F16)
+                && acc.count() == before
+            {
+                dropped_clean += 1;
+            }
+        }
+        // Whatever the fuzz did, a good report still lands and the
+        // round still closes with a full-length mean.
+        decode_fold(CODEC_IDENTITY, N, &good, &base, &mut acc)
+            .expect("good identity body must fold");
+        let mean = acc.mean_with(Some(&base));
+        assert_eq!(mean.len(), N, "iteration {i}");
+    }
+    assert!(errs > 0, "no mutated body was rejected");
+    assert!(
+        dropped_clean > 0,
+        "no clean reporter drop was observed"
+    );
+}

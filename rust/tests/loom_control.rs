@@ -1,0 +1,270 @@
+//! Exhaustive interleaving models of `coordinator::kv::Control` —
+//! the crate's loom-style correctness suite (docs/ANALYSIS.md).
+//!
+//! `Control` is all `SeqCst` atomics, so every real execution is
+//! equivalent to some total order of its atomic operations. These
+//! tests transcribe the production decision logic at atomic-op
+//! granularity (one explorer step = one load or store) and run
+//! `util::interleave::explore` over *every* schedule, asserting the
+//! properties the driver relies on:
+//!
+//! - round-before-stop: a trainer can never observe `Stop` while the
+//!   server's final collection round is still unanswered
+//!   (`Control::next_action`'s re-read, mirroring
+//!   `next_action_orders_round_before_stop` in kv.rs — but here over
+//!   the full schedule space, not one lucky ordering);
+//! - no double ship: a trainer never ships the same round twice;
+//! - ready barrier: `wait_ready`'s release condition is eventually
+//!   true in every schedule once each trainer has marked ready or
+//!   dead — `mark_dead` really does release a stuck barrier.
+//!
+//! Each test also asserts the explored-schedule count equals the
+//! multinomial of the step counts: proof the walk was exhaustive.
+
+use random_tma::util::interleave::{explore, interleavings, Step};
+
+/// What one poll of `next_action` decided.
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Action {
+    Train,
+    Ship(u64),
+    Stop,
+}
+
+/// Shared state for the stop-handshake model: the server's two
+/// atomics plus one trainer's registers and outcome log.
+#[derive(Clone)]
+struct StopModel {
+    // server side (the atomics)
+    round: u64,
+    stop: bool,
+    // trainer side (registers of the current poll)
+    r1: u64,
+    st: bool,
+    r2: u64,
+    // trainer loop state
+    last: u64,
+    done: bool,
+    shipped: Vec<u64>,
+}
+
+impl StopModel {
+    fn new() -> StopModel {
+        StopModel {
+            round: 0,
+            stop: false,
+            r1: 0,
+            st: false,
+            r2: 0,
+            last: 0,
+            done: false,
+            shipped: Vec::new(),
+        }
+    }
+}
+
+// Server program: open the final round, THEN raise stop — the
+// ordering `tma_server` promises (kv.rs `next_action` doc).
+fn srv_open(s: &mut StopModel, _t: usize) {
+    s.round += 1; // open_round: agg_round.fetch_add
+}
+
+fn srv_stop(s: &mut StopModel, _t: usize) {
+    s.stop = true; // request_stop: stop.store(true)
+}
+
+// Trainer poll, transcribed from `Control::next_action` with one
+// explorer step per atomic load. The decision applies in the last
+// step; a finished trainer no-ops.
+fn tr_load_round(s: &mut StopModel, _t: usize) {
+    s.r1 = s.round; // current_round()
+}
+
+fn tr_load_stop(s: &mut StopModel, _t: usize) {
+    s.st = s.stop; // stopped()
+}
+
+fn tr_decide(s: &mut StopModel, _t: usize) {
+    s.r2 = s.round; // the final-round re-read
+    if s.done {
+        return;
+    }
+    let action = if s.r1 > s.last {
+        Action::Ship(s.r1)
+    } else if s.st {
+        if s.r2 > s.last {
+            Action::Ship(s.r2)
+        } else {
+            Action::Stop
+        }
+    } else {
+        Action::Train
+    };
+    match action {
+        Action::Ship(r) => {
+            s.shipped.push(r);
+            s.last = r;
+        }
+        Action::Stop => s.done = true,
+        Action::Train => {}
+    }
+}
+
+#[test]
+fn stop_never_races_past_the_final_round() {
+    let server: Vec<Step<StopModel>> = vec![srv_open, srv_stop];
+    let trainer: Vec<Step<StopModel>> =
+        vec![tr_load_round, tr_load_stop, tr_decide];
+    // Two consecutive polls: enough for every phase combination of
+    // (train / ship final / observe stop) around the server's two
+    // stores.
+    let mut prog = trainer.clone();
+    prog.extend(trainer.iter().copied());
+    let threads = vec![server, prog];
+
+    let mut exited = 0u64;
+    let mut still_running = 0u64;
+    let n = explore(&StopModel::new(), &threads, &mut |s| {
+        // No double ship, ever.
+        let mut seen = s.shipped.clone();
+        seen.dedup();
+        assert_eq!(seen, s.shipped, "round shipped twice: {:?}", s.shipped);
+        // The load-bearing property: an exited trainer has always
+        // shipped the final round first. A schedule where `done`
+        // holds with `shipped` empty is exactly the historical
+        // silent-exit bug.
+        if s.done {
+            assert_eq!(
+                s.shipped,
+                vec![1],
+                "trainer exited with the final round unanswered"
+            );
+            exited += 1;
+        } else {
+            still_running += 1;
+        }
+    });
+    assert_eq!(n, interleavings(&[2, 6]), "walk was not exhaustive");
+    assert_eq!(n, 28);
+    // Both terminal phases must actually occur across schedules —
+    // otherwise the assertions above were vacuous.
+    assert!(exited > 0, "no schedule reached a clean exit");
+    assert!(still_running > 0, "no schedule left the trainer mid-loop");
+}
+
+// The pre-fix decision order (stop checked first, no re-read): the
+// explorer must surface the silent exit in at least one schedule.
+// This is the suite's own canary — if the model or explorer ever
+// weakens, this test fails first.
+fn buggy_decide(s: &mut StopModel, _t: usize) {
+    if s.done {
+        return;
+    }
+    if s.st {
+        s.done = true;
+    } else if s.r1 > s.last {
+        s.shipped.push(s.r1);
+        s.last = s.r1;
+    }
+}
+
+#[test]
+fn explorer_catches_the_historical_stop_first_bug() {
+    let server: Vec<Step<StopModel>> = vec![srv_open, srv_stop];
+    // Buggy poll order: load stop, then round, decide without
+    // re-reading.
+    let trainer: Vec<Step<StopModel>> =
+        vec![tr_load_stop, tr_load_round, buggy_decide];
+    let threads = vec![server, trainer];
+
+    let mut silent_exits = 0u64;
+    let n = explore(&StopModel::new(), &threads, &mut |s| {
+        if s.done && s.shipped.is_empty() {
+            silent_exits += 1;
+        }
+    });
+    assert_eq!(n, interleavings(&[2, 3]));
+    assert!(
+        silent_exits > 0,
+        "the explorer failed to find the known bug — model broken"
+    );
+}
+
+/// Ready-barrier model: one trainer marks ready, one dies, the
+/// server polls `wait_ready`'s condition once (dead load, then ready
+/// load, then the comparison — the exact order in kv.rs).
+#[derive(Clone)]
+struct BarrierModel {
+    ready: usize,
+    dead: usize,
+    obs_dead: usize,
+    obs_ready: usize,
+    released: Option<usize>,
+}
+
+const TOTAL: usize = 2;
+
+fn tr_mark_ready(s: &mut BarrierModel, _t: usize) {
+    s.ready += 1; // mark_ready: ready.fetch_add
+}
+
+fn tr_mark_dead(s: &mut BarrierModel, _t: usize) {
+    s.dead += 1; // mark_dead: dead.fetch_add
+}
+
+fn srv_load_dead(s: &mut BarrierModel, _t: usize) {
+    s.obs_dead = s.dead; // dead_count()
+}
+
+fn srv_load_ready(s: &mut BarrierModel, _t: usize) {
+    s.obs_ready = s.ready; // ready_count()
+}
+
+fn srv_release(s: &mut BarrierModel, _t: usize) {
+    if s.obs_ready + s.obs_dead >= TOTAL {
+        s.released = Some(TOTAL - s.obs_dead.min(TOTAL));
+    }
+}
+
+#[test]
+fn mark_dead_releases_the_ready_barrier() {
+    let init = BarrierModel {
+        ready: 0,
+        dead: 0,
+        obs_dead: 0,
+        obs_ready: 0,
+        released: None,
+    };
+    let threads: Vec<Vec<Step<BarrierModel>>> = vec![
+        vec![tr_mark_ready],
+        vec![tr_mark_dead],
+        vec![srv_load_dead, srv_load_ready, srv_release],
+    ];
+    let mut released = 0u64;
+    let mut blocked = 0u64;
+    let n = explore(&init, &threads, &mut |s| {
+        match s.released {
+            // A release never overcounts survivors, and never
+            // reports the dead trainer live.
+            Some(live) => {
+                assert_eq!(live, 1, "released with wrong live count");
+                released += 1;
+            }
+            // A blocked poll is fine — but the condition must hold
+            // on the terminal state, so the *next* poll releases:
+            // a stuck barrier is impossible once every trainer has
+            // marked ready or dead.
+            None => {
+                assert!(
+                    s.ready + s.dead >= TOTAL,
+                    "barrier can hang: terminal condition false"
+                );
+                blocked += 1;
+            }
+        }
+    });
+    assert_eq!(n, interleavings(&[1, 1, 3]));
+    assert_eq!(n, 20);
+    assert!(released > 0, "no schedule released inside the poll");
+    assert!(blocked > 0, "no schedule exercised the re-poll path");
+}

@@ -10,7 +10,7 @@ use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Duration;
 
-use random_tma::comm;
+use random_tma::comm::{self, tags};
 use random_tma::coordinator::kv::GlobalWeights;
 use random_tma::graph::{Graph, GraphBuilder};
 use random_tma::model::ModelState;
@@ -209,8 +209,12 @@ fn raw_wire_golden_roundtrip() {
     let mut s = TcpStream::connect(handle.addr()).unwrap();
     comm::serve_client_handshake(&mut s, 77).unwrap();
 
-    // QueryScore { id: 0xABCD, pairs: [(0,1,0), (2,3,1)] }
-    let mut frame = vec![10u8]; // TAG_QUERY_SCORE
+    // QueryScore { id: 0xABCD, pairs: [(0,1,0), (2,3,1)] }. The
+    // registry pins tag 10 — hand-roll the frame from it so this
+    // golden and `comm::tags::all()` cannot drift apart.
+    assert_eq!(tags::TAG_QUERY_SCORE, 10);
+    assert!(tags::all().contains(&(10, "QueryScore")));
+    let mut frame = vec![tags::TAG_QUERY_SCORE];
     frame.extend_from_slice(&0xABCDu64.to_le_bytes());
     frame.extend_from_slice(&2u64.to_le_bytes());
     for (u, v, r) in [(0u32, 1u32, 0u32), (2, 3, 1)] {
@@ -229,7 +233,9 @@ fn raw_wire_golden_roundtrip() {
     assert_eq!(len, 1 + 8 + 8 + 2 * 4); // golden reply length
     let mut body = vec![0u8; len];
     s.read_exact(&mut body).unwrap();
-    assert_eq!(body[0], 12); // TAG_REPLY_SCORE
+    assert_eq!(tags::TAG_REPLY_SCORE, 12);
+    assert!(tags::all().contains(&(12, "ReplyScore")));
+    assert_eq!(body[0], tags::TAG_REPLY_SCORE);
     assert_eq!(u64::from_le_bytes(body[1..9].try_into().unwrap()), 0xABCD);
     assert_eq!(u64::from_le_bytes(body[9..17].try_into().unwrap()), 2);
     for i in 0..2 {
@@ -242,7 +248,7 @@ fn raw_wire_golden_roundtrip() {
 
     // Stop via the raw socket too: tag 5 (TAG_STOP), empty payload.
     s.write_all(&1u32.to_le_bytes()).unwrap();
-    s.write_all(&[5u8]).unwrap();
+    s.write_all(&[tags::TAG_STOP]).unwrap();
     handle.join();
 }
 

@@ -1,0 +1,125 @@
+//! rtma-check — project-invariant static analysis for the
+//! random_tma tree (docs/ANALYSIS.md).
+//!
+//! Scans `rust/src`, `rust/tests`, `rust/benches`, `examples`,
+//! `docs/*.md` and `README.md`, then runs five rules: wire-tags,
+//! telemetry-schema, env-knobs, the determinism lints and the
+//! unsafe audit. Violations print as `file:line: [rule] message`
+//! and the process exits nonzero — CI's `analysis` job runs
+//! `cargo run -p rtma-check` and fails the build on any hit.
+//!
+//! No dependencies on purpose: the scanner in `scan.rs` is a small
+//! lexical pass (comment/string stripping + `#[cfg(test)]`
+//! tracking), which is all these whole-project invariants need and
+//! keeps the tool building in the same offline environment as the
+//! crate it checks.
+
+mod rules;
+mod scan;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use scan::{parse_source, DocFile, Tree};
+
+fn main() -> ExitCode {
+    let root = match repo_root() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("rtma-check: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let tree = match load_tree(&root) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("rtma-check: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let diags = rules::run_all(&tree);
+    for d in &diags {
+        println!("{d}");
+    }
+    if diags.is_empty() {
+        println!(
+            "rtma-check: clean ({} source files, {} docs)",
+            tree.sources.len(),
+            tree.docs.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        println!("rtma-check: {} violation(s)", diags.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// The repo root: three levels above this crate's manifest
+/// (`rust/tools/rtma-check` -> `/`), sanity-checked by a landmark.
+fn repo_root() -> Result<PathBuf, String> {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = manifest
+        .ancestors()
+        .nth(3)
+        .ok_or("cannot locate the repo root")?;
+    if !root.join("docs/COMM.md").is_file() {
+        return Err(format!(
+            "{} does not look like the repo root (docs/COMM.md missing)",
+            root.display()
+        ));
+    }
+    Ok(root.to_path_buf())
+}
+
+fn load_tree(root: &Path) -> Result<Tree, String> {
+    let mut paths = Vec::new();
+    for dir in ["rust/src", "rust/tests", "rust/benches", "examples"] {
+        walk_rs(&root.join(dir), &mut paths)
+            .map_err(|e| format!("walking {dir}: {e}"))?;
+    }
+    paths.sort();
+    let mut sources = Vec::new();
+    for p in &paths {
+        let text = fs::read_to_string(p)
+            .map_err(|e| format!("reading {}: {e}", p.display()))?;
+        sources.push(parse_source(&rel_of(root, p), &text));
+    }
+
+    let mut docs = Vec::new();
+    let mut doc_paths: Vec<PathBuf> = fs::read_dir(root.join("docs"))
+        .map_err(|e| format!("reading docs/: {e}"))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "md"))
+        .collect();
+    doc_paths.sort();
+    doc_paths.push(root.join("README.md"));
+    for p in &doc_paths {
+        let text = fs::read_to_string(p)
+            .map_err(|e| format!("reading {}: {e}", p.display()))?;
+        docs.push(DocFile::new(&rel_of(root, p), &text));
+    }
+    Ok(Tree { sources, docs })
+}
+
+/// Recursively collect `.rs` files (sorted later for stable output).
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Repo-relative path with forward slashes (diagnostic keys).
+fn rel_of(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .to_string_lossy()
+        .replace('\\', "/")
+}

@@ -1,0 +1,225 @@
+//! Determinism lints. Three sub-rules, all scoped to `rust/src` and
+//! all skipping `#[cfg(test)]` regions:
+//!
+//! - `det-clock`: no raw `Instant::now()` / `SystemTime::now()`
+//!   outside the telemetry plane and the bench harness — wall time
+//!   goes through `telemetry::now()` so replays and tests can reason
+//!   about one clock.
+//! - `det-collections`: no `HashMap`/`HashSet` in the deterministic
+//!   modules (`gen`, `model`, `runtime::native`, `comm::codec`) —
+//!   iteration order there must not depend on hasher seeds.
+//! - `det-print`: no stray `println!`/`eprintln!` outside `main.rs`
+//!   and the telemetry/bench planes — diagnostics go through
+//!   telemetry events so `RTMA_LOG=off` actually silences the tree.
+
+use crate::scan::{find_word, Diag, SourceFile, Tree};
+
+pub fn check(tree: &Tree) -> Vec<Diag> {
+    let mut out = Vec::new();
+    for f in &tree.sources {
+        clock(f, &mut out);
+        collections(f, &mut out);
+        prints(f, &mut out);
+    }
+    out
+}
+
+const CLOCK_ALLOWED: [&str; 2] =
+    ["rust/src/benchkit.rs", "rust/src/util/bench.rs"];
+
+fn clock(f: &SourceFile, out: &mut Vec<Diag>) {
+    if !f.rel.starts_with("rust/src/")
+        || f.rel.starts_with("rust/src/telemetry/")
+        || CLOCK_ALLOWED.contains(&f.rel.as_str())
+    {
+        return;
+    }
+    for (ln, line) in f.numbered() {
+        if line.in_test {
+            continue;
+        }
+        for pat in ["Instant::now", "SystemTime::now"] {
+            if line.code.contains(pat) {
+                out.push(Diag::new(
+                    "det-clock",
+                    &f.rel,
+                    ln,
+                    format!(
+                        "raw `{pat}()` — route wall time through \
+                         telemetry::now()"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+const DET_DIRS: [&str; 2] = ["rust/src/gen/", "rust/src/model/"];
+const DET_FILES: [&str; 2] =
+    ["rust/src/runtime/native.rs", "rust/src/comm/codec.rs"];
+
+fn collections(f: &SourceFile, out: &mut Vec<Diag>) {
+    let scoped = DET_DIRS.iter().any(|d| f.rel.starts_with(d))
+        || DET_FILES.contains(&f.rel.as_str());
+    if !scoped {
+        return;
+    }
+    for (ln, line) in f.numbered() {
+        if line.in_test {
+            continue;
+        }
+        for ty in ["HashMap", "HashSet"] {
+            if find_word(&line.code, ty).is_some() {
+                out.push(Diag::new(
+                    "det-collections",
+                    &f.rel,
+                    ln,
+                    format!(
+                        "`{ty}` in a deterministic module — use \
+                         BTreeMap/BTreeSet or a sorted Vec"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+const PRINT_ALLOWED: [&str; 3] = [
+    "rust/src/main.rs",
+    "rust/src/benchkit.rs",
+    "rust/src/util/bench.rs",
+];
+
+fn prints(f: &SourceFile, out: &mut Vec<Diag>) {
+    if !f.rel.starts_with("rust/src/")
+        || f.rel.starts_with("rust/src/telemetry/")
+        || PRINT_ALLOWED.contains(&f.rel.as_str())
+    {
+        return;
+    }
+    for (ln, line) in f.numbered() {
+        if line.in_test {
+            continue;
+        }
+        for mac in ["println", "eprintln", "print", "eprint"] {
+            if has_macro(&line.code, mac) {
+                out.push(Diag::new(
+                    "det-print",
+                    &f.rel,
+                    ln,
+                    format!(
+                        "stray `{mac}!` — emit a telemetry event \
+                         (telemetry::info/debug) instead"
+                    ),
+                ));
+                break;
+            }
+        }
+    }
+}
+
+/// `name!` at an identifier boundary (so `print` does not match
+/// inside `println` or `eprint`).
+fn has_macro(code: &str, name: &str) -> bool {
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(name) {
+        let at = from + pos;
+        let pre = at == 0
+            || !(b[at - 1].is_ascii_alphanumeric() || b[at - 1] == b'_');
+        let post = b.get(at + name.len()) == Some(&b'!');
+        if pre && post {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::tree_of;
+
+    #[test]
+    fn raw_clock_read_is_flagged() {
+        let t = tree_of(
+            &[(
+                "rust/src/coordinator/server.rs",
+                "fn f() {\nlet t = std::time::Instant::now();\n}\n",
+            )],
+            &[],
+        );
+        let d = check(&t);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "det-clock");
+        assert_eq!(d[0].line, 2);
+    }
+
+    #[test]
+    fn telemetry_bench_and_tests_may_read_the_clock() {
+        let t = tree_of(
+            &[
+                (
+                    "rust/src/telemetry/mod.rs",
+                    "pub fn now() { Instant::now() }\n",
+                ),
+                (
+                    "rust/src/util/bench.rs",
+                    "fn t() { Instant::now(); }\n",
+                ),
+                (
+                    "rust/src/coordinator/server.rs",
+                    "#[cfg(test)]\nmod tests {\nfn t() { \
+                     Instant::now(); }\n}\n",
+                ),
+            ],
+            &[],
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn hash_collections_in_deterministic_modules_are_flagged() {
+        let t = tree_of(
+            &[
+                (
+                    "rust/src/gen/dcsbm.rs",
+                    "use std::collections::HashMap;\n",
+                ),
+                (
+                    "rust/src/serve.rs",
+                    "use std::collections::HashMap;\n",
+                ),
+            ],
+            &[],
+        );
+        let d = check(&t);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "det-collections");
+        assert_eq!(d[0].file, "rust/src/gen/dcsbm.rs");
+    }
+
+    #[test]
+    fn stray_prints_are_flagged_but_main_and_comments_pass() {
+        let t = tree_of(
+            &[
+                (
+                    "rust/src/coordinator/ggs.rs",
+                    "fn f() {\neprintln!(\"x\");\n}\n",
+                ),
+                ("rust/src/main.rs", "fn f() { println!(\"ok\"); }\n"),
+                (
+                    "rust/src/serve.rs",
+                    "// println! would be wrong here\nfn f() {}\n",
+                ),
+            ],
+            &[],
+        );
+        let d = check(&t);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "det-print");
+        assert_eq!(d[0].file, "rust/src/coordinator/ggs.rs");
+        assert_eq!(d[0].line, 2);
+    }
+}

@@ -1,0 +1,162 @@
+//! `env-knobs`: every `RTMA_*` environment variable the code reads
+//! is documented, and every documented knob is live.
+//!
+//! Source side: any `RTMA_<NAME>` token inside a string literal in
+//! `rust/src`, `rust/tests`, `rust/benches` or `examples`. Doc side:
+//! any `RTMA_<NAME>` token in `docs/*.md` or `README.md`. Tokens
+//! ending in `_` are prefix fragments (`RTMA_SERVE_*` family
+//! references) and are skipped on both sides.
+
+use crate::scan::{Diag, Tree};
+
+const RULE: &str = "env-knobs";
+
+pub fn check(tree: &Tree) -> Vec<Diag> {
+    let mut out = Vec::new();
+
+    // knob -> first site that mentions it
+    let mut live: Vec<(String, String, usize)> = Vec::new();
+    for s in &tree.sources {
+        for (ln, line) in s.numbered() {
+            for lit in &line.strings {
+                for tok in tokens_in(lit) {
+                    if !live.iter().any(|(t, _, _)| *t == tok) {
+                        live.push((tok, s.rel.clone(), ln));
+                    }
+                }
+            }
+        }
+    }
+    let mut documented: Vec<(String, String, usize)> = Vec::new();
+    for d in &tree.docs {
+        for (ln, raw) in d.numbered() {
+            for tok in tokens_in(raw) {
+                if !documented.iter().any(|(t, _, _)| *t == tok) {
+                    documented.push((tok, d.rel.clone(), ln));
+                }
+            }
+        }
+    }
+
+    for (tok, file, ln) in &live {
+        if !documented.iter().any(|(t, _, _)| t == tok) {
+            out.push(Diag::new(
+                RULE,
+                file,
+                *ln,
+                format!(
+                    "env knob `{tok}` is read here but documented \
+                     nowhere (docs/*.md, README.md)"
+                ),
+            ));
+        }
+    }
+    for (tok, file, ln) in &documented {
+        if !live.iter().any(|(t, _, _)| t == tok) {
+            out.push(Diag::new(
+                RULE,
+                file,
+                *ln,
+                format!(
+                    "documented env knob `{tok}` has no live read in \
+                     the source tree"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// Maximal `RTMA_[A-Z0-9_]+` tokens in `s`, skipping prefix
+/// fragments that end in `_`.
+fn tokens_in(s: &str) -> Vec<String> {
+    let b = s.as_bytes();
+    let mut v = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = s[from..].find("RTMA_") {
+        let at = from + pos;
+        if at > 0 && is_tok(b[at - 1]) {
+            from = at + 1;
+            continue;
+        }
+        let mut end = at;
+        while end < b.len() && is_tok(b[end]) {
+            end += 1;
+        }
+        let tok = &s[at..end];
+        if !tok.ends_with('_') {
+            v.push(tok.to_string());
+        }
+        from = end;
+    }
+    v
+}
+
+fn is_tok(b: u8) -> bool {
+    b.is_ascii_uppercase() || b.is_ascii_digit() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::tree_of;
+
+    #[test]
+    fn matched_knobs_pass() {
+        let t = tree_of(
+            &[(
+                "rust/src/serve.rs",
+                "let a = std::env::var(\"RTMA_SERVE_ADDR\");\n",
+            )],
+            &[("docs/SERVING.md", "Set `RTMA_SERVE_ADDR` to bind.\n")],
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn undocumented_live_knob_is_flagged_at_the_read_site() {
+        let t = tree_of(
+            &[(
+                "rust/src/serve.rs",
+                "fn f() {}\nlet a = std::env::var(\"RTMA_SECRET\");\n",
+            )],
+            &[("docs/SERVING.md", "No knobs here.\n")],
+        );
+        let d = check(&t);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].file, "rust/src/serve.rs");
+        assert_eq!(d[0].line, 2);
+        assert!(d[0].msg.contains("RTMA_SECRET"));
+    }
+
+    #[test]
+    fn documented_dead_knob_is_flagged_at_the_doc_line() {
+        let t = tree_of(
+            &[("rust/src/serve.rs", "fn f() {}\n")],
+            &[("docs/SERVING.md", "intro\nUse `RTMA_GHOST=1`.\n")],
+        );
+        let d = check(&t);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].file, "docs/SERVING.md");
+        assert_eq!(d[0].line, 2);
+        assert!(d[0].msg.contains("RTMA_GHOST"));
+    }
+
+    #[test]
+    fn prefix_fragments_and_comments_are_ignored() {
+        // `RTMA_SERVE_*` in docs and a knob named only in a source
+        // comment must not count on either side.
+        let t = tree_of(
+            &[(
+                "rust/src/serve.rs",
+                "// RTMA_IMAGINARY is described in a comment only\n\
+                 let a = std::env::var(\"RTMA_SERVE_ADDR\");\n",
+            )],
+            &[(
+                "docs/SERVING.md",
+                "The `RTMA_SERVE_*` family: `RTMA_SERVE_ADDR`.\n",
+            )],
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+}

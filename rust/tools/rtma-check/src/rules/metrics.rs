@@ -1,0 +1,510 @@
+//! `telemetry-schema`: the metric registry, its published names and
+//! docs/TELEMETRY.md must agree.
+//!
+//! - every `Metrics` field is published exactly once via
+//!   `counters_list` / `gauges_list` / `hists_list`, under the list
+//!   matching its kind;
+//! - the "Metric registry" table in docs/TELEMETRY.md names exactly
+//!   the published set, with matching kinds;
+//! - no dead metrics: every field has a call site outside the
+//!   registry file;
+//! - every `metrics().<ident>` call site resolves to a real field or
+//!   method of `Metrics`.
+
+use crate::scan::{find_word, Diag, SourceFile, Tree};
+
+const RULE: &str = "telemetry-schema";
+const REGISTRY: &str = "rust/src/telemetry/registry.rs";
+const DOC: &str = "docs/TELEMETRY.md";
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Kind {
+    Counter,
+    Gauge,
+    Hist,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Hist => "histogram",
+        }
+    }
+}
+
+struct Field {
+    name: String,
+    kind: Kind,
+    line: usize,
+}
+
+struct Published {
+    name: String,
+    field: String,
+    kind: Kind,
+    line: usize,
+}
+
+pub fn check(tree: &Tree) -> Vec<Diag> {
+    let mut out = Vec::new();
+    let Some(reg) = tree.source(REGISTRY) else {
+        let msg = "metric registry file missing".to_string();
+        out.push(Diag::new(RULE, REGISTRY, 1, msg));
+        return out;
+    };
+    let fields = parse_fields(reg);
+    let published = parse_published(reg);
+    let methods = parse_methods(reg);
+
+    // Each field published exactly once, under its own kind.
+    for f in &fields {
+        let hits: Vec<&Published> = published
+            .iter()
+            .filter(|p| p.field == f.name)
+            .collect();
+        match hits.as_slice() {
+            [] => out.push(Diag::new(
+                RULE,
+                REGISTRY,
+                f.line,
+                format!(
+                    "metric field `{}` is never published — add it \
+                     to {}s_list()",
+                    f.name,
+                    f.kind.as_str()
+                ),
+            )),
+            [one] => {
+                if one.kind != f.kind {
+                    out.push(Diag::new(
+                        RULE,
+                        REGISTRY,
+                        one.line,
+                        format!(
+                            "`{}` is a {} but is published from the \
+                             {} list",
+                            f.name,
+                            f.kind.as_str(),
+                            one.kind.as_str()
+                        ),
+                    ));
+                }
+            }
+            many => out.push(Diag::new(
+                RULE,
+                REGISTRY,
+                many[1].line,
+                format!("metric field `{}` published twice", f.name),
+            )),
+        }
+    }
+    for p in &published {
+        if !fields.iter().any(|f| f.name == p.field) {
+            out.push(Diag::new(
+                RULE,
+                REGISTRY,
+                p.line,
+                format!("published entry reads unknown field `{}`", p.field),
+            ));
+        }
+        if published
+            .iter()
+            .filter(|q| q.name == p.name)
+            .count()
+            > 1
+        {
+            out.push(Diag::new(
+                RULE,
+                REGISTRY,
+                p.line,
+                format!("published metric name {:?} is not unique", p.name),
+            ));
+        }
+    }
+
+    // The doc table <-> the published set, both directions.
+    match tree.doc(DOC) {
+        None => {
+            let msg = "telemetry doc missing".to_string();
+            out.push(Diag::new(RULE, DOC, 1, msg));
+        }
+        Some(doc) => {
+            let rows = doc_rows(doc);
+            for p in &published {
+                let hit = rows
+                    .iter()
+                    .any(|(n, k, _)| *n == p.name && *k == p.kind);
+                if !hit {
+                    out.push(Diag::new(
+                        RULE,
+                        REGISTRY,
+                        p.line,
+                        format!(
+                            "published {} `{}` missing from the {DOC} \
+                             metric-registry table",
+                            p.kind.as_str(),
+                            p.name
+                        ),
+                    ));
+                }
+            }
+            for (n, k, ln) in &rows {
+                let hit = published
+                    .iter()
+                    .any(|p| p.name == *n && p.kind == *k);
+                if !hit {
+                    out.push(Diag::new(
+                        RULE,
+                        DOC,
+                        *ln,
+                        format!(
+                            "documented {} `{n}` is not published by \
+                             the registry",
+                            k.as_str()
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // Dead metrics: a field nobody touches outside the registry.
+    for f in &fields {
+        let used = tree.sources.iter().any(|s| {
+            s.rel != REGISTRY
+                && s.lines
+                    .iter()
+                    .any(|l| field_read(&l.code, &f.name))
+        });
+        if !used {
+            out.push(Diag::new(
+                RULE,
+                REGISTRY,
+                f.line,
+                format!(
+                    "dead metric: `{}` has no call site outside the \
+                     registry",
+                    f.name
+                ),
+            ));
+        }
+    }
+
+    // metrics().<ident> call sites resolve.
+    for s in &tree.sources {
+        if s.rel == REGISTRY {
+            continue;
+        }
+        for (ln, line) in s.numbered() {
+            for ident in metrics_idents(&line.code) {
+                let known = fields.iter().any(|f| f.name == ident)
+                    || methods.iter().any(|m| *m == ident);
+                if !known {
+                    out.push(Diag::new(
+                        RULE,
+                        &s.rel,
+                        ln,
+                        format!(
+                            "metrics().{ident} does not resolve to a \
+                             registry field or method"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `pub foo: Counter,` lines inside `pub struct Metrics { .. }`.
+fn parse_fields(reg: &SourceFile) -> Vec<Field> {
+    let mut v = Vec::new();
+    let mut in_struct = false;
+    for (ln, line) in reg.numbered() {
+        let t = line.code.trim();
+        if t.starts_with("pub struct Metrics") {
+            in_struct = true;
+            continue;
+        }
+        if !in_struct {
+            continue;
+        }
+        if t == "}" {
+            break;
+        }
+        let Some(rest) = t.strip_prefix("pub ") else {
+            continue;
+        };
+        let Some((name, ty)) = rest.split_once(':') else {
+            continue;
+        };
+        let kind = match ty.trim().trim_end_matches(',') {
+            "Counter" => Kind::Counter,
+            "Gauge" => Kind::Gauge,
+            "Histogram" => Kind::Hist,
+            _ => continue,
+        };
+        v.push(Field { name: name.trim().to_string(), kind, line: ln });
+    }
+    v
+}
+
+/// `("name", self.field.get()),` entries inside the three `*_list`
+/// publishers.
+fn parse_published(reg: &SourceFile) -> Vec<Published> {
+    let mut v = Vec::new();
+    let mut cur: Option<Kind> = None;
+    for (ln, line) in reg.numbered() {
+        let code = &line.code;
+        if code.contains("fn counters_list") {
+            cur = Some(Kind::Counter);
+            continue;
+        }
+        if code.contains("fn gauges_list") {
+            cur = Some(Kind::Gauge);
+            continue;
+        }
+        if code.contains("fn hists_list") {
+            cur = Some(Kind::Hist);
+            continue;
+        }
+        if code.contains("fn ") {
+            cur = None;
+            continue;
+        }
+        let Some(kind) = cur else { continue };
+        let Some(pos) = code.find("self.") else { continue };
+        let Some(name) = line.strings.first() else { continue };
+        if !code.contains("(\"") {
+            continue;
+        }
+        let field: String = code[pos + "self.".len()..]
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        v.push(Published {
+            name: name.clone(),
+            field,
+            kind,
+            line: ln,
+        });
+    }
+    v
+}
+
+/// Every `fn <ident>` in the registry file (resolution targets for
+/// `metrics().<ident>()` call sites).
+fn parse_methods(reg: &SourceFile) -> Vec<String> {
+    let mut v = Vec::new();
+    for line in &reg.lines {
+        let Some(pos) = line.code.find("fn ") else { continue };
+        let name: String = line.code[pos + 3..]
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if !name.is_empty() {
+            v.push(name);
+        }
+    }
+    v
+}
+
+/// Rows of the docs/TELEMETRY.md metric table:
+/// `| \`name\` | counter \| gauge \| histogram | ... |`.
+fn doc_rows(doc: &crate::scan::DocFile) -> Vec<(String, Kind, usize)> {
+    let mut v = Vec::new();
+    for (ln, raw) in doc.numbered() {
+        let t = raw.trim();
+        if !t.starts_with("| `") {
+            continue;
+        }
+        let cells: Vec<&str> = t
+            .trim_matches('|')
+            .split('|')
+            .map(str::trim)
+            .collect();
+        if cells.len() < 2 {
+            continue;
+        }
+        let kind = match cells[1] {
+            "counter" => Kind::Counter,
+            "gauge" => Kind::Gauge,
+            "histogram" => Kind::Hist,
+            _ => continue,
+        };
+        let name = cells[0].trim_matches('`').to_string();
+        v.push((name, kind, ln));
+    }
+    v
+}
+
+/// `.field` with an identifier boundary on the right and a literal
+/// dot on the left — a field read like `metrics().step_us.observe()`.
+fn field_read(code: &str, field: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = find_word(&code[from..], field) {
+        let at = from + pos;
+        if at > 0 && code.as_bytes()[at - 1] == b'.' {
+            return true;
+        }
+        from = at + 1;
+        if from >= code.len() {
+            break;
+        }
+    }
+    false
+}
+
+/// Idents read directly off `metrics().` on this line.
+fn metrics_idents(code: &str) -> Vec<String> {
+    let mut v = Vec::new();
+    let mut from = 0;
+    let pat = "metrics().";
+    while let Some(pos) = code[from..].find(pat) {
+        let at = from + pos + pat.len();
+        let ident: String = code[at..]
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if !ident.is_empty() {
+            v.push(ident);
+        }
+        from = at;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::tree_of;
+
+    const GOOD_REG: &str = "pub struct Metrics {\n\
+                            pub rounds: Counter,\n\
+                            pub depth: Gauge,\n\
+                            }\n\
+                            fn counters_list() {\n\
+                            (\"rounds\", self.rounds.get()),\n\
+                            }\n\
+                            fn gauges_list() {\n\
+                            (\"depth\", self.depth.get()),\n\
+                            }\n";
+    const GOOD_DOC: &str = "| `rounds` | counter | round count |\n\
+                            | `depth` | gauge | queue depth |\n";
+    const GOOD_USE: &str = "fn f() { metrics().rounds.inc(); }\n\
+                            fn g() { metrics().depth.set(1); }\n";
+
+    fn reg_path() -> &'static str {
+        "rust/src/telemetry/registry.rs"
+    }
+
+    #[test]
+    fn clean_registry_passes() {
+        let t = tree_of(
+            &[(reg_path(), GOOD_REG), ("rust/src/server.rs", GOOD_USE)],
+            &[("docs/TELEMETRY.md", GOOD_DOC)],
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn unpublished_field_is_flagged() {
+        let reg = "pub struct Metrics {\n\
+                   pub rounds: Counter,\n\
+                   pub lost: Counter,\n\
+                   }\n\
+                   fn counters_list() {\n\
+                   (\"rounds\", self.rounds.get()),\n\
+                   }\n";
+        let use_both = "fn f() { metrics().rounds.inc(); \
+                        metrics().lost.inc(); }\n";
+        let t = tree_of(
+            &[(reg_path(), reg), ("rust/src/server.rs", use_both)],
+            &[("docs/TELEMETRY.md", "| `rounds` | counter | n |\n")],
+        );
+        let d = check(&t);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 3);
+        assert!(d[0].msg.contains("never published"));
+    }
+
+    #[test]
+    fn undocumented_published_metric_is_flagged() {
+        let t = tree_of(
+            &[(reg_path(), GOOD_REG), ("rust/src/server.rs", GOOD_USE)],
+            &[("docs/TELEMETRY.md", "| `rounds` | counter | n |\n")],
+        );
+        let d = check(&t);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].msg.contains("missing from the docs/TELEMETRY.md"));
+    }
+
+    #[test]
+    fn doc_row_for_unknown_metric_is_flagged_at_doc_line() {
+        let doc = "| `rounds` | counter | n |\n\
+                   | `depth` | gauge | d |\n\
+                   | `ghost` | counter | boo |\n";
+        let t = tree_of(
+            &[(reg_path(), GOOD_REG), ("rust/src/server.rs", GOOD_USE)],
+            &[("docs/TELEMETRY.md", doc)],
+        );
+        let d = check(&t);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].file, "docs/TELEMETRY.md");
+        assert_eq!(d[0].line, 3);
+    }
+
+    #[test]
+    fn dead_metric_is_flagged() {
+        let only_rounds = "fn f() { metrics().rounds.inc(); }\n";
+        let t = tree_of(
+            &[(reg_path(), GOOD_REG), ("rust/src/server.rs", only_rounds)],
+            &[("docs/TELEMETRY.md", GOOD_DOC)],
+        );
+        let d = check(&t);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 3); // pub depth: Gauge,
+        assert!(d[0].msg.contains("dead metric"));
+    }
+
+    #[test]
+    fn unresolvable_metrics_ident_is_flagged() {
+        let bad = "fn f() { metrics().rounds.inc(); \
+                   metrics().bogus.inc(); metrics().depth.set(2); }\n";
+        let t = tree_of(
+            &[(reg_path(), GOOD_REG), ("rust/src/server.rs", bad)],
+            &[("docs/TELEMETRY.md", GOOD_DOC)],
+        );
+        let d = check(&t);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].msg.contains("metrics().bogus"));
+        assert_eq!(d[0].file, "rust/src/server.rs");
+    }
+
+    #[test]
+    fn kind_mismatch_between_list_and_field_is_flagged() {
+        let reg = "pub struct Metrics {\n\
+                   pub depth: Gauge,\n\
+                   }\n\
+                   fn counters_list() {\n\
+                   (\"depth\", self.depth.get()),\n\
+                   }\n";
+        let t = tree_of(
+            &[
+                (reg_path(), reg),
+                (
+                    "rust/src/server.rs",
+                    "fn f() { metrics().depth.set(1); }\n",
+                ),
+            ],
+            &[("docs/TELEMETRY.md", "| `depth` | gauge | d |\n")],
+        );
+        let d = check(&t);
+        assert!(
+            d.iter().any(|d| d.msg.contains("published from the")),
+            "{d:?}"
+        );
+    }
+}

@@ -1,0 +1,28 @@
+//! The project-invariant rules. Each rule is a pure function from
+//! the scanned [`Tree`] to a list of `file:line`-anchored [`Diag`]s,
+//! so every rule carries inline bad-fixture tests that feed it a
+//! hand-built tree and assert the exact violation (rule + line)
+//! comes back.
+
+pub mod determinism;
+pub mod knobs;
+pub mod metrics;
+pub mod tags;
+pub mod unsafety;
+
+use crate::scan::{Diag, Tree};
+
+/// Run every rule and return the violations sorted by location.
+pub fn run_all(tree: &Tree) -> Vec<Diag> {
+    let mut out = Vec::new();
+    out.extend(tags::check(tree));
+    out.extend(metrics::check(tree));
+    out.extend(knobs::check(tree));
+    out.extend(determinism::check(tree));
+    out.extend(unsafety::check(tree));
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule)
+            .cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    out
+}

@@ -1,0 +1,375 @@
+//! `wire-tags`: the frame-tag registry must be the single source of
+//! truth for wire bytes.
+//!
+//! - every `TAG_*` constant in `comm/tags.rs` is listed in `all()`
+//!   exactly once, and the registry is unique and contiguous from 1;
+//! - the tag table in docs/COMM.md is bit-identical to `all()` in
+//!   both directions (same tag values, same message names);
+//! - no `const TAG_*: u8` is declared anywhere else in the tree.
+
+use crate::scan::{Diag, DocFile, SourceFile, Tree};
+
+const RULE: &str = "wire-tags";
+const REGISTRY: &str = "rust/src/comm/tags.rs";
+const DOC: &str = "docs/COMM.md";
+
+struct TagConst {
+    name: String,
+    value: u8,
+    line: usize,
+}
+
+struct Entry {
+    name: String,
+    const_name: String,
+    line: usize,
+}
+
+pub fn check(tree: &Tree) -> Vec<Diag> {
+    let mut out = Vec::new();
+    let Some(reg) = tree.source(REGISTRY) else {
+        let msg = "tag registry file missing".to_string();
+        out.push(Diag::new(RULE, REGISTRY, 1, msg));
+        return out;
+    };
+    let consts = parse_consts(reg, &mut out);
+    let entries = parse_all(reg);
+
+    // Constant values must be unique.
+    for (i, a) in consts.iter().enumerate() {
+        if let Some(b) = consts[..i].iter().find(|b| b.value == a.value) {
+            out.push(Diag::new(
+                RULE,
+                REGISTRY,
+                a.line,
+                format!(
+                    "tag value {} of {} already taken by {}",
+                    a.value, a.name, b.name
+                ),
+            ));
+        }
+    }
+
+    // Every constant is listed in all() exactly once.
+    for c in &consts {
+        let n = entries
+            .iter()
+            .filter(|e| e.const_name == c.name)
+            .count();
+        if n != 1 {
+            out.push(Diag::new(
+                RULE,
+                REGISTRY,
+                c.line,
+                format!("{} listed {n} times in all() (want 1)", c.name),
+            ));
+        }
+    }
+    for e in &entries {
+        if !consts.iter().any(|c| c.name == e.const_name) {
+            out.push(Diag::new(
+                RULE,
+                REGISTRY,
+                e.line,
+                format!("all() lists unknown constant {}", e.const_name),
+            ));
+        }
+    }
+
+    // Contiguous from 1 in declaration order, unique names.
+    for (i, e) in entries.iter().enumerate() {
+        let want = i as u8 + 1;
+        if let Some(c) = consts.iter().find(|c| c.name == e.const_name) {
+            if c.value != want {
+                out.push(Diag::new(
+                    RULE,
+                    REGISTRY,
+                    e.line,
+                    format!(
+                        "registry not contiguous: {} is {} at position \
+                         {} (want {want})",
+                        c.name,
+                        c.value,
+                        i + 1
+                    ),
+                ));
+            }
+        }
+        if entries[..i].iter().any(|p| p.name == e.name) {
+            out.push(Diag::new(
+                RULE,
+                REGISTRY,
+                e.line,
+                format!("duplicate message name {:?} in all()", e.name),
+            ));
+        }
+    }
+
+    // docs/COMM.md tag table <-> all(), both directions.
+    match tree.doc(DOC) {
+        None => {
+            let msg = "tag-table doc missing".to_string();
+            out.push(Diag::new(RULE, DOC, 1, msg));
+        }
+        Some(doc) => {
+            let rows = doc_rows(doc);
+            for (i, e) in entries.iter().enumerate() {
+                let value = i as u8 + 1;
+                let hit = rows
+                    .iter()
+                    .any(|(v, n, _)| *v == value && *n == e.name);
+                if !hit {
+                    out.push(Diag::new(
+                        RULE,
+                        REGISTRY,
+                        e.line,
+                        format!(
+                            "tag {value} ({}) missing from the {DOC} \
+                             tag table",
+                            e.name
+                        ),
+                    ));
+                }
+            }
+            for (v, n, ln) in &rows {
+                let i = *v as usize;
+                let hit = i >= 1
+                    && i <= entries.len()
+                    && entries[i - 1].name == *n;
+                if !hit {
+                    out.push(Diag::new(
+                        RULE,
+                        DOC,
+                        *ln,
+                        format!(
+                            "documented tag {v} ({n}) does not match \
+                             comm::tags::all()"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // No tag constants outside the registry.
+    for f in &tree.sources {
+        if f.rel == REGISTRY {
+            continue;
+        }
+        for (ln, line) in f.numbered() {
+            if stray_tag_const(&line.code) {
+                out.push(Diag::new(
+                    RULE,
+                    &f.rel,
+                    ln,
+                    "wire tag declared outside comm::tags — add it \
+                     to the registry instead"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// `pub const TAG_FOO: u8 = 3;` lines in the registry.
+fn parse_consts(reg: &SourceFile, out: &mut Vec<Diag>) -> Vec<TagConst> {
+    let mut v = Vec::new();
+    for (ln, line) in reg.numbered() {
+        let Some(pos) = line.code.find("const TAG_") else {
+            continue;
+        };
+        let rest = &line.code[pos + "const ".len()..];
+        let name: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        let after = rest[name.len()..].trim_start();
+        let parsed = after.strip_prefix(": u8").and_then(|a| {
+            let digits: String = a
+                .trim_start_matches([' ', '='])
+                .chars()
+                .take_while(char::is_ascii_digit)
+                .collect();
+            digits.parse::<u8>().ok()
+        });
+        match parsed {
+            Some(value) => v.push(TagConst { name, value, line: ln }),
+            None => out.push(Diag::new(
+                RULE,
+                &reg.rel,
+                ln,
+                format!("unparseable tag constant {name} (want \
+                         `pub const {name}: u8 = <n>;`)"),
+            )),
+        }
+    }
+    v
+}
+
+/// `(TAG_FOO, "Foo"),` entries inside `all()`.
+fn parse_all(reg: &SourceFile) -> Vec<Entry> {
+    let mut v = Vec::new();
+    for (ln, line) in reg.numbered() {
+        let Some(pos) = line.code.find("(TAG_") else {
+            continue;
+        };
+        let Some(name) = line.strings.first() else {
+            continue;
+        };
+        let const_name: String = line.code[pos + 1..]
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        v.push(Entry { name: name.clone(), const_name, line: ln });
+    }
+    v
+}
+
+/// Markdown table rows whose first cell is a number and second a
+/// backticked name: `| 3 | \`Weights\` | ... |`.
+fn doc_rows(doc: &DocFile) -> Vec<(u8, String, usize)> {
+    let mut v = Vec::new();
+    for (ln, raw) in doc.numbered() {
+        let t = raw.trim();
+        if !t.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = t
+            .trim_matches('|')
+            .split('|')
+            .map(str::trim)
+            .collect();
+        if cells.len() < 2 {
+            continue;
+        }
+        let Ok(num) = cells[0].parse::<u8>() else {
+            continue;
+        };
+        let name = cells[1].trim_matches('`');
+        v.push((num, name.to_string(), ln));
+    }
+    v
+}
+
+/// A `const TAG_X: u8` declaration (stray registry entry).
+fn stray_tag_const(code: &str) -> bool {
+    let Some(pos) = code.find("const TAG_") else {
+        return false;
+    };
+    let rest = &code[pos + "const ".len()..];
+    let name_len = rest
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .count();
+    rest[name_len..].trim_start().starts_with(": u8")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::tree_of;
+
+    const GOOD_REG: &str = "pub const TAG_HELLO: u8 = 1;\n\
+                            pub const TAG_READY: u8 = 2;\n\
+                            pub const fn all() {\n\
+                            (TAG_HELLO, \"Hello\"),\n\
+                            (TAG_READY, \"Ready\"),\n\
+                            }\n";
+    const GOOD_DOC: &str = "| Tag | Message |\n\
+                            | 1 | `Hello` |\n\
+                            | 2 | `Ready` |\n";
+
+    #[test]
+    fn clean_registry_passes() {
+        let t = tree_of(
+            &[("rust/src/comm/tags.rs", GOOD_REG)],
+            &[("docs/COMM.md", GOOD_DOC)],
+        );
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn missing_doc_row_is_flagged_at_the_registry_line() {
+        let doc = "| 1 | `Hello` |\n";
+        let t = tree_of(
+            &[("rust/src/comm/tags.rs", GOOD_REG)],
+            &[("docs/COMM.md", doc)],
+        );
+        let d = check(&t);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "wire-tags");
+        assert_eq!(d[0].line, 5); // the (TAG_READY, "Ready") entry
+    }
+
+    #[test]
+    fn doc_row_not_in_registry_is_flagged_at_the_doc_line() {
+        let doc = "| 1 | `Hello` |\n\
+                   | 2 | `Ready` |\n\
+                   | 3 | `Ghost` |\n";
+        let t = tree_of(
+            &[("rust/src/comm/tags.rs", GOOD_REG)],
+            &[("docs/COMM.md", doc)],
+        );
+        let d = check(&t);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].file, "docs/COMM.md");
+        assert_eq!(d[0].line, 3);
+    }
+
+    #[test]
+    fn non_contiguous_values_are_flagged() {
+        let reg = "pub const TAG_HELLO: u8 = 1;\n\
+                   pub const TAG_READY: u8 = 3;\n\
+                   pub const fn all() {\n\
+                   (TAG_HELLO, \"Hello\"),\n\
+                   (TAG_READY, \"Ready\"),\n\
+                   }\n";
+        let doc = "| 1 | `Hello` |\n| 2 | `Ready` |\n";
+        let t = tree_of(
+            &[("rust/src/comm/tags.rs", reg)],
+            &[("docs/COMM.md", doc)],
+        );
+        let d = check(&t);
+        assert!(
+            d.iter().any(|d| d.line == 5
+                && d.msg.contains("not contiguous")),
+            "{d:?}"
+        );
+    }
+
+    #[test]
+    fn duplicate_value_and_unlisted_const_are_flagged() {
+        let reg = "pub const TAG_HELLO: u8 = 1;\n\
+                   pub const TAG_READY: u8 = 1;\n\
+                   pub const fn all() {\n\
+                   (TAG_HELLO, \"Hello\"),\n\
+                   }\n";
+        let doc = "| 1 | `Hello` |\n";
+        let t = tree_of(
+            &[("rust/src/comm/tags.rs", reg)],
+            &[("docs/COMM.md", doc)],
+        );
+        let d = check(&t);
+        assert!(d.iter().any(|d| d.msg.contains("already taken")));
+        assert!(d.iter().any(|d| d.msg.contains("listed 0 times")));
+    }
+
+    #[test]
+    fn stray_tag_const_outside_registry_is_flagged() {
+        let t = tree_of(
+            &[
+                ("rust/src/comm/tags.rs", GOOD_REG),
+                (
+                    "rust/src/serve.rs",
+                    "const TAG_EXTRA: u8 = 99;\n",
+                ),
+            ],
+            &[("docs/COMM.md", GOOD_DOC)],
+        );
+        let d = check(&t);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].file, "rust/src/serve.rs");
+        assert_eq!(d[0].line, 1);
+    }
+}

@@ -1,0 +1,140 @@
+//! `unsafe-audit`: every `unsafe` in the files that hold the tree's
+//! unsafe surface must carry a `// SAFETY:` justification — on the
+//! same line or in the contiguous comment/attribute block right
+//! above it. The audit list is explicit so a new file growing an
+//! `unsafe` block shows up as a review decision (add it here) rather
+//! than sliding in silently; `clippy::undocumented_unsafe_blocks`
+//! covers the rest of the tree but never sees `pjrt.rs` (feature
+//! gated off in default builds), which this rule always scans.
+
+use crate::scan::{has_word, Diag, SourceFile, Tree};
+
+const RULE: &str = "unsafe-audit";
+
+/// The audited unsafe surface (mmap windows, byte-view casts, wire
+/// scratch, PJRT buffer views).
+const FILES: [&str; 4] = [
+    "rust/src/graph/slab.rs",
+    "rust/src/graph/io.rs",
+    "rust/src/comm/mod.rs",
+    "rust/src/runtime/pjrt.rs",
+];
+
+pub fn check(tree: &Tree) -> Vec<Diag> {
+    let mut out = Vec::new();
+    for rel in FILES {
+        let Some(f) = tree.source(rel) else {
+            let msg =
+                "audited file missing — update the unsafe-audit list"
+                    .to_string();
+            out.push(Diag::new(RULE, rel, 1, msg));
+            continue;
+        };
+        for (ln, line) in f.numbered() {
+            if !has_word(&line.code, "unsafe") {
+                continue;
+            }
+            if !safety_documented(f, ln) {
+                out.push(Diag::new(
+                    RULE,
+                    rel,
+                    ln,
+                    "`unsafe` without a `// SAFETY:` comment on or \
+                     above it"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// The line itself, or the contiguous run of comment / attribute /
+/// blank lines directly above it, mentions SAFETY.
+fn safety_documented(f: &SourceFile, ln: usize) -> bool {
+    if f.lines[ln - 1].raw.contains("SAFETY") {
+        return true;
+    }
+    let mut j = ln - 1;
+    while j > 0 {
+        j -= 1;
+        let t = f.lines[j].raw.trim();
+        if t.contains("SAFETY") {
+            return true;
+        }
+        let skippable = t.is_empty()
+            || t.starts_with("//")
+            || t.starts_with("/*")
+            || t.starts_with('*')
+            || t.starts_with("#[");
+        if !skippable {
+            return false;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::tree_of;
+
+    #[test]
+    fn documented_unsafe_passes() {
+        let src = "// SAFETY: the region outlives the view and the\n\
+                   // cast target is plain-old-data.\n\
+                   let b = unsafe { view(ptr) };\n\
+                   \n\
+                   // SAFETY: same argument, shared this time.\n\
+                   unsafe impl Sync for M {}\n";
+        let t = tree_of(&[("rust/src/graph/io.rs", src)], &[]);
+        let d: Vec<_> = check(&t)
+            .into_iter()
+            .filter(|d| d.file == "rust/src/graph/io.rs")
+            .collect();
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn undocumented_unsafe_is_flagged_with_its_line() {
+        let src = "fn f(ptr: *const u8) {\n\
+                   let b = unsafe { view(ptr) };\n\
+                   }\n";
+        let t = tree_of(&[("rust/src/comm/mod.rs", src)], &[]);
+        let d: Vec<_> = check(&t)
+            .into_iter()
+            .filter(|d| d.file == "rust/src/comm/mod.rs")
+            .collect();
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "unsafe-audit");
+        assert_eq!(d[0].line, 2);
+    }
+
+    #[test]
+    fn a_code_line_breaks_the_comment_walk() {
+        // The SAFETY comment belongs to the first block only; the
+        // second unsafe cannot borrow it across the code line.
+        let src = "// SAFETY: argument for the first block.\n\
+                   let a = unsafe { one() };\n\
+                   let b = unsafe { two() };\n";
+        let t = tree_of(&[("rust/src/graph/slab.rs", src)], &[]);
+        let d: Vec<_> = check(&t)
+            .into_iter()
+            .filter(|d| d.file == "rust/src/graph/slab.rs")
+            .collect();
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 3);
+    }
+
+    #[test]
+    fn unsafe_in_comments_strings_and_missing_files_behave() {
+        let src = "// unsafe is discussed here only\n\
+                   let s = \"unsafe\";\n";
+        let t = tree_of(&[("rust/src/graph/io.rs", src)], &[]);
+        let d = check(&t);
+        // io.rs is clean; the other three audit files are absent
+        // from the fixture tree and each reports exactly once.
+        assert_eq!(d.len(), 3, "{d:?}");
+        assert!(d.iter().all(|d| d.msg.contains("audited file")));
+    }
+}

@@ -1,0 +1,470 @@
+//! Source model for the rules: a lexical pass that separates code
+//! from comments and string literals, and marks `#[cfg(test)]`
+//! regions, so rules match against what the compiler sees instead of
+//! tripping on prose. No syn, no regex — a hand-rolled scanner is
+//! enough for project-invariant linting and keeps the tool
+//! dependency-free (the repo builds offline).
+
+use std::fmt;
+
+/// One violation, `file:line`-anchored for editor jumps.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diag {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Diag {
+    pub fn new(
+        rule: &'static str,
+        file: &str,
+        line: usize,
+        msg: String,
+    ) -> Diag {
+        Diag { rule, file: file.to_string(), line, msg }
+    }
+}
+
+impl fmt::Display for Diag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// One line of a scanned source file.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// The line as written.
+    pub raw: String,
+    /// The line with comments and string/char literal *contents*
+    /// blanked to spaces — what code-token rules match against.
+    pub code: String,
+    /// String literals that *start* on this line, in order.
+    pub strings: Vec<String>,
+    /// Inside a `#[cfg(test)]`-gated brace block.
+    pub in_test: bool,
+}
+
+/// A scanned `.rs` file.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    /// Path relative to the repo root, forward slashes.
+    pub rel: String,
+    pub lines: Vec<Line>,
+}
+
+impl SourceFile {
+    /// 1-indexed iteration over lines.
+    pub fn numbered(&self) -> impl Iterator<Item = (usize, &Line)> {
+        self.lines.iter().enumerate().map(|(i, l)| (i + 1, l))
+    }
+}
+
+/// A documentation file (markdown): raw lines only.
+#[derive(Debug, Clone)]
+pub struct DocFile {
+    pub rel: String,
+    pub lines: Vec<String>,
+}
+
+impl DocFile {
+    pub fn new(rel: &str, text: &str) -> DocFile {
+        DocFile {
+            rel: rel.to_string(),
+            lines: text.lines().map(|l| l.to_string()).collect(),
+        }
+    }
+
+    pub fn numbered(&self) -> impl Iterator<Item = (usize, &String)> {
+        self.lines.iter().enumerate().map(|(i, l)| (i + 1, l))
+    }
+}
+
+/// Everything the rules see: scanned sources plus raw docs.
+pub struct Tree {
+    pub sources: Vec<SourceFile>,
+    pub docs: Vec<DocFile>,
+}
+
+impl Tree {
+    pub fn source(&self, rel: &str) -> Option<&SourceFile> {
+        self.sources.iter().find(|s| s.rel == rel)
+    }
+
+    pub fn doc(&self, rel: &str) -> Option<&DocFile> {
+        self.docs.iter().find(|d| d.rel == rel)
+    }
+}
+
+/// Build a tree from inline fixtures — the rule tests' entry point.
+#[cfg(test)]
+pub fn tree_of(sources: &[(&str, &str)], docs: &[(&str, &str)]) -> Tree {
+    Tree {
+        sources: sources
+            .iter()
+            .map(|(rel, text)| parse_source(rel, text))
+            .collect(),
+        docs: docs
+            .iter()
+            .map(|(rel, text)| DocFile::new(rel, text))
+            .collect(),
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum St {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+/// Scan one source file: strip comments and literal contents from the
+/// code view, collect string literals, and mark `#[cfg(test)]` brace
+/// regions (tests are allowed clocks, prints and unwraps — the
+/// determinism rules skip them).
+pub fn parse_source(rel: &str, text: &str) -> SourceFile {
+    let mut lines: Vec<Line> = Vec::new();
+    let bytes: Vec<char> = text.chars().collect();
+    let mut code = String::new();
+    let mut raw_line = String::new();
+    let mut cur_strings: Vec<String> = Vec::new();
+    let mut cur_string = String::new();
+    let mut st = St::Code;
+    let mut i = 0usize;
+
+    let mut flush =
+        |code: &mut String, raw: &mut String, strs: &mut Vec<String>| {
+            lines.push(Line {
+                raw: std::mem::take(raw),
+                code: std::mem::take(code),
+                strings: std::mem::take(strs),
+                in_test: false,
+            });
+        };
+
+    while i < bytes.len() {
+        let c = bytes[i];
+        let next = bytes.get(i + 1).copied();
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            flush(&mut code, &mut raw_line, &mut cur_strings);
+            i += 1;
+            continue;
+        }
+        raw_line.push(c);
+        match st {
+            St::Code => match c {
+                '/' if next == Some('/') => {
+                    st = St::LineComment;
+                    code.push(' ');
+                }
+                '/' if next == Some('*') => {
+                    st = St::BlockComment(1);
+                    code.push(' ');
+                }
+                '"' => {
+                    st = St::Str;
+                    cur_string.clear();
+                    code.push('"');
+                }
+                'r' | 'b' if is_raw_string_start(&bytes, i) => {
+                    let (hashes, skip) = raw_string_open(&bytes, i);
+                    for k in 0..skip {
+                        if k > 0 {
+                            raw_line.push(bytes[i + k]);
+                        }
+                        code.push(bytes[i + k]);
+                    }
+                    cur_string.clear();
+                    st = St::RawStr(hashes);
+                    i += skip;
+                    continue;
+                }
+                '\'' => {
+                    // Char/byte literal vs lifetime. A literal closes
+                    // with ' within a few chars; a lifetime never
+                    // does.
+                    let lit_len = char_literal_len(&bytes, i);
+                    if let Some(n) = lit_len {
+                        for k in 0..n {
+                            if k > 0 {
+                                raw_line.push(bytes[i + k]);
+                            }
+                            code.push(if k == 0 || k == n - 1 {
+                                '\''
+                            } else {
+                                ' '
+                            });
+                        }
+                        i += n;
+                        continue;
+                    }
+                    code.push('\'');
+                }
+                _ => code.push(c),
+            },
+            St::LineComment => code.push(' '),
+            St::BlockComment(depth) => {
+                code.push(' ');
+                if c == '/' && next == Some('*') {
+                    st = St::BlockComment(depth + 1);
+                    raw_line.push('*');
+                    code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '*' && next == Some('/') {
+                    raw_line.push('/');
+                    code.push(' ');
+                    st = if depth == 1 {
+                        St::Code
+                    } else {
+                        St::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                    continue;
+                }
+            }
+            St::Str => match c {
+                '\\' => {
+                    cur_string.push(c);
+                    if let Some(n) = next {
+                        if n != '\n' {
+                            raw_line.push(n);
+                            cur_string.push(n);
+                            code.push(' ');
+                            code.push(' ');
+                            i += 2;
+                            continue;
+                        }
+                    }
+                    code.push(' ');
+                }
+                '"' => {
+                    st = St::Code;
+                    code.push('"');
+                    cur_strings.push(std::mem::take(&mut cur_string));
+                }
+                _ => {
+                    cur_string.push(c);
+                    code.push(' ');
+                }
+            },
+            St::RawStr(hashes) => {
+                if c == '"' && raw_close(&bytes, i, hashes) {
+                    for k in 0..(hashes as usize + 1) {
+                        if k > 0 {
+                            raw_line.push(bytes[i + k]);
+                        }
+                        code.push(bytes[i + k]);
+                    }
+                    cur_strings.push(std::mem::take(&mut cur_string));
+                    st = St::Code;
+                    i += hashes as usize + 1;
+                    continue;
+                }
+                cur_string.push(c);
+                code.push(' ');
+            }
+        }
+        i += 1;
+    }
+    if !raw_line.is_empty() || !code.is_empty() {
+        flush(&mut code, &mut raw_line, &mut cur_strings);
+    }
+    drop(flush);
+
+    mark_test_regions(&mut lines);
+    SourceFile { rel: rel.to_string(), lines }
+}
+
+fn is_raw_string_start(b: &[char], i: usize) -> bool {
+    // r"..."  r#"..."#  br"..."  b"..." is NOT raw (plain byte
+    // string — handled by the '"' arm via the preceding 'b' being
+    // ordinary code). Only treat r/br with a quote or hashes as raw.
+    let mut j = i;
+    if b[j] == 'b' {
+        if b.get(j + 1) != Some(&'r') {
+            return false;
+        }
+        j += 1;
+    }
+    if b[j] != 'r' {
+        return false;
+    }
+    // An identifier character before 'r' means this is just an ident
+    // ending in r (e.g. `var"..."` cannot happen, but `r` inside
+    // `for` can).
+    if i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_') {
+        return false;
+    }
+    let mut k = j + 1;
+    while b.get(k) == Some(&'#') {
+        k += 1;
+    }
+    b.get(k) == Some(&'"')
+}
+
+fn raw_string_open(b: &[char], i: usize) -> (u32, usize) {
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+    }
+    j += 1; // the 'r'
+    let mut hashes = 0u32;
+    while b.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    j += 1; // the opening quote
+    (hashes, j - i)
+}
+
+fn raw_close(b: &[char], i: usize, hashes: u32) -> bool {
+    for k in 0..hashes as usize {
+        if b.get(i + 1 + k) != Some(&'#') {
+            return false;
+        }
+    }
+    true
+}
+
+/// `'x'`, `'\n'`, `'\u{1F600}'`, `b'x'` (the b was consumed as code).
+/// Returns the literal's total length, or None for a lifetime.
+fn char_literal_len(b: &[char], i: usize) -> Option<usize> {
+    match b.get(i + 1)? {
+        '\\' => {
+            let mut j = i + 2;
+            while j < b.len() && b[j] != '\'' && b[j] != '\n' {
+                j += 1;
+            }
+            (b.get(j) == Some(&'\'')).then_some(j - i + 1)
+        }
+        _ => (b.get(i + 2) == Some(&'\'')).then_some(3),
+    }
+}
+
+/// Mark every line inside a brace block introduced after a
+/// `#[cfg(test)]` attribute. Good enough for this tree's idiom
+/// (`#[cfg(test)] mod tests { ... }`), which is all the determinism
+/// rules need to skip.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut test_stack: Vec<i64> = Vec::new();
+    for line in lines.iter_mut() {
+        line.in_test = !test_stack.is_empty();
+        if line.code.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        test_stack.push(depth);
+                        pending = false;
+                        line.in_test = true;
+                    }
+                }
+                '}' => {
+                    if test_stack.last() == Some(&depth) {
+                        test_stack.pop();
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Find `word` in `code` at identifier boundaries; returns true if
+/// present as a standalone token.
+pub fn has_word(code: &str, word: &str) -> bool {
+    find_word(code, word).is_some()
+}
+
+/// First identifier-boundary occurrence of `word` in `code`.
+pub fn find_word(code: &str, word: &str) -> Option<usize> {
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        let before_ok = at == 0 || !is_ident(b[at - 1]);
+        let end = at + word.len();
+        let after_ok = end >= b.len() || !is_ident(b[end]);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        from = at + 1;
+    }
+    None
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let src = "let a = \"Instant::now\"; // Instant::now\n\
+                   let b = 1; /* Instant::now */ let c = 2;\n";
+        let f = parse_source("x.rs", src);
+        assert!(!has_word(&f.lines[0].code, "Instant"));
+        assert!(!has_word(&f.lines[1].code, "Instant"));
+        assert_eq!(f.lines[0].strings, vec!["Instant::now".to_string()]);
+        assert!(has_word(&f.lines[1].code, "let"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) -> char { '\\'' }\n\
+                   let q = 'z'; let s = \"RTMA_LOG\";\n";
+        let f = parse_source("x.rs", src);
+        assert!(has_word(&f.lines[0].code, "str"));
+        assert_eq!(f.lines[1].strings, vec!["RTMA_LOG".to_string()]);
+        assert!(!f.lines[1].code.contains('z'));
+    }
+
+    #[test]
+    fn raw_strings_blank_their_contents() {
+        let src = "let a = r#\"unsafe { } \"quoted\" \"#; let b = 1;\n";
+        let f = parse_source("x.rs", src);
+        assert!(!has_word(&f.lines[0].code, "unsafe"));
+        assert!(has_word(&f.lines[0].code, "let"));
+        assert_eq!(f.lines[0].strings.len(), 1);
+        assert!(f.lines[0].strings[0].contains("quoted"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let src = "fn live() { now(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { now(); }\n\
+                   }\n\
+                   fn live2() {}\n";
+        let f = parse_source("x.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn word_boundaries_respected() {
+        assert!(has_word("use std::collections::HashMap;", "HashMap"));
+        assert!(!has_word("let my_hashmap_like = 1;", "HashMap"));
+        assert!(!has_word("NotAHashMapType", "HashMap"));
+    }
+}
